@@ -1,0 +1,135 @@
+"""Reproduction of the paper's Tables I-IV / Figs 4-5.
+
+The REAL Syndeo scheduler + object store run under the discrete-event
+backend (virtual time) with a cost model calibrated entirely from the
+paper's own numbers:
+  * per-interaction compute cost  = 28 / throughput(28 CPUs)  (Table III),
+  * result artifact size          = 1000 steps x obs_dim x 8 B  (float64
+    observations, Gymnasium default),
+  * head dispatch overhead + head link bandwidth: single global pair fit
+    against the scaling curves (the head is one process on one node -- its
+    serialization is the physical cause of the paper's efficiency decay,
+    most visible for Humanoid's 376-float observations).
+
+Each configuration is run 4 times with different seeds (as in the paper) to
+report mean/std.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import SchedulerConfig, SimCluster, SimCostModel, TaskSpec
+from repro.rl.envs import ENV_SPECS
+
+CPU_CONFIGS = [28, 84, 196, 420, 868]
+STEPS_PER_CPU = 1000
+
+# head-model calibration: two constants fit on two paper endpoints
+# (Pendulum@868 eff 64% -> 3.1 ms/task head dispatch; Humanoid@868 eff 9%
+# -> ~40 MB/s effective head ingest incl. pickling), then held fixed for
+# all 14 envs x 5 scales. See EXPERIMENTS.md for the validation table.
+DISPATCH_OVERHEAD_S = 0.0031
+HEAD_BANDWIDTH_BPS = 40e6
+
+# paper Table I/III values for comparison
+PAPER_SPEEDUP = {
+    "Acrobot": [1, 3, 6, 11, 18], "Ant": [1, 3, 5, 8, 11],
+    "Cartpole": [1, 2, 6, 8, 13], "HalfCheetah": [1, 3, 5, 9, 13],
+    "Hopper": [1, 3, 6, 10, 16], "Humanoid": [1, 2, 3, 4, 3],
+    "HumanoidStandup": [1, 2, 3, 3, 3],
+    "InvertedDoublePendulum": [1, 2, 5, 9, 13],
+    "InvertedPendulum": [1, 3, 6, 10, 17], "Pendulum": [1, 3, 7, 12, 20],
+    "Pusher": [1, 3, 6, 9, 13], "Reacher": [1, 3, 6, 10, 13],
+    "Swimmer": [1, 3, 6, 9, 12], "Walker2d": [1, 3, 6, 11, 15],
+}
+PAPER_THROUGHPUT_28 = {k: v for k, v in {
+    "Acrobot": 5656, "Ant": 5106, "Cartpole": 6876, "HalfCheetah": 6343,
+    "Hopper": 5505, "Humanoid": 4108, "HumanoidStandup": 3573,
+    "InvertedDoublePendulum": 6265, "InvertedPendulum": 5864,
+    "Pendulum": 5895, "Pusher": 5939, "Reacher": 6521, "Swimmer": 6168,
+    "Walker2d": 5264}.items()}
+
+
+def run_env_config(env: str, n_cpus: int, seed: int) -> float:
+    """Virtual-time throughput (interactions/s) for one configuration."""
+    spec = ENV_SPECS[env]
+    cost = SimCostModel(
+        task_time_s=lambda s: STEPS_PER_CPU * spec.step_cost_s,
+        result_bytes=lambda s: STEPS_PER_CPU * spec.obs_dim * 8.0,
+        dispatch_overhead_s=DISPATCH_OVERHEAD_S,
+        head_bandwidth_Bps=HEAD_BANDWIDTH_BPS,
+        jitter=0.06,
+    )
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9), seed=seed)
+    sim.add_workers(n_cpus)
+    makespan = sim.run_wave([TaskSpec(fn=None, group=env)
+                             for _ in range(n_cpus)])
+    return n_cpus * STEPS_PER_CPU / makespan
+
+
+def run_all(n_seeds: int = 4) -> Dict[str, Dict[int, Tuple[float, float]]]:
+    out: Dict[str, Dict[int, Tuple[float, float]]] = {}
+    for env in ENV_SPECS:
+        out[env] = {}
+        for n in CPU_CONFIGS:
+            tputs = [run_env_config(env, n, seed) for seed in range(n_seeds)]
+            out[env][n] = (float(np.mean(tputs)), float(np.std(tputs)))
+    return out
+
+
+def tables(results) -> Tuple[List[str], List[str], List[str]]:
+    """Render Tables I (speedup), II (efficiency), III/IV (throughput)."""
+    t1 = [f"{'Environment':26s}" + "".join(f"{n:>8d}" for n in CPU_CONFIGS)]
+    t2 = [t1[0]]
+    t34 = [f"{'Environment':26s}{'CPUs':>6s}{'mean':>10s}{'std':>8s}"
+           f"{'ideal':>7s}{'actual':>8s}{'eff%':>6s}"]
+    for env, per in results.items():
+        base = per[CPU_CONFIGS[0]][0]
+        sp_row, eff_row = f"{env:26s}", f"{env:26s}"
+        for n in CPU_CONFIGS:
+            mean, std = per[n]
+            speedup = mean / base
+            ideal = n / CPU_CONFIGS[0]
+            eff = min(100.0, 100.0 * speedup / ideal)
+            sp_row += f"{speedup:7.0f}x"
+            eff_row += f"{eff:8.0f}"
+            t34.append(f"{env:26s}{n:>6d}{mean:>10.0f}{std:>8.0f}"
+                       f"{ideal:>6.0f}x{speedup:>7.0f}x{eff:>6.0f}")
+        t1.append(sp_row)
+        t2.append(eff_row)
+    return t1, t2, t34
+
+
+def compare_to_paper(results) -> Dict[str, float]:
+    """Mean absolute speedup error vs the paper's Table I."""
+    errs = {}
+    for env, per in results.items():
+        base = per[CPU_CONFIGS[0]][0]
+        ours = [per[n][0] / base for n in CPU_CONFIGS]
+        paper = PAPER_SPEEDUP[env]
+        errs[env] = float(np.mean([abs(o - p) for o, p in
+                                   zip(ours, paper)]))
+    return errs
+
+
+def main():
+    results = run_all()
+    t1, t2, t34 = tables(results)
+    print("\n=== Table I: throughput speedup factors ===")
+    print("\n".join(t1))
+    print("\n=== Table II: efficiency percentages ===")
+    print("\n".join(t2))
+    errs = compare_to_paper(results)
+    print("\n=== fidelity vs paper Table I (mean |speedup error|) ===")
+    for env, e in sorted(errs.items()):
+        print(f"  {env:26s} {e:5.2f}x")
+    print(f"  {'OVERALL':26s} {np.mean(list(errs.values())):5.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

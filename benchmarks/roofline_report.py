@@ -1,0 +1,73 @@
+"""Roofline report: renders EXPERIMENTS.md-ready tables from the dry-run
+artifacts (benchmarks/artifacts/dryrun/<tag>/<mesh>/*.json)."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load(tag: str = "baseline", mesh: str = "singlepod") -> List[Dict]:
+    out = []
+    d = ART / tag / mesh
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def render_table(tag: str = "baseline", mesh: str = "singlepod") -> str:
+    rows = [
+        "| arch | shape | mem GiB | fits | compute_s | memory_s | collective_s"
+        " | dominant | frac | MODEL/HLO |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(tag, mesh):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | -- |"
+                        f" -- | skipped (sub-quadratic rule) | -- | -- |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        m, rf = r["memory"], r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {m['peak_per_device_gb']:.1f} |"
+            f" {'y' if m['fits_16gb'] else 'OVER'} |"
+            f" {rf['compute_s']:.3e} | {rf['memory_s']:.3e} |"
+            f" {rf['collective_s']:.3e} | {rf['dominant'].replace('_s','')} |"
+            f" {rf['roofline_fraction']:.3f} | {rf['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def summarize(tag: str = "baseline") -> Dict:
+    out = {}
+    for mesh in ("singlepod", "multipod"):
+        recs = [r for r in load(tag, mesh)]
+        ok = [r for r in recs if r["status"] == "ok"]
+        out[mesh] = {
+            "cells": len(recs),
+            "ok": len(ok),
+            "skipped": sum(r["status"] == "skipped" for r in recs),
+            "errors": sum(r["status"] == "error" for r in recs),
+            "fits": sum(r["memory"]["fits_16gb"] for r in ok),
+            "dominant_memory": sum(
+                r["roofline"]["dominant"] == "memory_s" for r in ok),
+            "dominant_collective": sum(
+                r["roofline"]["dominant"] == "collective_s" for r in ok),
+        }
+    return out
+
+
+def main():
+    print(json.dumps(summarize(), indent=1))
+    for mesh in ("singlepod", "multipod"):
+        print(f"\n### {mesh}\n")
+        print(render_table("baseline", mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Benchmark entrypoint: one function per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1/2/3+4 : the paper's RL-throughput tables (virtual-time sim on the
+                 real Syndeo scheduler; us_per_call = simulated wall per
+                 interaction at 868 CPUs; derived = 868-CPU speedup factor)
+  bringup      : real threaded cluster bring-up + 64-task wave latency
+  kernels      : interpret-mode Pallas kernel micro-checks (us_per_call =
+                 host execution; correctness vs oracle is the point on CPU)
+  roofline     : summary over the dry-run artifacts (derived = cells ok)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _row(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def bench_paper_tables() -> None:
+    from benchmarks.paper_tables import (CPU_CONFIGS, compare_to_paper,
+                                         run_all, tables)
+    results = run_all(n_seeds=4)
+    import numpy as np
+    errs = compare_to_paper(results)
+    for env, per in sorted(results.items()):
+        base = per[28][0]
+        big = per[868][0]
+        us_per_interaction = 1e6 / big
+        _row(f"table1_speedup_{env}", us_per_interaction,
+             f"{big / base:.1f}x@868")
+    _row("table1_fidelity_mean_abs_speedup_err",
+         float(np.mean(list(errs.values()))) * 1e0, "vs_paper_tableI")
+    t1, t2, t34 = tables(results)
+    with open("benchmarks/artifacts/paper_tables.txt", "w") as f:
+        f.write("\n".join(t1) + "\n\n" + "\n".join(t2) + "\n\n" +
+                "\n".join(t34) + "\n")
+
+
+def bench_bringup() -> None:
+    from repro.core import SyndeoCluster
+    t0 = time.perf_counter()
+    with SyndeoCluster() as c:
+        for _ in range(4):
+            c.add_worker()
+        up = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        tasks = [c.submit(lambda i=i: i * i) for i in range(64)]
+        c.wait_all(tasks)
+        wave = time.perf_counter() - t1
+    _row("cluster_bringup_4workers", up * 1e6, "phases_1_to_3")
+    _row("task_wave_64", wave / 64 * 1e6, "per_task_overhead")
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    shapes = {
+        "flash_attn_b2h4t256d64": lambda: ops.flash_attention(
+            jnp.ones((2, 4, 256, 64), jnp.bfloat16),
+            jnp.ones((2, 2, 256, 64), jnp.bfloat16),
+            jnp.ones((2, 2, 256, 64), jnp.bfloat16), block_q=128, block_k=128),
+        "decode_attn_b4h8s512": lambda: ops.decode_attention(
+            jnp.ones((4, 8, 64), jnp.bfloat16),
+            jnp.ones((4, 2, 512, 64), jnp.bfloat16),
+            jnp.ones((4, 2, 512, 64), jnp.bfloat16),
+            jnp.full((4,), 512), block_k=256),
+        "moe_gmm_e8c64d256f256": lambda: ops.moe_gmm(
+            jnp.ones((8, 64, 256), jnp.bfloat16),
+            jnp.ones((8, 256, 256), jnp.bfloat16)),
+        "ssd_scan_b2h4t256p32": lambda: ops.ssd_scan(
+            jnp.ones((2, 4, 256, 32)), jnp.ones((2, 4, 256)) * 0.1,
+            -jnp.ones((4,)), jnp.ones((2, 2, 256, 16)) * 0.1,
+            jnp.ones((2, 2, 256, 16)) * 0.1, chunk=64),
+    }
+    for name, fn in shapes.items():
+        out = fn()
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) / 3
+        _row(f"kernel_{name}", dt * 1e6, "interpret_mode")
+
+
+def bench_roofline() -> None:
+    from benchmarks.roofline_report import load, summarize
+    s = summarize()
+    for mesh, agg in s.items():
+        _row(f"dryrun_{mesh}", 0.0,
+             f"ok={agg['ok']};skip={agg['skipped']};err={agg['errors']};"
+             f"fits={agg['fits']}/{agg['ok']}")
+    for mesh in ("singlepod",):
+        for r in load("baseline", mesh):
+            if r["status"] != "ok":
+                continue
+            if (r["arch"], r["shape"]) in (
+                    ("llama3-8b", "train_4k"),
+                    ("arctic-480b", "train_4k"),
+                    ("qwen1.5-32b", "decode_32k")):
+                rf = r["roofline"]
+                _row(f"roofline_{r['arch']}_{r['shape']}_{mesh}",
+                     rf["compute_s"] * 1e6,
+                     f"dom={rf['dominant']};frac={rf['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    import pathlib
+    pathlib.Path("benchmarks/artifacts").mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    bench_bringup()
+    bench_kernels()
+    bench_roofline()
+    bench_paper_tables()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""The paper's experiment, end to end: RL rollout actors (pure-JAX envs +
+MLP policies) collected through the Syndeo scheduler, with throughput
+reported per worker count -- plus the virtual-time replica of the full
+868-CPU sweep.
+
+    PYTHONPATH=src:. python examples/rl_rollout.py [--env Cartpole]
+"""
+import argparse
+import sys
+
+from repro.core import SyndeoCluster
+from repro.rl.rollout import run_benchmark_local
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--env", default="Cartpole")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=500)
+    args = ap.parse_args()
+
+    # real rollouts on the threaded local backend (1 CPU -> modest numbers;
+    # the scheduler/object-store path is identical to a multi-node run)
+    with SyndeoCluster() as c:
+        for _ in range(args.workers):
+            c.add_worker()
+        tput, stats = run_benchmark_local(c, args.env, args.workers,
+                                          args.steps)
+        print(f"[local] {args.env}: {tput:,.0f} interactions/s over "
+              f"{stats['n_tasks']} actors ({stats['wall_s']:.2f}s wall)")
+        print(f"[local] object-store transfers: {c.store.stats}")
+
+    # paper-scale sweep under virtual time (Tables I/II)
+    try:
+        from benchmarks.paper_tables import CPU_CONFIGS, run_env_config
+        print(f"\n[paper-scale sim] {args.env}:")
+        base = None
+        for n in CPU_CONFIGS:
+            tput = run_env_config(args.env, n, seed=0)
+            base = base or tput
+            ideal = n / CPU_CONFIGS[0]
+            print(f"  {n:4d} CPUs: {tput:9,.0f} inter/s  "
+                  f"speedup {tput / base:5.1f}x (ideal {ideal:.0f}x)  "
+                  f"eff {min(100, 100 * tput / base / ideal):3.0f}%")
+    except ImportError:
+        print("(run with PYTHONPATH=src:. to include the paper-scale sim)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Architecture config registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, param_count, active_param_count
+from repro.configs.shapes import SHAPES, ShapeConfig, applicable
+
+_MODULES = {
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "arctic-480b": "arctic_480b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "whisper-tiny": "whisper_tiny",
+    "xlstm-350m": "xlstm_350m",
+    "granite-8b": "granite_8b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "llama3-8b": "llama3_8b",
+    "stablelm-12b": "stablelm_12b",
+    "internvl2-76b": "internvl2_76b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS", "get_config", "all_configs", "ModelConfig", "ShapeConfig",
+    "SHAPES", "applicable", "param_count", "active_param_count",
+]

@@ -1,0 +1,37 @@
+"""qwen1.5-32b  [hf:Qwen/Qwen1.5-* family]
+64L d_model=5120 40H (MHA kv=40) d_ff=27392 vocab=152064, QKV bias.
+decode_32k uses an int8 KV cache: bf16 would need ~21 GB/chip (64L x 32k x
+40 kv-heads x 128 hd x 128 batch over 256 chips) > 16 GB HBM."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    kv_cache_dtype="int8",
+    pad_heads_to=48,
+    pad_kv_heads_to=48,
+    fsdp=True,
+)
+
+SMOKE = ModelConfig(
+    name="qwen-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=192,
+    vocab_size=256,
+    qkv_bias=True,
+    kv_cache_dtype="int8",
+    pad_heads_to=6,
+    pad_kv_heads_to=6,
+)

@@ -1,0 +1,26 @@
+"""stablelm-12b  [hf:stabilityai/stablelm-2-* family]
+40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    kv_replication=2,
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab_size=256,
+)

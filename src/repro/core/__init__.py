@@ -1,0 +1,19 @@
+"""Syndeo core: the paper's contribution as a composable runtime.
+
+Scheduler-inside-a-scheduler: a dynamic, dependency-driven head-worker
+cluster (this package) hosted inside a static gang allocation (Slurm / K8s /
+Cloud-TPU queued resources), with a secure containerized bring-up protocol.
+"""
+from repro.core.cluster import ContainerSpec, SyndeoCluster
+from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
+from repro.core.security import Capability, SecurityError, UnprivilegedProfile
+from repro.core.simulator import SimCluster, SimCostModel
+from repro.core.task_graph import Task, TaskSpec, TaskState
+
+__all__ = [
+    "ContainerSpec", "SyndeoCluster", "GlobalObjectStore", "NodeStore",
+    "ObjectRef", "Scheduler", "SchedulerConfig", "WorkerInfo", "Capability",
+    "SecurityError", "UnprivilegedProfile", "SimCluster", "SimCostModel",
+    "Task", "TaskSpec", "TaskState",
+]

@@ -1,0 +1,37 @@
+"""Backend interface: 'write code once and deploy anywhere'.
+
+A backend knows how to (a) render the launch artifacts for its resource
+manager and (b) bring the allocation up. Only `LocalBackend` and
+`SimBackend` execute in this container; the Slurm/K8s/GCP backends render
+deployable artifacts (validated by tests) since no real cluster is attached.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.core.cluster import ContainerSpec
+
+
+@dataclass(frozen=True)
+class AllocationRequest:
+    nodes: int
+    cpus_per_node: int = 28
+    gpus_per_node: int = 0
+    tpu_topology: str = ""           # e.g. "4x4x4" for TPU pods
+    walltime: str = "04:00:00"
+    partition: str = "normal"
+    shared_dir: str = "/shared/syndeo"
+
+
+class Backend(abc.ABC):
+    name: str = "base"
+
+    def __init__(self, container: ContainerSpec):
+        self.container = container
+
+    @abc.abstractmethod
+    def render_artifacts(self, req: AllocationRequest,
+                         cluster_id: str) -> Dict[str, str]:
+        """filename -> contents for everything this backend needs."""

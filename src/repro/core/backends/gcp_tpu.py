@@ -1,0 +1,54 @@
+"""Cloud-TPU backend: queued-resources allocation of TPU pod slices and a
+per-host launch of the Syndeo worker + jax.distributed bootstrap.
+
+This is the TPU adaptation of the paper's cloud path: the *outer* scheduler
+is Cloud TPU's queued-resource manager (or GKE), the *inner* scheduler is
+the Syndeo runtime, and within a training job XLA owns the chips (three
+nested schedulers -- see DESIGN.md)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.backends.base import AllocationRequest, Backend
+
+
+class GcpTpuBackend(Backend):
+    name = "gcp_tpu"
+
+    def render_artifacts(self, req: AllocationRequest,
+                         cluster_id: str) -> Dict[str, str]:
+        topo = req.tpu_topology or "16x16"
+        create = f"""\
+#!/bin/bash
+set -euo pipefail
+# outer scheduler: allocate the pod slices (gang allocation)
+for POD in $(seq 0 {max(req.nodes - 1, 0)}); do
+  gcloud compute tpus queued-resources create syndeo-{cluster_id}-$POD \\
+    --node-id syndeo-{cluster_id}-$POD \\
+    --accelerator-type v5litepod-256 \\
+    --runtime-version v2-alpha-tpuv5-lite \\
+    --zone us-central1-a &
+done
+wait
+"""
+        launch = f"""\
+#!/bin/bash
+set -euo pipefail
+# middle scheduler: start the Syndeo head on pod 0 host 0, workers on all
+# hosts; rendezvous via the GCS bucket (the cloud 'shared location').
+RDV=gs://syndeo-rdv/{cluster_id}
+for POD in $(seq 0 {max(req.nodes - 1, 0)}); do
+  gcloud compute tpus tpu-vm ssh syndeo-{cluster_id}-$POD --worker=all \\
+    --zone us-central1-a --command "
+      docker run --privileged=false --net=host --user 1000:1000 \\
+        {self.container.image.replace('.sif', ':latest')} \\
+        python -m repro.core.worker \\
+          --role \\$( [ $POD -eq 0 ] && echo head || echo worker ) \\
+          --rendezvous $RDV --cluster-id {cluster_id} \\
+          --jax-coordinator \\${{POD}}:8476 --mesh {topo}
+    " &
+done
+wait
+"""
+        return {f"allocate_{cluster_id}.sh": create,
+                f"launch_{cluster_id}.sh": launch}

@@ -1,0 +1,86 @@
+"""Kubernetes backend (paper §III-E: cloud deployment).
+
+Renders a head Service + head Pod + worker Deployment running the same
+Apptainer image (via the sif->OCI bridge or directly as an OCI image). The
+rendezvous is a ConfigMap-backed shared mount -- same write-then-poll
+protocol as the Slurm shared filesystem."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.backends.base import AllocationRequest, Backend
+
+
+class KubernetesBackend(Backend):
+    name = "kubernetes"
+
+    def render_artifacts(self, req: AllocationRequest,
+                         cluster_id: str) -> Dict[str, str]:
+        image = self.container.image.replace(".sif", ":latest")
+        manifest = f"""\
+apiVersion: v1
+kind: Service
+metadata:
+  name: syndeo-head-{cluster_id}
+spec:
+  selector:
+    app: syndeo-{cluster_id}
+    role: head
+  ports:
+  - port: 6379
+---
+apiVersion: v1
+kind: Pod
+metadata:
+  name: syndeo-head-{cluster_id}
+  labels: {{app: syndeo-{cluster_id}, role: head}}
+spec:
+  securityContext:
+    runAsNonRoot: true            # the Apptainer principle, K8s-enforced
+    runAsUser: 1000
+  containers:
+  - name: head
+    image: {image}
+    command: ["{self.container.entrypoint.split()[0]}"]
+    args: ["-m", "repro.core.worker", "--role", "head",
+           "--rendezvous", "{req.shared_dir}", "--cluster-id", "{cluster_id}"]
+    resources:
+      requests: {{cpu: "{req.cpus_per_node}"}}
+    volumeMounts:
+    - name: rdv
+      mountPath: {req.shared_dir}
+  volumes:
+  - name: rdv
+    persistentVolumeClaim: {{claimName: syndeo-shared}}
+---
+apiVersion: apps/v1
+kind: Deployment
+metadata:
+  name: syndeo-workers-{cluster_id}
+spec:
+  replicas: {req.nodes - 1}
+  selector:
+    matchLabels: {{app: syndeo-{cluster_id}, role: worker}}
+  template:
+    metadata:
+      labels: {{app: syndeo-{cluster_id}, role: worker}}
+    spec:
+      securityContext:
+        runAsNonRoot: true
+        runAsUser: 1000
+      containers:
+      - name: worker
+        image: {image}
+        command: ["{self.container.entrypoint.split()[0]}"]
+        args: ["-m", "repro.core.worker", "--role", "worker",
+               "--rendezvous", "{req.shared_dir}", "--cluster-id", "{cluster_id}"]
+        resources:
+          requests: {{cpu: "{req.cpus_per_node}"}}
+        volumeMounts:
+        - name: rdv
+          mountPath: {req.shared_dir}
+      volumes:
+      - name: rdv
+        persistentVolumeClaim: {{claimName: syndeo-shared}}
+"""
+        return {f"syndeo_{cluster_id}.yaml": manifest}

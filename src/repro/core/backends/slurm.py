@@ -1,0 +1,69 @@
+"""Slurm backend: renders the sbatch script that hosts a Syndeo cluster
+inside a Slurm allocation (the paper's headline deployment).
+
+The script implements the bring-up protocol exactly as §III-D describes:
+node 0 starts the containerized head and writes IP:port to the shared
+filesystem; every other node polls that file and joins as a worker."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.backends.base import AllocationRequest, Backend
+from repro.core.containers import apptainer_definition, apptainer_run_command
+
+
+class SlurmBackend(Backend):
+    name = "slurm"
+
+    def render_artifacts(self, req: AllocationRequest,
+                         cluster_id: str) -> Dict[str, str]:
+        head_cmd = apptainer_run_command(self.container, role="head",
+                                         rendezvous_dir=req.shared_dir,
+                                         cluster_id=cluster_id)
+        worker_cmd = apptainer_run_command(self.container, role="worker",
+                                           rendezvous_dir=req.shared_dir,
+                                           cluster_id=cluster_id)
+        sbatch = f"""\
+#!/bin/bash
+#SBATCH --job-name=syndeo-{cluster_id}
+#SBATCH --nodes={req.nodes}
+#SBATCH --ntasks-per-node=1
+#SBATCH --cpus-per-task={req.cpus_per_node}
+#SBATCH --time={req.walltime}
+#SBATCH --partition={req.partition}
+#SBATCH --output={req.shared_dir}/logs/%j_%n.out
+
+set -euo pipefail
+mkdir -p {req.shared_dir}/logs {req.shared_dir}/rdv
+
+# ---- phase 1: every node already has a copy of the container ----
+# (image staged to {req.shared_dir} before submission; immutable at runtime)
+
+NODELIST=$(scontrol show hostnames "$SLURM_JOB_NODELIST")
+HEAD_NODE=$(echo "$NODELIST" | head -n1)
+
+if [ "$(hostname)" = "$HEAD_NODE" ]; then
+    # ---- phase 2: start the Ray-equivalent head; endpoint -> shared FS ----
+    {head_cmd} &
+    HEAD_PID=$!
+else
+    # ---- phase 3: workers poll the shared FS for the head endpoint ----
+    {worker_cmd} &
+    HEAD_PID=$!
+fi
+
+# ---- phase 4: the cluster accepts jobs at the head ----
+wait $HEAD_PID
+"""
+        srun_variant = f"""\
+#!/bin/bash
+# Alternative launcher: one srun step per role (heterogeneous jobs).
+srun --nodes=1 --ntasks=1 -w "$HEAD_NODE" {head_cmd} &
+srun --nodes={req.nodes - 1} --ntasks={req.nodes - 1} {worker_cmd} &
+wait
+"""
+        return {
+            "syndeo.def": apptainer_definition(self.container),
+            f"submit_{cluster_id}.sbatch": sbatch,
+            f"srun_steps_{cluster_id}.sh": srun_variant,
+        }

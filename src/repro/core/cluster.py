@@ -1,0 +1,227 @@
+"""SyndeoCluster: the four bring-up phases (paper §III-D) + client API.
+
+  1. *Creating the container* -- a ContainerSpec (image, env, binds) is built
+     offline (root needed only there) and copied to every node; here the
+     spec is validated and serialized (backends/containers.py render the
+     actual Apptainer/K8s/Slurm artifacts).
+  2. *Starting the head* -- head endpoint + cluster token published via the
+     rendezvous (shared FS / object-store service).
+  3. *Adding workers* -- each node reads the rendezvous, HMAC-handshakes,
+     registers its resources and joins the Global Object Store.
+  4. *Running* -- jobs submitted at the head execute under the dynamic
+     scheduler (scheduler-inside-a-scheduler).
+
+The local backend runs workers as unprivileged *threads* in-process (one
+python process == one container stand-in); the same Scheduler/ObjectStore
+code is driven by the simulation backend for the paper-scale benchmarks and
+by generated sbatch/K8s artifacts for real deployments.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.rendezvous import Endpoint, InMemoryRendezvous
+from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
+from repro.core.security import (Capability, SecurityError,
+                                 UnprivilegedProfile, mint_cluster_token,
+                                 open_sealed, seal)
+from repro.core.task_graph import Task, TaskSpec, TaskState
+
+
+@dataclass(frozen=True)
+class ContainerSpec:
+    """What every node must have a copy of (paper phase 1)."""
+    image: str = "syndeo.sif"
+    base: str = "docker://python:3.11-slim"
+    env: Dict[str, str] = field(default_factory=dict)
+    binds: List[str] = field(default_factory=list)     # host:container
+    sandbox_writable: bool = True                       # Apptainer --writable-tmpfs
+    entrypoint: str = "python -m repro.core.worker"
+
+
+class SyndeoCluster:
+    """Head node + client API. Thread-safe."""
+
+    def __init__(self, container: Optional[ContainerSpec] = None,
+                 scheduler_config: SchedulerConfig = SchedulerConfig(),
+                 profile: Optional[UnprivilegedProfile] = None,
+                 rendezvous=None):
+        self.container = container or ContainerSpec()
+        self.cluster_id = uuid.uuid4().hex[:12]
+        self.token = mint_cluster_token()
+        self.profile = profile or UnprivilegedProfile(allow_root=True)
+        self.profile.enforce()
+        self.rendezvous = rendezvous or InMemoryRendezvous()
+        self.store = GlobalObjectStore()
+        self._lock = threading.RLock()
+        self._queues: Dict[str, "queue.Queue"] = {}
+        self._threads: Dict[str, threading.Thread] = {}
+        self._futures: Dict[str, threading.Event] = {}
+        self._stop = threading.Event()
+        self.scheduler = Scheduler(self.store, self._launch, self._cancel,
+                                   scheduler_config)
+        self._head_node = NodeStore("head", capacity_bytes=1 << 30,
+                                    spill_dir=self.profile.scratch_dir(self.cluster_id))
+        self.store.register_node(self._head_node)
+        self.rendezvous.publish(Endpoint("127.0.0.1", 6379, self.cluster_id,
+                                         self.token))
+
+    # -- phase 3: workers join -------------------------------------------------
+
+    def add_worker(self, worker_id: Optional[str] = None,
+                   resources: Optional[Dict[str, float]] = None,
+                   start_thread: bool = True) -> str:
+        """Handshake + register (paper phase 3). Threaded local backend."""
+        ep = self.rendezvous.wait(self.cluster_id)
+        hello = seal(ep.token, {"op": "join", "worker": worker_id or "?"})
+        open_sealed(self.token, hello)  # head verifies the HMAC handshake
+
+        wid = worker_id or f"w{len(self._queues)}"
+        store = NodeStore(wid, capacity_bytes=256 << 20,
+                          spill_dir=self.profile.scratch_dir(self.cluster_id))
+        self.store.register_node(store)
+        q: "queue.Queue" = queue.Queue()
+        with self._lock:
+            self._queues[wid] = q
+            self.scheduler.add_worker(
+                WorkerInfo(wid, resources or {"cpu": 1.0}))
+        if start_thread:
+            t = threading.Thread(target=self._worker_loop, args=(wid, q),
+                                 daemon=True, name=f"syndeo-{wid}")
+            self._threads[wid] = t
+            t.start()
+        return wid
+
+    def remove_worker(self, worker_id: str):
+        with self._lock:
+            self.scheduler.on_worker_failed(worker_id, reason="removed")
+        q = self._queues.pop(worker_id, None)
+        if q is not None:
+            q.put(None)
+
+    # -- phase 4: run ------------------------------------------------------------
+
+    def submit(self, fn: Callable[..., Any], *args,
+               resources: Optional[Dict[str, float]] = None,
+               deps: Optional[List[ObjectRef]] = None,
+               group: str = "default", name: str = "",
+               max_retries: int = 3,
+               placement_group: Optional[str] = None,
+               bundle_index: Optional[int] = None, **kwargs) -> Task:
+        spec = TaskSpec(fn=fn, args=args, kwargs=kwargs,
+                        resources=resources or {"cpu": 1.0},
+                        group=group, name=name or getattr(fn, "__name__", "task"),
+                        max_retries=max_retries,
+                        placement_group=placement_group,
+                        bundle_index=bundle_index)
+        with self._lock:
+            task = self.scheduler.submit(spec, deps)
+            self._futures[task.id] = threading.Event()
+        return task
+
+    def put(self, value: Any) -> ObjectRef:
+        return self.store.put("head", value)
+
+    def get(self, task_or_ref, timeout: float = 60.0) -> Any:
+        if isinstance(task_or_ref, ObjectRef):
+            return self.store.get("head", task_or_ref)
+        task = task_or_ref
+        ev = self._futures.get(task.id)
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                cur = self.scheduler.graph.tasks.get(task.id)
+                if cur and cur.state == TaskState.FINISHED:
+                    try:
+                        return self.store.get("head", cur.output)
+                    except KeyError:
+                        # output's only copy died with its worker: lineage
+                        # reconstruction -- re-run the producing task
+                        self.store.note_reconstruction()
+                        cur.state = TaskState.READY
+                        cur.output = None
+                        cur.attempts = 0
+                        self.scheduler.schedule()
+                        continue
+                if cur and cur.state == TaskState.FAILED:
+                    raise RuntimeError(f"task failed: {cur.error}")
+            if ev is not None:
+                ev.wait(0.02)
+                ev.clear()
+            else:
+                time.sleep(0.02)
+        raise TimeoutError(f"task {task.id} not finished in {timeout}s")
+
+    def wait_all(self, tasks: List[Task], timeout: float = 120.0) -> List[Any]:
+        return [self.get(t, timeout=timeout) for t in tasks]
+
+    def create_placement_group(self, name: str, bundles, strategy="SPREAD"):
+        with self._lock:
+            return self.scheduler.create_placement_group(name, bundles, strategy)
+
+    # -- backend plumbing (threaded local workers) -----------------------------------
+
+    def _launch(self, task: Task, worker_id: str):
+        q = self._queues.get(worker_id)
+        if q is not None:
+            q.put(task.id)
+
+    def _cancel(self, task: Task, worker_id: str):
+        pass  # threads are cooperative; results of cancelled twins are dropped
+
+    def _worker_loop(self, wid: str, q: "queue.Queue"):
+        while not self._stop.is_set():
+            try:
+                tid = q.get(timeout=0.1)
+            except queue.Empty:
+                with self._lock:
+                    self.scheduler.heartbeat(wid)
+                continue
+            if tid is None:
+                return
+            with self._lock:
+                task = self.scheduler.graph.tasks.get(tid)
+                if task is None or task.state != TaskState.RUNNING:
+                    continue
+                spec, deps = task.spec, list(task.deps)
+            try:
+                resolved = [self.store.get(wid, d) for d in deps]
+                cap = Capability.grant(self.token, "result", "put")
+                cap.check(self.token, "result", "put")
+                out = spec.fn(*spec.args, *resolved, **spec.kwargs)
+                ref = self.store.put(wid, out, producer_task=tid)
+                with self._lock:
+                    self.scheduler.on_task_finished(tid, ref)
+            except Exception as e:  # noqa: BLE001 -- worker never dies on task error
+                with self._lock:
+                    self.scheduler.on_task_failed(tid, f"{type(e).__name__}: {e}")
+            ev = self._futures.get(tid)
+            if ev is not None:
+                ev.set()
+
+    # -- lifecycle ---------------------------------------------------------------
+
+    def health_check(self):
+        with self._lock:
+            self.scheduler.check_liveness()
+            self.scheduler.check_stragglers()
+
+    def shutdown(self):
+        self._stop.set()
+        for q in self._queues.values():
+            q.put(None)
+        for t in self._threads.values():
+            t.join(timeout=2.0)
+        self.rendezvous.retract(self.cluster_id)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

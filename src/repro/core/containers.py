@@ -1,0 +1,48 @@
+"""Container artifact generation (paper phase 1: creating the container).
+
+Builds are root-privileged and happen on a development machine; the cluster
+only ever *runs* the immutable image as an unprivileged user process. These
+renderers emit the Apptainer definition the paper's experiments used
+(python + the user's algorithm + Ray-equivalent runtime baked in), plus the
+per-backend launch wrappers.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from repro.core.cluster import ContainerSpec
+
+
+def apptainer_definition(spec: "ContainerSpec") -> str:
+    env_lines = "\n".join(f"    export {k}={v}" for k, v in spec.env.items())
+    return f"""\
+Bootstrap: docker
+From: {spec.base.removeprefix('docker://')}
+
+%files
+    src /opt/syndeo/src
+    pyproject.toml /opt/syndeo/pyproject.toml
+
+%post
+    pip install --no-cache-dir /opt/syndeo
+    # containers are immutable after build; runtime writes go to the
+    # sandbox tmpfs (--writable-tmpfs) and the bound scratch dir only
+
+%environment
+    export PYTHONPATH=/opt/syndeo/src
+{env_lines}
+
+%runscript
+    exec {spec.entrypoint} "$@"
+"""
+
+
+def apptainer_run_command(spec: "ContainerSpec", *, role: str,
+                          rendezvous_dir: str, cluster_id: str) -> str:
+    binds = " ".join(f"--bind {b}" for b in
+                     ([f"{rendezvous_dir}:{rendezvous_dir}"] + list(spec.binds)))
+    writable = "--writable-tmpfs" if spec.sandbox_writable else ""
+    return (f"apptainer exec {writable} {binds} {spec.image} "
+            f"{spec.entrypoint} --role {role} "
+            f"--rendezvous {rendezvous_dir} --cluster-id {cluster_id}")

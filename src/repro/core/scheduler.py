@@ -1,0 +1,304 @@
+"""The dynamic (Ray-style) scheduler that Syndeo hosts *inside* the static
+gang allocation -- the paper's scheduler-inside-a-scheduler.
+
+Event-driven state machine, independent of the time source: the local
+backend drives it with threads + wall clock, the simulation backend drives
+it with a virtual clock (same code paths -- the paper-table benchmarks
+exercise exactly this logic).
+
+Features:
+  * dependency-driven dispatch (tasks start when data + resource deps met),
+  * locality-aware placement (prefer workers already holding the deps),
+  * straggler mitigation: speculative re-execution past a runtime quantile,
+  * retry with lineage reconstruction of lost objects on worker failure,
+  * placement groups (STRICT_SPREAD / PACK) for gang-scheduled jobs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.task_graph import Task, TaskGraph, TaskSpec, TaskState
+
+
+@dataclass
+class WorkerInfo:
+    id: str
+    resources: Dict[str, float]
+    available: Dict[str, float] = field(default_factory=dict)
+    alive: bool = True
+    last_heartbeat: float = 0.0
+    running: set = field(default_factory=set)
+
+    def __post_init__(self):
+        if not self.available:
+            self.available = dict(self.resources)
+
+    def fits(self, req: Dict[str, float]) -> bool:
+        return all(self.available.get(k, 0.0) >= v for k, v in req.items())
+
+    def acquire(self, req: Dict[str, float]):
+        for k, v in req.items():
+            self.available[k] = self.available.get(k, 0.0) - v
+
+    def release(self, req: Dict[str, float]):
+        for k, v in req.items():
+            self.available[k] = self.available.get(k, 0.0) + v
+
+
+@dataclass
+class SchedulerConfig:
+    speculation_factor: float = 2.0      # speculate past factor x group median
+    speculation_min_samples: int = 5
+    heartbeat_timeout: float = 10.0
+    locality_weight: float = 1.0         # bytes-on-node score weight
+    enable_speculation: bool = True
+
+
+class Scheduler:
+    """Head-node scheduler. All mutation happens through the public event
+    methods; `launch_fn(task, worker_id)` is injected by the backend."""
+
+    def __init__(self, store: GlobalObjectStore,
+                 launch_fn: Callable[[Task, str], None],
+                 cancel_fn: Optional[Callable[[Task, str], None]] = None,
+                 config: SchedulerConfig = SchedulerConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.store = store
+        self.graph = TaskGraph()
+        self.workers: Dict[str, WorkerInfo] = {}
+        self.launch_fn = launch_fn
+        self.cancel_fn = cancel_fn or (lambda t, w: None)
+        self.cfg = config
+        self.clock = clock
+        self._group_runtimes: Dict[str, List[float]] = {}
+        self._placement_bindings: Dict[str, Dict[int, str]] = {}
+        self.stats = {"launched": 0, "finished": 0, "failed": 0, "retried": 0,
+                      "speculative": 0, "reconstructed": 0, "cancelled": 0}
+
+    # -- membership ----------------------------------------------------------
+
+    def add_worker(self, worker: WorkerInfo):
+        worker.last_heartbeat = self.clock()
+        self.workers[worker.id] = worker
+        self.schedule()
+
+    def remove_worker(self, worker_id: str):
+        self.on_worker_failed(worker_id, reason="removed")
+
+    def heartbeat(self, worker_id: str):
+        w = self.workers.get(worker_id)
+        if w:
+            w.last_heartbeat = self.clock()
+
+    def check_liveness(self):
+        now = self.clock()
+        for w in list(self.workers.values()):
+            if w.alive and now - w.last_heartbeat > self.cfg.heartbeat_timeout:
+                self.on_worker_failed(w.id, reason="heartbeat timeout")
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, spec: TaskSpec, deps: Optional[List[ObjectRef]] = None) -> Task:
+        task = Task(spec=spec, deps=list(deps or []))
+        for d in task.deps:
+            self.store.add_ref(d)
+            if self.store.locations(d):
+                # dep already materialized (e.g. cluster.put artifacts)
+                self.graph.mark_available(d.id)
+        self.graph.add(task)
+        self.schedule()
+        return task
+
+    # -- core scheduling pass --------------------------------------------------
+
+    def _locality_score(self, task: Task, worker: WorkerInfo) -> float:
+        score = 0.0
+        for d in task.deps:
+            if worker.id in self.store.locations(d):
+                score += self.store.size_of(d)
+        return score * self.cfg.locality_weight
+
+    def _pick_worker(self, task: Task) -> Optional[WorkerInfo]:
+        req = task.spec.resources
+        if task.spec.placement_group:
+            bound = self._placement_bindings.get(task.spec.placement_group, {})
+            wid = bound.get(task.spec.bundle_index)
+            if wid is not None:
+                w = self.workers.get(wid)
+                return w if (w and w.alive and w.fits(req)) else None
+        best, best_key = None, None
+        for w in self.workers.values():
+            if not w.alive or not w.fits(req):
+                continue
+            load = sum(w.resources.values()) - sum(w.available.values())
+            key = (self._locality_score(task, w), -load)
+            if best_key is None or key > best_key:
+                best, best_key = w, key
+        return best
+
+    def schedule(self):
+        for task in sorted(self.graph.ready_tasks(),
+                           key=lambda t: t.submitted_at):
+            w = self._pick_worker(task)
+            if w is None:
+                continue
+            task.state = TaskState.RUNNING
+            task.worker = w.id
+            task.started_at = self.clock()
+            task.attempts += 1
+            w.acquire(task.spec.resources)
+            w.running.add(task.id)
+            self.stats["launched"] += 1
+            self.launch_fn(task, w.id)
+
+    # -- completion events -----------------------------------------------------
+
+    def on_task_finished(self, task_id: str, output: ObjectRef):
+        task = self.graph.tasks.get(task_id)
+        if task is None or task.state not in (TaskState.RUNNING,):
+            return
+        task.state = TaskState.FINISHED
+        task.finished_at = self.clock()
+        task.output = output
+        self._release(task)
+        self.stats["finished"] += 1
+        rt = task.runtime
+        if rt is not None:
+            self._group_runtimes.setdefault(task.spec.group, []).append(rt)
+        # cancel the twin (speculation): first finisher wins
+        twin_id = task.speculative_of
+        twins = [t for t in self.graph.tasks.values()
+                 if t.speculative_of == task.id or (twin_id and t.id == twin_id)]
+        for t in twins:
+            if t.state == TaskState.RUNNING:
+                t.state = TaskState.CANCELLED
+                self._release(t)
+                self.stats["cancelled"] += 1
+                self.cancel_fn(t, t.worker)
+        for ready in self.graph.object_available(output):
+            pass
+        self.schedule()
+
+    def on_task_failed(self, task_id: str, error: str):
+        task = self.graph.tasks.get(task_id)
+        if task is None or task.state != TaskState.RUNNING:
+            return
+        self._release(task)
+        self.stats["failed"] += 1
+        if task.attempts <= task.spec.max_retries:
+            task.state = TaskState.READY if self._deps_live(task) else TaskState.PENDING
+            task.error = error
+            self.stats["retried"] += 1
+            self._reconstruct_missing(task)
+        else:
+            task.state = TaskState.FAILED
+            task.error = error
+        self.schedule()
+
+    def _release(self, task: Task):
+        w = self.workers.get(task.worker or "")
+        if w and task.id in w.running:
+            w.running.discard(task.id)
+            w.release(task.spec.resources)
+
+    # -- failure handling --------------------------------------------------------
+
+    def on_worker_failed(self, worker_id: str, reason: str = "failure"):
+        w = self.workers.get(worker_id)
+        if w is None:
+            return
+        w.alive = False
+        lost_objects = self.store.unregister_node(worker_id)
+        for oid in lost_objects:
+            self.graph.object_lost(oid)
+        # requeue running tasks
+        for tid in list(w.running):
+            task = self.graph.tasks[tid]
+            self._release(task)
+            if task.attempts <= task.spec.max_retries:
+                task.state = TaskState.READY if self._deps_live(task) else TaskState.PENDING
+                self.stats["retried"] += 1
+                self._reconstruct_missing(task)
+            else:
+                task.state = TaskState.FAILED
+                task.error = f"worker {worker_id} {reason}"
+        del self.workers[worker_id]
+        self.schedule()
+
+    def _deps_live(self, task: Task) -> bool:
+        return all(self.store.locations(d) for d in task.deps)
+
+    def _reconstruct_missing(self, task: Task):
+        """Lineage reconstruction: re-submit producers of lost deps."""
+        for d in task.deps:
+            if self.store.locations(d):
+                continue
+            producer_id = self.store.lineage(d) or d.producer_task
+            producer = self.graph.tasks.get(producer_id or "")
+            if producer is None:
+                continue
+            if producer.state in (TaskState.FINISHED, TaskState.FAILED,
+                                  TaskState.CANCELLED):
+                producer.state = TaskState.READY if self._deps_live(producer) \
+                    else TaskState.PENDING
+                producer.attempts = 0
+                producer.output = None
+                self.store.note_reconstruction()
+                self.stats["reconstructed"] += 1
+                self._reconstruct_missing(producer)  # recursive lineage
+
+    # -- straggler mitigation ------------------------------------------------------
+
+    def check_stragglers(self):
+        if not self.cfg.enable_speculation:
+            return
+        now = self.clock()
+        for task in self.graph.running_tasks():
+            if task.speculated or task.speculative_of:
+                continue
+            hist = self._group_runtimes.get(task.spec.group, [])
+            if len(hist) < self.cfg.speculation_min_samples:
+                continue
+            median = sorted(hist)[len(hist) // 2]
+            started = task.started_at if task.started_at is not None else now
+            if (now - started) > self.cfg.speculation_factor * median:
+                twin = Task(spec=task.spec, deps=list(task.deps),
+                            speculative_of=task.id)
+                task.speculated = True
+                self.graph.add(twin)
+                self.stats["speculative"] += 1
+        self.schedule()
+
+    # -- placement groups -----------------------------------------------------------
+
+    def create_placement_group(self, name: str,
+                               bundles: List[Dict[str, float]],
+                               strategy: str = "SPREAD") -> bool:
+        """Reserve resources for a gang; returns False if unsatisfiable."""
+        binding: Dict[int, str] = {}
+        used: Dict[str, Dict[str, float]] = {}
+        workers = [w for w in self.workers.values() if w.alive]
+        for i, bundle in enumerate(bundles):
+            placed = False
+            for w in sorted(workers, key=lambda w: len(w.running)):
+                if strategy == "STRICT_SPREAD" and w.id in binding.values():
+                    continue
+                tentative = used.setdefault(w.id, {})
+                avail = {k: w.available.get(k, 0.0) - tentative.get(k, 0.0)
+                         for k in bundle}
+                if all(avail[k] >= v for k, v in bundle.items()):
+                    for k, v in bundle.items():
+                        tentative[k] = tentative.get(k, 0.0) + v
+                    binding[i] = w.id
+                    placed = True
+                    break
+            if not placed:
+                return False
+        self._placement_bindings[name] = binding
+        return True
+
+    def placement_binding(self, name: str) -> Dict[int, str]:
+        return dict(self._placement_bindings.get(name, {}))

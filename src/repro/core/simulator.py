@@ -1,0 +1,166 @@
+"""Virtual-time discrete-event backend for the Syndeo scheduler.
+
+Runs the *real* Scheduler / GlobalObjectStore code with a simulated clock
+and a parametric cost model, so paper-scale clusters (868 CPU workers) can
+be benchmarked faithfully on this 1-core container. The cost model captures
+exactly the effects the paper measures:
+
+  * per-task dispatch overhead at the head (serialized -- the head is one
+    process),
+  * result-artifact transfer through the head's link (serialized queue;
+    Humanoid's 376-float observations x 1000 steps are ~3 MB/task, which is
+    what collapses its scaling in Table II),
+  * per-worker compute time with optional jitter / slowdown injection
+    (stragglers), and worker failure injection.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
+from repro.core.task_graph import Task, TaskSpec, TaskState
+
+
+@dataclass
+class SimCostModel:
+    task_time_s: Callable[[TaskSpec], float] = lambda spec: 1.0
+    result_bytes: Callable[[TaskSpec], float] = lambda spec: 1024.0
+    dispatch_overhead_s: float = 0.002        # head-side serial dispatch
+    head_bandwidth_Bps: float = 1.0e9         # 10GbE-ish effective
+    jitter: float = 0.05                      # lognormal-ish runtime noise
+
+
+class SimCluster:
+    """Discrete-event cluster. API mirrors SyndeoCluster where relevant."""
+
+    def __init__(self, cost: SimCostModel,
+                 scheduler_config: SchedulerConfig = SchedulerConfig(),
+                 seed: int = 0):
+        self.cost = cost
+        self.now = 0.0
+        self._seq = 0
+        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self.rng = random.Random(seed)
+        self.store = GlobalObjectStore()
+        self.scheduler = Scheduler(self.store, self._launch, lambda t, w: None,
+                                   scheduler_config, clock=lambda: self.now)
+        self._head_store = NodeStore("head", capacity_bytes=1 << 30)
+        self.store.register_node(self._head_store)
+        self._head_link_free = 0.0   # serialized head NIC
+        self._head_dispatch_free = 0.0
+        self._worker_speed: Dict[str, float] = {}
+        self._dead: set = set()
+        self.completed: List[Task] = []
+
+    # -- event loop -------------------------------------------------------------
+
+    def _post(self, delay: float, fn: Callable[[], None]):
+        self._seq += 1
+        heapq.heappush(self._events, (self.now + delay, self._seq, fn))
+
+    def run(self, until: Optional[float] = None):
+        while self._events:
+            t, _, fn = heapq.heappop(self._events)
+            if until is not None and t > until:
+                self.now = until
+                return
+            self.now = max(self.now, t)
+            fn()
+
+    # -- membership ----------------------------------------------------------------
+
+    def add_workers(self, n: int, cpus_per_worker: float = 1.0,
+                    speed: float = 1.0, prefix: str = "w"):
+        for i in range(n):
+            wid = f"{prefix}{len(self._worker_speed)}"
+            self.store.register_node(NodeStore(wid, capacity_bytes=1 << 30))
+            self._worker_speed[wid] = speed
+            self.scheduler.add_worker(WorkerInfo(wid, {"cpu": cpus_per_worker}))
+
+    def set_worker_speed(self, worker_id: str, speed: float):
+        self._worker_speed[worker_id] = speed
+
+    def fail_worker_at(self, worker_id: str, t: float):
+        def fail():
+            self._dead.add(worker_id)
+            self.scheduler.on_worker_failed(worker_id, reason="injected")
+        self._post(max(0.0, t - self.now), fail)
+
+    # -- submission --------------------------------------------------------------------
+
+    def submit(self, spec: TaskSpec, deps=None) -> Task:
+        return self.scheduler.submit(spec, deps)
+
+    # -- the cost model in action ---------------------------------------------------------
+
+    def _launch(self, task: Task, worker_id: str):
+        # serialized head dispatch
+        self._head_dispatch_free = max(self._head_dispatch_free, self.now) \
+            + self.cost.dispatch_overhead_s
+        start = self._head_dispatch_free
+        speed = self._worker_speed.get(worker_id, 1.0)
+        base = self.cost.task_time_s(task.spec) / max(speed, 1e-9)
+        noise = 1.0 + self.cost.jitter * (self.rng.random() * 2 - 1)
+        duration = base * noise
+        finish = start + duration
+
+        def complete():
+            if worker_id in self._dead:
+                return
+            cur = self.scheduler.graph.tasks.get(task.id)
+            if cur is None or cur.state != TaskState.RUNNING or cur.worker != worker_id:
+                return
+            # result artifact flows through the head's serialized link
+            xfer = self.cost.result_bytes(task.spec) / self.cost.head_bandwidth_Bps
+            self._head_link_free = max(self._head_link_free, self.now) + xfer
+            done_at = self._head_link_free
+
+            def deliver():
+                cur2 = self.scheduler.graph.tasks.get(task.id)
+                if cur2 is None or cur2.state != TaskState.RUNNING:
+                    return
+                ref = self.store.put("head", {"task": task.id},
+                                     producer_task=task.id)
+                self.scheduler.on_task_finished(task.id, ref)
+                self.completed.append(cur2)
+            self._post(done_at - self.now, deliver)
+        self._post(finish - self.now, complete)
+
+    # -- convenience ----------------------------------------------------------------------
+
+    def run_wave(self, specs: List[TaskSpec],
+                 monitor_every: float = 0.05) -> float:
+        """Submit a batch, run to completion, return makespan (virtual s).
+
+        A periodic monitor event drives straggler checks while work is in
+        flight (the head's health loop in the threaded backend)."""
+        t0 = self.now
+        ids = [self.submit(s).id for s in specs]
+
+        def in_flight() -> bool:
+            states = {self.scheduler.graph.tasks[i].state for i in ids}
+            return not states <= {TaskState.FINISHED, TaskState.FAILED,
+                                  TaskState.CANCELLED}
+
+        def monitor():
+            if not in_flight():
+                return
+            self.scheduler.check_stragglers()
+            self._post(monitor_every, monitor)
+
+        self._post(monitor_every, monitor)
+        guard = 0
+        while True:
+            self.run()
+            if not in_flight():
+                break
+            self.scheduler.check_stragglers()
+            self._post(monitor_every, monitor)
+            guard += 1
+            if guard > 10000:
+                raise RuntimeError("simulation did not converge")
+        return self.now - t0

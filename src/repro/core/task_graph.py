@@ -1,0 +1,106 @@
+"""Tasks and the dependency graph.
+
+A task is an abstraction that starts when its dependencies are met (paper
+Fig. 1 right): dependencies are *physical resources* (cpus/tpus on some
+worker) and/or *data artifacts* (ObjectRefs in the Global Object Store).
+"""
+from __future__ import annotations
+
+import time
+import uuid
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.object_store import ObjectRef
+
+
+class TaskState(str, Enum):
+    PENDING = "pending"        # waiting on deps
+    READY = "ready"            # deps met, waiting for resources
+    RUNNING = "running"
+    FINISHED = "finished"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+@dataclass
+class TaskSpec:
+    fn: Callable[..., Any]
+    args: Tuple[Any, ...] = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    resources: Dict[str, float] = field(default_factory=lambda: {"cpu": 1.0})
+    name: str = ""
+    # scheduling hints
+    group: str = "default"          # straggler stats are tracked per group
+    max_retries: int = 3
+    placement_group: Optional[str] = None
+    bundle_index: Optional[int] = None
+
+
+@dataclass
+class Task:
+    spec: TaskSpec
+    id: str = field(default_factory=lambda: uuid.uuid4().hex)
+    state: TaskState = TaskState.PENDING
+    deps: List[ObjectRef] = field(default_factory=list)
+    output: Optional[ObjectRef] = None
+    worker: Optional[str] = None
+    attempts: int = 0
+    submitted_at: float = field(default_factory=time.monotonic)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    error: Optional[str] = None
+    # speculative re-execution bookkeeping
+    speculative_of: Optional[str] = None
+    speculated: bool = False
+
+    @property
+    def runtime(self) -> Optional[float]:
+        if self.started_at is None:
+            return None
+        end = self.finished_at or time.monotonic()
+        return end - self.started_at
+
+
+class TaskGraph:
+    """Dependency bookkeeping: object -> waiting tasks, task -> output."""
+
+    def __init__(self):
+        self.tasks: Dict[str, Task] = {}
+        self._waiting_on: Dict[str, set] = {}     # object_id -> {task_id}
+        self._available: set = set()              # object ids already produced
+
+    def add(self, task: Task):
+        self.tasks[task.id] = task
+        missing = [d for d in task.deps if d.id not in self._available]
+        if not missing:
+            task.state = TaskState.READY
+            return
+        for d in missing:
+            self._waiting_on.setdefault(d.id, set()).add(task.id)
+
+    def mark_available(self, object_id: str):
+        self._available.add(object_id)
+
+    def object_available(self, ref: ObjectRef) -> List[Task]:
+        """Mark an object produced; return tasks that became READY."""
+        self._available.add(ref.id)
+        ready = []
+        for tid in self._waiting_on.pop(ref.id, set()):
+            task = self.tasks[tid]
+            if task.state != TaskState.PENDING:
+                continue
+            if all(d.id in self._available for d in task.deps):
+                task.state = TaskState.READY
+                ready.append(task)
+        return ready
+
+    def object_lost(self, object_id: str):
+        self._available.discard(object_id)
+
+    def ready_tasks(self) -> List[Task]:
+        return [t for t in self.tasks.values() if t.state == TaskState.READY]
+
+    def running_tasks(self) -> List[Task]:
+        return [t for t in self.tasks.values() if t.state == TaskState.RUNNING]

@@ -1,0 +1,209 @@
+"""Containerized node entrypoint (the `%runscript` of the Apptainer image).
+
+`--role head` starts a head: publishes its endpoint via the file rendezvous
+(shared FS / bucket mount), serves the task protocol over TCP, and runs the
+demo workload if requested. `--role worker` polls the rendezvous, HMAC-
+handshakes, then pulls tasks over IP -- the paper's phases 2-4 over real
+sockets. Used by the subprocess integration test and by the rendered Slurm /
+K8s / GCP artifacts.
+
+Protocol: one JSON envelope per connection (HMAC-sealed, security.py);
+payloads are pickled+base64 (the container image pins the code version, so
+pickle compatibility holds by construction).
+"""
+from __future__ import annotations
+
+import argparse
+import base64
+import json
+import pickle
+import socket
+import socketserver
+import threading
+import time
+import uuid
+from typing import Any, Dict, Optional
+
+from repro.core.cluster import SyndeoCluster
+from repro.core.object_store import NodeStore
+from repro.core.rendezvous import Endpoint, FileRendezvous
+from repro.core.scheduler import WorkerInfo
+from repro.core.security import open_sealed, seal
+from repro.core.task_graph import TaskState
+
+
+def _enc(obj: Any) -> str:
+    return base64.b64encode(pickle.dumps(obj)).decode()
+
+
+def _dec(blob: str) -> Any:
+    return pickle.loads(base64.b64decode(blob))
+
+
+def _request(host: str, port: int, token: str, msg: Dict[str, Any],
+             timeout: float = 10.0) -> Dict[str, Any]:
+    with socket.create_connection((host, port), timeout=timeout) as s:
+        s.sendall((json.dumps(seal(token, msg)) + "\n").encode())
+        buf = b""
+        while not buf.endswith(b"\n"):
+            chunk = s.recv(1 << 20)
+            if not chunk:
+                break
+            buf += chunk
+    return open_sealed(token, json.loads(buf.decode()))
+
+
+class HeadServer:
+    """TCP face of a SyndeoCluster (pull-based workers)."""
+
+    def __init__(self, cluster: SyndeoCluster, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.cluster = cluster
+        self._outbox: Dict[str, list] = {}
+        head = self
+
+        class Handler(socketserver.StreamRequestHandler):
+            def handle(self):
+                line = self.rfile.readline()
+                try:
+                    msg = open_sealed(cluster.token,
+                                      json.loads(line.decode()))
+                    reply = head.dispatch(msg)
+                except Exception as e:  # noqa: BLE001
+                    reply = {"ok": False, "error": str(e)}
+                self.wfile.write(
+                    (json.dumps(seal(cluster.token, reply)) + "\n").encode())
+
+        self.server = socketserver.ThreadingTCPServer((host, port), Handler,
+                                                      bind_and_activate=True)
+        self.server.daemon_threads = True
+        self.port = self.server.server_address[1]
+        self._thread = threading.Thread(target=self.server.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        # re-publish the rendezvous with the real TCP port
+        cluster.rendezvous.publish(Endpoint(host, self.port,
+                                            cluster.cluster_id, cluster.token))
+
+    # head-side handling ------------------------------------------------------
+
+    def dispatch(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        op = msg.get("op")
+        c = self.cluster
+        if op == "join":
+            wid = msg.get("worker") or f"tcp-{uuid.uuid4().hex[:6]}"
+            self._outbox.setdefault(wid, [])
+            store = NodeStore(wid)  # head-side proxy store for this worker
+            c.store.register_node(store)
+            with c._lock:
+                c.scheduler.add_worker(
+                    WorkerInfo(wid, msg.get("resources", {"cpu": 1.0})))
+            return {"ok": True, "worker": wid}
+        if op == "poll":
+            wid = msg["worker"]
+            with c._lock:
+                c.scheduler.heartbeat(wid)
+            box = self._outbox.get(wid, [])
+            if not box:
+                return {"ok": True, "task": None}
+            tid = box.pop(0)
+            with c._lock:
+                task = c.scheduler.graph.tasks[tid]
+                payload = _enc((task.spec.fn, task.spec.args, task.spec.kwargs,
+                                [c.store.get("head", d) for d in task.deps]))
+            return {"ok": True, "task": tid, "payload": payload}
+        if op == "result":
+            tid, wid = msg["task"], msg["worker"]
+            value = _dec(msg["payload"])
+            ref = c.store.put("head", value, producer_task=tid)
+            with c._lock:
+                c.scheduler.on_task_finished(tid, ref)
+            ev = c._futures.get(tid)
+            if ev:
+                ev.set()
+            return {"ok": True}
+        if op == "error":
+            with c._lock:
+                c.scheduler.on_task_failed(msg["task"], msg["err"])
+            return {"ok": True}
+        if op == "stats":
+            with c._lock:
+                return {"ok": True, "stats": dict(c.scheduler.stats)}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+    def launch(self, task, worker_id: str):
+        self._outbox.setdefault(worker_id, []).append(task.id)
+
+    def attach(self):
+        """Route scheduler launches for tcp- workers through the outbox."""
+        orig = self.cluster.scheduler.launch_fn
+
+        def launch(task, worker_id):
+            if worker_id.startswith("tcp-") or worker_id in self._outbox:
+                self.launch(task, worker_id)
+            else:
+                orig(task, worker_id)
+        self.cluster.scheduler.launch_fn = launch
+
+    def shutdown(self):
+        self.server.shutdown()
+
+
+def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
+               max_idle_s: float = 30.0):
+    rdv = FileRendezvous(rendezvous_dir)
+    ep = rdv.wait(cluster_id, timeout=60.0)
+    token = ep.token
+    joined = _request(ep.host, ep.port, token,
+                      {"op": "join", "worker": worker_id,
+                       "resources": {"cpu": 1.0}})
+    wid = joined["worker"]
+    idle_since = time.monotonic()
+    while time.monotonic() - idle_since < max_idle_s:
+        got = _request(ep.host, ep.port, token, {"op": "poll", "worker": wid})
+        tid = got.get("task")
+        if tid is None:
+            time.sleep(0.05)
+            continue
+        idle_since = time.monotonic()
+        fn, args, kwargs, deps = _dec(got["payload"])
+        try:
+            out = fn(*args, *deps, **kwargs)
+            _request(ep.host, ep.port, token,
+                     {"op": "result", "task": tid, "worker": wid,
+                      "payload": _enc(out)})
+        except Exception as e:  # noqa: BLE001
+            _request(ep.host, ep.port, token,
+                     {"op": "error", "task": tid, "worker": wid,
+                      "err": f"{type(e).__name__}: {e}"})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", choices=["head", "worker"], required=True)
+    ap.add_argument("--rendezvous", required=True)
+    ap.add_argument("--cluster-id", required=True)
+    ap.add_argument("--worker-id", default="")
+    ap.add_argument("--max-idle-s", type=float, default=30.0)
+    args = ap.parse_args()
+    if args.role == "worker":
+        run_worker(args.rendezvous, args.cluster_id, args.worker_id,
+                   args.max_idle_s)
+    else:
+        rdv = FileRendezvous(args.rendezvous)
+        cluster = SyndeoCluster(rendezvous=rdv)
+        cluster.cluster_id = args.cluster_id
+        server = HeadServer(cluster)
+        server.attach()
+        print(f"head up on port {server.port}", flush=True)
+        try:
+            while True:
+                time.sleep(1.0)
+                cluster.health_check()
+        except KeyboardInterrupt:
+            server.shutdown()
+            cluster.shutdown()
+
+
+if __name__ == "__main__":
+    main()

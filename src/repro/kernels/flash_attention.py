@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (training/prefill): causal, GQA, windowed.
+
+TPU-native design (not a CUDA port):
+  * grid = (batch, q_heads, num_q_blocks, num_k_blocks); the k dimension is
+    the minor-most ("arbitrary" semantics) so the online-softmax state lives
+    in VMEM scratch across k steps -- no HBM round-trips for acc/m/l,
+  * BlockSpec tiles are MXU-aligned (block_q x head_dim, head_dim a
+    multiple of 128 -- ops.py pads when needed),
+  * GQA is folded into the k/v index_map (q-head h reads kv-head h // R) --
+    KV is never materialized repeated,
+  * causal masking by block; fully-masked k blocks issue no MXU work
+    (pl.when guard).
+
+Layout: q (B, Hq, Tq, D); k/v (B, Hkv, Tk, D); out like q. fp32 softmax.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_k: int, n_kb: int,
+                  causal: bool, window: Optional[int]):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = jk * block_k
+
+    # skip k blocks that are entirely in the causal future / outside window
+    needed = jnp.asarray(True)
+    if causal:
+        needed = needed & (k_start <= q_start + block_q - 1)
+    if window is not None:
+        needed = needed & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None]) * mask       # masked rows stay 0
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_prev * alpha[:, None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(jk == n_kb - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D) -> out (B, Hq, Tq, D)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    R = Hq // Hkv
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    assert Tq % block_q == 0 and Tk % block_k == 0
+    n_qb, n_kb = Tq // block_q, Tk // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, n_kb=n_kb, causal=causal,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // R, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // R, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

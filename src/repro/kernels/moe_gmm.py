@@ -1,0 +1,64 @@
+"""Pallas TPU grouped (expert) matmul for MoE dispatch output.
+
+Computes out[e] = x[e] @ w[e] for E experts with capacity-C token slots,
+tiled so each (bc x bd) x (bd x bf) step is MXU-shaped and the fp32
+accumulator lives in VMEM across the contraction dimension. The expert
+dimension rides the grid -- weights stream from HBM once per (e, j) tile
+column, tokens once per (e, i) row: exactly the blocking a production MoE
+FFN uses on TPU.
+
+Layout: x (E, C, d), w (E, d, f) -> out (E, C, f).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_db: int):
+    l = pl.program_id(3)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)          # (bd, bf)
+    acc_ref[...] += jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(l == n_db - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+            block_d: int = 512, block_f: int = 256,
+            interpret: bool = True) -> jax.Array:
+    """x (E, C, d) @ w (E, d, f) -> (E, C, f)."""
+    E, C, d = x.shape
+    f = w.shape[2]
+    block_c = min(block_c, C)
+    block_d = min(block_d, d)
+    block_f = min(block_f, f)
+    assert C % block_c == 0 and d % block_d == 0 and f % block_f == 0
+    n_db = d // block_d
+
+    kernel = functools.partial(_gmm_kernel, n_db=n_db)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // block_c, f // block_f, n_db),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, i, j, l: (e, i, l)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, i, j, l: (e, l, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, i, j, l: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,105 @@
+"""Pallas TPU chunked SSD (Mamba-2) scan.
+
+One grid step processes one (batch, head, chunk) cell: the intra-chunk
+quasi-attention (Q x Q decay-masked scores on the MXU) plus the inter-chunk
+contribution from the running state S, which lives in VMEM scratch across
+the sequential chunk dimension -- the HBM traffic is x/B/C/dt once, y once,
+state never (vs. the jnp reference whose scan carries round-trip every
+chunk). This is the TPU-native shape of the SSD algorithm: within-chunk
+parallel (MXU), across-chunk recurrent (VMEM-resident).
+
+Layout: x (B,H,T,P); dt (B,H,T); A (H,1); Bm/Cm (B,G,T,N).
+Out: y (B,H,T,P), final state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref,
+                s_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0, 0]                            # scalar (negative)
+    Bm = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+
+    dA = dt * A
+    la = jnp.cumsum(dA)                        # (Q,)
+    la_end = la[chunk - 1]
+
+    # intra-chunk: scores[t,s] = (C_t . B_s) * exp(la_t - la_s) * dt_s, s<=t
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    decay = jnp.exp(jnp.clip(la[:, None] - la[None, :], -60.0, 0.0))
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w_intra = jnp.where(tri, scores * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(w_intra, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk from carried state
+    S = s_ref[...]                             # (P, N)
+    y += jax.lax.dot_general(Cm, S, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) * \
+        jnp.exp(la)[:, None]
+
+    # state update to chunk end
+    w_state = jnp.exp(jnp.clip(la_end - la, -60.0, 0.0)) * dt   # (Q,)
+    S_new = jnp.exp(la_end) * S + jax.lax.dot_general(
+        x, Bm * w_state[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[...] = S_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        s_out_ref[0, 0] = S_new.astype(s_out_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 256,
+             interpret: bool = True):
+    """x (B,H,T,P); dt (B,H,T); A (H,); Bm/Cm (B,G,T,N) -> (y, final_state)."""
+    B, H, T, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    A2 = A.reshape(H, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A2, Bm, Cm)
+    return y, s_fin

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The dry-run sets XLA_FLAGS before importing jax to
+get 512 placeholder devices; real launches get devices from the Syndeo
+runtime's gang allocation (one jax process per host, jax.distributed).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests use small virtual meshes, e.g. (2, 4))."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_degree(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)

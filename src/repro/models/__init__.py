@@ -1,0 +1,4 @@
+from repro.models.registry import Model, build_model, input_specs, cache_specs, make_batch, shape_window
+
+__all__ = ["Model", "build_model", "input_specs", "cache_specs", "make_batch",
+           "shape_window"]

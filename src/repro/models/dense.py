@@ -1,0 +1,433 @@
+"""Dense (llama-family) decoder LM, plus the shared transformer block used by
+the MoE / VLM / whisper-decoder families.
+
+Layers are *scanned* (stacked params, `jax.lax.scan`) so the lowered HLO is
+one block body regardless of depth -- this keeps 512-device dry-run compiles
+fast and is also what production TPU stacks (MaxText et al.) do.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe_layer, moe_ffn
+from repro.sharding.axes import constrain
+
+F32 = jnp.float32
+
+
+# ----------------------------------------------------------------------------
+# Parameter init
+# ----------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, dtype):
+    ka, km, kn = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim, cfg.qkv_bias, dtype,
+                                 cfg.pad_heads_to, cfg.pad_kv_heads_to),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe_layer(km, cfg, dtype)
+    else:
+        std = cfg.d_model ** -0.5
+        k1, k2, k3 = jax.random.split(km, 3)
+        p["mlp"] = {
+            "w1": (jax.random.normal(k1, (cfg.d_model, cfg.d_ff)) * std).astype(dtype),
+            "w3": (jax.random.normal(k2, (cfg.d_model, cfg.d_ff)) * std).astype(dtype),
+            "w2": (jax.random.normal(k3, (cfg.d_ff, cfg.d_model)) * std).astype(dtype),
+        }
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype,
+                                  cfg.tie_embeddings, cfg.padded_vocab),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+
+def block_fwd(p, x, positions, cfg: ModelConfig, *, n_groups: int = 1,
+              window: Optional[int] = None):
+    """Training/prefill block: full-sequence attention + FFN."""
+    h, _ = L.attention(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                       positions, cfg, causal=True, window=window)
+    x = x + h
+    aux = jnp.zeros((), F32)
+    xn = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_ffn(p["moe"], xn, cfg, n_groups)
+    else:
+        y = L.swiglu(xn, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+    # "seq" is unmapped by default; binding it to the model axis turns the
+    # per-block TP all-reduces into reduce-scatter+all-gather pairs
+    # (Megatron-style sequence parallelism; §Perf it2)
+    return constrain(x + y, "batch", "seq", None), aux
+
+
+def backbone_fwd(params, x, positions, cfg: ModelConfig, *, n_groups: int = 1,
+                 window: Optional[int] = None, remat: bool = True):
+    """Scan the block stack over stacked layer params. x: (B, T, d)."""
+    def body(carry, lp):
+        y, aux = block_fwd(lp, carry, positions, cfg, n_groups=n_groups,
+                           window=window)
+        return y, aux
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.sum(auxs)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, n_groups: int = 1):
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = L.embed(params["embed"], tokens)
+    x = _inject_frontend(params, batch, x, cfg)
+    x, aux = backbone_fwd(params, x, positions, cfg, n_groups=n_groups)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    mask = batch.get("loss_mask")
+    loss = L.softmax_xent(logits, targets, mask)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def _inject_frontend(params, batch, x, cfg: ModelConfig):
+    """VLM stub frontend: precomputed patch embeddings replace the first
+    n_patches token embeddings (the ViT itself is out of scope per spec)."""
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        np_ = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, np_:]], axis=1)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# KV cache + serving
+# ----------------------------------------------------------------------------
+
+def _kv_cache_dtype(cfg: ModelConfig):
+    return jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.dtype(cfg.param_dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    kd = _kv_cache_dtype(cfg)
+    shape = (cfg.n_layers, batch, max_len, cfg.cache_kv_heads, hd)
+    cache = {
+        "k": jnp.zeros(shape, kd),
+        "v": jnp.zeros(shape, kd),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        cache["k_scale"] = jnp.zeros(shape[:-1] + (1,), F32)
+        cache["v_scale"] = jnp.zeros(shape[:-1] + (1,), F32)
+    return cache
+
+
+def cache_pspec_tree(cfg: ModelConfig, cache):
+    """Logical specs for the cache (layers, batch, seq, kv_heads, hd)."""
+    spec = ("__layer", "batch", None, "model", None)
+    return jax.tree.map(lambda _: spec, cache,
+                        is_leaf=lambda x: not isinstance(x, dict))
+
+
+def _quantize_kv(x):
+    """Per (token, head) symmetric int8 quantization."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _store_kv(cfg, ck, cv, ck_s, cv_s, k, v, pos):
+    """Scatter this step's (k, v) (B, S, H, D) into cache at positions pos (B,)."""
+    B = k.shape[0]
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+    else:
+        kq, vq, ks, vs = k, v, None, None
+
+    bidx = jnp.arange(B)[:, None]
+    S = k.shape[1]
+    tidx = pos[:, None] + jnp.arange(S)[None, :]
+    ck = ck.at[bidx, tidx].set(kq.astype(ck.dtype), mode="drop")
+    cv = cv.at[bidx, tidx].set(vq.astype(cv.dtype), mode="drop")
+    if ck_s is not None:
+        ck_s = ck_s.at[bidx, tidx].set(ks, mode="drop")
+        cv_s = cv_s.at[bidx, tidx].set(vs, mode="drop")
+    return ck, cv, ck_s, cv_s
+
+
+def block_decode(p, x, cache_slices, pos, cfg: ModelConfig, *, n_groups: int = 1,
+                 window: Optional[int] = None):
+    """One decode step through one block. x: (B, 1, d); pos: (B,) current len."""
+    ck, cv, ck_s, cv_s = cache_slices
+    xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    hd = cfg.resolved_head_dim
+    B, T, _ = x.shape
+
+    q = jnp.einsum("btd,dq->btq", xn, p["attn"]["wq"])
+    k = jnp.einsum("btd,dk->btk", xn, p["attn"]["wk"])
+    v = jnp.einsum("btd,dk->btk", xn, p["attn"]["wv"])
+    if "bq" in p["attn"]:
+        q, k, v = q + p["attn"]["bq"], k + p["attn"]["bk"], v + p["attn"]["bv"]
+    q = q.reshape(B, T, cfg.eff_q_heads, hd)
+    k = k.reshape(B, T, cfg.eff_kv_heads, hd)
+    v = v.reshape(B, T, cfg.eff_kv_heads, hd)
+    positions = pos[:, None] + jnp.arange(T)[None, :]
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if cfg.kv_replication > 1:
+        k = jnp.repeat(k, cfg.kv_replication, axis=2)
+        v = jnp.repeat(v, cfg.kv_replication, axis=2)
+
+    ck, cv, ck_s, cv_s = _store_kv(cfg, ck, cv, ck_s, cv_s, k, v, pos)
+
+    kc, vc = ck, cv
+    kv_scale = None
+    if cfg.kv_cache_dtype == "int8":
+        kv_scale = ck_s  # k and v share the attend path; v scale applied below
+    valid = pos + T
+    out = _decode_attend(q, kc, vc, ck_s, cv_s, valid, cfg, window)
+    out = out.reshape(B, T, cfg.eff_q_heads * hd)
+    x = x + jnp.einsum("btq,qd->btd", out, p["attn"]["wo"])
+
+    xn = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = moe_ffn(p["moe"], xn, cfg, n_groups)
+    else:
+        y = L.swiglu(xn, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+    return x + y, (ck, cv, ck_s, cv_s)
+
+
+def _decode_attend(q, ck, cv, ck_s, cv_s, valid, cfg, window):
+    """Attention of q (B, 1, Hq, hd) over the full cache buffer with a traced
+    validity bound (and dequantization for int8 caches)."""
+    return L.flash_attention_ref(
+        q, ck, cv, causal=False, window=window,
+        valid_len=valid, kv_scale=ck_s, v_scale=cv_s,
+        block_q=1, block_k=min(L.DECODE_BLOCK_K, ck.shape[1]))
+
+
+# direct-indexed decode: attend straight into the stacked (L,B,S,H,D) cache.
+# REFUTED as an XLA-level optimization (EXPERIMENTS.md §Perf qwen it3): the
+# traced-index scatter breaks while-carry aliasing and the cache gets copied
+# per layer. Kept selectable for the record; default off. The production
+# answer is the Pallas decode kernel (kernels/decode_attention.py), which
+# streams the cache exactly once by construction.
+DIRECT_CACHE_DECODE = False
+
+
+def _decode_attend_5d(q, ck_all, cv_all, cks_all, cvs_all, li, valid,
+                      block_k: int):
+    """Online-softmax decode attention slicing blocks from the 5D cache.
+
+    q: (B, Hc, R, hd) folded GQA; ck_all/cv_all: (L, B, S, Hc, hd);
+    scales (L, B, S, Hc, 1) or None; li: traced layer index; valid: (B,).
+    """
+    Lc, B, S, Hc, hd = ck_all.shape
+    R = q.shape[2]
+    block_k = min(block_k, S)
+    nk = S // block_k
+    scale = 1.0 / (hd ** 0.5)
+    F32 = jnp.float32
+
+    def slice5(a, j, width):
+        s = jax.lax.dynamic_slice(
+            a, (li, 0, j * block_k, 0, 0), (1, B, block_k, Hc, width))
+        return s[0]
+
+    def body(carry, j):
+        acc, m, l = carry
+        kb = slice5(ck_all, j, hd)
+        vb = slice5(cv_all, j, hd)
+        if cks_all is not None:
+            kb = kb.astype(F32) * slice5(cks_all, j, 1)
+            vb = vb.astype(F32) * slice5(cvs_all, j, 1)
+        s = jnp.einsum("bhrd,bkhd->bhrk", q.astype(F32), kb.astype(F32)) * scale
+        kpos = j * block_k + jnp.arange(block_k)
+        mask = kpos[None, :] < valid[:, None]              # (B, bk)
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None]) * mask[:, None, None]
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] + \
+            jnp.einsum("bhrk,bkhd->bhrd", p, vb.astype(F32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hc, R, hd), F32)
+    m0 = jnp.full((B, Hc, R), -1e30, F32)
+    l0 = jnp.zeros((B, Hc, R), F32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.astype(ck_all.dtype if ck_all.dtype != jnp.int8 else jnp.bfloat16)
+
+
+def block_decode_direct(p, x, caches, li, pos, cfg: ModelConfig, *,
+                        n_groups: int = 1):
+    """block_decode with in-place 5D cache writes + direct-indexed attention."""
+    ck_all, cv_all, cks_all, cvs_all = caches
+    xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    hd = cfg.resolved_head_dim
+    B, T, _ = x.shape
+
+    q = jnp.einsum("btd,dq->btq", xn, p["attn"]["wq"])
+    k = jnp.einsum("btd,dk->btk", xn, p["attn"]["wk"])
+    v = jnp.einsum("btd,dk->btk", xn, p["attn"]["wv"])
+    if "bq" in p["attn"]:
+        q, k, v = q + p["attn"]["bq"], k + p["attn"]["bk"], v + p["attn"]["bv"]
+    q = q.reshape(B, T, cfg.eff_q_heads, hd)
+    k = k.reshape(B, T, cfg.eff_kv_heads, hd)
+    v = v.reshape(B, T, cfg.eff_kv_heads, hd)
+    positions = pos[:, None] + jnp.arange(T)[None, :]
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if cfg.kv_replication > 1:
+        k = jnp.repeat(k, cfg.kv_replication, axis=2)
+        v = jnp.repeat(v, cfg.kv_replication, axis=2)
+
+    bidx = jnp.arange(B)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        cks_all = cks_all.at[li, bidx, pos].set(ks[:, 0], mode="drop")
+        cvs_all = cvs_all.at[li, bidx, pos].set(vs[:, 0], mode="drop")
+    else:
+        kq, vq = k, v
+    ck_all = ck_all.at[li, bidx, pos].set(kq[:, 0].astype(ck_all.dtype),
+                                          mode="drop")
+    cv_all = cv_all.at[li, bidx, pos].set(vq[:, 0].astype(cv_all.dtype),
+                                          mode="drop")
+
+    Hc = cfg.cache_kv_heads
+    R = cfg.eff_q_heads // Hc
+    qf = q.reshape(B, Hc, R, hd)
+    out = _decode_attend_5d(qf, ck_all, cv_all, cks_all, cvs_all, li,
+                            pos + T, block_k=L.DECODE_BLOCK_K)
+    out = out.reshape(B, T, cfg.eff_q_heads * hd).astype(x.dtype)
+    x = x + jnp.einsum("btq,qd->btd", out, p["attn"]["wo"])
+
+    xn = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = moe_ffn(p["moe"], xn, cfg, n_groups)
+    else:
+        y = L.swiglu(xn, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+    return x + y, (ck_all, cv_all, cks_all, cvs_all)
+
+
+def lm_decode_step(params, cache, batch, cfg: ModelConfig, *, n_groups: int = 1,
+                   window: Optional[int] = None):
+    """One-token decode across the whole stack.
+
+    The cache rides in the scan *carry* and is updated in place per layer via
+    dynamic-update-slice, so XLA aliases one buffer through the loop (the
+    xs->ys formulation double-buffers the multi-TB cache)."""
+    tokens, pos = batch["tokens"], batch["positions"]
+    x = L.embed(params["embed"], tokens)
+
+    has_scale = "k_scale" in cache
+    zero = jnp.zeros((), F32)
+
+    def body(carry, lp):
+        x_c, ck_all, cv_all, cks_all, cvs_all, li = carry
+        if DIRECT_CACHE_DECODE and window is None:
+            caches = (ck_all, cv_all,
+                      cks_all if has_scale else None,
+                      cvs_all if has_scale else None)
+            y, (ck_all, cv_all, cks2, cvs2) = block_decode_direct(
+                lp, x_c, caches, li, pos, cfg, n_groups=n_groups)
+            if has_scale:
+                cks_all, cvs_all = cks2, cvs2
+            return (y, ck_all, cv_all, cks_all, cvs_all, li + 1), None
+        take = lambda a: jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False)
+        put = lambda a, s: jax.lax.dynamic_update_index_in_dim(a, s, li, 0)
+        slices = (take(ck_all), take(cv_all),
+                  take(cks_all) if has_scale else None,
+                  take(cvs_all) if has_scale else None)
+        y, (ck, cv, cks2, cvs2) = block_decode(lp, x_c, slices, pos, cfg,
+                                               n_groups=n_groups, window=window)
+        ck_all = put(ck_all, ck)
+        cv_all = put(cv_all, cv)
+        if has_scale:
+            cks_all = put(cks_all, cks2)
+            cvs_all = put(cvs_all, cvs2)
+        return (y, ck_all, cv_all, cks_all, cvs_all, li + 1), None
+
+    carry0 = (x, cache["k"], cache["v"],
+              cache.get("k_scale", zero), cache.get("v_scale", zero),
+              jnp.zeros((), jnp.int32))
+    (x, nk, nv, nks, nvs, _), _ = jax.lax.scan(body, carry0, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    new_cache = {"k": nk, "v": nv}
+    if has_scale:
+        new_cache["k_scale"], new_cache["v_scale"] = nks, nvs
+    return logits, new_cache
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
+               window: Optional[int] = None):
+    """Prefill: full forward that also materializes the KV cache.
+
+    Returns (last-token logits, cache). Cache buffers sized to seq_len.
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = L.embed(params["embed"], tokens)
+    x = _inject_frontend(params, batch, x, cfg)
+
+    hd = cfg.resolved_head_dim
+    int8 = cfg.kv_cache_dtype == "int8"
+
+    def body(carry, lp):
+        xc = carry
+        xn = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        h, kv = L.attention(lp["attn"], xn, positions, cfg, causal=True,
+                            window=window)
+        xc = xc + h
+        xn = L.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_ffn(lp["moe"], xn, cfg, n_groups)
+        else:
+            y = L.swiglu(xn, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+        xc = xc + y
+        k, v = kv
+        if cfg.kv_replication > 1:
+            k = jnp.repeat(k, cfg.kv_replication, axis=2)
+            v = jnp.repeat(v, cfg.kv_replication, axis=2)
+        if int8:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            return xc, (kq, vq, ks, vs)
+        return xc, (k, v)
+
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg.vocab_size)
+    if int8:
+        k, v, ks, vs = kvs
+        cache = {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
+    else:
+        k, v = kvs
+        cache = {"k": k, "v": v}
+    return logits, cache

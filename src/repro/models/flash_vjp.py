@@ -1,0 +1,172 @@
+"""Blockwise flash attention with a custom VJP (the flash *backward*).
+
+Why: differentiating the online-softmax scan lets JAX stack per-iteration
+residuals (p, acc, m, l) to HBM -- measured as the dominant HBM-traffic term
+of every train cell in the baseline roofline (EXPERIMENTS.md §Perf it1).
+The flash backward instead saves only (q, k, v, o, lse) and *recomputes* p
+per (q-block, kv-block) tile, exactly like the production Pallas backward
+kernel it validates.
+
+Layout matches layers.flash_attention_ref: q (B,Tq,Hq,D), k/v (B,Tk,Hkv,D).
+Causal + sliding-window; fp32 softmax; GQA folded (kv never repeated).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _footprint(i, nq, nk, block_q, block_k, q_offset, causal, window):
+    q_start = q_offset + i * block_q
+    q_end = q_start + block_q - 1
+    hi = nk if not causal else min(nk, (q_end // block_k) + 1)
+    lo = 0
+    if window is not None:
+        lo = max(0, (q_start - window + 1) // block_k)
+    return q_start, lo, hi
+
+
+def _mask_for(q_start, j, block_q, block_k, causal, window):
+    qpos = q_start + jnp.arange(block_q)
+    kpos = j * block_k + jnp.arange(block_k)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask
+
+
+def _fwd_impl(q, k, v, causal, window, q_offset, block_q, block_k):
+    B, Tq, Hq, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    R = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    nq, nk = Tq // block_q, Tk // block_k
+    qr = q.reshape(B, nq, block_q, Hkv, R, Dh)
+    kr = k.reshape(B, nk, block_k, Hkv, Dh)
+    vr = v.reshape(B, nk, block_k, Hkv, Dh)
+
+    outs, lses = [], []
+    for i in range(nq):
+        q_blk = qr[:, i]
+        q_start, lo, hi = _footprint(i, nq, nk, block_q, block_k, q_offset,
+                                     causal, window)
+        n_steps = hi - lo
+        if n_steps <= 0:
+            outs.append(jnp.zeros((B, block_q, Hkv, R, Dh), q.dtype))
+            lses.append(jnp.full((B, Hkv, R, block_q), NEG_INF, F32))
+            continue
+
+        def body(carry, j):
+            acc, m, l = carry
+            kb = jax.lax.dynamic_index_in_dim(kr, j, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, j, 1, keepdims=False)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", q_blk.astype(F32),
+                           kb.astype(F32)) * scale
+            mask = _mask_for(q_start, j, block_q, block_k, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None]) * mask[None, None, None]
+            l_new = l * alpha + jnp.sum(p, -1)
+            acc_new = acc * alpha[..., None] + \
+                jnp.einsum("bhrqk,bkhd->bhrqd", p, vb.astype(F32))
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Hkv, R, block_q, Dh), F32)
+        m0 = jnp.full((B, Hkv, R, block_q), NEG_INF, F32)
+        l0 = jnp.zeros((B, Hkv, R, block_q), F32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                      lo + jnp.arange(n_steps))
+        l_safe = jnp.maximum(l, 1e-20)
+        outs.append((acc / l_safe[..., None]).transpose(0, 3, 1, 2, 4)
+                    .astype(q.dtype))
+        lses.append(m + jnp.log(l_safe))
+
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    lse = jnp.stack(lses, axis=1)                 # (B, nq, Hkv, R, bq)
+    return out.reshape(B, Tq, Hq, Dh), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_vjp(q, k, v, causal=True, window=None, q_offset=0,
+                        block_q=512, block_k=512):
+    out, _ = _fwd_impl(q, k, v, causal, window, q_offset, block_q, block_k)
+    return out
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    out, lse = _fwd_impl(q, k, v, causal, window, q_offset, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, q_offset, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    B, Tq, Hq, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    R = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    nq, nk = Tq // block_q, Tk // block_k
+
+    qr = q.reshape(B, nq, block_q, Hkv, R, Dh)
+    kr = k.reshape(B, nk, block_k, Hkv, Dh)
+    vr = v.reshape(B, nk, block_k, Hkv, Dh)
+    do_r = do.reshape(B, nq, block_q, Hkv, R, Dh)
+    o_r = out.reshape(B, nq, block_q, Hkv, R, Dh)
+    # delta = rowsum(do * o)  (B, nq, Hkv, R, bq)
+    delta = jnp.einsum("bnqhrd,bnqhrd->bnhrq", do_r.astype(F32),
+                       o_r.astype(F32))
+
+    dq = jnp.zeros((B, nq, block_q, Hkv, R, Dh), F32)
+    dk = jnp.zeros((B, nk, block_k, Hkv, Dh), F32)
+    dv = jnp.zeros((B, nk, block_k, Hkv, Dh), F32)
+
+    for i in range(nq):
+        q_blk = qr[:, i].astype(F32)
+        do_blk = do_r[:, i].astype(F32)
+        lse_i = lse[:, i]                         # (B,Hkv,R,bq)
+        delta_i = delta[:, i]
+        q_start, lo, hi = _footprint(i, nq, nk, block_q, block_k, q_offset,
+                                     causal, window)
+        n_steps = hi - lo
+        if n_steps <= 0:
+            continue
+
+        def body(dq_acc, j):
+            kb = jax.lax.dynamic_index_in_dim(kr, j, 1, keepdims=False).astype(F32)
+            vb = jax.lax.dynamic_index_in_dim(vr, j, 1, keepdims=False).astype(F32)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", q_blk, kb) * scale
+            mask = _mask_for(q_start, j, block_q, block_k, causal, window)
+            p = jnp.exp(s - lse_i[..., None]) * mask[None, None, None]
+            dp = jnp.einsum("bqhrd,bkhd->bhrqk", do_blk, vb)
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_new = dq_acc + jnp.einsum("bhrqk,bkhd->bqhrd", ds, kb)
+            dv_j = jnp.einsum("bhrqk,bqhrd->bkhd", p, do_blk)
+            dk_j = jnp.einsum("bhrqk,bqhrd->bkhd", ds, q_blk)
+            return dq_new, (dk_j, dv_j)
+
+        dq_i0 = jnp.zeros((B, block_q, Hkv, R, Dh), F32)
+        dq_i, (dk_js, dv_js) = jax.lax.scan(body, dq_i0,
+                                            lo + jnp.arange(n_steps))
+        dq = dq.at[:, i].set(dq_i)
+        # scatter the contiguous kv footprint back (static offsets)
+        dk_js = dk_js.transpose(1, 0, 2, 3, 4)    # (B, n_steps, bk, Hkv, D)
+        dv_js = dv_js.transpose(1, 0, 2, 3, 4)
+        dk = dk.at[:, lo:hi].add(dk_js)
+        dv = dv.at[:, lo:hi].add(dv_js)
+
+    dq = dq.reshape(B, Tq, Hq, Dh).astype(q.dtype)
+    dk = dk.reshape(B, Tk, Hkv, Dh).astype(k.dtype)
+    dv = dv.reshape(B, Tk, Hkv, Dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_vjp.defvjp(_fwd, _bwd)

@@ -1,0 +1,192 @@
+"""zamba2-style hybrid model: mamba2 backbone + one *shared* attention+FFN
+block applied every `attn_every` layers.
+
+Layout: the layer stack is a scan over `nb = n_layers // attn_every`
+super-blocks; each super-block is an inner scan over `attn_every` mamba2
+blocks followed by the shared attention block (parameters captured, not
+scanned -- they are shared across applications, exactly as in zamba2).
+Each application keeps its own KV cache slice (nb-leading cache arrays).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.sharding.axes import constrain
+
+F32 = jnp.float32
+
+
+def _nb(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.hybrid.attn_every == 0
+    return cfg.n_layers // cfg.hybrid.attn_every
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ka, kf = jax.random.split(key, 4)
+    nb, k_per = _nb(cfg), cfg.hybrid.attn_every
+    mkeys = jax.random.split(km, nb * k_per).reshape(nb, k_per, 2)
+    mamba = jax.vmap(jax.vmap(lambda k: M.init_mamba_block(k, cfg, dtype)))(mkeys)
+    k1, k2, k3, k4 = jax.random.split(ka, 4)
+    std = cfg.d_model ** -0.5
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim, cfg.qkv_bias, dtype,
+                                 cfg.pad_heads_to, cfg.pad_kv_heads_to),
+        "mlp": {
+            "w1": (jax.random.normal(k2, (cfg.d_model, cfg.d_ff)) * std).astype(dtype),
+            "w3": (jax.random.normal(k3, (cfg.d_model, cfg.d_ff)) * std).astype(dtype),
+            "w2": (jax.random.normal(k4, (cfg.d_ff, cfg.d_model)) * std).astype(dtype),
+        },
+    }
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype,
+                                  cfg.tie_embeddings, cfg.padded_vocab),
+        "mamba": mamba,
+        "shared_attn": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _shared_attn_fwd(sp, x, positions, cfg, window):
+    h, kv = L.attention(sp["attn"], L.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                        positions, cfg, causal=True, window=window)
+    x = x + h
+    y = L.swiglu(L.rms_norm(x, sp["ln2"], cfg.norm_eps),
+                 sp["mlp"]["w1"], sp["mlp"]["w3"], sp["mlp"]["w2"])
+    return x + y, kv
+
+
+def backbone_fwd(params, x, positions, cfg: ModelConfig, *,
+                 window: Optional[int] = None, remat: bool = True,
+                 collect_kv: bool = False):
+    sp = params["shared_attn"]
+
+    def super_block(carry, mp_sb):
+        def inner(c, mp):
+            return M.mamba_fwd(mp, c, cfg), None
+        y, _ = jax.lax.scan(inner, carry, mp_sb)
+        y, kv = _shared_attn_fwd(sp, y, positions, cfg, window)
+        if collect_kv:
+            k, v = kv
+            return y, (k, v)
+        return y, None
+
+    if remat:
+        super_block = jax.checkpoint(super_block, prevent_cse=False)
+    x, kvs = jax.lax.scan(super_block, x, params["mamba"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), kvs
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, n_groups: int = 1):
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = L.embed(params["embed"], tokens)
+    x, _ = backbone_fwd(params, x, positions, cfg)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    loss = L.softmax_xent(logits, targets, batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+# ----------------------------------------------------------------------------
+# Serving
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window: Optional[int] = None):
+    nb, k_per = _nb(cfg), cfg.hybrid.attn_every
+    hd = cfg.resolved_head_dim
+    dtype = jnp.dtype(cfg.param_dtype)
+    W = min(window, max_len) if window else max_len
+    conv_bufs, ssm = [], []
+    cb, s = M.init_mamba_state(cfg, batch)
+    stack = lambda a, n: jnp.broadcast_to(a, (n,) + a.shape)
+    return {
+        "k": jnp.zeros((nb, batch, W, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((nb, batch, W, cfg.n_kv_heads, hd), dtype),
+        "conv": stack(stack(cb, k_per), nb),
+        "ssm": stack(stack(s, k_per), nb),
+    }
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
+               window: Optional[int] = None):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = L.embed(params["embed"], tokens)
+    sp = params["shared_attn"]
+
+    def super_block(carry, mp_sb):
+        x_c = carry
+
+        def inner(c, mp):
+            y, st = M.mamba_fwd(mp, c, cfg, return_state=True)
+            return y, st
+        y, (convs, ssms) = jax.lax.scan(inner, x_c, mp_sb)
+        y, kv = _shared_attn_fwd(sp, y, positions, cfg, window)
+        return y, (kv[0], kv[1], convs, ssms)
+
+    x, (ks, vs, convs, ssms) = jax.lax.scan(super_block, x, params["mamba"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg.vocab_size)
+    # decode-ready cache: attention KV per superblock application + the
+    # recurrent (conv/ssm) states at position T for every mamba layer
+    cache = {"k": ks, "v": vs, "conv": convs, "ssm": ssms}
+    return logits, cache
+
+
+def lm_decode_step(params, cache, batch, cfg: ModelConfig, *, n_groups: int = 1,
+                   window: Optional[int] = None):
+    """One-token decode. cache: k/v (nb,B,W,H,hd), conv (nb,k,...), ssm (nb,k,...)."""
+    tokens, pos = batch["tokens"], batch["positions"]
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], tokens)
+    sp = params["shared_attn"]
+    hd = cfg.resolved_head_dim
+    W = cache["k"].shape[2]
+
+    def super_block(carry, scanned):
+        xc = carry
+        mp_sb, conv_sb, ssm_sb, ck, cv = scanned
+
+        def inner(c, mps):
+            mp, cb, s = mps
+            y, (cb2, s2) = M.mamba_decode(mp, c, (cb, s), cfg)
+            return y, (cb2, s2)
+        xc, (conv2, ssm2) = jax.lax.scan(inner, xc, (mp_sb, conv_sb, ssm_sb))
+
+        # shared attention with rolling cache slot = pos % W
+        xn = L.rms_norm(xc, sp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("btd,dq->btq", xn, sp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        k = jnp.einsum("btd,dk->btk", xn, sp["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = jnp.einsum("btd,dk->btk", xn, sp["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+        slot = (pos % W)
+        bidx = jnp.arange(B)
+        ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+        valid = jnp.minimum(pos + 1, W)
+        o = L.flash_attention_ref(q, ck, cv, causal=False, valid_len=valid,
+                                  block_q=1, block_k=min(1024, W))
+        o = o.reshape(B, 1, cfg.n_heads * hd)
+        xc = xc + jnp.einsum("btq,qd->btd", o, sp["attn"]["wo"])
+        y = L.swiglu(L.rms_norm(xc, sp["ln2"], cfg.norm_eps),
+                     sp["mlp"]["w1"], sp["mlp"]["w3"], sp["mlp"]["w2"])
+        return xc + y, (conv2, ssm2, ck, cv)
+
+    xs = (params["mamba"], cache["conv"], cache["ssm"], cache["k"], cache["v"])
+    x, (conv_n, ssm_n, k_n, v_n) = jax.lax.scan(super_block, x, xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    return logits, {"k": k_n, "v": v_n, "conv": conv_n, "ssm": ssm_n}

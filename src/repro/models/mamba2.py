@@ -1,0 +1,204 @@
+"""Mamba2 (SSD) blocks + the zamba2-style hybrid model.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quasi-attention
++ inter-chunk state recurrence, scan over chunks) so lowered memory is linear
+in T and compute is O(T * chunk). Decode is the O(1) recurrent update.
+
+zamba2: a backbone of mamba2 blocks with one *shared* attention+FFN block
+applied every `attn_every` layers (parameters shared across applications,
+per-application KV caches). Long-context mode uses a sliding window on the
+attention block => the whole arch is sub-quadratic (long_500k runs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.axes import constrain
+
+F32 = jnp.float32
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.head_dim, s.n_groups, s.d_state
+
+
+# ----------------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, H, P, G, N = _dims(cfg)
+    K = cfg.ssm.conv_dim
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    conv_ch = d_in + 2 * G * N
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_zx": (jax.random.normal(ks[0], (d, 2 * d_in)) * std).astype(dtype),
+        "w_bc": (jax.random.normal(ks[1], (d, 2 * G * N)) * std).astype(dtype),
+        "w_dt": (jax.random.normal(ks[2], (d, H)) * std).astype(dtype),
+        "dt_bias": jnp.zeros((H,), F32),
+        "A_log": jnp.zeros((H,), F32),
+        "D": jnp.ones((H,), F32),
+        "conv_w": (jax.random.normal(ks[3], (K, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_out": (jax.random.normal(ks[4], (d_in, d)) * (d_in ** -0.5)).astype(dtype),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """xbc: (B, T, C); depthwise causal conv, width K."""
+    K = w.shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, T, H, P)   dt: (B, T, H)   A: (H,) (negative)
+    Bm/Cm: (B, T, G, N) -> broadcast to heads
+    returns y: (B, T, H, P), final state (B, H, P, N)
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = T // chunk
+    assert T % chunk == 0, (T, chunk)
+
+    xr = x.reshape(Bsz, nc, chunk, H, P).astype(F32)
+    dtr = dt.reshape(Bsz, nc, chunk, H).astype(F32)
+    Br = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3).astype(F32)
+    Cr = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, axis=3).astype(F32)
+
+    dA = dtr * A  # (B, nc, Q, H), negative
+    la = jnp.cumsum(dA, axis=2)              # within-chunk log decay
+    la_end = la[:, :, -1]                    # (B, nc, H)
+
+    # intra-chunk: scores[t,s] = (C_t . B_s) * exp(la_t - la_s) * dt_s, s<=t
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Cr, Br)
+    # decay: (B,nc,H,Q,S) = exp(la[...,q,h] - la[...,s,h])
+    laq = la.transpose(0, 1, 3, 2)           # (B, nc, H, Q)
+    decay = jnp.exp(jnp.clip(laq[..., :, None] - laq[..., None, :], -60.0, 0.0))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w_intra = jnp.where(mask, scores * decay, 0.0) * dtr.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", w_intra, xr)
+
+    # per-chunk end states: S_c = sum_s exp(la_end - la_s) dt_s (B_s x x_s)
+    w_state = jnp.exp(jnp.clip(la_end[:, :, None, :] - la, -60.0, 0.0)) * dtr  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcsh,bcshn,bcshp->bchpn", w_state, Br, xr)
+
+    def scan_body(S, inputs):
+        Cc, lac, la_end_c, Sc = inputs
+        # inter-chunk contribution uses the state entering this chunk
+        y_int = jnp.einsum("bqhn,bhpn->bqhp", Cc, S) * jnp.exp(lac)[..., None]
+        S_new = jnp.exp(la_end_c)[:, :, None, None] * S + Sc
+        return S_new, y_int
+
+    S0 = jnp.zeros((Bsz, H, P, N), F32)
+    xs = (Cr.transpose(1, 0, 2, 3, 4), la.transpose(1, 0, 2, 3),
+          la_end.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4))
+    S_fin, y_inter = jax.lax.scan(scan_body, S0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # (B, nc, Q, H, P)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, S_fin
+
+
+def mamba_fwd(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence mamba2 block. x: (B, T, d) -> (B, T, d).
+
+    With return_state=True also returns (conv_buf, ssm_state) at position T,
+    so prefill can hand a decode-ready recurrent cache to the engine."""
+    d_in, H, P, G, N = _dims(cfg)
+    K = cfg.ssm.conv_dim
+    B, T, _ = x.shape
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+
+    zx = jnp.einsum("btd,de->bte", xn, p["w_zx"])
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("btd,de->bte", xn, p["w_bc"])
+    dt = jax.nn.softplus(jnp.einsum("btd,dh->bth", xn, p["w_dt"]).astype(F32)
+                         + p["dt_bias"])
+
+    xbc_raw = jnp.concatenate([xin, bc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]).astype(F32)).astype(x.dtype)
+    xin, bc = xbc[..., :d_in], xbc[..., d_in:]
+    Bm, Cm = jnp.split(bc.reshape(B, T, 2 * G, N), 2, axis=2)
+
+    A = -jnp.exp(p["A_log"])
+    xh = constrain(xin.reshape(B, T, H, P), "batch", None, "model", None)
+    chunk = min(cfg.ssm.chunk_size, T)
+    y, S_fin = _ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(F32)
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+
+    y = L.rms_norm(y * jax.nn.silu(z.astype(F32)).astype(z.dtype), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    out = x + constrain(out, "batch", None, None)
+    if not return_state:
+        return out
+    pad = max(K - 1 - T, 0)
+    tail = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0)))[:, -(K - 1):, :]
+    return out, (tail.astype(x.dtype), S_fin)
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig):
+    """One-token recurrent update. x: (B, 1, d); state = (conv_buf, S).
+
+    conv_buf: (B, K-1, conv_ch)   S: (B, H, P, N) fp32
+    """
+    d_in, H, P, G, N = _dims(cfg)
+    K = cfg.ssm.conv_dim
+    conv_buf, S = state
+    B = x.shape[0]
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+
+    zx = jnp.einsum("btd,de->bte", xn, p["w_zx"])
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("btd,de->bte", xn, p["w_bc"])
+    dt = jax.nn.softplus(jnp.einsum("btd,dh->bth", xn, p["w_dt"]).astype(F32)
+                         + p["dt_bias"])[:, 0]          # (B, H)
+
+    xbc_new = jnp.concatenate([xin, bc], axis=-1)[:, 0]  # (B, conv_ch)
+    full = jnp.concatenate([conv_buf, xbc_new[:, None]], axis=1)  # (B, K, C)
+    conv = jnp.einsum("bkc,kc->bc", full, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv.astype(F32)).astype(x.dtype)
+    new_buf = full[:, 1:]
+
+    xin1, bc1 = conv[..., :d_in], conv[..., d_in:]
+    Bm, Cm = jnp.split(bc1.reshape(B, 2 * G, N), 2, axis=1)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(F32)         # (B, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(F32)
+
+    A = -jnp.exp(p["A_log"])
+    xh = xin1.reshape(B, H, P).astype(F32)
+    dA = jnp.exp(dt * A)                                 # (B, H)
+    S = dA[:, :, None, None] * S + jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, S) + p["D"][None, :, None] * xh
+
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(F32)).astype(z.dtype), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return x + out, (new_buf, S)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    d_in, H, P, G, N = _dims(cfg)
+    K = cfg.ssm.conv_dim
+    conv_ch = d_in + 2 * G * N
+    dtype = jnp.dtype(cfg.param_dtype)
+    return (jnp.zeros((batch, K - 1, conv_ch), dtype),
+            jnp.zeros((batch, H, P, N), F32))

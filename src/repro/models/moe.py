@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN with static-shape, sort-based token dispatch.
+
+Parallelism (GShard-style, adapted to the (pod, data, model) mesh):
+  * tokens are processed in G groups; the G axis is sharded over the DP axis
+    ("batch" logical axis),
+  * experts are sharded over the "expert" logical axis (bound to the `data`
+    mesh axis), so the group-major -> expert-major transpose lowers to an
+    all-to-all *within* a pod while the pod axis stays data-parallel,
+  * for very large experts (arctic-480b) d_ff is additionally sharded over
+    `model` (expert tensor parallelism) -> all-reduce over `model` after the
+    down-projection.
+
+Static shapes: capacity-factor routing. Tokens over capacity are dropped
+(standard GShard behaviour); dropped tokens pass through the residual only.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.axes import constrain
+
+F32 = jnp.float32
+
+
+def capacity(cfg: ModelConfig, n_tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * n_tokens_per_group * m.top_k / m.n_experts)
+    return max(4, -(-c // 4) * 4)  # >=4, aligned to 4
+
+
+def init_moe_layer(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, m.n_experts
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * std).astype(F32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * std).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, f)) * std).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, f, d)) * std).astype(dtype),
+    }
+    if m.dense_residual_ff:
+        fr = m.dense_residual_ff
+        kd = jax.random.split(ks[4], 3)
+        p["dense"] = {
+            "w1": (jax.random.normal(kd[0], (d, fr)) * std).astype(dtype),
+            "w3": (jax.random.normal(kd[1], (d, fr)) * std).astype(dtype),
+            "w2": (jax.random.normal(kd[2], (fr, d)) * std).astype(dtype),
+        }
+    return p
+
+
+def _dispatch_one_group(x, logits, top_k: int, cap: int):
+    """Sort-based dispatch for one token group.
+
+    x: (N, d), logits: (N, E)  ->  (slots (E*C, d), combine info)
+    """
+    n, e = logits.shape
+    gates = jax.nn.softmax(logits.astype(F32), axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, top_k)            # (N, k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, -1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                            # (N*k,)
+    order = jnp.argsort(flat_e, stable=True)              # slots sorted by expert
+    sorted_e = flat_e[order]
+    # rank of each sorted slot within its expert
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(n * top_k) - starts[sorted_e]
+    valid = rank < cap
+    dest = jnp.where(valid, sorted_e * cap + rank, e * cap)  # dump row at end
+
+    token_of_slot = order // top_k
+    rows = x[token_of_slot] * valid[:, None].astype(x.dtype)
+    slots = jnp.zeros((e * cap + 1, x.shape[-1]), x.dtype).at[dest].add(rows)
+    slots = slots[:-1]                                    # (E*C, d)
+
+    # combine metadata: for each original (token, k) its slot id (or dump)
+    inv = jnp.zeros((n * top_k,), jnp.int32).at[order].set(
+        jnp.where(valid, dest, e * cap).astype(jnp.int32))
+    return slots, inv, top_g, gates
+
+
+def moe_ffn(p, x: jax.Array, cfg: ModelConfig, n_groups: int) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (y: (B, T, d), aux_loss scalar)."""
+    m = cfg.moe
+    B, T, d = x.shape
+    e, k = m.n_experts, m.top_k
+    N = B * T
+    assert N % n_groups == 0, (N, n_groups)
+    ng = N // n_groups
+    cap = capacity(cfg, ng)
+
+    xg = x.reshape(n_groups, ng, d)
+    xg = constrain(xg, "batch", None, None)
+    logits = jnp.einsum("gnd,de->gne", xg.astype(F32), p["router"])
+
+    slots, inv, top_g, gates = jax.vmap(
+        lambda xx, ll: _dispatch_one_group(xx, ll, k, cap))(xg, logits)
+    # slots: (G, E*C, d) group-major, sharded over batch
+    D = slots.reshape(n_groups, e, cap, d)
+    D = constrain(D, "batch", None, None, None)
+    # ---- EP all-to-all: group-major -> expert-major --------------------------
+    De = jnp.swapaxes(D, 0, 1)                             # (E, G, C, d)
+    De = constrain(De, "expert", "ep_batch", None, None)
+
+    h1 = jnp.einsum("egcd,edf->egcf", De, p["w1"])
+    h3 = jnp.einsum("egcd,edf->egcf", De, p["w3"])
+    h = jax.nn.silu(h1.astype(F32)).astype(h1.dtype) * h3
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["w2"])       # all-reduce over model (expert-TP)
+    out_e = constrain(out_e, "expert", "ep_batch", None, None)
+
+    # ---- all-to-all back: expert-major -> group-major ------------------------
+    out_g = jnp.swapaxes(out_e, 0, 1).reshape(n_groups, e * cap, d)
+    out_g = constrain(out_g, "batch", None, None)
+
+    # combine: gather each (token, k) slot row, weight by gate
+    pad = jnp.concatenate([out_g, jnp.zeros((n_groups, 1, d), out_g.dtype)], axis=1)
+    picked = jax.vmap(lambda rows, idx: rows[idx])(pad, inv)   # (G, N_g*k, d)
+    picked = picked.reshape(n_groups, ng, k, d)
+    y = jnp.sum(picked * top_g[..., None].astype(picked.dtype), axis=2)
+    y = y.reshape(B, T, d)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(gates, axis=(0, 1))                      # (E,) mean router prob
+    assign = jax.nn.one_hot(jnp.argmax(gates, -1), e, dtype=F32)
+    ce = jnp.mean(assign, axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * m.aux_loss_weight
+
+    if "dense" in p:
+        dp = p["dense"]
+        h1 = jnp.einsum("btd,df->btf", x, dp["w1"])
+        h3 = jnp.einsum("btd,df->btf", x, dp["w3"])
+        h = jax.nn.silu(h1.astype(F32)).astype(h1.dtype) * h3
+        y = y + jnp.einsum("btf,fd->btd", h, dp["w2"])
+
+    return constrain(y, "batch", None, None), aux

@@ -1,0 +1,148 @@
+"""Uniform model interface over the architecture zoo.
+
+build_model(cfg) returns a Model whose members close over the config:
+  init_params(key)                      -> params pytree
+  loss(params, batch)                   -> (scalar, metrics)     [train]
+  prefill(params, batch)                -> (logits, cache)       [serve]
+  decode_step(params, cache, batch)     -> (logits, new cache)   [serve]
+  init_cache(batch_size, max_len)       -> cache pytree
+
+input_specs(cfg, shape) produces ShapeDtypeStruct stand-ins for every model
+input of the given (arch x shape) cell -- the dry-run lowers against these
+(no device allocation; weak-type-correct; shardable).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import dense, hybrid, whisper, xlstm
+from repro.models.whisper import ENC_LEN
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig, *, n_groups: int = 1,
+                window: Optional[int] = None) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init_params=functools.partial(dense.init_params, cfg=cfg),
+            loss=functools.partial(dense.lm_loss, cfg=cfg, n_groups=n_groups),
+            prefill=functools.partial(dense.lm_prefill, cfg=cfg,
+                                      n_groups=n_groups, window=window),
+            decode_step=functools.partial(dense.lm_decode_step, cfg=cfg,
+                                          n_groups=n_groups, window=window),
+            init_cache=functools.partial(dense.init_cache, cfg),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init_params=functools.partial(hybrid.init_params, cfg=cfg),
+            loss=functools.partial(hybrid.lm_loss, cfg=cfg),
+            prefill=functools.partial(hybrid.lm_prefill, cfg=cfg, window=window),
+            decode_step=functools.partial(hybrid.lm_decode_step, cfg=cfg,
+                                          window=window),
+            init_cache=functools.partial(hybrid.init_cache, cfg, window=window),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init_params=functools.partial(xlstm.init_params, cfg=cfg),
+            loss=functools.partial(xlstm.lm_loss, cfg=cfg),
+            prefill=functools.partial(xlstm.lm_prefill, cfg=cfg),
+            decode_step=functools.partial(xlstm.lm_decode_step, cfg=cfg),
+            init_cache=functools.partial(xlstm.init_cache, cfg),
+        )
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init_params=functools.partial(whisper.init_params, cfg=cfg),
+            loss=functools.partial(whisper.lm_loss, cfg=cfg),
+            prefill=functools.partial(whisper.lm_prefill, cfg=cfg),
+            decode_step=functools.partial(whisper.lm_decode_step, cfg=cfg),
+            init_cache=functools.partial(whisper.init_cache, cfg),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ----------------------------------------------------------------------------
+# Input specs (dry-run stand-ins)
+# ----------------------------------------------------------------------------
+
+def _frontend_specs(cfg: ModelConfig, B: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    S = jax.ShapeDtypeStruct
+    bf16 = jnp.bfloat16
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "audio":
+        out["enc_embeds"] = S((B, ENC_LEN, cfg.d_model), bf16)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = S((B, cfg.vlm.n_patches, cfg.d_model), bf16)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    S = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": S((B, T), i32), "targets": S((B, T), i32)}
+        specs.update(_frontend_specs(cfg, B))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": S((B, T), i32)}
+        specs.update(_frontend_specs(cfg, B))
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": S((B, 1), i32), "positions": S((B,), i32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                window: Optional[int] = None) -> Any:
+    """ShapeDtypeStruct pytree for the decode cache of this cell."""
+    model = build_model(cfg, window=window)
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        fn = lambda: model.init_cache(B)
+    else:
+        fn = lambda: model.init_cache(B, T)
+    return jax.eval_shape(fn)
+
+
+def shape_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Long-context cells use the arch's sliding window (if any)."""
+    if shape.name == "long_500k":
+        return cfg.long_context_window
+    return None
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None) -> Dict[str, Any]:
+    """Concrete random batch matching input_specs (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            if name == "positions":
+                out[name] = jnp.zeros(s.shape, jnp.int32)
+            else:
+                out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per spec the conv/mel frontend is a STUB: input_specs() provides precomputed
+frame embeddings (B, T_enc, d_model). The encoder is a bidirectional
+transformer; the decoder has causal self-attention + cross-attention.
+T_enc is fixed at 1536 (~30s of frames, padded to the flash block size);
+decoder length comes from the assigned shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.axes import constrain
+
+F32 = jnp.float32
+ENC_LEN = 1536
+
+
+def _mlp_init(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "w1": (jax.random.normal(k1, (d, f)) * std).astype(dtype),
+        "w3": (jax.random.normal(k2, (d, f)) * std).astype(dtype),
+        "w2": (jax.random.normal(k3, (f, d)) * (f ** -0.5)).astype(dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    e = cfg.encdec
+    ke, kenc, kdec = jax.random.split(key, 3)
+
+    def enc_block(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, False, dtype),
+            "mlp": _mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_block(k):
+        ka, kx, km = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln_x": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, False, dtype),
+            "cross": L.init_attention(kx, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, False, dtype),
+            "mlp": _mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    enc_keys = jax.random.split(kenc, e.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype,
+                                  cfg.tie_embeddings, cfg.padded_vocab),
+        "enc_layers": jax.vmap(enc_block)(enc_keys),
+        "dec_layers": jax.vmap(dec_block)(dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def encode(params, enc_embeds, cfg: ModelConfig):
+    """enc_embeds: (B, T_enc, d) stub frontend output."""
+    B, Te, _ = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32), (B, Te))
+    x = constrain(enc_embeds.astype(jnp.dtype(cfg.param_dtype)), "batch", None, None)
+
+    def body(carry, lp):
+        h, _ = L.attention(lp["attn"], L.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                           positions, cfg, causal=False)
+        xc = carry + h
+        y = L.swiglu(L.rms_norm(xc, lp["ln2"], cfg.norm_eps),
+                     lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+        return xc + y, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg):
+    B, Te, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("btd,dk->btk", enc_out, lp["cross"]["wk"]).reshape(B, Te, cfg.n_kv_heads, hd)
+    v = jnp.einsum("btd,dk->btk", enc_out, lp["cross"]["wv"]).reshape(B, Te, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _dec_block(lp, x, positions, enc_out, cfg):
+    h, kv = L.attention(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                        positions, cfg, causal=True)
+    x = x + h
+    ck, cv = _cross_kv(lp, enc_out, cfg)
+    h, _ = L.attention(lp["cross"], L.rms_norm(x, lp["ln_x"], cfg.norm_eps),
+                       positions, cfg, cross_kv=(ck, cv))
+    x = x + h
+    y = L.swiglu(L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                 lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+    return x + y, kv
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, n_groups: int = 1):
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, T = tokens.shape
+    enc_out = encode(params, batch["enc_embeds"], cfg)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = L.embed(params["embed"], tokens)
+
+    def body(carry, lp):
+        y, _ = _dec_block(lp, carry, positions, enc_out, cfg)
+        return y, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    loss = L.softmax_xent(logits, targets, batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    dtype = jnp.dtype(cfg.param_dtype)
+    Lc = cfg.n_layers
+    return {
+        "k": jnp.zeros((Lc, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((Lc, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((Lc, batch, ENC_LEN, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((Lc, batch, ENC_LEN, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
+               window: Optional[int] = None):
+    """Encoder pass + decoder prefill; returns (last logits, cache)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    enc_out = encode(params, batch["enc_embeds"], cfg)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = L.embed(params["embed"], tokens)
+
+    def body(carry, lp):
+        y, kv = _dec_block(lp, carry, positions, enc_out, cfg)
+        ck, cv = _cross_kv(lp, enc_out, cfg)
+        return y, (kv[0], kv[1], ck, cv)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg.vocab_size)
+    return logits, {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
+
+
+def lm_decode_step(params, cache, batch, cfg: ModelConfig, *, n_groups: int = 1,
+                   window: Optional[int] = None):
+    tokens, pos = batch["tokens"], batch["positions"]
+    B = tokens.shape[0]
+    hd = cfg.resolved_head_dim
+    x = L.embed(params["embed"], tokens)
+
+    def body(carry, xs):
+        lp, ck, cv, cxk, cxv = xs
+        xc = carry
+        xn = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("btd,dq->btq", xn, lp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        k = jnp.einsum("btd,dk->btk", xn, lp["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = jnp.einsum("btd,dk->btk", xn, lp["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+        bidx = jnp.arange(B)
+        ck = ck.at[bidx, pos].set(k[:, 0].astype(ck.dtype), mode="drop")
+        cv = cv.at[bidx, pos].set(v[:, 0].astype(cv.dtype), mode="drop")
+        o = L.flash_attention_ref(q, ck, cv, causal=False, valid_len=pos + 1,
+                                  block_q=1, block_k=min(1024, ck.shape[1]))
+        xc = xc + jnp.einsum("btq,qd->btd", o.reshape(B, 1, -1), lp["attn"]["wo"])
+        # cross attention against cached encoder KV
+        xn = L.rms_norm(xc, lp["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("btd,dq->btq", xn, lp["cross"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        ox = L.flash_attention_ref(qx, cxk, cxv, causal=False, block_q=1,
+                                   block_k=min(512, cxk.shape[1]))
+        xc = xc + jnp.einsum("btq,qd->btd", ox.reshape(B, 1, -1), lp["cross"]["wo"])
+        y = L.swiglu(L.rms_norm(xc, lp["ln2"], cfg.norm_eps),
+                     lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+        return xc + y, (ck, cv)
+
+    xs = (params["dec_layers"], cache["k"], cache["v"],
+          cache["cross_k"], cache["cross_v"])
+    x, (nk, nv) = jax.lax.scan(body, x, xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    return logits, {"k": nk, "v": nv, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

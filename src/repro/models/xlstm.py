@@ -1,0 +1,359 @@
+"""xLSTM (arXiv:2405.04517): mLSTM blocks (matrix memory, covariance update,
+exponential gating) with a periodic sLSTM block (scalar memory, block-diagonal
+recurrence). 7:1 ratio per config.
+
+mLSTM training uses the *chunkwise-parallel* form (stabilized with the
+running max-state m), because the recurrent form would have to checkpoint a
+(B, H, Dh, Dh) matrix per timestep. sLSTM is inherently sequential (its
+recurrence passes through the hidden state) and is computed with a scan over
+time. Both have O(1)-state decode updates -> long_500k runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.axes import constrain
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm.mlstm_expand * cfg.d_model)
+    H = cfg.n_heads
+    return d_in, H, d_in // H
+
+
+# ----------------------------------------------------------------------------
+# mLSTM block
+# ----------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, H, Dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    stdi = d_in ** -0.5
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_up": (jax.random.normal(ks[0], (d, 2 * d_in)) * std).astype(dtype),
+        "w_q": (jax.random.normal(ks[1], (d_in, d_in)) * stdi).astype(dtype),
+        "w_k": (jax.random.normal(ks[2], (d_in, d_in)) * stdi).astype(dtype),
+        "w_v": (jax.random.normal(ks[3], (d_in, d_in)) * stdi).astype(dtype),
+        "w_if": (jax.random.normal(ks[4], (d_in, 2 * H)) * stdi).astype(F32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(F32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_down": (jax.random.normal(ks[5], (d_in, d)) * stdi).astype(dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, ig, lf, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q/k/v: (B, T, H, Dh); ig: (B, T, H) input-gate preact; lf: (B, T, H)
+    log-sigmoid forget preact. Returns h (B, T, H, Dh).
+    """
+    B, T, H, Dh = q.shape
+    nc = T // chunk
+    assert T % chunk == 0
+    scale = Dh ** -0.5
+
+    qr = (q.reshape(B, nc, chunk, H, Dh).astype(F32)) * scale
+    kr = k.reshape(B, nc, chunk, H, Dh).astype(F32)
+    vr = v.reshape(B, nc, chunk, H, Dh).astype(F32)
+    igr = ig.reshape(B, nc, chunk, H).astype(F32)
+    lfr = lf.reshape(B, nc, chunk, H).astype(F32)
+
+    b = jnp.cumsum(lfr, axis=2)               # within-chunk log decay (B,nc,Q,H)
+    b_end = b[:, :, -1]                       # (B,nc,H)
+
+    # intra-chunk log weights: D[t,s] = b_t - b_s + i_s  (s <= t)
+    bq = b.transpose(0, 1, 3, 2)              # (B,nc,H,Q)
+    Dlog = bq[..., :, None] - bq[..., None, :] + igr.transpose(0, 1, 3, 2)[..., None, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Dlog = jnp.where(mask, Dlog, NEG)
+    m_intra = jnp.max(Dlog, axis=-1)          # (B,nc,H,Q)
+
+    def scan_body(carry, xs):
+        C, n, m = carry                        # C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)
+        qc, kc, vc, igc, bc, b_end_c, Dlog_c, m_intra_c = xs
+        # qc (B,Q,H,Dh) ... Dlog_c (B,H,Q,Q), m_intra_c (B,H,Q)
+        g = bc.transpose(0, 2, 1) + m[:, :, None]          # (B,H,Q) inter stabilizer
+        m_new = jnp.maximum(m_intra_c, g)                   # (B,H,Q)
+        w_intra = jnp.exp(Dlog_c - m_new[..., None])        # (B,H,Q,S)
+        e_inter = jnp.exp(g - m_new)                        # (B,H,Q)
+
+        s_qk = jnp.einsum("bqhd,bshd->bhqs", qc, kc)
+        num = jnp.einsum("bhqs,bshd->bqhd", w_intra * s_qk, vc) \
+            + jnp.einsum("bqhd,bhde->bqhe", qc, C) * e_inter.transpose(0, 2, 1)[..., None]
+        den = jnp.einsum("bhqs,bshd,bqhd->bhq", w_intra, kc, qc) \
+            + jnp.einsum("bqhd,bhd->bhq", qc, n) * e_inter
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))    # (B,H,Q)
+        h = num / den.transpose(0, 2, 1)[..., None]         # (B,Q,H,Dh)
+
+        # state update to chunk end (re-stabilized against the new max-state)
+        m_state_new = jnp.maximum(b_end_c + m, jnp.max((b_end_c[:, None, :] - bc) + igc, axis=1))
+        decay_old = jnp.exp(b_end_c + m - m_state_new)      # (B,H)
+        w_state = jnp.exp((b_end_c[:, None, :] - bc) + igc - m_state_new[:, None, :])
+        C_new = decay_old[:, :, None, None] * C + jnp.einsum("bsh,bshd,bshe->bhde", w_state, kc, vc)
+        n_new = decay_old[:, :, None] * n + jnp.einsum("bsh,bshd->bhd", w_state, kc)
+        return (C_new, n_new, m_state_new), h
+
+    C0 = jnp.zeros((B, H, Dh, Dh), F32)
+    n0 = jnp.zeros((B, H, Dh), F32)
+    m0 = jnp.full((B, H), -30.0, F32)  # effectively "empty" stabilizer
+    xs = tuple(a.transpose(1, 0, *range(2, a.ndim)) for a in
+               (qr, kr, vr, igr, b, b_end, Dlog.transpose(0, 1, 2, 3, 4), m_intra))
+    (_, _, _), hs = jax.lax.scan(scan_body, (C0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, Dh)
+
+
+def mlstm_fwd(p, x, cfg: ModelConfig, chunk: int = 256):
+    d_in, H, Dh = _mlstm_dims(cfg)
+    B, T, _ = x.shape
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", xn, p["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    xi = constrain(xi, "batch", None, "model")
+    q = jnp.einsum("bte,ef->btf", xi, p["w_q"]).reshape(B, T, H, Dh)
+    k = jnp.einsum("bte,ef->btf", xi, p["w_k"]).reshape(B, T, H, Dh)
+    v = jnp.einsum("bte,ef->btf", xi, p["w_v"]).reshape(B, T, H, Dh)
+    gif = jnp.einsum("bte,eh->bth", xi.astype(F32), p["w_if"]) + p["b_if"]
+    ig, fg = jnp.split(gif, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(fg)
+
+    chunk = min(chunk, T)
+    h = _mlstm_chunked(q, k, v, ig, lf, chunk)
+    h = h.reshape(B, T, d_in).astype(x.dtype)
+    h = L.rms_norm(h * jax.nn.silu(z.astype(F32)).astype(z.dtype), p["norm_w"], cfg.norm_eps)
+    return x + jnp.einsum("bte,ed->btd", h, p["w_down"])
+
+
+def mlstm_decode(p, x, state, cfg: ModelConfig):
+    """O(1) recurrent mLSTM step. state = (C, n, m)."""
+    d_in, H, Dh = _mlstm_dims(cfg)
+    B = x.shape[0]
+    C, n, m = state
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", xn, p["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bte,ef->btf", xi, p["w_q"]).reshape(B, H, Dh).astype(F32) * (Dh ** -0.5)
+    k = jnp.einsum("bte,ef->btf", xi, p["w_k"]).reshape(B, H, Dh).astype(F32)
+    v = jnp.einsum("bte,ef->btf", xi, p["w_v"]).reshape(B, H, Dh).astype(F32)
+    gif = jnp.einsum("bte,eh->bth", xi.astype(F32), p["w_if"])[:, 0] + p["b_if"]
+    ig, fg = jnp.split(gif, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(fg)                            # (B,H)
+
+    m_new = jnp.maximum(lf + m, ig)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(ig - m_new)
+    C = fp[:, :, None, None] * C + ip[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = fp[:, :, None] * n + ip[:, :, None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[:, :, None]).reshape(B, 1, d_in).astype(x.dtype)
+    h = L.rms_norm(h * jax.nn.silu(z.astype(F32)).astype(z.dtype), p["norm_w"], cfg.norm_eps)
+    return x + jnp.einsum("bte,ed->btd", h, p["w_down"]), (C, n, m_new)
+
+
+# ----------------------------------------------------------------------------
+# sLSTM block (sequential scan; block-diagonal recurrence per head)
+# ----------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    pf = cfg.xlstm.slstm_proj_factor
+    dp = int(pf * d)
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_gates": (jax.random.normal(ks[0], (d, 4 * d)) * std).astype(dtype),
+        "r_gates": (jax.random.normal(ks[1], (H, Dh, 4 * Dh)) * (Dh ** -0.5)).astype(F32),
+        "b_gates": jnp.zeros((4 * d,), F32),
+        "ln_ffn": jnp.ones((d,), dtype),
+        "w_ff1": (jax.random.normal(ks[2], (d, 2 * dp)) * std).astype(dtype),
+        "w_ff2": (jax.random.normal(ks[3], (dp, d)) * (dp ** -0.5)).astype(dtype),
+    }
+
+
+def _slstm_cell(carry, gates_x, r, H, Dh):
+    """One timestep. carry = (c, n, m, h) each (B, H, Dh); gates_x (B, 4*d)."""
+    c, n, m, h = carry
+    B = c.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h, r)                  # (B,H,4*Dh)
+    g = gates_x.reshape(B, H, 4 * Dh) + rec
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)               # (B,H,Dh) each
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_fwd(p, x, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    B, T, _ = x.shape
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    gates_x = (jnp.einsum("btd,de->bte", xn, p["w_gates"]).astype(F32)
+               + p["b_gates"])                               # (B,T,4d)
+
+    def step(carry, gx):
+        return _slstm_cell(carry, gx, p["r_gates"], H, Dh)
+
+    init = tuple(jnp.zeros((B, H, Dh), F32) for _ in range(2)) + \
+        (jnp.full((B, H, Dh), -30.0, F32), jnp.zeros((B, H, Dh), F32))
+    _, hs = jax.lax.scan(step, init, gates_x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    x = x + h
+    # GeGLU FFN sub-layer
+    xn = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", xn, p["w_ff1"])
+    a, b = jnp.split(up, 2, axis=-1)
+    y = jax.nn.gelu(a.astype(F32)).astype(a.dtype) * b
+    return x + jnp.einsum("bte,ed->btd", y, p["w_ff2"])
+
+
+def slstm_decode(p, x, state, cfg: ModelConfig):
+    d = cfg.d_model
+    H, Dh = cfg.n_heads, d // cfg.n_heads
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    gx = (jnp.einsum("btd,de->bte", xn, p["w_gates"]).astype(F32) + p["b_gates"])[:, 0]
+    state, h = _slstm_cell(state, gx, p["r_gates"], H, Dh)
+    x = x + h.reshape(x.shape[0], 1, d).astype(x.dtype)
+    xn = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", xn, p["w_ff1"])
+    a, b = jnp.split(up, 2, axis=-1)
+    y = jax.nn.gelu(a.astype(F32)).astype(a.dtype) * b
+    return x + jnp.einsum("bte,ed->btd", y, p["w_ff2"]), state
+
+
+# ----------------------------------------------------------------------------
+# Full model: scan over super-blocks of (slstm_every-1) mLSTM + 1 sLSTM
+# ----------------------------------------------------------------------------
+
+def _nb(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.xlstm.slstm_every == 0
+    return cfg.n_layers // cfg.xlstm.slstm_every
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    nb = _nb(cfg)
+    n_m = cfg.xlstm.slstm_every - 1
+    ke, km, ks_ = jax.random.split(key, 3)
+    mkeys = jax.random.split(km, nb * n_m).reshape(nb, n_m, 2)
+    skeys = jax.random.split(ks_, nb)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype,
+                                  cfg.tie_embeddings, cfg.padded_vocab),
+        "mlstm": jax.vmap(jax.vmap(lambda k: init_mlstm_block(k, cfg, dtype)))(mkeys),
+        "slstm": jax.vmap(lambda k: init_slstm_block(k, cfg, dtype))(skeys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, n_groups: int = 1):
+    tokens, targets = batch["tokens"], batch["targets"]
+    x = L.embed(params["embed"], tokens)
+
+    def super_block(carry, ps):
+        mp_sb, sp = ps
+
+        def inner(c, mp):
+            return mlstm_fwd(mp, c, cfg), None
+        y, _ = jax.lax.scan(inner, carry, mp_sb)
+        return slstm_fwd(sp, y, cfg), None
+
+    super_block = jax.checkpoint(super_block, prevent_cse=False)
+    x, _ = jax.lax.scan(super_block, x, (params["mlstm"], params["slstm"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    loss = L.softmax_xent(logits, targets, batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+               window: Optional[int] = None):
+    nb = _nb(cfg)
+    n_m = cfg.xlstm.slstm_every - 1
+    d_in, H, Dh = _mlstm_dims(cfg)
+    Hs, Dhs = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros
+    return {
+        "m_C": z((nb, n_m, batch, H, Dh, Dh), F32),
+        "m_n": z((nb, n_m, batch, H, Dh), F32),
+        "m_m": jnp.full((nb, n_m, batch, H), -30.0, F32),
+        "s_c": z((nb, batch, Hs, Dhs), F32),
+        "s_n": z((nb, batch, Hs, Dhs), F32),
+        "s_m": jnp.full((nb, batch, Hs, Dhs), -30.0, F32),
+        "s_h": z((nb, batch, Hs, Dhs), F32),
+    }
+
+
+def lm_decode_step(params, cache, batch, cfg: ModelConfig, *, n_groups: int = 1,
+                   window: Optional[int] = None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+
+    def super_block(carry, xs):
+        mp_sb, sp, mC, mn, mm, sc, sn, sm, sh = xs
+        xc = carry
+
+        def inner(c, mps):
+            mp, C, n, m = mps
+            y, (C2, n2, m2) = mlstm_decode(mp, c, (C, n, m), cfg)
+            return y, (C2, n2, m2)
+        xc, (mC2, mn2, mm2) = jax.lax.scan(inner, xc, (mp_sb, mC, mn, mm))
+        xc, (sc2, sn2, sm2, sh2) = slstm_decode(sp, xc, (sc, sn, sm, sh), cfg)
+        return xc, (mC2, mn2, mm2, sc2, sn2, sm2, sh2)
+
+    xs = (params["mlstm"], params["slstm"], cache["m_C"], cache["m_n"],
+          cache["m_m"], cache["s_c"], cache["s_n"], cache["s_m"], cache["s_h"])
+    x, (mC, mn, mm, sc, sn, sm, sh) = jax.lax.scan(super_block, x, xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.vocab_size)
+    return logits, {"m_C": mC, "m_n": mn, "m_m": mm, "s_c": sc, "s_n": sn,
+                    "s_m": sm, "s_h": sh}
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
+               window: Optional[int] = None):
+    """Prefill = full forward returning last-token logits + final recurrent
+    states (built by running the chunked forms and keeping final states)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    # For the recurrent families, prefill logits come from the parallel form;
+    # states for continuation are rebuilt by the serving engine. Here we
+    # return the states produced by a decode-free pass: run the parallel form
+    # for logits and report fresh (empty) states plus a note -- the serving
+    # engine replays the tail (see serve/engine.py).
+    loss_logits = None
+    x = L.embed(params["embed"], tokens)
+
+    def super_block(carry, ps):
+        mp_sb, sp = ps
+
+        def inner(c, mp):
+            return mlstm_fwd(mp, c, cfg), None
+        y, _ = jax.lax.scan(inner, carry, mp_sb)
+        return slstm_fwd(sp, y, cfg), None
+
+    x, _ = jax.lax.scan(super_block, x, (params["mlstm"], params["slstm"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg.vocab_size)
+    return logits, init_cache(cfg, B)

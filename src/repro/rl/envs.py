@@ -1,0 +1,161 @@
+"""Pure-JAX environments for the paper's RL rollout benchmark.
+
+Classic control (CartPole, Pendulum, Acrobot) implement the exact Gymnasium
+dynamics in jnp. The MuJoCo entries are *surrogates*: correct observation/
+action dimensionality and a calibrated per-step compute cost (a dense
+contact-solver-shaped workload), because the systems claims of the paper --
+throughput scaling vs. worker count -- depend on per-step cost and artifact
+size, not on articulated-body dynamics. Calibration: per-step wall cost is
+set from the paper's own 28-CPU throughput (Table III), see
+benchmarks/paper_tables.py.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    act_dim: int                  # continuous dims (0 => discrete n_actions)
+    n_actions: int = 0
+    # per-interaction compute cost on one Xeon E5-2683 core, seconds,
+    # derived from Table III: t = 28 / throughput_mean(28 cpus)
+    step_cost_s: float = 0.005
+    surrogate_dim: int = 0        # internal state size for mujoco surrogates
+
+
+# paper Table III 28-CPU mean throughputs -> per-step costs
+_PAPER_28CPU = {
+    "Acrobot": 5656, "Ant": 5106, "Cartpole": 6876, "HalfCheetah": 6343,
+    "Hopper": 5505, "Humanoid": 4108, "HumanoidStandup": 3573,
+    "InvertedDoublePendulum": 6265, "InvertedPendulum": 5864,
+    "Pendulum": 5895, "Pusher": 5939, "Reacher": 6521, "Swimmer": 6168,
+    "Walker2d": 5264,
+}
+
+
+def _cost(name: str) -> float:
+    return 28.0 / _PAPER_28CPU[name]
+
+
+ENV_SPECS: Dict[str, EnvSpec] = {
+    "Acrobot": EnvSpec("Acrobot", 6, 0, n_actions=3, step_cost_s=_cost("Acrobot")),
+    "Cartpole": EnvSpec("Cartpole", 4, 0, n_actions=2, step_cost_s=_cost("Cartpole")),
+    "Pendulum": EnvSpec("Pendulum", 3, 1, step_cost_s=_cost("Pendulum")),
+    "Ant": EnvSpec("Ant", 27, 8, step_cost_s=_cost("Ant"), surrogate_dim=128),
+    "HalfCheetah": EnvSpec("HalfCheetah", 17, 6, step_cost_s=_cost("HalfCheetah"), surrogate_dim=96),
+    "Hopper": EnvSpec("Hopper", 11, 3, step_cost_s=_cost("Hopper"), surrogate_dim=64),
+    "Humanoid": EnvSpec("Humanoid", 376, 17, step_cost_s=_cost("Humanoid"), surrogate_dim=256),
+    "HumanoidStandup": EnvSpec("HumanoidStandup", 376, 17, step_cost_s=_cost("HumanoidStandup"), surrogate_dim=256),
+    "InvertedDoublePendulum": EnvSpec("InvertedDoublePendulum", 11, 1, step_cost_s=_cost("InvertedDoublePendulum"), surrogate_dim=32),
+    "InvertedPendulum": EnvSpec("InvertedPendulum", 4, 1, step_cost_s=_cost("InvertedPendulum"), surrogate_dim=16),
+    "Pusher": EnvSpec("Pusher", 23, 7, step_cost_s=_cost("Pusher"), surrogate_dim=96),
+    "Reacher": EnvSpec("Reacher", 11, 2, step_cost_s=_cost("Reacher"), surrogate_dim=32),
+    "Swimmer": EnvSpec("Swimmer", 8, 2, step_cost_s=_cost("Swimmer"), surrogate_dim=48),
+    "Walker2d": EnvSpec("Walker2d", 17, 6, step_cost_s=_cost("Walker2d"), surrogate_dim=96),
+}
+
+
+# ----------------------------------------------------------------------------
+# Exact classic-control dynamics
+# ----------------------------------------------------------------------------
+
+def cartpole_step(state, action):
+    """Gymnasium CartPole-v1 dynamics. state (4,), action in {0,1}."""
+    g, mc, mp, lp, fmag, tau = 9.8, 1.0, 0.1, 0.5, 10.0, 0.02
+    x, xd, th, thd = state
+    force = jnp.where(action == 1, fmag, -fmag)
+    ct, st = jnp.cos(th), jnp.sin(th)
+    tmp = (force + mp * lp * thd ** 2 * st) / (mc + mp)
+    thacc = (g * st - ct * tmp) / (lp * (4.0 / 3.0 - mp * ct ** 2 / (mc + mp)))
+    xacc = tmp - mp * lp * thacc * ct / (mc + mp)
+    new = jnp.array([x + tau * xd, xd + tau * xacc,
+                     th + tau * thd, thd + tau * thacc])
+    done = (jnp.abs(new[0]) > 2.4) | (jnp.abs(new[2]) > 12 * math.pi / 180)
+    reward = 1.0
+    return new, new, reward, done
+
+
+def pendulum_step(state, action):
+    """Pendulum-v1. state: (th, thd) internal; obs (cos, sin, thd)."""
+    g, m, l, dt = 10.0, 1.0, 1.0, 0.05
+    th, thd = state[0], state[1]
+    u = jnp.clip(action[0], -2.0, 2.0)
+    cost = (jnp.mod(th + math.pi, 2 * math.pi) - math.pi) ** 2 \
+        + 0.1 * thd ** 2 + 0.001 * u ** 2
+    thd_new = thd + (3 * g / (2 * l) * jnp.sin(th) + 3.0 / (m * l ** 2) * u) * dt
+    thd_new = jnp.clip(thd_new, -8.0, 8.0)
+    th_new = th + thd_new * dt
+    new = jnp.array([th_new, thd_new])
+    obs = jnp.array([jnp.cos(th_new), jnp.sin(th_new), thd_new])
+    return new, obs, -cost, jnp.asarray(False)
+
+
+def acrobot_step(state, action):
+    """Acrobot-v1 (Euler integration variant). state (4,), action {0,1,2}."""
+    m1 = m2 = 1.0
+    l1 = 1.0
+    lc1 = lc2 = 0.5
+    I1 = I2 = 1.0
+    g, dt = 9.8, 0.2
+    th1, th2, d1v, d2v = state
+    torque = action.astype(jnp.float32) - 1.0
+    d1 = m1 * lc1 ** 2 + m2 * (l1 ** 2 + lc2 ** 2 + 2 * l1 * lc2 * jnp.cos(th2)) + I1 + I2
+    d2 = m2 * (lc2 ** 2 + l1 * lc2 * jnp.cos(th2)) + I2
+    phi2 = m2 * lc2 * g * jnp.cos(th1 + th2 - math.pi / 2)
+    phi1 = (-m2 * l1 * lc2 * d2v ** 2 * jnp.sin(th2)
+            - 2 * m2 * l1 * lc2 * d2v * d1v * jnp.sin(th2)
+            + (m1 * lc1 + m2 * l1) * g * jnp.cos(th1 - math.pi / 2) + phi2)
+    ddth2 = (torque + d2 / d1 * phi1 - m2 * l1 * lc2 * d1v ** 2 * jnp.sin(th2)
+             - phi2) / (m2 * lc2 ** 2 + I2 - d2 ** 2 / d1)
+    ddth1 = -(d2 * ddth2 + phi1) / d1
+    new = jnp.array([th1 + dt * d1v, th2 + dt * d2v,
+                     jnp.clip(d1v + dt * ddth1, -4 * math.pi, 4 * math.pi),
+                     jnp.clip(d2v + dt * ddth2, -9 * math.pi, 9 * math.pi)])
+    obs = jnp.array([jnp.cos(new[0]), jnp.sin(new[0]), jnp.cos(new[1]),
+                     jnp.sin(new[1]), new[2], new[3]])
+    done = -jnp.cos(new[0]) - jnp.cos(new[1] + new[0]) > 1.0
+    return new, obs, -1.0, done
+
+
+def surrogate_step_fn(spec: EnvSpec):
+    """MuJoCo surrogate: a contact-solver-shaped dense workload with the
+    right obs/act dims. W is a fixed random internal dynamics matrix."""
+    key = jax.random.PRNGKey(hash(spec.name) % (2 ** 31))
+    n = spec.surrogate_dim
+    W = jax.random.orthogonal(key, n) * 0.99
+    Pobs = jax.random.normal(jax.random.fold_in(key, 1), (n, spec.obs_dim)) / math.sqrt(n)
+    Pact = jax.random.normal(jax.random.fold_in(key, 2), (spec.act_dim, n)) / math.sqrt(n)
+
+    def step(state, action):
+        # a few "solver iterations" of the internal state
+        s = state
+        for _ in range(3):
+            s = jnp.tanh(s @ W + action @ Pact)
+        obs = s @ Pobs
+        reward = -jnp.mean(jnp.square(obs)) + jnp.mean(action ** 2) * -0.01
+        return s, obs, reward, jnp.asarray(False)
+
+    return step
+
+
+def make_env(name: str):
+    """Returns (spec, init_fn(key)->state, step_fn(state, action))."""
+    spec = ENV_SPECS[name]
+    if name == "Cartpole":
+        return spec, lambda k: jax.random.uniform(k, (4,), minval=-0.05, maxval=0.05), cartpole_step
+    if name == "Pendulum":
+        return spec, lambda k: jax.random.uniform(k, (2,), minval=-1.0, maxval=1.0), pendulum_step
+    if name == "Acrobot":
+        return spec, lambda k: jax.random.uniform(k, (4,), minval=-0.1, maxval=0.1), acrobot_step
+    step = surrogate_step_fn(spec)
+    return spec, (lambda k, n=spec.surrogate_dim:
+                  jax.random.normal(k, (n,)) * 0.1), step

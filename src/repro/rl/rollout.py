@@ -1,0 +1,92 @@
+"""RL rollout actors: the paper's benchmark workload on the Syndeo runtime.
+
+Each actor hosts one environment + a fully-connected policy network and
+collects state-action interactions (paper §IV). `rollout_task` is the unit
+of work the Syndeo scheduler dispatches; `run_benchmark_local` drives real
+rollouts through the threaded local cluster, and benchmarks/paper_tables.py
+drives the same scheduler at paper scale under virtual time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl.envs import ENV_SPECS, make_env
+
+
+def init_policy(key, obs_dim: int, act_out: int, hidden: int = 64):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (obs_dim, hidden)) / np.sqrt(obs_dim),
+        "w2": jax.random.normal(k2, (hidden, hidden)) / np.sqrt(hidden),
+        "w3": jax.random.normal(k3, (hidden, act_out)) / np.sqrt(hidden),
+    }
+
+
+def policy_apply(params, obs):
+    h = jnp.tanh(obs @ params["w1"])
+    h = jnp.tanh(h @ params["w2"])
+    return h @ params["w3"]
+
+
+def make_rollout_fn(env_name: str, n_steps: int):
+    """Pure-JAX rollout of n_steps interactions (scan), jitted once."""
+    spec, init_fn, step_fn = make_env(env_name)
+    act_out = spec.n_actions if spec.n_actions else spec.act_dim
+
+    def rollout(key):
+        kp, ke = jax.random.split(key)
+        params = init_policy(kp, spec.obs_dim, act_out)
+        state = init_fn(ke)
+        obs0 = jnp.zeros((spec.obs_dim,))
+
+        def step(carry, _):
+            state, obs = carry
+            logits = policy_apply(params, obs)
+            if spec.n_actions:
+                action = jnp.argmax(logits)
+            else:
+                action = jnp.tanh(logits)
+            new_state, new_obs, reward, done = step_fn(state, action)
+            new_obs = jnp.resize(new_obs, (spec.obs_dim,))
+            return (new_state, new_obs), (new_obs, reward)
+
+        (_, _), (obs_traj, rewards) = jax.lax.scan(
+            step, (state, obs0), None, length=n_steps)
+        return obs_traj, rewards
+
+    return jax.jit(rollout), spec
+
+
+def rollout_task(env_name: str, n_steps: int, seed: int) -> Dict:
+    """The Syndeo task: collect n_steps interactions, return the artifact
+    (observation trajectory -- its SIZE is what stresses the object store,
+    exactly the paper's Humanoid effect)."""
+    fn, spec = make_rollout_fn(env_name, n_steps)
+    t0 = time.perf_counter()
+    obs_traj, rewards = fn(jax.random.PRNGKey(seed))
+    obs_traj = np.asarray(obs_traj)
+    return {
+        "env": env_name,
+        "interactions": int(n_steps),
+        "wall_s": time.perf_counter() - t0,
+        "obs": obs_traj,                     # (n_steps, obs_dim) artifact
+        "reward_sum": float(jnp.sum(rewards)),
+    }
+
+
+def run_benchmark_local(cluster, env_name: str, n_workers: int,
+                        steps_per_worker: int = 1000) -> Tuple[float, Dict]:
+    """Real (threaded) run on a SyndeoCluster: returns (throughput, stats)."""
+    t0 = time.perf_counter()
+    tasks = [cluster.submit(rollout_task, env_name, steps_per_worker, i,
+                            group=f"rollout-{env_name}")
+             for i in range(n_workers)]
+    results = cluster.wait_all(tasks, timeout=600.0)
+    wall = time.perf_counter() - t0
+    total = sum(r["interactions"] for r in results)
+    return total / wall, {"wall_s": wall, "n_tasks": len(results)}

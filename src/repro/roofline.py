@@ -1,0 +1,434 @@
+"""Roofline analysis from compiled (SPMD-partitioned) HLO.
+
+Why a parser: `compiled.cost_analysis()` counts a `while` body ONCE, but
+scan-over-layers puts ~all FLOPs inside while loops. We parse
+`compiled.as_text()` instead and multiply each computation's cost by the
+product of enclosing while trip counts (XLA CPU prints
+backend_config={"known_trip_count":{"n":"L"}} on while ops; we fall back to
+the loop-bound constant in the cond computation).
+
+Costs extracted (per device -- the partitioned module is the per-device
+program):
+  flops       : 2*prod(out)*prod(contracting dims) for every dot (including
+                dots inside fusions), trip-count corrected.
+  hbm bytes   : sum of (operands + output) sizes of top-level instructions;
+                fusion internals are NOT counted (fused intermediates stay
+                on-chip) -- this is the HBM-traffic proxy.
+  collectives : per (kind): operand bytes and participant count, converted
+                to effective wire bytes with ring-algorithm factors.
+
+Roofline terms (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, active_param_count, param_count
+from repro.configs.shapes import ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+LINK_BW = 50e9               # bytes / s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _scan_type(s: str, i: int) -> int:
+    """Return index just past the type starting at s[i] (handles nested
+    tuple types containing '/*index=N*/' comments)."""
+    if s[i] == "(":
+        depth = 0
+        while i < len(s):
+            if s[i] == "(":
+                depth += 1
+            elif s[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    return i + 1
+            i += 1
+        return i
+    m = re.compile(r"\w+\[[^\]]*\](?:\{[^}]*\})?").match(s, i)
+    return m.end() if m else i
+
+
+def _parse_instr_line(raw: str):
+    """-> (name, type_str, opcode, operand_body, attrs) or None."""
+    m = _NAME_RE.match(raw)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    j = _scan_type(raw, i) if i < len(raw) else i
+    if j == i:
+        return None
+    type_str = raw[i:j]
+    mo = _OPCODE_RE.match(raw, j)
+    if not mo:
+        return None
+    opcode = mo.group(1)
+    # operand body: balance parens from the opcode's '('
+    k = mo.end() - 1
+    depth = 0
+    end = len(raw)
+    for idx in range(k, len(raw)):
+        if raw[idx] == "(":
+            depth += 1
+        elif raw[idx] == ")":
+            depth -= 1
+            if depth == 0:
+                end = idx
+                break
+    body = raw[k + 1:end]
+    attrs = raw[end:]
+    operands = re.findall(r"%([\w.\-]+)", body)
+    return name, type_str, opcode, operands, attrs
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    # kind -> [ops, operand_bytes, wire_bytes]
+    collectives: Dict[str, List[float]] = field(default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            cur = self.collectives.setdefault(k, [0.0, 0.0, 0.0])
+            for i in range(3):
+                cur[i] += v[i] * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, CostTotals] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            hdr = _COMP_HDR_RE.match(raw)
+            if hdr and "=" not in raw.split("(")[0]:
+                cur = hdr.group(2)
+                self.computations[cur] = []
+                if hdr.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if raw.strip() == "}":
+                cur = None
+                continue
+            parsed = _parse_instr_line(raw)
+            if parsed:
+                name, type_str, opcode, operands, attrs = parsed
+                self.computations[cur].append(
+                    Instr(name, type_str, opcode, operands, attrs, raw))
+
+    # -- helpers ------------------------------------------------------------
+
+    def _symtab(self, comp: str) -> Dict[str, str]:
+        return {i.name: i.type_str for i in self.computations.get(comp, [])}
+
+    def _trip_count(self, instr: Instr) -> float:
+        m = re.search(r'known_trip_count[^0-9]*(\d+)', instr.line)
+        if m:
+            return float(m.group(1))
+        # fallback: constant in the cond computation
+        mc = re.search(r"condition=%([\w.\-]+)", instr.line)
+        if mc and mc.group(1) in self.computations:
+            for ci in self.computations[mc.group(1)]:
+                mm = re.match(r"s32\[\]", ci.type_str)
+                if ci.opcode == "constant" and mm:
+                    mv = re.search(r"constant\((\d+)\)", ci.line)
+                    if mv:
+                        return float(mv.group(1))
+        return 1.0
+
+    def _dot_flops(self, instr: Instr, symtab: Dict[str, str]) -> float:
+        out = _shape_dims(instr.type_str)
+        n_out = math.prod(out) if out else 1
+        lhs_dims = ()
+        if instr.operands:
+            lhs_type = symtab.get(instr.operands[0], "")
+            lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+        contract = 1
+        if m and m.group(1) and lhs_dims:
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    contract *= lhs_dims[di]
+        elif lhs_dims:
+            contract = lhs_dims[-1]
+        return 2.0 * n_out * contract
+
+    def _participants(self, instr: Instr) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.line)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", instr.line)
+        if m:
+            return len(m.group(1).split(","))
+        return 1
+
+    # -- HBM-traffic helpers --------------------------------------------------
+
+    def _fusion_operand_bytes(self, fusion_comp: str, symtab: Dict[str, str],
+                              operands: List[str]) -> float:
+        """Bytes actually *read* by a fusion: a parameter consumed only by
+        dynamic-slice/gather ops inside the body is charged at the slice
+        output size, not the full buffer (loop-invariant weight stacks and KV
+        caches are sliced per iteration, not fully read)."""
+        body = self.computations.get(fusion_comp, [])
+        param_instr: Dict[int, str] = {}
+        for i in body:
+            if i.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i.line)
+                if m:
+                    param_instr[int(m.group(1))] = i.name
+        consumers: Dict[str, List[Instr]] = {}
+        for i in body:
+            for o in i.operands:
+                consumers.setdefault(o, []).append(i)
+        total = 0.0
+        for idx, opname in enumerate(operands):
+            full = _shape_bytes(symtab.get(opname, ""))
+            pname = param_instr.get(idx)
+            if pname is None:
+                total += full
+                continue
+            cons = consumers.get(pname, [])
+            if cons and all(c.opcode in ("dynamic-slice", "gather") for c in cons):
+                total += sum(_shape_bytes(c.type_str) for c in cons)
+            elif cons and all(c.opcode == "dynamic-update-slice"
+                              and c.operands and c.operands[0] == pname
+                              for c in cons):
+                # in-place updated buffer: not read, write counted at output
+                total += 0.0
+            else:
+                total += full
+        return total
+
+    def _fusion_output_bytes(self, fusion_comp: str, out_bytes: float) -> float:
+        """A fusion whose root is dynamic-update-slice writes the update
+        region (in-place), not the whole buffer."""
+        body = self.computations.get(fusion_comp, [])
+        for i in body:
+            if i.line.lstrip().startswith("ROOT") and i.opcode == "dynamic-update-slice":
+                symtab = self._symtab(fusion_comp)
+                upd = i.operands[1] if len(i.operands) > 1 else None
+                if upd:
+                    return 2.0 * _shape_bytes(symtab.get(upd, ""))
+        return out_bytes
+
+    # -- cost walk ----------------------------------------------------------
+
+    def comp_cost(self, comp: str, top_level: bool = True) -> CostTotals:
+        key = f"{comp}|{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        total = CostTotals()
+        symtab = self._symtab(comp)
+        for instr in self.computations.get(comp, []):
+            op = instr.opcode
+            out_bytes = _shape_bytes(instr.type_str)
+            opnd_bytes = sum(_shape_bytes(symtab.get(o, "")) for o in instr.operands)
+            if op == "dynamic-slice" or op == "gather":
+                total.bytes += 2.0 * out_bytes
+                continue
+            if op == "dynamic-update-slice":
+                upd = instr.operands[1] if len(instr.operands) > 1 else None
+                total.bytes += 2.0 * _shape_bytes(symtab.get(upd, "")) if upd else out_bytes
+                continue
+            if op == "scatter":
+                upd = instr.operands[-1] if instr.operands else None
+                total.bytes += 2.0 * _shape_bytes(symtab.get(upd, "")) if upd else out_bytes
+                continue
+
+            if op == "while":
+                n = self._trip_count(instr)
+                body = re.search(r"body=%([\w.\-]+)", instr.line)
+                if body:
+                    total.add(self.comp_cost(body.group(1)), n)
+                cond = re.search(r"condition=%([\w.\-]+)", instr.line)
+                if cond:
+                    total.add(self.comp_cost(cond.group(1)), n)
+                continue
+            if op in ("call", "conditional"):
+                for target in re.findall(r"(?:to_apply|true_computation|false_computation|called_computations)=\{?%([\w.\-]+)", instr.line):
+                    total.add(self.comp_cost(target), 1.0)
+                total.bytes += out_bytes + opnd_bytes
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", instr.line)
+                if m:
+                    fc = m.group(1)
+                    sub = self.comp_cost(fc, top_level=False)
+                    total.flops += sub.flops
+                    total.transcendentals += sub.transcendentals
+                    # fusion internals stay on-chip: bytes = boundary only,
+                    # with slice-aware reads and in-place DUS writes
+                    total.bytes += (self._fusion_output_bytes(fc, out_bytes)
+                                    + self._fusion_operand_bytes(fc, symtab,
+                                                                 instr.operands))
+                else:
+                    total.bytes += out_bytes + opnd_bytes
+                continue
+            if op == "dot" or op == "convolution":
+                total.flops += self._dot_flops(instr, symtab)
+                if top_level:
+                    total.bytes += out_bytes + opnd_bytes
+                continue
+            if op in _COLLECTIVES or (op.endswith("-start") and op[:-6] in _COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                parts = self._participants(instr)
+                b = opnd_bytes
+                if kind == "all-reduce":
+                    wire = 2.0 * b * (parts - 1) / max(parts, 1)
+                elif kind == "all-gather":
+                    wire = b * (parts - 1)
+                elif kind in ("reduce-scatter", "all-to-all"):
+                    wire = b * (parts - 1) / max(parts, 1)
+                else:  # collective-permute
+                    wire = b
+                cur = total.collectives.setdefault(kind, [0.0, 0.0, 0.0])
+                cur[0] += 1
+                cur[1] += b
+                cur[2] += wire
+                total.bytes += out_bytes + opnd_bytes
+                continue
+            if op in ("tanh", "exponential", "log", "power", "rsqrt", "sqrt",
+                      "logistic", "exponential-minus-one", "log-plus-one"):
+                dims = _shape_dims(instr.type_str)
+                total.transcendentals += math.prod(dims) if dims else 1
+            if top_level and op not in _SKIP_BYTES_OPS:
+                total.bytes += out_bytes + opnd_bytes
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> CostTotals:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+# ----------------------------------------------------------------------------
+# Roofline terms
+# ----------------------------------------------------------------------------
+
+def roofline_terms(cost: CostTotals) -> Dict[str, float]:
+    wire = sum(v[2] for v in cost.collectives.values())
+    return {
+        "compute_s": cost.flops / PEAK_FLOPS,
+        "memory_s": cost.bytes / HBM_BW,
+        "collective_s": wire / LINK_BW,
+        "hlo_flops_per_device": cost.flops,
+        "hbm_bytes_per_device": cost.bytes,
+        "wire_bytes_per_device": wire,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    keys = ["compute_s", "memory_s", "collective_s"]
+    return max(keys, key=lambda k: terms[k])
+
+
+def roofline_fraction(terms: Dict[str, float]) -> float:
+    """compute-term / max-term: 1.0 == perfectly compute-bound (roofline)."""
+    top = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    return terms["compute_s"] / top if top > 0 else 0.0
+
+
+# ----------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (global, whole step)
+# ----------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D-style useful-math FLOPs for the whole (global) step."""
+    B, T = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    n_act = active_param_count(cfg)
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_act_noemb = n_act - emb
+    # attention context math per attn layer
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_attn = cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.hybrid.attn_every
+    elif cfg.family == "audio":
+        n_attn = cfg.n_layers * 2 + cfg.encdec.n_enc_layers  # self+cross+enc
+    else:
+        n_attn = 0
+
+    if shape.kind == "train":
+        matmul = 6.0 * n_act * B * T
+        attn = n_attn * 12.0 * B * T * T * cfg.n_heads * hd * 0.5
+        return matmul + attn
+    if shape.kind == "prefill":
+        return 2.0 * n_act * B * T + n_attn * 4.0 * B * T * T * cfg.n_heads * hd * 0.5
+    # decode: one token, context = T (or the window for windowed layers)
+    ctx = T
+    if cfg.long_context_window and shape.name == "long_500k":
+        ctx = cfg.long_context_window
+    attn = n_attn * 4.0 * B * ctx * cfg.n_heads * hd
+    ssm = 0.0
+    if cfg.family in ("hybrid", "ssm"):
+        # recurrent state update flops are tiny; covered by matmul term
+        pass
+    return 2.0 * n_act * B + attn + ssm

@@ -1,0 +1,119 @@
+"""Continuous-batching serving engine.
+
+Fixed B decode slots over a static-shaped KV cache (TPU-friendly: one
+compiled decode step, no re-compilation as requests come and go):
+  * new requests are prefilled one-at-a-time (padded to the prefill bucket)
+    and their cache scattered into a free slot,
+  * every engine tick decodes all active slots in one batched step,
+  * finished slots (EOS or max_len) are freed and refilled from the queue.
+
+On a pod this engine is one long-lived Syndeo actor per model replica; the
+Syndeo scheduler routes request batches to replicas (placement groups pin
+them to pod slices).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclass
+class Request:
+    id: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1          # -1: never
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, batch_slots: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.positions = jnp.zeros((batch_slots,), jnp.int32)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill_one = jax.jit(self._prefill_impl)
+        self.stats = {"ticks": 0, "prefills": 0, "decoded_tokens": 0,
+                      "completed": 0}
+
+    def _prefill_impl(self, params, tokens):
+        return self.model.prefill(params, {"tokens": tokens})
+
+    # -- request management ------------------------------------------------------
+
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_free_slots(self):
+        for slot in range(self.B):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, pcache = self._prefill_one(self.params, prompt)
+            next_tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(next_tok)
+            self._scatter_cache(pcache, slot, len(req.prompt))
+            self.positions = self.positions.at[slot].set(len(req.prompt))
+            self.tokens = self.tokens.at[slot, 0].set(next_tok)
+            self.slot_req[slot] = req
+            self.stats["prefills"] += 1
+
+    def _scatter_cache(self, pcache, slot: int, plen: int):
+        """Copy a 1-seq prefill cache into batch slot `slot`."""
+        def per_leaf(big, small):
+            if big.ndim < 2 or big.shape[1] != self.B:
+                return big
+            pad_width = [(0, 0)] * small.ndim
+            pad_width[2] = (0, big.shape[2] - small.shape[2])
+            small_p = jnp.pad(small, pad_width)
+            return big.at[:, slot].set(small_p[:, 0].astype(big.dtype))
+        self.cache = jax.tree.map(per_leaf, self.cache, pcache)
+
+    # -- the decode tick -----------------------------------------------------------
+
+    def tick(self) -> int:
+        """One engine iteration; returns number of active slots decoded."""
+        self._fill_free_slots()
+        active = [s for s in range(self.B) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        batch = {"tokens": self.tokens, "positions": self.positions}
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        next_tokens = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        self.positions = self.positions + 1
+        self.stats["ticks"] += 1
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(next_tokens[s])
+            req.output.append(tok)
+            self.stats["decoded_tokens"] += 1
+            limit = len(req.output) >= req.max_new_tokens
+            if tok == req.eos_id or limit or int(self.positions[s]) >= self.max_len - 1:
+                req.done = True
+                self.slot_req[s] = None
+                self.stats["completed"] += 1
+        self.tokens = jnp.asarray(next_tokens, jnp.int32)[:, None]
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
+        out = []
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.tick()
+        return out

@@ -1,0 +1,123 @@
+"""Logical-axis sharding: model code annotates activations/params with
+*logical* axis names; the launcher binds them to physical mesh axes.
+
+Outside a binding (unit tests on 1 device) every constraint is a no-op, so
+the same model code runs everywhere -- the Syndeo 'write once, deploy
+anywhere' principle applied to sharding.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, Tuple[str, ...]]]]:
+    return getattr(_state, "binding", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, Tuple[str, ...]]):
+    """Bind logical axis names to physical mesh axes for the enclosed scope."""
+    prev = _current()
+    _state.binding = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.binding = prev
+
+
+def resolve(spec: Sequence[Logical]) -> Optional[P]:
+    """Logical spec -> PartitionSpec under the current binding (None if unbound)."""
+    bound = _current()
+    if bound is None:
+        return None
+    _, rules = bound
+    out = []
+    for ax in spec:
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, tuple):
+            phys: Tuple[str, ...] = ()
+            for a in ax:
+                phys = phys + rules.get(a, ())
+            out.append(phys if phys else None)
+        else:
+            phys = rules.get(ax, ())
+            out.append(phys if phys else None)
+    return P(*out)
+
+
+def _guard_divisibility(mesh: Mesh, shape, pspec: P) -> P:
+    """Drop mesh axes from dims they don't divide (e.g. 8 KV heads on a
+    16-way model axis fall back to replication -- DESIGN.md head-divisibility
+    fallback). Keeps every constraint legal for any arch/mesh combination."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(pspec) + (None,) * (len(shape) - len(pspec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        kept = []
+        for a in axes:
+            if dim % (total * sizes[a]) == 0:
+                kept.append(a)
+                total *= sizes[a]
+        out.append(tuple(kept) if kept else None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *spec: Logical) -> jax.Array:
+    """with_sharding_constraint against logical axes; no-op when unbound."""
+    bound = _current()
+    if bound is None:
+        return x
+    mesh, _ = bound
+    pspec = resolve(spec)
+    if pspec is None:
+        return x
+    pspec = _guard_divisibility(mesh, x.shape, pspec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+def named_sharding(*spec: Logical) -> Optional[NamedSharding]:
+    bound = _current()
+    if bound is None:
+        return None
+    mesh, _ = bound
+    return NamedSharding(mesh, resolve(spec))
+
+
+# Default bindings ------------------------------------------------------------
+
+def single_pod_rules() -> Dict[str, Tuple[str, ...]]:
+    return {
+        "batch": ("data",),
+        "model": ("model",),
+        "expert": ("data",),   # EP over the DP axis (all-to-all dispatch)
+        "ep_batch": (),        # group axis in expert-major layout
+        "fsdp": ("data",),     # weight sharding for the largest models
+        "pod_fsdp": (),        # expert-weight sharding across pods
+        "seq": (),             # sequence parallelism: off by default
+    }
+
+
+def multi_pod_rules() -> Dict[str, Tuple[str, ...]]:
+    return {
+        "batch": ("pod", "data"),
+        "model": ("model",),
+        "expert": ("data",),   # EP within a pod; experts replicated across pods
+        "ep_batch": ("pod",),  # expert-major keeps pod-locality (a2a stays in-pod)
+        "fsdp": ("pod", "data"),
+        "pod_fsdp": ("pod",),  # expert weights gather across pods per layer
+        "seq": (),
+    }

@@ -1,0 +1,147 @@
+"""Parameter -> PartitionSpec rules for every architecture family.
+
+Name-based dispatch over the param tree paths that `models/` produce.
+Conventions (logical axes; bound to physical axes by `axes.py`):
+  * column-parallel (d -> wide):   (..., "fsdp", "model")
+  * row-parallel   (wide -> d):    (..., "model", "fsdp")
+  * experts: ("expert" = data axis) leading, d_ff over "model" (expert-TP)
+  * embeddings: vocab over "model", d over "fsdp"
+  * norms / small vectors / convs: replicated
+
+"fsdp" resolves to the DP axes only for archs with cfg.fsdp=True (arctic,
+internvl2); otherwise it resolves to () = no sharding. The divisibility
+guard in axes.py drops any axis that does not divide the dim (whisper's 6
+heads, xlstm's 4 heads, GQA kv-heads < TP, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding.axes import _guard_divisibility
+
+# suffix -> logical spec for the trailing (non-stacked) dims
+_COL = ("fsdp", "model")      # (d_in, d_out_wide)
+_ROW = ("model", "fsdp")      # (d_in_wide, d_out)
+_RULES: Dict[str, Tuple] = {
+    # dense attention / mlp
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "w1": _COL, "w3": _COL, "w2": _ROW,
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # embeddings
+    "tok": ("model", "fsdp"), "out": ("model", "fsdp"),
+    # mamba2
+    "w_zx": _COL, "w_bc": (None, None), "w_dt": (None, None),
+    "w_out": _ROW, "conv_w": (None, None), "conv_b": (None,),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,), "norm_w": (None,),
+    # xlstm
+    "w_up": _COL, "w_down": _ROW,
+    "w_q": (None, "model"), "w_k": (None, "model"), "w_v": (None, "model"),
+    "w_if": (None, None), "b_if": (None,), "r_gates": (None, None, None),
+    "w_gates": _COL, "b_gates": (None,), "w_ff1": _COL, "w_ff2": _ROW,
+    # moe
+    "router": (None, None),
+}
+_MOE_RULES = {
+    # experts over the in-pod DP axis (EP), d_ff over model (expert-TP),
+    # d_model over the pod axis on multi-pod meshes (expert FSDP across
+    # pods: "pod_fsdp" resolves to () on a single pod)
+    "w1": ("expert", "pod_fsdp", "model"),
+    "w3": ("expert", "pod_fsdp", "model"),
+    "w2": ("expert", "model", "pod_fsdp"),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return tuple(names)
+
+
+def logical_spec(path, leaf, cfg: ModelConfig) -> Tuple:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    in_moe = "moe" in names
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+
+    if in_moe and name in _MOE_RULES and "dense" not in names:
+        rule = _MOE_RULES[name]
+    elif name in _RULES:
+        rule = _RULES[name]
+    else:
+        rule = ()  # norms, scalars -> replicated
+
+    lead = ndim - len(rule)
+    assert lead >= 0, (names, ndim, rule)
+    return (None,) * lead + tuple(rule)
+
+
+def param_pspecs(params_shape: Any, cfg: ModelConfig,
+                 rules: Dict[str, Tuple[str, ...]]) -> Any:
+    """Pytree of PartitionSpec mirroring the params pytree.
+
+    `rules` maps logical names -> physical axes (see axes.single_pod_rules).
+    For non-FSDP archs "fsdp" is stripped here.
+    """
+    eff_rules = dict(rules)
+    if not cfg.fsdp:
+        eff_rules["fsdp"] = ()
+
+    def resolve_logical(spec):
+        out = []
+        for ax in spec:
+            if ax is None:
+                out.append(None)
+            else:
+                phys = eff_rules.get(ax, ())
+                out.append(phys if phys else None)
+        return P(*out)
+
+    def per_leaf(path, leaf):
+        return resolve_logical(logical_spec(path, leaf, cfg))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shape)
+
+
+def zero1_extend(pspec: P, shape, mesh: Mesh, dp_axes: Tuple[str, ...]) -> P:
+    """ZeRO-1: shard optimizer state over the DP axes by assigning them to
+    the first unsharded dim they divide (no-op if none divides)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = [a for a in dp_axes if a in sizes]
+    if not dp:
+        return pspec
+    used = set()
+    for e in tuple(pspec):
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    dp = [a for a in dp if a not in used]
+    if not dp:
+        return pspec
+    dp_size = int(np.prod([sizes[a] for a in dp]))
+    entries = list(tuple(pspec) + (None,) * (len(shape) - len(tuple(pspec))))
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % dp_size == 0 and dim >= dp_size:
+            entries[i] = tuple(dp)
+            return P(*entries)
+    return pspec
+
+
+def named_shardings(params_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                    rules: Dict[str, Tuple[str, ...]]) -> Any:
+    specs = param_pspecs(params_shape, cfg, rules)
+
+    def mk(leaf, spec):
+        spec = _guard_divisibility(mesh, leaf.shape, spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(mk, params_shape, specs)

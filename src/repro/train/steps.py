@@ -1,0 +1,114 @@
+"""train_step / serve_step factories.
+
+train_step: microbatched gradient accumulation (scan over microbatches,
+fp32 accumulators), gradient clipping, optimizer update. Loss/grads are
+computed under the model's remat policy; GSPMD inserts the DP gradient
+reduce inside the accumulation loop, overlapping compute with communication.
+
+serve_step: prefill (full forward + KV cache materialization) and decode
+(one token against the cache) -- these are the artifacts lowered by the
+decode_*/long_* dry-run cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+F32 = jnp.float32
+
+
+def make_train_step(model: Model, opt: Optimizer,
+                    lr_fn: Callable[[Any], Any],
+                    n_microbatches: int = 1,
+                    clip_norm: float = 1.0,
+                    grad_shardings: Any = None,
+                    accum_dtype: str = "float32"):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "step"}; batch leaves lead with global batch.
+    grad_shardings (optional pytree of NamedSharding mirroring params): the
+    fp32 gradient accumulator is constrained to it -- pass ZeRO-1-extended
+    param shardings to get ZeRO-2-style DP-sharded accumulation (each
+    microbatch's gradient reduce becomes a reduce-scatter, overlapping the
+    backward compute; saves (dp-1)/dp of the fp32 accumulator memory).
+    """
+
+    ACC = jnp.dtype(accum_dtype)
+
+    def _constrain_grads(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s) if s is not None else g,
+            tree, grad_shardings)
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, mb)
+        return loss, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+            grads = _constrain_grads(jax.tree.map(lambda g: g.astype(ACC), grads))
+        else:
+            def split_mb(x):
+                b = x.shape[0]
+                assert b % n_microbatches == 0, (b, n_microbatches)
+                return x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split_mb, batch)
+            acc0 = _constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, ACC), params))
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, grads = grads_of(params, mb)
+                acc = _constrain_grads(jax.tree.map(
+                    lambda a, g: a + g.astype(ACC), acc, grads))
+                return (acc, loss_acc + loss), None
+
+            (gsum, loss_sum), _ = jax.lax.scan(body, (acc0, jnp.zeros((), F32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+            loss = loss_sum / n_microbatches
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state["step"])
+        new_params, new_opt, stats = opt.update(params, grads, state["opt"], lr)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_init_state(model: Model, opt: Optimizer):
+    def init_state(key):
+        params = model.init_params(key)
+        return {"params": params, "opt": opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+    return init_state
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        # greedy next token (serving engine may re-sample)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, batch):
+        logits, cache = model.decode_step(params, cache, batch)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok, cache
+    return decode_step

@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests of the Syndeo runtime (paper §III-D phases)."""
+import time
+
+import pytest
+
+from repro.core import (ContainerSpec, SchedulerConfig, SecurityError,
+                        SyndeoCluster, TaskState, UnprivilegedProfile)
+
+
+def _mul(a, b):
+    return a * b
+
+
+def _add(x, y):
+    return x + y
+
+
+@pytest.fixture()
+def cluster():
+    c = SyndeoCluster()
+    for _ in range(4):
+        c.add_worker()
+    yield c
+    c.shutdown()
+
+
+def test_phase_bringup_and_simple_task(cluster):
+    t = cluster.submit(_mul, 6, 7)
+    assert cluster.get(t) == 42
+
+
+def test_dependency_driven_execution(cluster):
+    """A task starts only when its data dependencies exist (paper Fig. 1)."""
+    a = cluster.submit(_mul, 2, 3)
+    ra = cluster.get(a)
+    ref = cluster.scheduler.graph.tasks[a.id].output
+    b = cluster.submit(_add, 10, deps=[ref])   # consumes a's artifact
+    assert cluster.get(b) == 16
+
+
+def test_many_tasks_all_workers(cluster):
+    tasks = [cluster.submit(_mul, i, 2) for i in range(40)]
+    results = cluster.wait_all(tasks)
+    assert results == [i * 2 for i in range(40)]
+    used = {cluster.scheduler.graph.tasks[t.id].worker for t in tasks}
+    assert len(used) > 1, "work should spread across workers"
+
+
+def test_task_error_retries_then_fails(cluster):
+    def boom():
+        raise ValueError("kaboom")
+    t = cluster.submit(boom, max_retries=1)
+    with pytest.raises(RuntimeError, match="kaboom"):
+        cluster.get(t, timeout=30)
+    assert cluster.scheduler.graph.tasks[t.id].state == TaskState.FAILED
+
+
+def test_worker_removal_requeues_work(cluster):
+    """Elasticity: removing a worker mid-flight must not lose tasks."""
+    def slowish(x):
+        time.sleep(0.05)
+        return x
+    tasks = [cluster.submit(slowish, i) for i in range(20)]
+    victim = next(iter(cluster._queues))
+    cluster.remove_worker(victim)
+    assert cluster.wait_all(tasks, timeout=60) == list(range(20))
+
+
+def test_worker_join_after_submit():
+    """Workers may join late via the rendezvous (phase 3 is elastic)."""
+    c = SyndeoCluster()
+    t = c.submit(_mul, 3, 3)
+    time.sleep(0.05)
+    c.add_worker()
+    assert c.get(t) == 9
+    c.shutdown()
+
+
+def test_placement_group_binding(cluster):
+    ok = cluster.create_placement_group("pg0", [{"cpu": 1.0}] * 2,
+                                        strategy="STRICT_SPREAD")
+    assert ok
+    binding = cluster.scheduler.placement_binding("pg0")
+    assert len(set(binding.values())) == 2
+    t0 = cluster.submit(_mul, 1, 1, placement_group="pg0", bundle_index=0)
+    t1 = cluster.submit(_mul, 2, 2, placement_group="pg0", bundle_index=1)
+    cluster.wait_all([t0, t1])
+    assert cluster.scheduler.graph.tasks[t0.id].worker == binding[0]
+    assert cluster.scheduler.graph.tasks[t1.id].worker == binding[1]
+
+
+def test_unprivileged_profile_refuses_root(monkeypatch):
+    import os
+    monkeypatch.setattr(os, "geteuid", lambda: 0, raising=False)
+    with pytest.raises(SecurityError, match="root"):
+        UnprivilegedProfile(allow_root=False).enforce()
+
+
+def test_object_put_get_roundtrip(cluster):
+    import numpy as np
+    arr = np.arange(1000, dtype=np.float32)
+    ref = cluster.put(arr)
+    out = cluster.get(ref)
+    assert (out == arr).all()
