@@ -1,0 +1,212 @@
+"""Elastic-autoscaling + scheduler fast-path benchmark.
+
+Two measurements, both on the REAL scheduler code (the simulation backend
+drives the same Scheduler/ObjectStore as the threaded backend):
+
+1. *Placement throughput*: per-decision scheduling rate of the indexed
+   placement fast-path (resource-keyed lazy heaps, ~O(log n)) vs the seed's
+   linear scan (O(n)) at 10..1000 workers. The paper's head-serialization
+   bottleneck makes every microsecond of head-side work count; this is the
+   decision loop itself.
+
+2. *Elasticity scenarios*: bursty, steady, and ramp workloads against an
+   autoscaled SimCluster, reporting time-to-scale, scale-up/-down events,
+   mean utilization, and makespan.
+
+Run:  PYTHONPATH=src python benchmarks/autoscale_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import (AutoscalerConfig, Scheduler, SchedulerConfig,
+                        SimCluster, SimCostModel, TaskSpec, WorkerInfo)
+from repro.core.object_store import GlobalObjectStore
+from repro.core.task_graph import Task, TaskState
+
+# ------------------------------------------------------------------ placement
+
+
+def placement_throughput(n_workers: int, n_tasks: int, mode: str) -> float:
+    """Decisions/second for one full scheduling pass placing n_tasks."""
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(placement_mode=mode,
+                                             enable_speculation=False))
+    cpus = max(1.0, float(-(-n_tasks // n_workers)))   # enough capacity
+    for i in range(n_workers):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": cpus}))
+    # build the ready set directly so timing covers exactly one schedule()
+    for i in range(n_tasks):
+        sched.graph.add(Task(spec=TaskSpec(fn=None, name=f"t{i}")))
+    t0 = time.perf_counter()
+    sched.schedule()
+    elapsed = time.perf_counter() - t0
+    placed = sum(1 for t in sched.graph.tasks.values()
+                 if t.state == TaskState.RUNNING)
+    assert placed == n_tasks, (placed, n_tasks)
+    return n_tasks / elapsed
+
+
+def bench_placement(worker_counts: List[int], n_tasks: int
+                    ) -> List[Tuple[int, float, float]]:
+    rows = []
+    for n in worker_counts:
+        linear = placement_throughput(n, n_tasks, "linear")
+        indexed = placement_throughput(n, n_tasks, "indexed")
+        rows.append((n, linear, indexed))
+    return rows
+
+
+# ------------------------------------------------------------------ scenarios
+
+
+def _mk_sim(n0: int, task_s: float, auto_cfg: AutoscalerConfig,
+            provision_delay_s: float, seed: int = 0) -> SimCluster:
+    cost = SimCostModel(task_time_s=lambda s: task_s,
+                        result_bytes=lambda s: 1000.0, jitter=0.05)
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9), seed=seed)
+    sim.add_workers(n0)
+    sim.attach_autoscaler(auto_cfg, provision_delay_s=provision_delay_s)
+    return sim
+
+
+def _instrument(sim: SimCluster) -> List[Tuple[float, int, int]]:
+    """Sample (t, busy, alive) at every autoscaler tick."""
+    samples: List[Tuple[float, int, int]] = []
+    orig = sim.autoscaler.tick
+
+    def tick(now=None):
+        workers = [w for w in sim.scheduler.workers.values() if w.alive]
+        samples.append((sim.now, sum(1 for w in workers if w.running),
+                        len(workers)))
+        return orig(now)
+
+    sim.autoscaler.tick = tick
+    return samples
+
+
+def _summarize(name: str, sim: SimCluster,
+               samples: List[Tuple[float, int, int]],
+               demand_at: float) -> Dict[str, float]:
+    ups = [e for e in sim.autoscaler.events if e.action == "scale_up"]
+    downs = [e for e in sim.autoscaler.events if e.action == "scale_down"]
+    peak = max((s[2] for s in samples), default=0)
+    t_peak = next((s[0] for s in samples if s[2] == peak), 0.0)
+    busy_sum = sum(s[1] for s in samples)
+    alive_sum = sum(s[2] for s in samples) or 1
+    done = sum(1 for t in sim.scheduler.graph.tasks.values()
+               if t.state == TaskState.FINISHED)
+    return {"name": name, "tasks_done": done,
+            "scale_ups": len(ups), "scale_downs": len(downs),
+            "workers_added": sum(e.count for e in ups),
+            "workers_released": sum(e.count for e in downs),
+            "peak_workers": peak, "final_workers": len(sim.scheduler.workers),
+            "time_to_scale_s": max(0.0, t_peak - demand_at),
+            "mean_utilization": busy_sum / alive_sum,
+            "makespan_s": sim.now}
+
+
+def scenario_bursty(max_workers: int, burst: int) -> Dict[str, float]:
+    """Idle baseline, one large burst, then drain: tests time-to-scale and
+    idle scale-down."""
+    cfg = AutoscalerConfig(min_workers=2, max_workers=max_workers,
+                           queue_depth_per_worker=1.0,
+                           scale_up_cooldown_s=0.2, max_scale_up_step=256,
+                           idle_timeout_s=2.0, scale_down_cooldown_s=1.0,
+                           max_scale_down_step=256)
+    sim = _mk_sim(2, task_s=1.0, auto_cfg=cfg, provision_delay_s=0.5)
+    samples = _instrument(sim)
+    arrivals = [(1.0, TaskSpec(fn=None, group="burst")) for _ in range(burst)]
+    sim.run_scenario(arrivals, tick_every=0.1, drain_s=6.0)
+    return _summarize("bursty", sim, samples, demand_at=1.0)
+
+
+def scenario_steady(max_workers: int, n_tasks: int) -> Dict[str, float]:
+    """Constant arrival rate above the initial capacity: the pool should
+    grow to a steady size and hold a sane utilization."""
+    cfg = AutoscalerConfig(min_workers=4, max_workers=max_workers,
+                           queue_depth_per_worker=2.0,
+                           scale_up_cooldown_s=0.3, max_scale_up_step=16,
+                           idle_timeout_s=3.0, scale_down_cooldown_s=2.0)
+    sim = _mk_sim(4, task_s=0.5, auto_cfg=cfg, provision_delay_s=0.5)
+    samples = _instrument(sim)
+    arrivals = [(0.02 * i, TaskSpec(fn=None, group="steady"))
+                for i in range(n_tasks)]
+    sim.run_scenario(arrivals, tick_every=0.1, drain_s=8.0)
+    return _summarize("steady", sim, samples, demand_at=0.0)
+
+
+def scenario_ramp(max_workers: int, n_tasks: int) -> Dict[str, float]:
+    """Linearly increasing arrival rate: worker count should track demand."""
+    cfg = AutoscalerConfig(min_workers=2, max_workers=max_workers,
+                           queue_depth_per_worker=2.0,
+                           scale_up_cooldown_s=0.3, max_scale_up_step=32,
+                           idle_timeout_s=3.0, scale_down_cooldown_s=2.0)
+    sim = _mk_sim(2, task_s=0.5, auto_cfg=cfg, provision_delay_s=0.5)
+    samples = _instrument(sim)
+    # arrival times t_i = sqrt(i) * c  ->  rate grows linearly with time
+    horizon = 10.0
+    arrivals = [(horizon * (i / n_tasks) ** 0.5,
+                 TaskSpec(fn=None, group="ramp")) for i in range(n_tasks)]
+    sim.run_scenario(arrivals, tick_every=0.1, drain_s=8.0)
+    return _summarize("ramp", sim, samples, demand_at=0.0)
+
+
+# ------------------------------------------------------------------ reporting
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes for CI smoke")
+    args = ap.parse_args()
+
+    if args.quick:
+        worker_counts, n_tasks = [10, 100, 500], 1000
+        shapes = [scenario_bursty(64, 200), scenario_steady(32, 300),
+                  scenario_ramp(64, 300)]
+    else:
+        worker_counts, n_tasks = [10, 100, 500, 1000], 2000
+        shapes = [scenario_bursty(1000, 2000), scenario_steady(64, 1000),
+                  scenario_ramp(256, 1500)]
+
+    print("=== placement throughput (decisions/s, one schedule() pass) ===")
+    print(f"{'workers':>8s}{'linear':>12s}{'indexed':>12s}{'speedup':>9s}")
+    ratio_at_500 = None
+    for n, lin, idx in bench_placement(worker_counts, n_tasks):
+        ratio = idx / lin
+        if n >= 500 and ratio_at_500 is None:
+            ratio_at_500 = ratio
+        print(f"{n:>8d}{lin:>12.0f}{idx:>12.0f}{ratio:>8.1f}x")
+
+    print("\n=== elasticity scenarios (virtual time) ===")
+    cols = ["name", "tasks_done", "scale_ups", "scale_downs",
+            "workers_added", "workers_released", "peak_workers",
+            "final_workers", "time_to_scale_s", "mean_utilization",
+            "makespan_s"]
+    print("".join(f"{c:>17s}" for c in cols))
+    for row in shapes:
+        print("".join(
+            f"{row[c]:>17.2f}" if isinstance(row[c], float)
+            else f"{row[c]:>17}" for c in cols))
+
+    ok = True
+    if ratio_at_500 is not None and ratio_at_500 < 5.0:
+        print(f"\nFAIL: indexed speedup at 500+ workers is "
+              f"{ratio_at_500:.1f}x (< 5x)")
+        ok = False
+    for row in shapes:
+        if row["scale_ups"] == 0 or row["scale_downs"] == 0:
+            print(f"\nFAIL: scenario {row['name']} did not exercise both "
+                  f"scale directions")
+            ok = False
+    print("\nPASS" if ok else "\nFAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

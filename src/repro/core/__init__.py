@@ -4,16 +4,19 @@ Scheduler-inside-a-scheduler: a dynamic, dependency-driven head-worker
 cluster (this package) hosted inside a static gang allocation (Slurm / K8s /
 Cloud-TPU queued resources), with a secure containerized bring-up protocol.
 """
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScalingEvent
 from repro.core.cluster import ContainerSpec, SyndeoCluster
 from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
-from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
+from repro.core.scheduler import (Scheduler, SchedulerConfig, WorkerIndex,
+                                  WorkerInfo)
 from repro.core.security import Capability, SecurityError, UnprivilegedProfile
 from repro.core.simulator import SimCluster, SimCostModel
 from repro.core.task_graph import Task, TaskSpec, TaskState
 
 __all__ = [
+    "Autoscaler", "AutoscalerConfig", "ScalingEvent",
     "ContainerSpec", "SyndeoCluster", "GlobalObjectStore", "NodeStore",
-    "ObjectRef", "Scheduler", "SchedulerConfig", "WorkerInfo", "Capability",
-    "SecurityError", "UnprivilegedProfile", "SimCluster", "SimCostModel",
-    "Task", "TaskSpec", "TaskState",
+    "ObjectRef", "Scheduler", "SchedulerConfig", "WorkerIndex", "WorkerInfo",
+    "Capability", "SecurityError", "UnprivilegedProfile", "SimCluster",
+    "SimCostModel", "Task", "TaskSpec", "TaskState",
 ]

@@ -1,0 +1,211 @@
+"""Elastic autoscaler for the Syndeo runtime.
+
+The paper's deployment model is a *static* gang allocation (Slurm job, K8s
+deployment, TPU queued resources) hosting a *dynamic* scheduler. This module
+closes the elasticity gap: it watches pending-task demand and worker
+utilization on the inner scheduler and asks the backend to grow or shrink
+the outer allocation through the `provision_workers` / `release_workers`
+hooks (`core/backends/base.py`).
+
+Policies (all active at once; the largest scale-up request wins):
+
+  * queue depth   -- backlog of READY-but-unplaced tasks per worker,
+  * target utilization -- keep busy-fraction near `target_utilization`,
+  * gang demand   -- placement groups parked as pending (unsatisfiable)
+                     request enough workers up front (STRICT_SPREAD needs
+                     distinct workers, so bundles = workers).
+
+Scale-down releases only *idle* workers (no running tasks, full resource
+availability, not bound in a placement group) that have been idle longer
+than `idle_timeout_s`, and never below `min_workers`. Both directions have
+independent cooldowns so the cluster doesn't flap.
+
+The autoscaler is time-source agnostic like the scheduler: the threaded
+backend ticks it from the head's health loop with the wall clock, the
+simulation backend ticks it with the virtual clock.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.scheduler import Scheduler
+from repro.core.task_graph import TaskState
+
+
+@dataclass
+class AutoscalerConfig:
+    min_workers: int = 0
+    max_workers: int = 64
+    worker_resources: Dict[str, float] = field(
+        default_factory=lambda: {"cpu": 1.0})
+    # scale-up policy
+    queue_depth_per_worker: float = 2.0   # tolerated READY backlog per worker
+    target_utilization: float = 0.75      # desired busy-worker fraction
+    scale_up_cooldown_s: float = 1.0
+    max_scale_up_step: int = 16           # workers added per decision, max
+    # scale-down policy
+    idle_timeout_s: float = 10.0          # idle this long before eligible
+    scale_down_cooldown_s: float = 30.0
+    max_scale_down_step: int = 8
+
+
+@dataclass
+class ScalingEvent:
+    at: float
+    action: str          # "scale_up" | "scale_down"
+    count: int
+    reason: str
+    workers_before: int
+
+
+class Autoscaler:
+    """Policy engine. `provision_fn(count, resources)` asks the backend for
+    `count` more workers (they join asynchronously; the backend must call
+    `note_joined` for each so in-flight requests aren't double-counted).
+    `release_fn(worker_ids)` retires idle workers."""
+
+    def __init__(self, scheduler: Scheduler,
+                 provision_fn: Callable[[int, Dict[str, float]], int],
+                 release_fn: Callable[[List[str]], None],
+                 config: Optional[AutoscalerConfig] = None,
+                 clock: Callable[[], float] = None):
+        self.scheduler = scheduler
+        self.provision_fn = provision_fn
+        self.release_fn = release_fn
+        self.cfg = config or AutoscalerConfig()
+        self.clock = clock or scheduler.clock
+        self._pending_provision = 0
+        self._last_up = -math.inf
+        self._last_down = -math.inf
+        self._idle_since: Dict[str, float] = {}
+        self.events: List[ScalingEvent] = []
+
+    # -- membership feedback --------------------------------------------------
+
+    def note_joined(self, worker_id: str):
+        self._pending_provision = max(0, self._pending_provision - 1)
+
+    # -- observation ----------------------------------------------------------
+
+    def _backlog(self) -> int:
+        return sum(1 for t in self.scheduler.graph.tasks.values()
+                   if t.state in (TaskState.READY, TaskState.PENDING))
+
+    def _gang_demand(self, n_live: int) -> int:
+        """Workers needed to satisfy the largest parked placement group."""
+        need = 0
+        for bundles, strategy in \
+                self.scheduler.pending_placement_groups().values():
+            if strategy == "STRICT_SPREAD":
+                need = max(need, len(bundles) - n_live)
+            else:
+                per_worker = sum(self.cfg.worker_resources.values()) or 1.0
+                demand = sum(sum(b.values()) for b in bundles)
+                need = max(need, math.ceil(demand / per_worker) - n_live)
+        return max(0, need)
+
+    def desired_delta(self) -> tuple:
+        """(workers wanted beyond the live+in-flight pool, reason)."""
+        workers = [w for w in self.scheduler.workers.values() if w.alive]
+        n_live = len(workers) + self._pending_provision
+        busy = sum(1 for w in workers if w.running)
+        backlog = self._backlog()
+
+        want = 0
+        reason = ""
+        if n_live == 0 and backlog > 0:
+            # bootstrap: no pool at all, but work is queued
+            want = max(1, math.ceil(backlog / self.cfg.queue_depth_per_worker))
+            reason = f"bootstrap: {backlog} tasks, no workers"
+        elif backlog > self.cfg.queue_depth_per_worker * max(n_live, 1):
+            want = math.ceil(backlog / self.cfg.queue_depth_per_worker) - n_live
+            reason = f"queue depth {backlog} over {n_live} workers"
+        # utilization amplifies only when demand is actually queued --
+        # otherwise a fully-busy pool with nothing waiting would provision
+        # workers that sit idle until scale-down retires them (flapping)
+        if workers and backlog > 0 \
+                and busy / len(workers) > self.cfg.target_utilization:
+            util_want = math.ceil(busy / self.cfg.target_utilization) - n_live
+            if util_want > want:
+                want, reason = util_want, \
+                    f"utilization {busy}/{len(workers)} over target"
+        gang = self._gang_demand(n_live)
+        if gang > want:
+            want, reason = gang, "pending placement group"
+        return want, reason
+
+    # -- the control loop body -------------------------------------------------
+
+    def tick(self, now: Optional[float] = None) -> Optional[ScalingEvent]:
+        now = self.clock() if now is None else now
+        ev = self._maybe_scale_up(now)
+        if ev is None:
+            ev = self._maybe_scale_down(now)
+        return ev
+
+    def _maybe_scale_up(self, now: float) -> Optional[ScalingEvent]:
+        want, reason = self.desired_delta()
+        if want <= 0 or now - self._last_up < self.cfg.scale_up_cooldown_s:
+            return None
+        n_live = sum(1 for w in self.scheduler.workers.values() if w.alive) \
+            + self._pending_provision
+        count = min(want, self.cfg.max_scale_up_step,
+                    self.cfg.max_workers - n_live)
+        if count <= 0:
+            return None
+        # count the request as in-flight *before* calling the backend: a
+        # synchronous backend (threaded local) invokes note_joined from
+        # inside provision_fn, and that decrement must see the increment
+        self._pending_provision += count
+        granted = self.provision_fn(count, dict(self.cfg.worker_resources))
+        shortfall = count - granted
+        if shortfall:
+            self._pending_provision = max(0,
+                                          self._pending_provision - shortfall)
+        if not granted:
+            return None
+        self._last_up = now
+        ev = ScalingEvent(now, "scale_up", granted, reason, n_live)
+        self.events.append(ev)
+        return ev
+
+    def _maybe_scale_down(self, now: float) -> Optional[ScalingEvent]:
+        workers = {wid: w for wid, w in self.scheduler.workers.items()
+                   if w.alive}
+        # refresh idle tracking
+        for wid, w in workers.items():
+            if w.idle:
+                self._idle_since.setdefault(wid, now)
+            else:
+                self._idle_since.pop(wid, None)
+        for wid in list(self._idle_since):
+            if wid not in workers:
+                del self._idle_since[wid]
+
+        if self._backlog() > 0:
+            return None
+        if now - self._last_down < self.cfg.scale_down_cooldown_s:
+            return None
+        n_live = len(workers) + self._pending_provision
+        headroom = n_live - self.cfg.min_workers
+        if headroom <= 0:
+            return None
+        ripe = sorted(
+            (wid for wid, since in self._idle_since.items()
+             if now - since >= self.cfg.idle_timeout_s),
+            key=lambda wid: self._idle_since[wid])
+        victims = ripe[:min(headroom, self.cfg.max_scale_down_step)]
+        released = [wid for wid in victims
+                    if self.scheduler.retire_worker(wid)]
+        if not released:
+            return None
+        for wid in released:
+            self._idle_since.pop(wid, None)
+        self.release_fn(released)
+        self._last_down = now
+        ev = ScalingEvent(now, "scale_down", len(released),
+                          f"idle > {self.cfg.idle_timeout_s}s", n_live)
+        self.events.append(ev)
+        return ev

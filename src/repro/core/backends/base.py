@@ -27,6 +27,7 @@ class AllocationRequest:
 
 class Backend(abc.ABC):
     name: str = "base"
+    supports_elastic: bool = False   # provision/release hooks implemented
 
     def __init__(self, container: ContainerSpec):
         self.container = container
@@ -35,3 +36,22 @@ class Backend(abc.ABC):
     def render_artifacts(self, req: AllocationRequest,
                          cluster_id: str) -> Dict[str, str]:
         """filename -> contents for everything this backend needs."""
+
+    # -- elasticity hooks (driven by core/autoscaler.py) ----------------------
+    #
+    # Render-only backends (Slurm / K8s / GCP-TPU) *render* the scale
+    # operation -- the artifacts that grow or shrink the outer allocation --
+    # because no real cluster is attached in this container. The in-process
+    # local/sim backends actually add/remove workers.
+
+    def provision_workers(self, req: AllocationRequest, cluster_id: str,
+                          count: int) -> Dict[str, str]:
+        """Grow the allocation by `count` workers that join the existing
+        rendezvous. Returns filename -> contents of the scale-up artifacts
+        (empty for in-process backends, which join workers directly)."""
+        raise NotImplementedError(f"{self.name} backend is not elastic")
+
+    def release_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str]) -> Dict[str, str]:
+        """Shrink the allocation by retiring the named (idle) workers."""
+        raise NotImplementedError(f"{self.name} backend is not elastic")

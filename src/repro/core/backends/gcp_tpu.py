@@ -7,13 +7,14 @@ the Syndeo runtime, and within a training job XLA owns the chips (three
 nested schedulers -- see DESIGN.md)."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List
 
 from repro.core.backends.base import AllocationRequest, Backend
 
 
 class GcpTpuBackend(Backend):
     name = "gcp_tpu"
+    supports_elastic = True
 
     def render_artifacts(self, req: AllocationRequest,
                          cluster_id: str) -> Dict[str, str]:
@@ -52,3 +53,49 @@ wait
 """
         return {f"allocate_{cluster_id}.sh": create,
                 f"launch_{cluster_id}.sh": launch}
+
+    # -- elasticity: add/delete queued-resource pod slices ---------------------
+
+    def provision_workers(self, req: AllocationRequest, cluster_id: str,
+                          count: int) -> Dict[str, str]:
+        image = self.container.image.replace('.sif', ':latest')
+        script = f"""\
+#!/bin/bash
+set -euo pipefail
+# elastic scale-up: allocate {count} more pod slices; each joins the live
+# head as a worker via the GCS rendezvous (no head restart).
+BASE=$(gcloud compute tpus queued-resources list \\
+        --filter="name~syndeo-{cluster_id}" --format="value(name)" | wc -l)
+for I in $(seq 0 {count - 1}); do
+  POD=$((BASE + I))
+  gcloud compute tpus queued-resources create syndeo-{cluster_id}-$POD \\
+    --node-id syndeo-{cluster_id}-$POD \\
+    --accelerator-type v5litepod-256 \\
+    --runtime-version v2-alpha-tpuv5-lite \\
+    --zone us-central1-a
+  gcloud compute tpus tpu-vm ssh syndeo-{cluster_id}-$POD --worker=all \\
+    --zone us-central1-a --command "
+      docker run --privileged=false --net=host --user 1000:1000 \\
+        {image} \\
+        python -m repro.core.worker --role worker \\
+          --rendezvous gs://syndeo-rdv/{cluster_id} --cluster-id {cluster_id}
+    " &
+done
+wait
+"""
+        return {f"scale_up_{cluster_id}_{count}.sh": script}
+
+    def release_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str]) -> Dict[str, str]:
+        deletes = "\n".join(
+            f"gcloud compute tpus queued-resources delete {wid} "
+            f"--zone us-central1-a --force --quiet || true"
+            for wid in worker_ids)
+        script = f"""\
+#!/bin/bash
+set -euo pipefail
+# elastic scale-down: release the idle pod slices back to the outer
+# scheduler (queued-resource manager).
+{deletes}
+"""
+        return {f"scale_down_{cluster_id}.sh": script}

@@ -6,13 +6,14 @@ rendezvous is a ConfigMap-backed shared mount -- same write-then-poll
 protocol as the Slurm shared filesystem."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List
 
 from repro.core.backends.base import AllocationRequest, Backend
 
 
 class KubernetesBackend(Backend):
     name = "kubernetes"
+    supports_elastic = True
 
     def render_artifacts(self, req: AllocationRequest,
                          cluster_id: str) -> Dict[str, str]:
@@ -84,3 +85,40 @@ spec:
         persistentVolumeClaim: {{claimName: syndeo-shared}}
 """
         return {f"syndeo_{cluster_id}.yaml": manifest}
+
+    # -- elasticity: resize the worker Deployment ------------------------------
+
+    def provision_workers(self, req: AllocationRequest, cluster_id: str,
+                          count: int) -> Dict[str, str]:
+        deploy = f"syndeo-workers-{cluster_id}"
+        script = f"""\
+#!/bin/bash
+set -euo pipefail
+# elastic scale-up: grow the worker Deployment by {count} replicas; new pods
+# join the live head through the shared rendezvous volume.
+CUR=$(kubectl get deployment {deploy} -o jsonpath='{{.spec.replicas}}')
+kubectl scale deployment {deploy} --replicas=$((CUR + {count}))
+"""
+        return {f"scale_up_{cluster_id}_{count}.sh": script}
+
+    def release_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str]) -> Dict[str, str]:
+        deploy = f"syndeo-workers-{cluster_id}"
+        # worker id == pod hostname == pod name in this backend (the worker
+        # process registers under its hostname)
+        annotates = "\n".join(
+            f"kubectl annotate pod {wid} "
+            f"controller.kubernetes.io/pod-deletion-cost=-999 "
+            f"--overwrite || true"
+            for wid in worker_ids)
+        script = f"""\
+#!/bin/bash
+set -euo pipefail
+# elastic scale-down: mark the retired (idle-by-policy) pods as the
+# cheapest to delete, then shrink the Deployment -- the ReplicaSet
+# controller removes exactly those pods instead of arbitrary busy ones.
+{annotates}
+CUR=$(kubectl get deployment {deploy} -o jsonpath='{{.spec.replicas}}')
+kubectl scale deployment {deploy} --replicas=$((CUR - {len(worker_ids)}))
+"""
+        return {f"scale_down_{cluster_id}.sh": script}

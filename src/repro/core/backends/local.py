@@ -1,0 +1,77 @@
+"""In-process backends: the threaded `LocalBackend` (SyndeoCluster) and the
+virtual-clock `SimBackend` (SimCluster) implement the elasticity hooks by
+actually joining/retiring workers -- they *are* the cluster, so there are no
+deployment artifacts to render beyond a manifest line.
+
+These close the loop for the autoscaler: the same
+`provision_workers`/`release_workers` interface that renders sbatch/kubectl/
+gcloud artifacts for real resource managers executes directly here, which is
+what the autoscaler tests and `benchmarks/autoscale_bench.py` drive.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.backends.base import AllocationRequest, Backend
+from repro.core.cluster import ContainerSpec
+
+
+class LocalBackend(Backend):
+    """Threaded in-process workers (one python process == one container)."""
+
+    name = "local"
+    supports_elastic = True
+
+    def __init__(self, container: ContainerSpec, cluster):
+        super().__init__(container)
+        self.cluster = cluster     # SyndeoCluster
+
+    def render_artifacts(self, req: AllocationRequest,
+                         cluster_id: str) -> Dict[str, str]:
+        return {f"local_{cluster_id}.txt":
+                f"in-process threaded cluster: nodes={req.nodes} "
+                f"cpus_per_node={req.cpus_per_node}\n"}
+
+    def provision_workers(self, req: AllocationRequest, cluster_id: str,
+                          count: int) -> Dict[str, str]:
+        for _ in range(count):
+            self.cluster.add_worker(
+                resources={"cpu": float(req.cpus_per_node)})
+        return {}
+
+    def release_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str]) -> Dict[str, str]:
+        for wid in worker_ids:
+            self.cluster.remove_worker(wid)
+        return {}
+
+
+class SimBackend(Backend):
+    """Discrete-event workers joining after a provisioning delay."""
+
+    name = "sim"
+    supports_elastic = True
+
+    def __init__(self, container: ContainerSpec, sim,
+                 provision_delay_s: float = 1.0):
+        super().__init__(container)
+        self.sim = sim             # SimCluster
+        self.provision_delay_s = provision_delay_s
+
+    def render_artifacts(self, req: AllocationRequest,
+                         cluster_id: str) -> Dict[str, str]:
+        return {f"sim_{cluster_id}.txt":
+                f"virtual-clock cluster: nodes={req.nodes} "
+                f"provision_delay_s={self.provision_delay_s}\n"}
+
+    def provision_workers(self, req: AllocationRequest, cluster_id: str,
+                          count: int) -> Dict[str, str]:
+        self.sim.provision_workers(count,
+                                   cpus_per_worker=float(req.cpus_per_node),
+                                   delay_s=self.provision_delay_s)
+        return {}
+
+    def release_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str]) -> Dict[str, str]:
+        self.sim.release_workers(worker_ids)
+        return {}

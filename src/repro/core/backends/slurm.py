@@ -6,7 +6,7 @@ node 0 starts the containerized head and writes IP:port to the shared
 filesystem; every other node polls that file and joins as a worker."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List
 
 from repro.core.backends.base import AllocationRequest, Backend
 from repro.core.containers import apptainer_definition, apptainer_run_command
@@ -14,6 +14,7 @@ from repro.core.containers import apptainer_definition, apptainer_run_command
 
 class SlurmBackend(Backend):
     name = "slurm"
+    supports_elastic = True
 
     def render_artifacts(self, req: AllocationRequest,
                          cluster_id: str) -> Dict[str, str]:
@@ -67,3 +68,46 @@ wait
             f"submit_{cluster_id}.sbatch": sbatch,
             f"srun_steps_{cluster_id}.sh": srun_variant,
         }
+
+    # -- elasticity: a worker-only sbatch joins the live rendezvous ------------
+
+    def provision_workers(self, req: AllocationRequest, cluster_id: str,
+                          count: int) -> Dict[str, str]:
+        worker_cmd = apptainer_run_command(self.container, role="worker",
+                                           rendezvous_dir=req.shared_dir,
+                                           cluster_id=cluster_id)
+        scale_up = f"""\
+#!/bin/bash
+#SBATCH --job-name=syndeo-{cluster_id}-scaleup
+#SBATCH --nodes={count}
+#SBATCH --ntasks-per-node=1
+#SBATCH --cpus-per-task={req.cpus_per_node}
+#SBATCH --time={req.walltime}
+#SBATCH --partition={req.partition}
+#SBATCH --output={req.shared_dir}/logs/%j_%n.out
+
+set -euo pipefail
+# elastic scale-up: every node of this job joins the *existing* head via
+# the shared-FS rendezvous (bring-up phase 3 only -- the head stays put).
+{worker_cmd} &
+wait
+"""
+        return {f"scale_up_{cluster_id}_{count}.sbatch": scale_up}
+
+    def release_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str]) -> Dict[str, str]:
+        drains = "\n".join(
+            f"scontrol update NodeName={wid} State=DRAIN "
+            f'Reason="syndeo-{cluster_id} idle scale-down"'
+            for wid in worker_ids)
+        nodelist = ",".join(worker_ids)
+        scale_down = f"""\
+#!/bin/bash
+set -euo pipefail
+# elastic scale-down: drain the retired nodes, then cancel only the
+# scale-up jobs running *on those nodes* (workers there are idle by
+# policy; scale-up batches on other nodes keep running).
+{drains}
+scancel --name=syndeo-{cluster_id}-scaleup --nodelist={nodelist} || true
+"""
+        return {f"scale_down_{cluster_id}.sh": scale_down}

@@ -63,6 +63,8 @@ class SyndeoCluster:
         self._queues: Dict[str, "queue.Queue"] = {}
         self._threads: Dict[str, threading.Thread] = {}
         self._futures: Dict[str, threading.Event] = {}
+        self._worker_seq = 0          # monotonic: retired ids never reused
+        self.autoscaler = None        # set by attach_autoscaler
         self._stop = threading.Event()
         self.scheduler = Scheduler(self.store, self._launch, self._cancel,
                                    scheduler_config)
@@ -82,7 +84,10 @@ class SyndeoCluster:
         hello = seal(ep.token, {"op": "join", "worker": worker_id or "?"})
         open_sealed(self.token, hello)  # head verifies the HMAC handshake
 
-        wid = worker_id or f"w{len(self._queues)}"
+        if worker_id is None:
+            worker_id = f"w{self._worker_seq}"
+        self._worker_seq += 1
+        wid = worker_id
         store = NodeStore(wid, capacity_bytes=256 << 20,
                           spill_dir=self.profile.scratch_dir(self.cluster_id))
         self.store.register_node(store)
@@ -104,6 +109,33 @@ class SyndeoCluster:
         q = self._queues.pop(worker_id, None)
         if q is not None:
             q.put(None)
+
+    # -- elasticity (paper gap: the gang allocation can now grow/shrink) -------
+
+    def attach_autoscaler(self, config=None):
+        """Attach an elastic autoscaler driven by the head's health loop.
+        New workers join as local threads; idle workers are retired
+        gracefully (their threads drain on the queue sentinel)."""
+        from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+        cfg = config or AutoscalerConfig()
+
+        def provision(count: int, resources: Dict[str, float]) -> int:
+            for _ in range(count):
+                wid = self.add_worker(resources=dict(resources))
+                self.autoscaler.note_joined(wid)
+            return count
+
+        def release(worker_ids: List[str]):
+            # scheduler-side retirement already happened (retire_worker);
+            # stop the threads and drop the queues
+            for wid in worker_ids:
+                q = self._queues.pop(wid, None)
+                if q is not None:
+                    q.put(None)
+                self._threads.pop(wid, None)
+
+        self.autoscaler = Autoscaler(self.scheduler, provision, release, cfg)
+        return self.autoscaler
 
     # -- phase 4: run ------------------------------------------------------------
 
@@ -211,6 +243,8 @@ class SyndeoCluster:
         with self._lock:
             self.scheduler.check_liveness()
             self.scheduler.check_stragglers()
+            if self.autoscaler is not None:
+                self.autoscaler.tick()
 
     def shutdown(self):
         self._stop.set()

@@ -15,6 +15,7 @@ Features:
 """
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -36,6 +37,15 @@ class WorkerInfo:
         if not self.available:
             self.available = dict(self.resources)
 
+    @property
+    def load(self) -> float:
+        return sum(self.resources.values()) - sum(self.available.values())
+
+    @property
+    def idle(self) -> bool:
+        return not self.running and all(
+            self.available.get(k, 0.0) >= v for k, v in self.resources.items())
+
     def fits(self, req: Dict[str, float]) -> bool:
         return all(self.available.get(k, 0.0) >= v for k, v in req.items())
 
@@ -55,6 +65,96 @@ class SchedulerConfig:
     heartbeat_timeout: float = 10.0
     locality_weight: float = 1.0         # bytes-on-node score weight
     enable_speculation: bool = True
+    placement_mode: str = "indexed"      # "indexed" (heap) or "linear" (scan)
+
+
+class WorkerIndex:
+    """Resource-feasibility index: one lazy min-heap per resource key,
+    ordered by (load, registration seq), so placement is ~O(log n) in the
+    worker count instead of a per-task linear scan.
+
+    Entries are invalidated lazily: every load change pushes a fresh entry
+    and stale ones are discarded at pop time (an entry is valid iff its load
+    matches the worker's current load). The (load, seq) ordering reproduces
+    the linear scan's selection exactly: least-loaded feasible worker,
+    first-registered wins ties.
+    """
+
+    _COMPACT_FACTOR = 4  # rebuild a heap once stale entries dominate
+
+    def __init__(self):
+        self._heaps: Dict[str, List[Tuple[float, int, str]]] = {}
+        self._members: Dict[str, set] = {}       # resource key -> worker ids
+        self._workers: Dict[str, WorkerInfo] = {}
+        self._seq: Dict[str, int] = {}
+        self._next_seq = 0
+
+    def __len__(self) -> int:
+        return len(self._workers)
+
+    def _keys_of(self, w: WorkerInfo) -> List[str]:
+        return list(w.resources.keys()) + [""]   # "" = the all-workers heap
+
+    def add(self, w: WorkerInfo):
+        self._workers[w.id] = w
+        self._seq[w.id] = self._next_seq
+        self._next_seq += 1
+        for k in self._keys_of(w):
+            self._members.setdefault(k, set()).add(w.id)
+        self.touch(w)
+
+    def remove(self, worker_id: str):
+        w = self._workers.pop(worker_id, None)
+        if w is None:
+            return
+        self._seq.pop(worker_id, None)
+        for k in self._keys_of(w):
+            self._members.get(k, set()).discard(worker_id)
+
+    def touch(self, w: WorkerInfo):
+        """Re-index after a load change (acquire/release)."""
+        if w.id not in self._workers:
+            return
+        entry = (w.load, self._seq[w.id], w.id)
+        for k in self._keys_of(w):
+            heap = self._heaps.setdefault(k, [])
+            heapq.heappush(heap, entry)
+            if len(heap) > self._COMPACT_FACTOR * max(len(self._members[k]), 1):
+                self._compact(k)
+
+    def _compact(self, key: str):
+        fresh = [(w.load, self._seq[wid], wid)
+                 for wid in self._members.get(key, ())
+                 if (w := self._workers.get(wid)) is not None and w.alive]
+        heapq.heapify(fresh)
+        self._heaps[key] = fresh
+
+    def pick(self, req: Dict[str, float]) -> Optional[WorkerInfo]:
+        """Least-loaded alive worker that fits `req` (ties: registration
+        order). Returns None when nothing fits."""
+        needed = [k for k, v in req.items() if v > 0]
+        for k in needed:
+            if not self._members.get(k):
+                return None                  # required resource nowhere present
+        key = min(needed, key=lambda k: len(self._members[k])) if needed else ""
+        heap = self._heaps.get(key, [])
+        popped: List[Tuple[float, int, str]] = []
+        seen: set = set()
+        best: Optional[WorkerInfo] = None
+        while heap:
+            load, seq, wid = heapq.heappop(heap)
+            w = self._workers.get(wid)
+            if (w is None or not w.alive or wid in seen
+                    or abs(w.load - load) > 1e-12):
+                continue                     # stale or duplicate entry
+            seen.add(wid)
+            popped.append((load, seq, wid))
+            if w.fits(req):
+                best = w
+                break
+        for e in popped:                     # keep valid entries indexed
+            heapq.heappush(heap, e)
+        return best
 
 
 class Scheduler:
@@ -73,8 +173,10 @@ class Scheduler:
         self.cancel_fn = cancel_fn or (lambda t, w: None)
         self.cfg = config
         self.clock = clock
+        self.index = WorkerIndex()
         self._group_runtimes: Dict[str, List[float]] = {}
         self._placement_bindings: Dict[str, Dict[int, str]] = {}
+        self._pending_groups: Dict[str, Tuple[List[Dict[str, float]], str]] = {}
         self.stats = {"launched": 0, "finished": 0, "failed": 0, "retried": 0,
                       "speculative": 0, "reconstructed": 0, "cancelled": 0}
 
@@ -83,10 +185,29 @@ class Scheduler:
     def add_worker(self, worker: WorkerInfo):
         worker.last_heartbeat = self.clock()
         self.workers[worker.id] = worker
+        self.index.add(worker)
+        self._retry_pending_groups()
         self.schedule()
 
     def remove_worker(self, worker_id: str):
         self.on_worker_failed(worker_id, reason="removed")
+
+    def retire_worker(self, worker_id: str) -> bool:
+        """Graceful scale-down: remove an *idle* worker without the failure
+        path (no task requeue, no lineage churn for running work). Returns
+        False if the worker is busy or bound to a placement group."""
+        w = self.workers.get(worker_id)
+        if w is None or w.running:
+            return False
+        if any(worker_id in binding.values()
+               for binding in self._placement_bindings.values()):
+            return False
+        w.alive = False
+        for oid in self.store.unregister_node(worker_id):
+            self.graph.object_lost(oid)
+        self.index.remove(worker_id)
+        del self.workers[worker_id]
+        return True
 
     def heartbeat(self, worker_id: str):
         w = self.workers.get(worker_id)
@@ -129,21 +250,61 @@ class Scheduler:
             if wid is not None:
                 w = self.workers.get(wid)
                 return w if (w and w.alive and w.fits(req)) else None
+        if self.cfg.placement_mode == "linear":
+            return self._pick_worker_linear(task)
+        return self._pick_worker_indexed(task)
+
+    def _pick_worker_linear(self, task: Task) -> Optional[WorkerInfo]:
+        """Reference O(n) scan (the seed implementation); kept as the oracle
+        for the indexed fast-path and for the benchmark baseline."""
+        req = task.spec.resources
         best, best_key = None, None
         for w in self.workers.values():
             if not w.alive or not w.fits(req):
                 continue
-            load = sum(w.resources.values()) - sum(w.available.values())
-            key = (self._locality_score(task, w), -load)
+            key = (self._locality_score(task, w), -w.load)
             if best_key is None or key > best_key:
                 best, best_key = w, key
         return best
 
+    def _pick_worker_indexed(self, task: Task) -> Optional[WorkerInfo]:
+        """~O(log n) placement: workers holding the task's deps are scored
+        directly (positive locality always beats zero locality), otherwise
+        the least-loaded feasible worker comes off the resource-keyed heap."""
+        req = task.spec.resources
+        if task.deps and self.cfg.locality_weight > 0:
+            best, best_key = None, None
+            holders = {wid for d in task.deps for wid in self.store.locations(d)}
+            for wid in holders:
+                w = self.workers.get(wid)
+                if w is None or not w.alive or not w.fits(req):
+                    continue
+                score = self._locality_score(task, w)
+                if score <= 0:
+                    continue
+                key = (score, -w.load, -self.index._seq.get(wid, 0))
+                if best_key is None or key > best_key:
+                    best, best_key = w, key
+            if best is not None:
+                return best
+        return self.index.pick(req)
+
     def schedule(self):
+        # per-pass feasibility memo: availability only shrinks within a pass,
+        # so a resource signature that failed once cannot place later in it
+        # (placement-group tasks are exempt -- their binding is per-bundle)
+        infeasible: set = set()
         for task in sorted(self.graph.ready_tasks(),
                            key=lambda t: t.submitted_at):
+            sig = None
+            if not task.spec.placement_group:
+                sig = tuple(sorted(task.spec.resources.items()))
+                if sig in infeasible:
+                    continue
             w = self._pick_worker(task)
             if w is None:
+                if sig is not None:
+                    infeasible.add(sig)
                 continue
             task.state = TaskState.RUNNING
             task.worker = w.id
@@ -151,6 +312,7 @@ class Scheduler:
             task.attempts += 1
             w.acquire(task.spec.resources)
             w.running.add(task.id)
+            self.index.touch(w)
             self.stats["launched"] += 1
             self.launch_fn(task, w.id)
 
@@ -203,6 +365,7 @@ class Scheduler:
         if w and task.id in w.running:
             w.running.discard(task.id)
             w.release(task.spec.resources)
+            self.index.touch(w)
 
     # -- failure handling --------------------------------------------------------
 
@@ -225,6 +388,7 @@ class Scheduler:
             else:
                 task.state = TaskState.FAILED
                 task.error = f"worker {worker_id} {reason}"
+        self.index.remove(worker_id)
         del self.workers[worker_id]
         self.schedule()
 
@@ -302,3 +466,24 @@ class Scheduler:
 
     def placement_binding(self, name: str) -> Dict[int, str]:
         return dict(self._placement_bindings.get(name, {}))
+
+    def request_placement_group(self, name: str,
+                                bundles: List[Dict[str, float]],
+                                strategy: str = "SPREAD") -> bool:
+        """Like create_placement_group, but an unsatisfiable gang is parked
+        as *pending demand* (visible to the autoscaler) and retried whenever
+        a worker joins, instead of being dropped on the floor."""
+        if self.create_placement_group(name, bundles, strategy):
+            self._pending_groups.pop(name, None)
+            return True
+        self._pending_groups[name] = (list(bundles), strategy)
+        return False
+
+    def pending_placement_groups(self) -> Dict[str, Tuple[List[Dict[str, float]], str]]:
+        return dict(self._pending_groups)
+
+    def _retry_pending_groups(self):
+        for name in list(self._pending_groups):
+            bundles, strategy = self._pending_groups[name]
+            if self.create_placement_group(name, bundles, strategy):
+                del self._pending_groups[name]

@@ -20,6 +20,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
 from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
 from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
 from repro.core.task_graph import Task, TaskSpec, TaskState
@@ -53,7 +54,9 @@ class SimCluster:
         self._head_link_free = 0.0   # serialized head NIC
         self._head_dispatch_free = 0.0
         self._worker_speed: Dict[str, float] = {}
+        self._next_worker = 0        # monotonic: retired ids never reused
         self._dead: set = set()
+        self.autoscaler: Optional[Autoscaler] = None
         self.completed: List[Task] = []
 
     # -- event loop -------------------------------------------------------------
@@ -74,15 +77,50 @@ class SimCluster:
     # -- membership ----------------------------------------------------------------
 
     def add_workers(self, n: int, cpus_per_worker: float = 1.0,
-                    speed: float = 1.0, prefix: str = "w"):
+                    speed: float = 1.0, prefix: str = "w") -> List[str]:
+        ids = []
         for i in range(n):
-            wid = f"{prefix}{len(self._worker_speed)}"
+            wid = f"{prefix}{self._next_worker}"
+            self._next_worker += 1
             self.store.register_node(NodeStore(wid, capacity_bytes=1 << 30))
             self._worker_speed[wid] = speed
             self.scheduler.add_worker(WorkerInfo(wid, {"cpu": cpus_per_worker}))
+            ids.append(wid)
+        return ids
 
     def set_worker_speed(self, worker_id: str, speed: float):
         self._worker_speed[worker_id] = speed
+
+    # -- elasticity (driven by the autoscaler / SimBackend) ----------------------
+
+    def provision_workers(self, n: int, cpus_per_worker: float = 1.0,
+                          delay_s: float = 1.0):
+        """Provision `n` workers that join after `delay_s` of virtual time
+        (the outer resource manager's allocation latency)."""
+        def join():
+            for wid in self.add_workers(n, cpus_per_worker=cpus_per_worker):
+                if self.autoscaler is not None:
+                    self.autoscaler.note_joined(wid)
+        self._post(delay_s, join)
+
+    def release_workers(self, worker_ids: List[str]):
+        for wid in worker_ids:
+            self._worker_speed.pop(wid, None)
+
+    def attach_autoscaler(self, config: Optional[AutoscalerConfig] = None,
+                          provision_delay_s: float = 1.0) -> Autoscaler:
+        cfg = config or AutoscalerConfig()
+
+        def provision(count: int, resources: Dict[str, float]) -> int:
+            self.provision_workers(count,
+                                   cpus_per_worker=resources.get("cpu", 1.0),
+                                   delay_s=provision_delay_s)
+            return count
+
+        self.autoscaler = Autoscaler(self.scheduler, provision,
+                                     self.release_workers, cfg,
+                                     clock=lambda: self.now)
+        return self.autoscaler
 
     def fail_worker_at(self, worker_id: str, t: float):
         def fail():
@@ -150,6 +188,8 @@ class SimCluster:
             if not in_flight():
                 return
             self.scheduler.check_stragglers()
+            if self.autoscaler is not None:
+                self.autoscaler.tick(self.now)
             self._post(monitor_every, monitor)
 
         self._post(monitor_every, monitor)
@@ -164,3 +204,41 @@ class SimCluster:
             if guard > 10000:
                 raise RuntimeError("simulation did not converge")
         return self.now - t0
+
+    def run_scenario(self, arrivals: List[Tuple[float, TaskSpec]],
+                     tick_every: float = 0.1,
+                     drain_s: float = 0.0) -> List[str]:
+        """Timed-arrival driver for elastic workloads: submit each spec at
+        its virtual arrival time, tick stragglers + autoscaler periodically,
+        and run until every arrived task is terminal plus `drain_s` of idle
+        tail (so idle scale-down gets a chance to fire). Returns task ids."""
+        ids: List[str] = []
+        for t, spec in arrivals:
+            self._post(max(0.0, t - self.now),
+                       lambda s=spec: ids.append(self.submit(s).id))
+        last_arrival = max((t for t, _ in arrivals), default=self.now)
+        done_since: List[Optional[float]] = [None]
+        terminal = {TaskState.FINISHED, TaskState.FAILED, TaskState.CANCELLED}
+
+        def settled() -> bool:
+            if self.now < last_arrival or len(ids) < len(arrivals):
+                return False
+            return {self.scheduler.graph.tasks[i].state
+                    for i in ids} <= terminal
+
+        def monitor():
+            self.scheduler.check_stragglers()
+            if self.autoscaler is not None:
+                self.autoscaler.tick(self.now)
+            if settled():
+                if done_since[0] is None:
+                    done_since[0] = self.now
+                if self.now - done_since[0] >= drain_s:
+                    return               # stop re-posting: loop drains out
+            else:
+                done_since[0] = None
+            self._post(tick_every, monitor)
+
+        self._post(tick_every, monitor)
+        self.run()
+        return ids

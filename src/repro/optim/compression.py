@@ -41,7 +41,9 @@ def compressed_psum_mean(g: jax.Array, err: jax.Array, axis_name: str
     (mean gradient, new error-feedback residual). g is flattened internally;
     the axis size must divide g.size (pad upstream if needed).
     """
-    n = jax.lax.axis_size(axis_name)
+    # psum of a concrete 1 constant-folds to the axis size as a python int
+    # (jax.lax.axis_size was removed from the public API)
+    n = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     flat = (g.astype(F32) + err.astype(F32)).reshape(-1)
     assert flat.size % n == 0, (flat.size, n)

@@ -72,7 +72,12 @@ def _guard_divisibility(mesh: Mesh, shape, pspec: P) -> P:
             if dim % (total * sizes[a]) == 0:
                 kept.append(a)
                 total *= sizes[a]
-        out.append(tuple(kept) if kept else None)
+        if not kept:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            out.append(tuple(kept))
+        else:
+            out.append(kept[0])   # bare axis stays bare: P('x') != P(('x',))
     return P(*out)
 
 

@@ -1,0 +1,83 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The real library is declared in requirements-dev.txt and is preferred; this
+shim only provides the surface the suite actually uses (`@settings`,
+`@given`, `st.integers`, `st.lists`, `st.sampled_from`) so collection never
+hard-errors on a bare container. Examples are drawn from an RNG seeded per
+test function, so runs are reproducible. There is no shrinking and no
+example database -- a failing example is reported as a plain assertion.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+HAVE_HYPOTHESIS = False
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for i in range(n):
+                example = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as e:  # noqa: BLE001 -- re-raise with context
+                    raise AssertionError(
+                        f"falsifying example #{i}: "
+                        f"{fn.__name__}{example!r}") from e
+        # hide the strategy-bound (rightmost) params from pytest, which
+        # would otherwise look for fixtures with those names
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[:len(params) - len(strats)]
+        wrapper.__signature__ = inspect.Signature(kept)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,0 +1,398 @@
+"""Autoscaler policy + scheduler fast-path tests.
+
+Covers: scale-up on queue depth, gang scale-up for STRICT_SPREAD placement
+groups, idle scale-down with cooldown, the indexed-placement == linear-scan
+equivalence property, the backend provision/release hooks (render-only and
+in-process), and an end-to-end elastic run on both the virtual-clock and
+threaded backends."""
+import random
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover -- bare container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import (Autoscaler, AutoscalerConfig, ContainerSpec,
+                        Scheduler, SchedulerConfig, SimCluster, SimCostModel,
+                        SyndeoCluster, TaskSpec, TaskState, WorkerInfo)
+from repro.core.backends.base import AllocationRequest, Backend
+from repro.core.backends.gcp_tpu import GcpTpuBackend
+from repro.core.backends.kubernetes import KubernetesBackend
+from repro.core.backends.local import LocalBackend, SimBackend
+from repro.core.backends.slurm import SlurmBackend
+from repro.core.object_store import GlobalObjectStore, NodeStore
+from repro.core.task_graph import Task
+
+
+def _mk_scheduler(mode="indexed", clock=None):
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(placement_mode=mode,
+                                             enable_speculation=False),
+                      clock=clock or time.monotonic)
+    return store, sched
+
+
+# ------------------------------------------------------------ policy: scale-up
+
+def test_scale_up_on_queue_depth():
+    _, sched = _mk_scheduler()
+    for i in range(2):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    requests = []
+    auto = Autoscaler(sched, lambda n, res: requests.append(n) or n,
+                      lambda wids: None,
+                      AutoscalerConfig(max_workers=16,
+                                       queue_depth_per_worker=2.0,
+                                       scale_up_cooldown_s=0.0))
+    for i in range(12):   # 2 run, 10 queue -> backlog 10 > 2 * 2
+        sched.submit(TaskSpec(fn=None))
+    ev = auto.tick()
+    assert ev is not None and ev.action == "scale_up"
+    assert requests and requests[0] >= 1
+    # in-flight request is counted: an immediate second tick must not stack
+    assert auto.tick() is None or auto.events[-1].count <= 16
+
+
+def test_scale_up_respects_max_workers():
+    _, sched = _mk_scheduler()
+    sched.add_worker(WorkerInfo("w0", {"cpu": 1.0}))
+    requests = []
+    auto = Autoscaler(sched, lambda n, res: requests.append(n) or n,
+                      lambda wids: None,
+                      AutoscalerConfig(max_workers=3,
+                                       queue_depth_per_worker=1.0,
+                                       scale_up_cooldown_s=0.0))
+    for _ in range(50):
+        sched.submit(TaskSpec(fn=None))
+    auto.tick()
+    assert sum(requests) <= 2      # 1 live + 2 = max_workers
+
+
+def test_gang_scale_up_strict_spread():
+    """An unsatisfiable STRICT_SPREAD gang parks as pending demand and the
+    autoscaler requests enough distinct workers to bind it."""
+    _, sched = _mk_scheduler()
+    for i in range(2):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    bundles = [{"cpu": 1.0}] * 4
+    assert not sched.request_placement_group("gang", bundles, "STRICT_SPREAD")
+    assert "gang" in sched.pending_placement_groups()
+
+    requests = []
+    auto = Autoscaler(sched, lambda n, res: requests.append(n) or n,
+                      lambda wids: None,
+                      AutoscalerConfig(max_workers=16,
+                                       scale_up_cooldown_s=0.0))
+    ev = auto.tick()
+    assert ev is not None and ev.action == "scale_up"
+    assert sum(requests) >= 2      # 4 bundles - 2 live workers
+    # when the workers join, the parked gang binds automatically
+    for i in range(2, 4):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    assert "gang" not in sched.pending_placement_groups()
+    assert len(set(sched.placement_binding("gang").values())) == 4
+
+
+def test_scale_up_bootstraps_from_zero_workers():
+    """A small backlog with an empty pool must still provision (the
+    queue-depth threshold alone would tolerate it forever)."""
+    _, sched = _mk_scheduler()
+    requests = []
+    auto = Autoscaler(sched, lambda n, res: requests.append(n) or n,
+                      lambda wids: None,
+                      AutoscalerConfig(min_workers=0, max_workers=8,
+                                       queue_depth_per_worker=2.0,
+                                       scale_up_cooldown_s=0.0))
+    sched.submit(TaskSpec(fn=None))
+    ev = auto.tick()
+    assert ev is not None and ev.action == "scale_up"
+    assert sum(requests) >= 1
+
+
+def test_utilization_policy_needs_backlog():
+    """Fully-busy workers with nothing queued must NOT provision -- the new
+    workers would idle and be retired, flapping forever."""
+    _, sched = _mk_scheduler()
+    for i in range(2):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    for _ in range(2):
+        sched.submit(TaskSpec(fn=None))   # both run, backlog 0
+    requests = []
+    auto = Autoscaler(sched, lambda n, res: requests.append(n) or n,
+                      lambda wids: None,
+                      AutoscalerConfig(max_workers=16,
+                                       target_utilization=0.75,
+                                       scale_up_cooldown_s=0.0))
+    assert auto.tick() is None
+    assert not requests
+
+
+def test_synchronous_provision_leaves_no_phantom_pending():
+    """A backend that joins workers inside provision_fn (threaded local)
+    calls note_joined before provision_fn returns; the in-flight counter
+    must come back to zero, not stick as phantom capacity."""
+    _, sched = _mk_scheduler()
+    sched.add_worker(WorkerInfo("w0", {"cpu": 1.0}))
+    auto = Autoscaler(sched, lambda n, res: None, lambda wids: None,
+                      AutoscalerConfig(max_workers=16,
+                                       queue_depth_per_worker=1.0,
+                                       scale_up_cooldown_s=0.0))
+
+    def provision(n, res):
+        for i in range(n):
+            sched.add_worker(WorkerInfo(f"p{i}", {"cpu": 1.0}))
+            auto.note_joined(f"p{i}")
+        return n
+
+    auto.provision_fn = provision
+    for _ in range(8):
+        sched.submit(TaskSpec(fn=None))
+    ev = auto.tick()
+    assert ev is not None and ev.action == "scale_up"
+    assert auto._pending_provision == 0
+
+
+# ---------------------------------------------------------- policy: scale-down
+
+def test_idle_scale_down_with_cooldown():
+    tnow = [0.0]
+    _, sched = _mk_scheduler(clock=lambda: tnow[0])
+    for i in range(4):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    released = []
+    auto = Autoscaler(sched, lambda n, res: n, released.extend,
+                      AutoscalerConfig(min_workers=1, idle_timeout_s=5.0,
+                                       scale_down_cooldown_s=10.0,
+                                       max_scale_down_step=1),
+                      clock=lambda: tnow[0])
+    assert auto.tick() is None         # idle timer starts now
+    tnow[0] = 3.0
+    assert auto.tick() is None         # not idle long enough
+    tnow[0] = 6.0
+    ev = auto.tick()
+    assert ev is not None and ev.action == "scale_down" and ev.count == 1
+    tnow[0] = 8.0
+    assert auto.tick() is None         # blocked by the scale-down cooldown
+    tnow[0] = 17.0
+    assert auto.tick().action == "scale_down"
+    assert len(released) == 2
+    assert len(sched.workers) == 2
+
+
+def test_scale_down_never_below_min_and_skips_busy():
+    tnow = [100.0]
+    _, sched = _mk_scheduler(clock=lambda: tnow[0])
+    for i in range(3):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    t = sched.submit(TaskSpec(fn=None))          # occupies one worker
+    assert t.state == TaskState.RUNNING
+    released = []
+    auto = Autoscaler(sched, lambda n, res: n, released.extend,
+                      AutoscalerConfig(min_workers=2, idle_timeout_s=0.0,
+                                       scale_down_cooldown_s=0.0,
+                                       max_scale_down_step=8),
+                      clock=lambda: tnow[0])
+    tnow[0] = 200.0
+    auto.tick()
+    assert len(sched.workers) == 2               # only one victim allowed
+    assert t.worker in sched.workers             # the busy worker survives
+
+
+def test_retire_worker_refuses_busy_and_gang_bound():
+    _, sched = _mk_scheduler()
+    for i in range(3):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    t = sched.submit(TaskSpec(fn=None))
+    assert not sched.retire_worker(t.worker)     # busy
+    assert sched.request_placement_group("pg", [{"cpu": 1.0}], "STRICT_SPREAD")
+    bound = next(iter(sched.placement_binding("pg").values()))
+    if bound != t.worker:
+        assert not sched.retire_worker(bound)    # gang-bound
+    free = next(w for w in list(sched.workers)
+                if w != t.worker and w != bound)
+    assert sched.retire_worker(free)
+    assert free not in sched.workers
+
+
+# ------------------------------------------------- indexed == linear placement
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 40), st.integers(0, 30))
+def test_indexed_placement_matches_linear_scan(seed, n_workers, n_busy):
+    """Property: the heap fast-path picks exactly the worker the seed's
+    linear scan would pick (same load/registration-order tie-breaking),
+    including infeasible and heterogeneous-resource cases."""
+    rng = random.Random(seed)
+    store, sched = _mk_scheduler(mode="indexed")
+    for i in range(n_workers):
+        res = {"cpu": float(rng.choice([1, 2, 4]))}
+        if rng.random() < 0.3:
+            res["gpu"] = float(rng.choice([1, 2]))
+        store.register_node(NodeStore(f"w{i}"))
+        sched.add_worker(WorkerInfo(f"w{i}", res))
+    # random occupancy, index kept in sync exactly as schedule() does
+    workers = list(sched.workers.values())
+    for _ in range(n_busy):
+        w = rng.choice(workers)
+        req = {"cpu": float(rng.choice([1, 2]))}
+        if w.fits(req):
+            w.acquire(req)
+            sched.index.touch(w)
+    # sprinkle objects for locality-scored picks
+    deps = []
+    for _ in range(rng.randrange(3)):
+        holder = rng.choice(workers).id
+        deps.append(store.put(holder, b"x" * rng.randrange(1, 2048)))
+    req = {"cpu": float(rng.choice([1, 2, 4]))}
+    if rng.random() < 0.3:
+        req["gpu"] = 1.0
+    task = Task(spec=TaskSpec(fn=None, resources=req),
+                deps=deps if rng.random() < 0.5 else [])
+    got = sched._pick_worker_indexed(task)
+    want = sched._pick_worker_linear(task)
+    assert (got.id if got else None) == (want.id if want else None)
+
+
+def test_index_survives_churn():
+    """Placement stays correct through add/remove/fail/retire churn."""
+    rng = random.Random(7)
+    _, sched = _mk_scheduler(mode="indexed")
+    alive = []
+    for step in range(200):
+        op = rng.random()
+        if op < 0.4 or len(alive) < 2:
+            wid = f"w{step}"
+            sched.add_worker(WorkerInfo(wid, {"cpu": float(rng.choice([1, 2]))}))
+            alive.append(wid)
+        elif op < 0.55:
+            sched.on_worker_failed(alive.pop(rng.randrange(len(alive))))
+        elif op < 0.7:
+            wid = alive[rng.randrange(len(alive))]
+            if sched.retire_worker(wid):
+                alive.remove(wid)
+        else:
+            t = Task(spec=TaskSpec(fn=None, resources={"cpu": 1.0}))
+            got = sched._pick_worker_indexed(t)
+            want = sched._pick_worker_linear(t)
+            assert (got.id if got else None) == (want.id if want else None)
+    assert len(sched.index) == len(sched.workers)
+
+
+# ------------------------------------------------------------- backend hooks
+
+def _req():
+    return AllocationRequest(nodes=4, cpus_per_node=28,
+                             shared_dir="/shared/syndeo")
+
+
+def test_slurm_elastic_artifacts():
+    b = SlurmBackend(ContainerSpec())
+    assert b.supports_elastic
+    up = b.provision_workers(_req(), "abc123", 3)
+    sbatch = next(iter(up.values()))
+    assert "#SBATCH --nodes=3" in sbatch
+    assert "apptainer exec" in sbatch and "--role worker" in sbatch
+    assert "--role head" not in sbatch    # worker-only job: the head stays put
+    down = b.release_workers(_req(), "abc123", ["node7", "node9"])
+    sh = next(iter(down.values()))
+    assert "State=DRAIN" in sh and "node7" in sh and "node9" in sh
+    # scancel is scoped to the retired nodes, not every scale-up batch
+    assert "--nodelist=node7,node9" in sh
+
+
+def test_k8s_elastic_artifacts():
+    b = KubernetesBackend(ContainerSpec())
+    up = next(iter(b.provision_workers(_req(), "abc123", 5).values()))
+    assert "kubectl scale deployment syndeo-workers-abc123" in up
+    assert "CUR + 5" in up
+    down = next(iter(b.release_workers(_req(), "abc123",
+                                       ["pod-a", "pod-b"]).values()))
+    assert "CUR - 2" in down
+    # victims are marked for deletion *before* the shrink so the controller
+    # removes exactly those pods, not arbitrary busy ones
+    assert "pod-deletion-cost" in down
+    assert down.index("pod-deletion-cost") < down.index("kubectl scale")
+
+
+def test_gcp_tpu_elastic_artifacts():
+    b = GcpTpuBackend(ContainerSpec())
+    up = next(iter(b.provision_workers(_req(), "abc123", 2).values()))
+    assert "queued-resources create" in up
+    assert "--role worker" in up and "--privileged=false" in up
+    down = next(iter(b.release_workers(_req(), "abc123",
+                                       ["syndeo-abc123-3"]).values()))
+    assert "queued-resources delete syndeo-abc123-3" in down
+
+
+def test_base_backend_not_elastic_by_default():
+    class Dummy(Backend):
+        name = "dummy"
+
+        def render_artifacts(self, req, cluster_id):
+            return {}
+
+    with pytest.raises(NotImplementedError):
+        Dummy(ContainerSpec()).provision_workers(_req(), "x", 1)
+
+
+def test_sim_backend_provisions_into_simcluster():
+    cost = SimCostModel(task_time_s=lambda s: 0.1)
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    sim.add_workers(1)
+    b = SimBackend(ContainerSpec(), sim, provision_delay_s=0.5)
+    b.provision_workers(AllocationRequest(nodes=1, cpus_per_node=1),
+                        "abc123", 3)
+    assert len(sim.scheduler.workers) == 1     # join is delayed
+    sim.run()
+    assert len(sim.scheduler.workers) == 4
+
+
+# --------------------------------------------------------------- end to end
+
+def test_sim_elastic_burst_scales_up_and_down():
+    cost = SimCostModel(task_time_s=lambda s: 0.5, result_bytes=lambda s: 100.0)
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    sim.add_workers(2)
+    sim.attach_autoscaler(
+        AutoscalerConfig(min_workers=2, max_workers=32,
+                         queue_depth_per_worker=1.0, scale_up_cooldown_s=0.2,
+                         max_scale_up_step=32, idle_timeout_s=1.0,
+                         scale_down_cooldown_s=0.5, max_scale_down_step=32),
+        provision_delay_s=0.3)
+    ids = sim.run_scenario(
+        [(0.5, TaskSpec(fn=None, group="burst")) for _ in range(60)],
+        tick_every=0.1, drain_s=4.0)
+    states = {sim.scheduler.graph.tasks[i].state for i in ids}
+    assert states == {TaskState.FINISHED}
+    actions = {e.action for e in sim.autoscaler.events}
+    assert actions == {"scale_up", "scale_down"}
+    assert max(e.workers_before + e.count for e in sim.autoscaler.events
+               if e.action == "scale_up") > 2
+    assert len(sim.scheduler.workers) == 2     # drained back to min
+
+
+def test_threaded_cluster_autoscales():
+    with SyndeoCluster() as cluster:
+        cluster.add_worker()
+        cluster.attach_autoscaler(AutoscalerConfig(
+            min_workers=1, max_workers=6, queue_depth_per_worker=1.0,
+            scale_up_cooldown_s=0.0, idle_timeout_s=60.0))
+        tasks = [cluster.submit(time.sleep, 0.05) for _ in range(12)]
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            cluster.health_check()
+            with cluster._lock:
+                done = all(cluster.scheduler.graph.tasks[t.id].state
+                           == TaskState.FINISHED for t in tasks)
+            if done:
+                break
+            time.sleep(0.02)
+        cluster.wait_all(tasks, timeout=10.0)
+        assert len(cluster.scheduler.workers) > 1
+        assert any(e.action == "scale_up" for e in cluster.autoscaler.events)

@@ -5,7 +5,11 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover -- bare container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (SchedulerConfig, SecurityError, SimCluster,
                         SimCostModel, TaskSpec, TaskState)
