@@ -13,7 +13,13 @@ drives the same Scheduler/ObjectStore as the threaded backend):
    autoscaled SimCluster, reporting time-to-scale, scale-up/-down events,
    mean utilization, and makespan.
 
+3. *Drain vs drop*: retire object-holding workers via the graceful drain
+   pipeline (hot objects migrate to survivors) vs the drop path (objects
+   lost, lineage re-executes producers), reporting re-executed producer
+   tasks and consumer-wave makespan. Drain must re-execute ZERO producers.
+
 Run:  PYTHONPATH=src python benchmarks/autoscale_bench.py [--quick]
+      PYTHONPATH=src python benchmarks/autoscale_bench.py --drain-smoke
 """
 from __future__ import annotations
 
@@ -156,14 +162,113 @@ def scenario_ramp(max_workers: int, n_tasks: int) -> Dict[str, float]:
     return _summarize("ramp", sim, samples, demand_at=0.0)
 
 
+# ------------------------------------------------------------- drain vs drop
+
+
+def _run_ids_to_completion(sim: SimCluster, ids: List[str],
+                           horizon_s: float = 600.0):
+    terminal = {TaskState.FINISHED, TaskState.FAILED, TaskState.CANCELLED}
+    deadline = sim.now + horizon_s
+
+    def monitor():
+        if sim.now > deadline:
+            raise RuntimeError("drain benchmark did not converge")
+        sim.scheduler.check_stragglers()
+        sim.scheduler.check_drains(sim.now)
+        if {sim.scheduler.graph.tasks[i].state for i in ids} <= terminal:
+            return
+        sim._post(0.05, monitor)
+
+    sim._post(0.05, monitor)
+    sim.run()
+
+
+def scenario_drain_vs_drop(mode: str, n_workers: int = 8,
+                           n_objects: int = 32, retire: int = 3,
+                           task_s: float = 0.08) -> Dict[str, float]:
+    """Produce objects on workers, retire `retire` holders via `mode`
+    ("drain" | "drop"), then run a consumer wave that reads every object."""
+    cost = SimCostModel(task_time_s=lambda s: task_s,
+                        result_bytes=lambda s: 32_768.0, jitter=0.0,
+                        result_location="worker")
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9), seed=3)
+    sim.add_workers(n_workers)
+    sim.run_wave([TaskSpec(fn=None, group="produce", max_retries=10)
+                  for _ in range(n_objects)])
+    refs = [t.output for t in sim.scheduler.graph.tasks.values()
+            if t.output is not None]
+    victims = sorted({next(iter(sim.store.locations(r)))
+                      for r in refs})[:retire]
+    if mode == "drain":
+        for wid in victims:
+            sim.drain_worker_at(wid, sim.now)
+        sim.run()                      # idle drains: migrations complete
+    else:
+        for wid in victims:
+            sim.scheduler.retire_worker(wid)   # PR-1 drop path
+    reexec_before = sim.scheduler.stats["reconstructed"]
+    t0 = sim.now
+    ids = [sim.submit(TaskSpec(fn=None, group="consume", max_retries=10),
+                      deps=[r]).id for r in refs]
+    _run_ids_to_completion(sim, ids)
+    failed = sum(1 for i in ids
+                 if sim.scheduler.graph.tasks[i].state != TaskState.FINISHED)
+    return {"name": f"retire-{mode}",
+            "reexecuted_producers":
+                sim.scheduler.stats["reconstructed"] - reexec_before,
+            "migrated_objects": sim.scheduler.stats["migrated_objects"],
+            "consumer_failures": failed,
+            "wave_makespan_s": sim.now - t0}
+
+
+def bench_drain_vs_drop(**kw) -> Tuple[Dict[str, float], Dict[str, float]]:
+    return scenario_drain_vs_drop("drain", **kw), \
+        scenario_drain_vs_drop("drop", **kw)
+
+
 # ------------------------------------------------------------------ reporting
+
+
+def report_drain_vs_drop(quick: bool) -> bool:
+    kw = dict(n_workers=6, n_objects=16, retire=2) if quick \
+        else dict(n_workers=8, n_objects=48, retire=3)
+    drain, drop = bench_drain_vs_drop(**kw)
+    cols = ["name", "reexecuted_producers", "migrated_objects",
+            "consumer_failures", "wave_makespan_s"]
+    print("\n=== drain vs drop retirement (virtual time) ===")
+    print("".join(f"{c:>22s}" for c in cols))
+    for row in (drain, drop):
+        print("".join(f"{row[c]:>22.3f}" if isinstance(row[c], float)
+                      else f"{row[c]:>22}" for c in cols))
+    ok = True
+    if drain["reexecuted_producers"] != 0:
+        print("\nFAIL: drain re-executed producers for hot objects")
+        ok = False
+    if drop["reexecuted_producers"] == 0:
+        print("\nFAIL: drop baseline did not exercise lineage recompute")
+        ok = False
+    if drain["consumer_failures"] or drop["consumer_failures"]:
+        print("\nFAIL: consumer tasks failed during retirement")
+        ok = False
+    if drain["wave_makespan_s"] > drop["wave_makespan_s"]:
+        print("\nFAIL: draining was slower than recompute")
+        ok = False
+    return ok
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes for CI smoke")
+    ap.add_argument("--drain-smoke", action="store_true",
+                    help="run only the drain-vs-drop comparison")
     args = ap.parse_args()
+
+    if args.drain_smoke:
+        ok = report_drain_vs_drop(quick=True)
+        print("\nPASS" if ok else "\nFAIL")
+        return 0 if ok else 1
 
     if args.quick:
         worker_counts, n_tasks = [10, 100, 500], 1000
@@ -194,7 +299,7 @@ def main():
             f"{row[c]:>17.2f}" if isinstance(row[c], float)
             else f"{row[c]:>17}" for c in cols))
 
-    ok = True
+    ok = report_drain_vs_drop(quick=args.quick)
     if ratio_at_500 is not None and ratio_at_500 < 5.0:
         print(f"\nFAIL: indexed speedup at 500+ workers is "
               f"{ratio_at_500:.1f}x (< 5x)")

@@ -7,15 +7,16 @@ Cloud-TPU queued resources), with a secure containerized bring-up protocol.
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScalingEvent
 from repro.core.cluster import ContainerSpec, SyndeoCluster
 from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
-from repro.core.scheduler import (Scheduler, SchedulerConfig, WorkerIndex,
-                                  WorkerInfo)
+from repro.core.scheduler import (DrainState, Scheduler, SchedulerConfig,
+                                  WorkerIndex, WorkerInfo)
 from repro.core.security import Capability, SecurityError, UnprivilegedProfile
 from repro.core.simulator import SimCluster, SimCostModel
 from repro.core.task_graph import Task, TaskSpec, TaskState
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "ScalingEvent",
-    "ContainerSpec", "SyndeoCluster", "GlobalObjectStore", "NodeStore",
+    "ContainerSpec", "SyndeoCluster", "DrainState", "GlobalObjectStore",
+    "NodeStore",
     "ObjectRef", "Scheduler", "SchedulerConfig", "WorkerIndex", "WorkerInfo",
     "Capability", "SecurityError", "UnprivilegedProfile", "SimCluster",
     "SimCostModel", "Task", "TaskSpec", "TaskState",

@@ -15,10 +15,25 @@ Policies (all active at once; the largest scale-up request wins):
                      request enough workers up front (STRICT_SPREAD needs
                      distinct workers, so bundles = workers).
 
-Scale-down releases only *idle* workers (no running tasks, full resource
+Scale-down selects only *idle* workers (no running tasks, full resource
 availability, not bound in a placement group) that have been idle longer
 than `idle_timeout_s`, and never below `min_workers`. Both directions have
 independent cooldowns so the cluster doesn't flap.
+
+Retirement is a **drain, not a drop**: a victim first enters the
+scheduler's DRAINING state (`begin_drain`), which stops new placements and
+migrates the node's solely-held hot objects to survivors; only once
+`drain_complete` does the autoscaler `finish_drain` and hand the worker
+ids to `release_fn` (the backend's release artifact). If demand returns
+while drains are in flight, the drains are cancelled and the workers
+resume serving -- cheaper than re-provisioning. `release_order` chooses
+which ripe workers go first: "idle" (longest-idle, the default) or
+"reverse_join" (most-recently-joined -- GCP TPU slices, where pod 0 holds
+the jax.distributed coordinator and early ranks must stay stable).
+
+Cooldowns are backend-specific: `AutoscalerConfig.for_backend("gcp_tpu")`
+uses minutes-scale cooldowns (queued-resource creation latency is minutes),
+while "local"/"sim" default to seconds.
 
 The autoscaler is time-source agnostic like the scheduler: the threaded
 backend ticks it from the head's health loop with the wall clock, the
@@ -49,6 +64,36 @@ class AutoscalerConfig:
     idle_timeout_s: float = 10.0          # idle this long before eligible
     scale_down_cooldown_s: float = 30.0
     max_scale_down_step: int = 8
+    # drain-before-release policy
+    drain_deadline_s: Optional[float] = None  # preempt stragglers after this
+    release_order: str = "idle"           # "idle" | "reverse_join"
+
+    #: per-backend cooldown/drain defaults (see for_backend). GCP TPU
+    #: queued-resource creation latency is minutes, so its cooldowns are
+    #: minutes-scale; the in-process local/sim backends react in seconds.
+    BACKEND_DEFAULTS = {
+        "local": dict(scale_up_cooldown_s=1.0, scale_down_cooldown_s=30.0,
+                      idle_timeout_s=10.0, drain_deadline_s=5.0),
+        "sim": dict(scale_up_cooldown_s=1.0, scale_down_cooldown_s=30.0,
+                    idle_timeout_s=10.0, drain_deadline_s=5.0),
+        "slurm": dict(scale_up_cooldown_s=30.0, scale_down_cooldown_s=120.0,
+                      idle_timeout_s=60.0, drain_deadline_s=60.0),
+        "kubernetes": dict(scale_up_cooldown_s=15.0,
+                           scale_down_cooldown_s=60.0,
+                           idle_timeout_s=30.0, drain_deadline_s=30.0),
+        "gcp_tpu": dict(scale_up_cooldown_s=180.0,
+                        scale_down_cooldown_s=600.0,
+                        idle_timeout_s=300.0, drain_deadline_s=120.0,
+                        release_order="reverse_join"),
+    }
+
+    @classmethod
+    def for_backend(cls, backend_name: str, **overrides) -> "AutoscalerConfig":
+        """Config tuned for a backend's control-plane latency; keyword
+        overrides win over the backend defaults."""
+        defaults = dict(cls.BACKEND_DEFAULTS.get(backend_name, {}))
+        defaults.update(overrides)
+        return cls(**defaults)
 
 
 @dataclass
@@ -80,6 +125,7 @@ class Autoscaler:
         self._last_up = -math.inf
         self._last_down = -math.inf
         self._idle_since: Dict[str, float] = {}
+        self._draining: set = set()      # drains this autoscaler started
         self.events: List[ScalingEvent] = []
 
     # -- membership feedback --------------------------------------------------
@@ -140,6 +186,8 @@ class Autoscaler:
 
     def tick(self, now: Optional[float] = None) -> Optional[ScalingEvent]:
         now = self.clock() if now is None else now
+        if self._draining:
+            self.scheduler.check_drains(now)   # deadline preemption
         ev = self._maybe_scale_up(now)
         if ev is None:
             ev = self._maybe_scale_down(now)
@@ -174,6 +222,25 @@ class Autoscaler:
     def _maybe_scale_down(self, now: float) -> Optional[ScalingEvent]:
         workers = {wid: w for wid, w in self.scheduler.workers.items()
                    if w.alive}
+        # drains for workers that died mid-drain are moot
+        self._draining &= set(workers)
+        backlog = self._backlog()
+        if backlog > 0 and self._draining:
+            # demand returned: un-drain instead of re-provisioning
+            for wid in list(self._draining):
+                if self.scheduler.cancel_drain(wid):
+                    self._draining.discard(wid)
+
+        # phase 2 of earlier decisions: finish drains whose tasks are done
+        # and whose migrations have landed (not gated by the cooldown --
+        # the victim selection already was)
+        released: List[str] = []
+        for wid in list(self._draining):
+            if self.scheduler.drain_complete(wid) \
+                    and self.scheduler.finish_drain(wid):
+                self._draining.discard(wid)
+                released.append(wid)
+
         # refresh idle tracking
         for wid, w in workers.items():
             if w.idle:
@@ -184,28 +251,43 @@ class Autoscaler:
             if wid not in workers:
                 del self._idle_since[wid]
 
-        if self._backlog() > 0:
-            return None
-        if now - self._last_down < self.cfg.scale_down_cooldown_s:
-            return None
-        n_live = len(workers) + self._pending_provision
-        headroom = n_live - self.cfg.min_workers
-        if headroom <= 0:
-            return None
-        ripe = sorted(
-            (wid for wid, since in self._idle_since.items()
-             if now - since >= self.cfg.idle_timeout_s),
-            key=lambda wid: self._idle_since[wid])
-        victims = ripe[:min(headroom, self.cfg.max_scale_down_step)]
-        released = [wid for wid in victims
-                    if self.scheduler.retire_worker(wid)]
+        if backlog == 0 \
+                and now - self._last_down >= self.cfg.scale_down_cooldown_s:
+            n_live = len(workers) + self._pending_provision
+            # workers already draining are as good as gone
+            headroom = (n_live - len(self._draining) - len(released)
+                        - self.cfg.min_workers)
+            if headroom > 0:
+                ripe = [wid for wid, since in self._idle_since.items()
+                        if now - since >= self.cfg.idle_timeout_s
+                        and wid not in self._draining
+                        and wid not in released]
+                if self.cfg.release_order == "reverse_join":
+                    ripe.sort(key=lambda wid:
+                              -self.scheduler.worker_seq(wid))
+                else:
+                    ripe.sort(key=lambda wid: self._idle_since[wid])
+                victims = ripe[:min(headroom, self.cfg.max_scale_down_step)]
+                for wid in victims:
+                    if not self.scheduler.begin_drain(
+                            wid, self.cfg.drain_deadline_s):
+                        continue
+                    # idle workers with nothing to migrate complete at once
+                    if self.scheduler.drain_complete(wid) \
+                            and self.scheduler.finish_drain(wid):
+                        released.append(wid)
+                    else:
+                        self._draining.add(wid)
+
         if not released:
             return None
         for wid in released:
             self._idle_since.pop(wid, None)
         self.release_fn(released)
         self._last_down = now
+        n_before = len(workers) + self._pending_provision
         ev = ScalingEvent(now, "scale_down", len(released),
-                          f"idle > {self.cfg.idle_timeout_s}s", n_live)
+                          f"drained after idle > {self.cfg.idle_timeout_s}s",
+                          n_before)
         self.events.append(ev)
         return ev

@@ -52,6 +52,11 @@ class Backend(abc.ABC):
         raise NotImplementedError(f"{self.name} backend is not elastic")
 
     def release_workers(self, req: AllocationRequest, cluster_id: str,
-                        worker_ids: List[str]) -> Dict[str, str]:
-        """Shrink the allocation by retiring the named (idle) workers."""
+                        worker_ids: List[str],
+                        drain_deadline_s: float = 0.0) -> Dict[str, str]:
+        """Shrink the allocation by retiring the named workers. The workers
+        have already been drained by the scheduler (DRAINING state: no new
+        placements, hot objects migrated to survivors); `drain_deadline_s`
+        is the grace the rendered artifact gives any process still wrapping
+        up on the node before force-releasing it (0 = immediate)."""
         raise NotImplementedError(f"{self.name} backend is not elastic")

@@ -7,9 +7,17 @@ the Syndeo runtime, and within a training job XLA owns the chips (three
 nested schedulers -- see DESIGN.md)."""
 from __future__ import annotations
 
+import re
 from typing import Dict, List
 
 from repro.core.backends.base import AllocationRequest, Backend
+
+
+def _join_ordinal(worker_id: str) -> int:
+    """Pod-slice join ordinal (trailing integer of the resource name);
+    ids without one sort first (oldest)."""
+    m = re.search(r"(\d+)$", worker_id)
+    return int(m.group(1)) if m else -1
 
 
 class GcpTpuBackend(Backend):
@@ -86,16 +94,27 @@ wait
         return {f"scale_up_{cluster_id}_{count}.sh": script}
 
     def release_workers(self, req: AllocationRequest, cluster_id: str,
-                        worker_ids: List[str]) -> Dict[str, str]:
+                        worker_ids: List[str],
+                        drain_deadline_s: float = 0.0) -> Dict[str, str]:
+        # Reverse-join order: delete the most recently added slices first.
+        # Pod 0 hosts the jax.distributed coordinator and early pods hold
+        # the low ranks; releasing from the tail keeps coordinator ranks
+        # stable so surviving slices never renumber mid-training.
+        ordered = sorted(worker_ids, key=_join_ordinal, reverse=True)
+        grace = (f"sleep {int(drain_deadline_s)}"
+                 if drain_deadline_s > 0 else
+                 ": # slices already drained by the inner scheduler")
         deletes = "\n".join(
             f"gcloud compute tpus queued-resources delete {wid} "
             f"--zone us-central1-a --force --quiet || true"
-            for wid in worker_ids)
+            for wid in ordered)
         script = f"""\
 #!/bin/bash
 set -euo pipefail
-# elastic scale-down: release the idle pod slices back to the outer
-# scheduler (queued-resource manager).
+# graceful scale-down, reverse-join order (latest slices first): give any
+# straggling host processes the drain grace, then return the pod slices
+# to the outer scheduler (queued-resource manager).
+{grace}
 {deletes}
 """
         return {f"scale_down_{cluster_id}.sh": script}

@@ -102,7 +102,8 @@ kubectl scale deployment {deploy} --replicas=$((CUR + {count}))
         return {f"scale_up_{cluster_id}_{count}.sh": script}
 
     def release_workers(self, req: AllocationRequest, cluster_id: str,
-                        worker_ids: List[str]) -> Dict[str, str]:
+                        worker_ids: List[str],
+                        drain_deadline_s: float = 0.0) -> Dict[str, str]:
         deploy = f"syndeo-workers-{cluster_id}"
         # worker id == pod hostname == pod name in this backend (the worker
         # process registers under its hostname)
@@ -111,14 +112,18 @@ kubectl scale deployment {deploy} --replicas=$((CUR + {count}))
             f"controller.kubernetes.io/pod-deletion-cost=-999 "
             f"--overwrite || true"
             for wid in worker_ids)
+        grace = int(drain_deadline_s) if drain_deadline_s > 0 else 0
         script = f"""\
 #!/bin/bash
 set -euo pipefail
-# elastic scale-down: mark the retired (idle-by-policy) pods as the
-# cheapest to delete, then shrink the Deployment -- the ReplicaSet
-# controller removes exactly those pods instead of arbitrary busy ones.
+# graceful scale-down: the scheduler already drained these pods (no new
+# placements, hot objects migrated). Mark them cheapest to delete, then
+# shrink the Deployment -- the ReplicaSet controller removes exactly those
+# pods, each with a {grace}s termination grace for anything still exiting.
 {annotates}
 CUR=$(kubectl get deployment {deploy} -o jsonpath='{{.spec.replicas}}')
 kubectl scale deployment {deploy} --replicas=$((CUR - {len(worker_ids)}))
+kubectl wait --for=delete {' '.join(f'pod/{wid}' for wid in worker_ids)} \\
+  --timeout={grace if grace > 0 else 30}s || true
 """
         return {f"scale_down_{cluster_id}.sh": script}

@@ -40,9 +40,15 @@ class LocalBackend(Backend):
         return {}
 
     def release_workers(self, req: AllocationRequest, cluster_id: str,
-                        worker_ids: List[str]) -> Dict[str, str]:
+                        worker_ids: List[str],
+                        drain_deadline_s: float = 0.0) -> Dict[str, str]:
         for wid in worker_ids:
-            self.cluster.remove_worker(wid)
+            # drain first (migrates solely-held hot objects to survivors);
+            # fall back to the failure path only if the drain cannot finish
+            if not self.cluster.drain_worker(
+                    wid, deadline_s=drain_deadline_s or None,
+                    timeout=max(drain_deadline_s, 2.0)):
+                self.cluster.remove_worker(wid)
         return {}
 
 
@@ -72,6 +78,14 @@ class SimBackend(Backend):
         return {}
 
     def release_workers(self, req: AllocationRequest, cluster_id: str,
-                        worker_ids: List[str]) -> Dict[str, str]:
-        self.sim.release_workers(worker_ids)
+                        worker_ids: List[str],
+                        drain_deadline_s: float = 0.0) -> Dict[str, str]:
+        # schedule a graceful drain (migration + release) in virtual time
+        # for workers still registered; already-released ids just clean up
+        for wid in worker_ids:
+            if wid in self.sim.scheduler.workers:
+                self.sim.drain_worker_at(wid, self.sim.now,
+                                         deadline_s=drain_deadline_s or None)
+            else:
+                self.sim.release_workers([wid])
         return {}

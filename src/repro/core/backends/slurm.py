@@ -21,9 +21,15 @@ class SlurmBackend(Backend):
         head_cmd = apptainer_run_command(self.container, role="head",
                                          rendezvous_dir=req.shared_dir,
                                          cluster_id=cluster_id)
-        worker_cmd = apptainer_run_command(self.container, role="worker",
-                                           rendezvous_dir=req.shared_dir,
-                                           cluster_id=cluster_id)
+        # Syndeo worker id == Slurm NodeName: workers join under $(hostname)
+        # and record the mapping under the rendezvous, so scale-down can
+        # resolve the scheduler's worker ids back to drainable hosts.
+        worker_cmd = (apptainer_run_command(self.container, role="worker",
+                                            rendezvous_dir=req.shared_dir,
+                                            cluster_id=cluster_id)
+                      + ' --worker-id "$(hostname)"')
+        record_host = (f'echo "$(hostname)" > '
+                       f'"{req.shared_dir}/rdv/workers/$(hostname).host"')
         sbatch = f"""\
 #!/bin/bash
 #SBATCH --job-name=syndeo-{cluster_id}
@@ -35,7 +41,8 @@ class SlurmBackend(Backend):
 #SBATCH --output={req.shared_dir}/logs/%j_%n.out
 
 set -euo pipefail
-mkdir -p {req.shared_dir}/logs {req.shared_dir}/rdv
+mkdir -p {req.shared_dir}/logs {req.shared_dir}/rdv {req.shared_dir}/rdv/workers
+{record_host}
 
 # ---- phase 1: every node already has a copy of the container ----
 # (image staged to {req.shared_dir} before submission; immutable at runtime)
@@ -73,9 +80,10 @@ wait
 
     def provision_workers(self, req: AllocationRequest, cluster_id: str,
                           count: int) -> Dict[str, str]:
-        worker_cmd = apptainer_run_command(self.container, role="worker",
-                                           rendezvous_dir=req.shared_dir,
-                                           cluster_id=cluster_id)
+        worker_cmd = (apptainer_run_command(self.container, role="worker",
+                                            rendezvous_dir=req.shared_dir,
+                                            cluster_id=cluster_id)
+                      + ' --worker-id "$(hostname)"')
         scale_up = f"""\
 #!/bin/bash
 #SBATCH --job-name=syndeo-{cluster_id}-scaleup
@@ -88,26 +96,47 @@ wait
 
 set -euo pipefail
 # elastic scale-up: every node of this job joins the *existing* head via
-# the shared-FS rendezvous (bring-up phase 3 only -- the head stays put).
+# the shared-FS rendezvous (bring-up phase 3 only -- the head stays put),
+# registering under its hostname so scale-down can find it again.
+mkdir -p {req.shared_dir}/rdv/workers
+echo "$(hostname)" > "{req.shared_dir}/rdv/workers/$(hostname).host"
 {worker_cmd} &
 wait
 """
         return {f"scale_up_{cluster_id}_{count}.sbatch": scale_up}
 
     def release_workers(self, req: AllocationRequest, cluster_id: str,
-                        worker_ids: List[str]) -> Dict[str, str]:
-        drains = "\n".join(
-            f"scontrol update NodeName={wid} State=DRAIN "
-            f'Reason="syndeo-{cluster_id} idle scale-down"'
+                        worker_ids: List[str],
+                        drain_deadline_s: float = 0.0) -> Dict[str, str]:
+        # Reconciliation: the scheduler names workers by *Syndeo worker id*;
+        # Slurm drains by *NodeName*. Workers record id -> hostname under
+        # the rendezvous at join (worker id is the hostname for nodes we
+        # launched, but the mapping file is authoritative for any id), so
+        # the rendered artifact resolves each id before touching Slurm --
+        # it never drains the wrong host.
+        resolves = "\n".join(
+            f'HOSTS="$HOSTS,$(cat "$MAP/{wid}.host" 2>/dev/null '
+            f'|| echo "{wid}")"'
             for wid in worker_ids)
-        nodelist = ",".join(worker_ids)
+        wait_step = (f"sleep {int(drain_deadline_s)}"
+                     if drain_deadline_s > 0 else
+                     ": # no drain grace requested (workers already drained)")
         scale_down = f"""\
 #!/bin/bash
 set -euo pipefail
-# elastic scale-down: drain the retired nodes, then cancel only the
-# scale-up jobs running *on those nodes* (workers there are idle by
-# policy; scale-up batches on other nodes keep running).
-{drains}
-scancel --name=syndeo-{cluster_id}-scaleup --nodelist={nodelist} || true
+# graceful scale-down: resolve Syndeo worker ids -> Slurm hostnames via the
+# rendezvous mapping, mark those nodes DRAIN (no new Slurm work lands),
+# give in-flight processes the drain grace, then cancel only the scale-up
+# jobs running *on those hosts* (batches on other nodes keep running).
+MAP={req.shared_dir}/rdv/workers
+HOSTS=""
+{resolves}
+HOSTS=${{HOSTS#,}}
+for HOST in ${{HOSTS//,/ }}; do
+  scontrol update NodeName=$HOST State=DRAIN \\
+    Reason="syndeo-{cluster_id} drained scale-down"
+done
+{wait_step}
+scancel --name=syndeo-{cluster_id}-scaleup --nodelist=$HOSTS || true
 """
         return {f"scale_down_{cluster_id}.sh": scale_down}

@@ -71,6 +71,10 @@ class SyndeoCluster:
         self._head_node = NodeStore("head", capacity_bytes=1 << 30,
                                     spill_dir=self.profile.scratch_dir(self.cluster_id))
         self.store.register_node(self._head_node)
+        # drain migrations are capability-checked under the cluster token:
+        # only the head (which minted this grant) may move objects around
+        self.store.set_migration_guard(
+            Capability.grant(self.token, "objects", "migrate"), self.token)
         self.rendezvous.publish(Endpoint("127.0.0.1", 6379, self.cluster_id,
                                          self.token))
 
@@ -109,6 +113,32 @@ class SyndeoCluster:
         q = self._queues.pop(worker_id, None)
         if q is not None:
             q.put(None)
+
+    def drain_worker(self, worker_id: str,
+                     deadline_s: Optional[float] = None,
+                     timeout: float = 10.0) -> bool:
+        """Graceful retirement of one worker: DRAINING (no new placements),
+        running tasks finish (threads are cooperative, so the deadline only
+        stops the wait -- it cannot preempt a mid-flight python call), hot
+        objects migrate to survivors, then the thread is stopped. Returns
+        False (and cancels the drain) if the worker cannot drain in time."""
+        with self._lock:
+            if not self.scheduler.begin_drain(worker_id, deadline_s):
+                return False
+        limit = time.monotonic() + timeout
+        while time.monotonic() < limit:
+            with self._lock:
+                if self.scheduler.drain_complete(worker_id) \
+                        and self.scheduler.finish_drain(worker_id):
+                    q = self._queues.pop(worker_id, None)
+                    if q is not None:
+                        q.put(None)
+                    self._threads.pop(worker_id, None)
+                    return True
+            time.sleep(0.02)
+        with self._lock:
+            self.scheduler.cancel_drain(worker_id)
+        return False
 
     # -- elasticity (paper gap: the gang allocation can now grow/shrink) -------
 
@@ -227,12 +257,14 @@ class SyndeoCluster:
                 cap = Capability.grant(self.token, "result", "put")
                 cap.check(self.token, "result", "put")
                 out = spec.fn(*spec.args, *resolved, **spec.kwargs)
-                ref = self.store.put(wid, out, producer_task=tid)
+                ref = self.store.put(wid, out, producer_task=tid,
+                                     ref_id=f"obj-{tid}")
                 with self._lock:
-                    self.scheduler.on_task_finished(tid, ref)
+                    self.scheduler.on_task_finished(tid, ref, worker_id=wid)
             except Exception as e:  # noqa: BLE001 -- worker never dies on task error
                 with self._lock:
-                    self.scheduler.on_task_failed(tid, f"{type(e).__name__}: {e}")
+                    self.scheduler.on_task_failed(
+                        tid, f"{type(e).__name__}: {e}", worker_id=wid)
             ev = self._futures.get(tid)
             if ev is not None:
                 ev.set()
@@ -243,6 +275,7 @@ class SyndeoCluster:
         with self._lock:
             self.scheduler.check_liveness()
             self.scheduler.check_stragglers()
+            self.scheduler.check_drains()
             if self.autoscaler is not None:
                 self.autoscaler.tick()
 

@@ -14,6 +14,32 @@ Payloads are arbitrary picklable python objects / numpy arrays. On a real
 TPU cluster large tensors move as sharded checkpoint files instead; the
 store then carries references (paths + manifests), which is exactly how the
 paper's shared-filesystem rendezvous behaves.
+
+Drain / migration
+-----------------
+
+When the scheduler retires a worker gracefully (DRAINING lifecycle state,
+`scheduler.begin_drain`), objects whose *only* copy lives on the retiring
+node are **migrated** to a survivor instead of being dropped and later
+rebuilt by lineage re-execution:
+
+  * `objects_on(node)` enumerates directory entries held on a node and
+    whether the node is the sole holder -- the scheduler's migration
+    planner reads this to decide what must move,
+  * `migrate(ref, src, dst)` copies the raw blob between node stores
+    without a pickle round-trip, records the new location, drops the old
+    one, and **hands off ownership** if the source owned the object; the
+    move is capability-checked when the cluster installs a migration
+    capability (`set_migration_guard`), so a tenant cannot exfiltrate
+    another tenant's objects by draining a shared node,
+  * after migration `unregister_node(src)` loses nothing: every hot
+    object is served from a survivor, so no lineage reconstruction fires
+    (the drain-vs-drop benchmark and the fault-tolerance property tests
+    assert exactly this).
+
+Cold objects (zero refcount, not depended on) are simply dropped -- the
+drain is then provably no worse than recompute: it never re-executes a
+producer for a hot object, and never copies garbage.
 """
 from __future__ import annotations
 
@@ -56,6 +82,9 @@ class NodeStore:
     def put(self, ref: ObjectRef, value: Any) -> int:
         blob = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
         with self._lock:
+            old = self._mem.pop(ref.id, None)
+            if old is not None:            # re-put (e.g. reconstruction)
+                self._used -= len(old)
             self._mem[ref.id] = blob
             self._mem.move_to_end(ref.id)
             self._used += len(blob)
@@ -93,6 +122,26 @@ class NodeStore:
             if path and os.path.exists(path):
                 os.unlink(path)
 
+    def export_blob(self, ref: ObjectRef) -> bytes:
+        """Raw serialized bytes for migration (no pickle round-trip)."""
+        with self._lock:
+            if ref.id in self._mem:
+                return self._mem[ref.id]
+            if ref.id in self._spilled:
+                with open(self._spilled[ref.id], "rb") as f:
+                    return f.read()
+        raise KeyError(f"object {ref.id} not on node {self.node_id}")
+
+    def import_blob(self, ref: ObjectRef, blob: bytes):
+        """Accept migrated bytes verbatim (counterpart of export_blob)."""
+        with self._lock:
+            if ref.id in self._mem or ref.id in self._spilled:
+                return
+            self._mem[ref.id] = blob
+            self._used += len(blob)
+            self.stats["puts"] += 1
+            self._maybe_spill()
+
     def _maybe_spill(self):
         """LRU spill until under capacity (lock held)."""
         if self.spill_dir is None:
@@ -115,6 +164,7 @@ class _Directory:
     producer_task: Optional[str] = None
     size: int = 0
     created: float = field(default_factory=time.monotonic)
+    owner: Optional[str] = None       # node accountable for the primary copy
 
 
 class GlobalObjectStore:
@@ -129,8 +179,10 @@ class GlobalObjectStore:
         self._dir: Dict[str, _Directory] = {}
         self._nodes: Dict[str, NodeStore] = {}
         self._lock = threading.Lock()
+        self._migration_guard = None   # optional (capability, token) pair
         self.stats = {"transfers": 0, "transfer_bytes": 0,
-                      "reconstructions": 0}
+                      "reconstructions": 0,
+                      "migrations": 0, "migrated_bytes": 0}
 
     def register_node(self, store: NodeStore):
         with self._lock:
@@ -144,18 +196,38 @@ class GlobalObjectStore:
             self._nodes.pop(node_id, None)
             for oid, entry in self._dir.items():
                 entry.locations.discard(node_id)
+                if entry.owner == node_id:
+                    # owner handoff to any surviving holder
+                    entry.owner = next(iter(entry.locations), None)
                 if not entry.locations:
                     lost.add(oid)
         return lost
 
+    def has_node(self, node_id: str) -> bool:
+        with self._lock:
+            return node_id in self._nodes
+
     def put(self, node_id: str, value: Any,
-            producer_task: Optional[str] = None) -> ObjectRef:
-        ref = ObjectRef.fresh(producer_task)
+            producer_task: Optional[str] = None,
+            ref_id: Optional[str] = None) -> ObjectRef:
+        """Store a new object. `ref_id` pins a deterministic object id
+        (Ray-style): a reconstructed producer re-puts under the *same* id,
+        so tasks waiting on the original ref wake up when it reappears."""
+        ref = (ObjectRef(ref_id, 0, producer_task) if ref_id
+               else ObjectRef.fresh(producer_task))
         size = self._nodes[node_id].put(ref, value)
         with self._lock:
-            self._dir[ref.id] = _Directory(locations={node_id},
-                                           producer_task=producer_task,
-                                           size=size)
+            e = self._dir.get(ref.id)
+            if e is not None:              # reconstruction: revive the entry
+                e.locations.add(node_id)
+                e.size = size
+                e.producer_task = producer_task or e.producer_task
+                if e.owner is None:
+                    e.owner = node_id
+            else:
+                self._dir[ref.id] = _Directory(locations={node_id},
+                                               producer_task=producer_task,
+                                               size=size, owner=node_id)
         return ObjectRef(ref.id, size, producer_task)
 
     def get(self, node_id: str, ref: ObjectRef) -> Any:
@@ -215,3 +287,78 @@ class GlobalObjectStore:
     def note_reconstruction(self):
         with self._lock:
             self.stats["reconstructions"] += 1
+
+    # -- drain / migration (see module docstring) -----------------------------
+
+    def set_migration_guard(self, capability, token: str):
+        """Require `capability` (right "migrate") for every migrate() call.
+        Installed by the cluster head with a capability minted under the
+        cluster token -- a tenant without it cannot move objects around."""
+        self._migration_guard = (capability, token)
+
+    def owner_of(self, ref: ObjectRef) -> Optional[str]:
+        with self._lock:
+            e = self._dir.get(ref.id)
+            return e.owner if e else None
+
+    def refcount(self, ref_or_id) -> int:
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            e = self._dir.get(oid)
+            return e.refcount if e else 0
+
+    def objects_on(self, node_id: str) -> Dict[str, "ObjectRef"]:
+        """Directory entries with a copy on `node_id`, keyed by object id.
+        The migration planner filters these for sole-holder hot objects."""
+        out: Dict[str, ObjectRef] = {}
+        with self._lock:
+            for oid, e in self._dir.items():
+                if node_id in e.locations:
+                    out[oid] = ObjectRef(oid, e.size, e.producer_task)
+        return out
+
+    def sole_holder(self, ref: ObjectRef, node_id: str) -> bool:
+        with self._lock:
+            e = self._dir.get(ref.id)
+            return bool(e) and e.locations == {node_id}
+
+    def migrate(self, ref: ObjectRef, src: str, dst: str) -> bool:
+        """Move one object's copy src -> dst (raw blob, no pickle round-trip),
+        updating the directory and handing off ownership if src owned it.
+        Returns False when the move is moot (object gone, src copy gone, or
+        dst unregistered) -- drains treat that as already-done."""
+        if self._migration_guard is not None:
+            cap, token = self._migration_guard
+            cap.check(token, "objects", "migrate")
+        with self._lock:
+            e = self._dir.get(ref.id)
+            src_store = self._nodes.get(src)
+            dst_store = self._nodes.get(dst)
+            if e is None or src not in e.locations or dst_store is None:
+                return False
+            already_there = dst in e.locations
+            if already_there:                # already replicated there
+                e.locations.discard(src)
+                if e.owner == src:
+                    e.owner = dst
+        if already_there:
+            if src_store is not None:        # drop the now-unreachable blob
+                src_store.delete(ref)
+            return True
+        if src_store is None:
+            return False
+        blob = src_store.export_blob(ref)
+        dst_store.import_blob(ref, blob)
+        with self._lock:
+            e = self._dir.get(ref.id)
+            if e is None:                    # released mid-copy
+                dst_store.delete(ref)
+                return False
+            e.locations.add(dst)
+            e.locations.discard(src)
+            if e.owner == src:
+                e.owner = dst                # owner handoff
+            self.stats["migrations"] += 1
+            self.stats["migrated_bytes"] += len(blob)
+        src_store.delete(ref)
+        return True

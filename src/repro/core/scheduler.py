@@ -11,7 +11,12 @@ Features:
   * locality-aware placement (prefer workers already holding the deps),
   * straggler mitigation: speculative re-execution past a runtime quantile,
   * retry with lineage reconstruction of lost objects on worker failure,
-  * placement groups (STRICT_SPREAD / PACK) for gang-scheduled jobs.
+  * placement groups (STRICT_SPREAD / PACK) for gang-scheduled jobs,
+  * graceful retirement: a DRAINING lifecycle state (begin_drain /
+    drain_complete / finish_drain) that stops new placements, lets running
+    tasks finish (or preempts them past a deadline), and migrates the
+    node's solely-held hot objects to survivors before release -- so a
+    drained worker, unlike a dropped one, never costs lineage recompute.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ class WorkerInfo:
     alive: bool = True
     last_heartbeat: float = 0.0
     running: set = field(default_factory=set)
+    draining: bool = False       # retiring: no new placements, tasks drain
 
     def __post_init__(self):
         if not self.available:
@@ -66,6 +72,18 @@ class SchedulerConfig:
     locality_weight: float = 1.0         # bytes-on-node score weight
     enable_speculation: bool = True
     placement_mode: str = "indexed"      # "indexed" (heap) or "linear" (scan)
+
+
+@dataclass
+class DrainState:
+    """Bookkeeping for one DRAINING worker (see Scheduler.begin_drain)."""
+    worker_id: str
+    started_at: float
+    deadline_at: Optional[float] = None   # absolute; None = wait forever
+    pending: set = field(default_factory=set)   # object ids mid-migration
+    moved: set = field(default_factory=set)     # object ids settled
+    planned: int = 0                            # migrations dispatched
+    rr: int = 0                                 # round-robin dst cursor
 
 
 class WorkerIndex:
@@ -125,13 +143,21 @@ class WorkerIndex:
     def _compact(self, key: str):
         fresh = [(w.load, self._seq[wid], wid)
                  for wid in self._members.get(key, ())
-                 if (w := self._workers.get(wid)) is not None and w.alive]
+                 if (w := self._workers.get(wid)) is not None and w.alive
+                 and not w.draining]
         heapq.heapify(fresh)
         self._heaps[key] = fresh
 
+    def seq_of(self, worker_id: str) -> int:
+        """Registration order (join sequence); -1 for unknown workers."""
+        return self._seq.get(worker_id, -1)
+
     def pick(self, req: Dict[str, float]) -> Optional[WorkerInfo]:
-        """Least-loaded alive worker that fits `req` (ties: registration
-        order). Returns None when nothing fits."""
+        """Least-loaded alive, non-draining worker that fits `req` (ties:
+        registration order). Returns None when nothing fits. DRAINING
+        workers are evicted lazily at pop time -- their entries are simply
+        discarded, and a cancelled drain re-surfaces via touch() with the
+        original registration seq intact."""
         needed = [k for k, v in req.items() if v > 0]
         for k in needed:
             if not self._members.get(k):
@@ -144,9 +170,9 @@ class WorkerIndex:
         while heap:
             load, seq, wid = heapq.heappop(heap)
             w = self._workers.get(wid)
-            if (w is None or not w.alive or wid in seen
+            if (w is None or not w.alive or w.draining or wid in seen
                     or abs(w.load - load) > 1e-12):
-                continue                     # stale or duplicate entry
+                continue                     # stale, draining, or duplicate
             seen.add(wid)
             popped.append((load, seq, wid))
             if w.fits(req):
@@ -177,8 +203,14 @@ class Scheduler:
         self._group_runtimes: Dict[str, List[float]] = {}
         self._placement_bindings: Dict[str, Dict[int, str]] = {}
         self._pending_groups: Dict[str, Tuple[List[Dict[str, float]], str]] = {}
+        # drain pipeline: migrate_fn(worker_id, ref, dst) is injected by the
+        # backend to execute one object move (sim adds transfer latency);
+        # None executes synchronously through the store.
+        self.migrate_fn: Optional[Callable[[str, ObjectRef, str], None]] = None
+        self._drains: Dict[str, DrainState] = {}
         self.stats = {"launched": 0, "finished": 0, "failed": 0, "retried": 0,
-                      "speculative": 0, "reconstructed": 0, "cancelled": 0}
+                      "speculative": 0, "reconstructed": 0, "cancelled": 0,
+                      "drained": 0, "migrated_objects": 0, "preempted": 0}
 
     # -- membership ----------------------------------------------------------
 
@@ -202,11 +234,195 @@ class Scheduler:
         if any(worker_id in binding.values()
                for binding in self._placement_bindings.values()):
             return False
+        self._remove_node(worker_id)
+        return True
+
+    def _remove_node(self, worker_id: str):
+        """Shared teardown for the drop (retire_worker) and drain
+        (finish_drain) paths: unregister the node store, mark objects that
+        lost their last copy, and forget the worker."""
+        w = self.workers[worker_id]
         w.alive = False
         for oid in self.store.unregister_node(worker_id):
             self.graph.object_lost(oid)
         self.index.remove(worker_id)
+        self._drains.pop(worker_id, None)
         del self.workers[worker_id]
+
+    # -- graceful drain (DRAINING lifecycle state) ---------------------------
+    #
+    # begin_drain(w)    : stop new placements, plan + dispatch migrations
+    # check_drains()    : preempt running tasks past the drain deadline
+    # drain_complete(w) : no running tasks, no in-flight migrations
+    # finish_drain(w)   : unregister the node (loses nothing hot) + remove
+    #
+    # Unlike retire_worker (the drop path, kept for comparison), a drain is
+    # allowed on a *busy* worker and never costs lineage recompute for hot
+    # objects: every solely-held hot object is migrated to a survivor first.
+
+    def begin_drain(self, worker_id: str,
+                    deadline_s: Optional[float] = None) -> bool:
+        """Move a worker into DRAINING. Returns False for unknown / dead /
+        already-draining / placement-group-bound workers."""
+        w = self.workers.get(worker_id)
+        if w is None or not w.alive or w.draining:
+            return False
+        if any(worker_id in binding.values()
+               for binding in self._placement_bindings.values()):
+            return False
+        w.draining = True            # lazily evicted from the WorkerIndex
+        now = self.clock()
+        self._drains[worker_id] = DrainState(
+            worker_id, now,
+            deadline_at=None if deadline_s is None else now + deadline_s)
+        self._dispatch_moves(worker_id)
+        return True
+
+    def cancel_drain(self, worker_id: str) -> bool:
+        """Abort a drain (demand returned): the worker becomes placeable
+        again. Already-migrated objects stay where they landed -- extra
+        replicas are harmless."""
+        w = self.workers.get(worker_id)
+        if w is None or not w.draining:
+            return False
+        w.draining = False
+        self._drains.pop(worker_id, None)
+        self.index.touch(w)          # re-surface in the placement heaps
+        self.schedule()
+        return True
+
+    def drain_status(self, worker_id: str) -> Optional[DrainState]:
+        return self._drains.get(worker_id)
+
+    def draining_workers(self) -> List[str]:
+        return list(self._drains)
+
+    def worker_seq(self, worker_id: str) -> int:
+        """Join order of a live worker (reverse-join release policies)."""
+        return self.index.seq_of(worker_id)
+
+    def _dispatch_moves(self, worker_id: str):
+        """Plan + dispatch migrations for every at-risk hot object on the
+        draining node. At-risk = no copy on a live, *non-draining* node:
+        a holder that is itself draining is not a survivor (two draining
+        nodes must not each count the other as cover and drop the last
+        copies). Called again from drain_complete(): a running task that
+        finishes *during* the drain may store fresh results on the node,
+        and a holder that started draining since the last scan re-arms."""
+        st = self._drains.get(worker_id)
+        if st is None:
+            return
+        objs = self.store.objects_on(worker_id)
+        if not objs:
+            return
+        draining = set(self._drains)
+        # hoisted per scan, not per object: the hot-dependency set (one
+        # pass over tasks) and the ordered survivor list
+        active = (TaskState.PENDING, TaskState.READY, TaskState.RUNNING)
+        hot_deps = {d.id for t in self.graph.tasks.values()
+                    if t.state in active for d in t.deps}
+        cands = sorted(
+            (w for w in self.workers.values()
+             if w.alive and not w.draining and w.id != worker_id
+             and self.store.has_node(w.id)),
+            key=lambda w: (w.load, self.index.seq_of(w.id)))
+        head_ok = self.store.has_node("head")
+        for oid, ref in objs.items():
+            if oid in st.pending or oid in st.moved:
+                continue
+            covered = any(n != worker_id and n not in draining
+                          and self.store.has_node(n)
+                          for n in self.store.locations(ref))
+            if covered:
+                continue   # not memoized: cover is re-checked every scan
+            if self.store.refcount(oid) <= 0 and oid not in hot_deps:
+                st.moved.add(oid)    # cold: dropping it costs nothing
+                continue
+            if cands:
+                dst = cands[st.rr % len(cands)].id
+                st.rr += 1
+            elif head_ok:
+                dst = "head"
+            else:
+                st.moved.add(oid)    # no survivor: degrade to drop+lineage
+                continue
+            st.pending.add(oid)
+            st.planned += 1
+            if self.migrate_fn is not None:
+                self.migrate_fn(worker_id, ref, dst)
+            elif self.store.migrate(ref, worker_id, dst):
+                self.note_migrated(worker_id, ref)
+            else:
+                # destination vanished mid-call: re-plan on the next scan
+                self.note_migration_failed(worker_id, ref)
+
+    def note_migrated(self, worker_id: str, ref: ObjectRef):
+        """One migration landed (called by the backend's migrate executor)."""
+        st = self._drains.get(worker_id)
+        if st is None:
+            return
+        if ref.id in st.pending:
+            st.pending.discard(ref.id)
+            st.moved.add(ref.id)
+            self.stats["migrated_objects"] += 1
+
+    def note_migration_failed(self, worker_id: str, ref: ObjectRef):
+        """A dispatched move could not land (e.g. its destination died):
+        put the object back on the planning table -- the next
+        drain_complete() scan re-plans it toward a live survivor."""
+        st = self._drains.get(worker_id)
+        if st is None:
+            return
+        st.pending.discard(ref.id)
+
+    def check_drains(self, now: Optional[float] = None):
+        """Deadline enforcement: preempt (requeue) tasks still running on a
+        draining worker past its deadline. Preemption is not a failure --
+        it does not count against max_retries."""
+        now = self.clock() if now is None else now
+        preempted = False
+        for wid, st in list(self._drains.items()):
+            w = self.workers.get(wid)
+            if w is None or st.deadline_at is None or now < st.deadline_at:
+                continue
+            for tid in list(w.running):
+                task = self.graph.tasks[tid]
+                self.cancel_fn(task, wid)
+                self._release(task)
+                task.state = TaskState.READY if self._deps_live(task) \
+                    else TaskState.PENDING
+                if task.state == TaskState.PENDING:
+                    self.graph.rewait(task)
+                task.worker = None
+                # preemption is the cluster's choice, not the task's fault:
+                # give back the attempt that schedule() will re-charge
+                task.attempts = max(0, task.attempts - 1)
+                self.stats["preempted"] += 1
+                preempted = True
+        if preempted:
+            self.schedule()
+
+    def drain_complete(self, worker_id: str) -> bool:
+        """True once the worker has no running tasks and every planned
+        migration has landed (re-scans for results produced mid-drain)."""
+        w = self.workers.get(worker_id)
+        st = self._drains.get(worker_id)
+        if w is None or st is None:
+            return False
+        if w.running:
+            return False
+        self._dispatch_moves(worker_id)      # pick up late-arriving objects
+        return not st.pending
+
+    def finish_drain(self, worker_id: str) -> bool:
+        """Release a fully drained worker. Nothing hot is lost: migrations
+        already moved every solely-held hot object, so unregistering the
+        node only drops redundant or cold copies."""
+        if not self.drain_complete(worker_id):
+            return False
+        self._remove_node(worker_id)         # loses cold/covered copies only
+        self.stats["drained"] += 1
+        self.schedule()
         return True
 
     def heartbeat(self, worker_id: str):
@@ -230,6 +446,11 @@ class Scheduler:
                 # dep already materialized (e.g. cluster.put artifacts)
                 self.graph.mark_available(d.id)
         self.graph.add(task)
+        if task.state == TaskState.PENDING:
+            # a dep may have been dropped before submission (e.g. its node
+            # was retired on the drop path): lineage re-executes producers;
+            # deterministic output ids make the reborn object wake this task
+            self._reconstruct_missing(task)
         self.schedule()
         return task
 
@@ -260,7 +481,7 @@ class Scheduler:
         req = task.spec.resources
         best, best_key = None, None
         for w in self.workers.values():
-            if not w.alive or not w.fits(req):
+            if not w.alive or w.draining or not w.fits(req):
                 continue
             key = (self._locality_score(task, w), -w.load)
             if best_key is None or key > best_key:
@@ -277,7 +498,7 @@ class Scheduler:
             holders = {wid for d in task.deps for wid in self.store.locations(d)}
             for wid in holders:
                 w = self.workers.get(wid)
-                if w is None or not w.alive or not w.fits(req):
+                if w is None or not w.alive or w.draining or not w.fits(req):
                     continue
                 score = self._locality_score(task, w)
                 if score <= 0:
@@ -318,10 +539,13 @@ class Scheduler:
 
     # -- completion events -----------------------------------------------------
 
-    def on_task_finished(self, task_id: str, output: ObjectRef):
+    def on_task_finished(self, task_id: str, output: ObjectRef,
+                         worker_id: Optional[str] = None):
         task = self.graph.tasks.get(task_id)
         if task is None or task.state not in (TaskState.RUNNING,):
             return
+        if worker_id is not None and task.worker != worker_id:
+            return   # stale report from a preempted/reassigned attempt
         task.state = TaskState.FINISHED
         task.finished_at = self.clock()
         task.output = output
@@ -344,14 +568,19 @@ class Scheduler:
             pass
         self.schedule()
 
-    def on_task_failed(self, task_id: str, error: str):
+    def on_task_failed(self, task_id: str, error: str,
+                       worker_id: Optional[str] = None):
         task = self.graph.tasks.get(task_id)
         if task is None or task.state != TaskState.RUNNING:
             return
+        if worker_id is not None and task.worker != worker_id:
+            return   # stale report from a preempted/reassigned attempt
         self._release(task)
         self.stats["failed"] += 1
         if task.attempts <= task.spec.max_retries:
             task.state = TaskState.READY if self._deps_live(task) else TaskState.PENDING
+            if task.state == TaskState.PENDING:
+                self.graph.rewait(task)
             task.error = error
             self.stats["retried"] += 1
             self._reconstruct_missing(task)
@@ -383,12 +612,15 @@ class Scheduler:
             self._release(task)
             if task.attempts <= task.spec.max_retries:
                 task.state = TaskState.READY if self._deps_live(task) else TaskState.PENDING
+                if task.state == TaskState.PENDING:
+                    self.graph.rewait(task)
                 self.stats["retried"] += 1
                 self._reconstruct_missing(task)
             else:
                 task.state = TaskState.FAILED
                 task.error = f"worker {worker_id} {reason}"
         self.index.remove(worker_id)
+        self._drains.pop(worker_id, None)    # a dying drain is just a failure
         del self.workers[worker_id]
         self.schedule()
 
@@ -408,6 +640,8 @@ class Scheduler:
                                   TaskState.CANCELLED):
                 producer.state = TaskState.READY if self._deps_live(producer) \
                     else TaskState.PENDING
+                if producer.state == TaskState.PENDING:
+                    self.graph.rewait(producer)
                 producer.attempts = 0
                 producer.output = None
                 self.store.note_reconstruction()
@@ -444,7 +678,8 @@ class Scheduler:
         """Reserve resources for a gang; returns False if unsatisfiable."""
         binding: Dict[int, str] = {}
         used: Dict[str, Dict[str, float]] = {}
-        workers = [w for w in self.workers.values() if w.alive]
+        workers = [w for w in self.workers.values()
+                   if w.alive and not w.draining]
         for i, bundle in enumerate(bundles):
             placed = False
             for w in sorted(workers, key=lambda w: len(w.running)):

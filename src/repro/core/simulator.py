@@ -33,6 +33,14 @@ class SimCostModel:
     dispatch_overhead_s: float = 0.002        # head-side serial dispatch
     head_bandwidth_Bps: float = 1.0e9         # 10GbE-ish effective
     jitter: float = 0.05                      # lognormal-ish runtime noise
+    # drain-pipeline costs: worker-to-worker object migration runs over the
+    # node NICs, not the serialized head link
+    migration_bandwidth_Bps: float = 1.0e9
+    migration_overhead_s: float = 0.001       # per-object control message
+    # where task results materialize: "head" (seed behavior: artifacts land
+    # on the head store) or "worker" (Ray-faithful: the producer's node
+    # store owns the primary copy -- what drains must migrate)
+    result_location: str = "head"
 
 
 class SimCluster:
@@ -49,6 +57,8 @@ class SimCluster:
         self.store = GlobalObjectStore()
         self.scheduler = Scheduler(self.store, self._launch, lambda t, w: None,
                                    scheduler_config, clock=lambda: self.now)
+        # drains execute migrations with modeled transfer latency
+        self.scheduler.migrate_fn = self._migrate_object
         self._head_store = NodeStore("head", capacity_bytes=1 << 30)
         self.store.register_node(self._head_store)
         self._head_link_free = 0.0   # serialized head NIC
@@ -128,6 +138,44 @@ class SimCluster:
             self.scheduler.on_worker_failed(worker_id, reason="injected")
         self._post(max(0.0, t - self.now), fail)
 
+    # -- drain pipeline (graceful retirement with object migration) ------------
+
+    def _migrate_object(self, worker_id: str, ref, dst: str):
+        """Scheduler migrate hook: one object moves worker -> survivor after
+        a modeled transfer delay (size / node NIC bandwidth)."""
+        delay = (self.cost.migration_overhead_s
+                 + ref.size / self.cost.migration_bandwidth_Bps)
+
+        def land():
+            if self.store.migrate(ref, worker_id, dst):
+                self.scheduler.note_migrated(worker_id, ref)
+            else:
+                # destination died or object already settled: re-plan
+                self.scheduler.note_migration_failed(worker_id, ref)
+        self._post(delay, land)
+
+    def drain_worker_at(self, worker_id: str, t: float,
+                        deadline_s: Optional[float] = None,
+                        poll_every: float = 0.05):
+        """Eviction notice at virtual time `t`: the worker enters DRAINING
+        (no new placements), running tasks finish -- or are preempted
+        `deadline_s` after the notice -- hot objects migrate to survivors,
+        and the node is then released. The graceful twin of fail_worker_at."""
+        def poll():
+            if worker_id not in self.scheduler.workers:
+                return                        # failed or already released
+            self.scheduler.check_drains(self.now)
+            if self.scheduler.drain_complete(worker_id) \
+                    and self.scheduler.finish_drain(worker_id):
+                self.release_workers([worker_id])
+                return
+            self._post(poll_every, poll)
+
+        def start():
+            if self.scheduler.begin_drain(worker_id, deadline_s):
+                poll()
+        self._post(max(0.0, t - self.now), start)
+
     # -- submission --------------------------------------------------------------------
 
     def submit(self, spec: TaskSpec, deps=None) -> Task:
@@ -161,8 +209,18 @@ class SimCluster:
                 cur2 = self.scheduler.graph.tasks.get(task.id)
                 if cur2 is None or cur2.state != TaskState.RUNNING:
                     return
-                ref = self.store.put("head", {"task": task.id},
-                                     producer_task=task.id)
+                # "worker": the producer's node store owns the primary copy
+                # (Ray-faithful -- this is what a drain must migrate);
+                # "head": seed behavior, artifacts land on the head store
+                node = worker_id if (self.cost.result_location == "worker"
+                                     and self.store.has_node(worker_id)) \
+                    else "head"
+                payload = {"task": task.id,
+                           "bytes": int(self.cost.result_bytes(task.spec))}
+                # deterministic output id: a reconstructed producer revives
+                # the same object id, waking tasks that waited on it
+                ref = self.store.put(node, payload, producer_task=task.id,
+                                     ref_id=f"obj-{task.id}")
                 self.scheduler.on_task_finished(task.id, ref)
                 self.completed.append(cur2)
             self._post(done_at - self.now, deliver)
@@ -188,6 +246,7 @@ class SimCluster:
             if not in_flight():
                 return
             self.scheduler.check_stragglers()
+            self.scheduler.check_drains(self.now)
             if self.autoscaler is not None:
                 self.autoscaler.tick(self.now)
             self._post(monitor_every, monitor)
@@ -228,6 +287,7 @@ class SimCluster:
 
         def monitor():
             self.scheduler.check_stragglers()
+            self.scheduler.check_drains(self.now)
             if self.autoscaler is not None:
                 self.autoscaler.tick(self.now)
             if settled():

@@ -99,6 +99,14 @@ class TaskGraph:
     def object_lost(self, object_id: str):
         self._available.discard(object_id)
 
+    def rewait(self, task: Task):
+        """Re-register a requeued task for its not-yet-available deps, so
+        the (reconstructed) producer's object_available wakes it again --
+        graph.add only registered the *first* attempt."""
+        for d in task.deps:
+            if d.id not in self._available:
+                self._waiting_on.setdefault(d.id, set()).add(task.id)
+
     def ready_tasks(self) -> List[Task]:
         return [t for t in self.tasks.values() if t.state == TaskState.READY]
 

@@ -103,29 +103,50 @@ class HeadServer:
             wid = msg["worker"]
             with c._lock:
                 c.scheduler.heartbeat(wid)
+                w = c.scheduler.workers.get(wid)
+                draining = bool(w and w.draining)
             box = self._outbox.get(wid, [])
             if not box:
-                return {"ok": True, "task": None}
+                # a drained worker with an empty queue may exit: the head
+                # finishes the drain once migrations land and tasks stop
+                return {"ok": True, "task": None, "draining": draining}
             tid = box.pop(0)
             with c._lock:
                 task = c.scheduler.graph.tasks[tid]
                 payload = _enc((task.spec.fn, task.spec.args, task.spec.kwargs,
                                 [c.store.get("head", d) for d in task.deps]))
-            return {"ok": True, "task": tid, "payload": payload}
+            return {"ok": True, "task": tid, "payload": payload,
+                    "draining": draining}
         if op == "result":
             tid, wid = msg["task"], msg["worker"]
             value = _dec(msg["payload"])
-            ref = c.store.put("head", value, producer_task=tid)
+            ref = c.store.put("head", value, producer_task=tid,
+                              ref_id=f"obj-{tid}")
             with c._lock:
-                c.scheduler.on_task_finished(tid, ref)
+                c.scheduler.on_task_finished(tid, ref, worker_id=wid)
             ev = c._futures.get(tid)
             if ev:
                 ev.set()
             return {"ok": True}
         if op == "error":
             with c._lock:
-                c.scheduler.on_task_failed(msg["task"], msg["err"])
+                c.scheduler.on_task_failed(msg["task"], msg["err"],
+                                           worker_id=msg.get("worker"))
             return {"ok": True}
+        if op == "drain":
+            # eviction notice for a remote worker: the outer resource
+            # manager (or an operator) asks the head to retire this node
+            wid = msg["worker"]
+            with c._lock:
+                ok = c.scheduler.begin_drain(wid, msg.get("deadline_s"))
+            return {"ok": ok, "worker": wid}
+        if op == "drain_status":
+            wid = msg["worker"]
+            with c._lock:
+                complete = c.scheduler.drain_complete(wid)
+                if complete:
+                    c.scheduler.finish_drain(wid)
+            return {"ok": True, "worker": wid, "complete": complete}
         if op == "stats":
             with c._lock:
                 return {"ok": True, "stats": dict(c.scheduler.stats)}
@@ -163,6 +184,13 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
         got = _request(ep.host, ep.port, token, {"op": "poll", "worker": wid})
         tid = got.get("task")
         if tid is None:
+            if got.get("draining"):
+                # exit only when the head confirms the drain finished --
+                # a cancelled drain (backlog returned) keeps us serving
+                status = _request(ep.host, ep.port, token,
+                                  {"op": "drain_status", "worker": wid})
+                if status.get("complete"):
+                    return
             time.sleep(0.05)
             continue
         idle_since = time.monotonic()

@@ -300,8 +300,11 @@ def test_slurm_elastic_artifacts():
     down = b.release_workers(_req(), "abc123", ["node7", "node9"])
     sh = next(iter(down.values()))
     assert "State=DRAIN" in sh and "node7" in sh and "node9" in sh
-    # scancel is scoped to the retired nodes, not every scale-up batch
-    assert "--nodelist=node7,node9" in sh
+    # worker ids are resolved to hostnames through the rendezvous mapping
+    # before any scontrol/scancel touches them
+    assert "$MAP/node7.host" in sh and "$MAP/node9.host" in sh
+    # scancel is scoped to the resolved hosts, not every scale-up batch
+    assert "--nodelist=$HOSTS" in sh
 
 
 def test_k8s_elastic_artifacts():
@@ -328,6 +331,82 @@ def test_gcp_tpu_elastic_artifacts():
     assert "queued-resources delete syndeo-abc123-3" in down
 
 
+def test_gcp_tpu_release_prefers_reverse_join_order():
+    """Released slices are deleted most-recently-joined first, so pod 0
+    (the jax.distributed coordinator) and the low ranks stay stable."""
+    b = GcpTpuBackend(ContainerSpec())
+    ids = ["syndeo-abc123-1", "syndeo-abc123-7", "syndeo-abc123-3"]
+    down = next(iter(b.release_workers(_req(), "abc123", ids).values()))
+    pos = {wid: down.index(f"queued-resources delete {wid}") for wid in ids}
+    assert pos["syndeo-abc123-7"] < pos["syndeo-abc123-3"] \
+        < pos["syndeo-abc123-1"]
+
+
+def test_release_workers_renders_drain_deadline():
+    """The drain deadline reaches every backend's release artifact."""
+    gcp = next(iter(GcpTpuBackend(ContainerSpec()).release_workers(
+        _req(), "abc123", ["syndeo-abc123-2"],
+        drain_deadline_s=120.0).values()))
+    assert "sleep 120" in gcp
+    slurm = next(iter(SlurmBackend(ContainerSpec()).release_workers(
+        _req(), "abc123", ["node3"], drain_deadline_s=60.0).values()))
+    assert "sleep 60" in slurm
+    k8s = next(iter(KubernetesBackend(ContainerSpec()).release_workers(
+        _req(), "abc123", ["pod-a"], drain_deadline_s=30.0).values()))
+    assert "--timeout=30s" in k8s
+
+
+def test_slurm_worker_id_hostname_reconciliation():
+    """Workers join under $(hostname) and record the id -> host mapping, so
+    the scale-down artifact drains exactly the right nodes."""
+    b = SlurmBackend(ContainerSpec())
+    boot = b.render_artifacts(_req(), "abc123")
+    sbatch = boot["submit_abc123.sbatch"]
+    assert '--worker-id "$(hostname)"' in sbatch
+    assert "rdv/workers/$(hostname).host" in sbatch
+    up = next(iter(b.provision_workers(_req(), "abc123", 2).values()))
+    assert '--worker-id "$(hostname)"' in up
+    assert "rdv/workers/$(hostname).host" in up
+
+
+def test_backend_cooldown_defaults():
+    """gcp_tpu cooldowns are minutes-scale (queued-resource latency);
+    local/sim react in seconds; overrides win."""
+    gcp = AutoscalerConfig.for_backend("gcp_tpu")
+    assert gcp.scale_up_cooldown_s >= 60.0
+    assert gcp.scale_down_cooldown_s >= 300.0
+    assert gcp.idle_timeout_s >= 60.0
+    assert gcp.release_order == "reverse_join"
+    for name in ("local", "sim"):
+        cfg = AutoscalerConfig.for_backend(name)
+        assert cfg.scale_up_cooldown_s <= 5.0
+        assert cfg.scale_down_cooldown_s <= 60.0
+        assert cfg.release_order == "idle"
+    assert AutoscalerConfig.for_backend("gcp_tpu",
+                                        max_workers=4).max_workers == 4
+
+
+def test_reverse_join_release_order_picks_newest_workers():
+    """With release_order="reverse_join", ripe victims are the most
+    recently joined workers, not the longest idle."""
+    tnow = [0.0]
+    _, sched = _mk_scheduler(clock=lambda: tnow[0])
+    for i in range(4):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    released = []
+    auto = Autoscaler(sched, lambda n, res: n, released.extend,
+                      AutoscalerConfig(min_workers=2, idle_timeout_s=0.0,
+                                       scale_down_cooldown_s=0.0,
+                                       max_scale_down_step=8,
+                                       release_order="reverse_join"),
+                      clock=lambda: tnow[0])
+    tnow[0] = 10.0
+    ev = auto.tick()
+    assert ev is not None and ev.action == "scale_down"
+    assert released == ["w3", "w2"]          # newest first, min kept
+    assert set(sched.workers) == {"w0", "w1"}
+
+
 def test_base_backend_not_elastic_by_default():
     class Dummy(Backend):
         name = "dummy"
@@ -350,6 +429,87 @@ def test_sim_backend_provisions_into_simcluster():
     assert len(sim.scheduler.workers) == 1     # join is delayed
     sim.run()
     assert len(sim.scheduler.workers) == 4
+
+
+# ------------------------------------------------------- drain-before-release
+
+def test_autoscaler_scale_down_drains_and_migrates():
+    """Idle scale-down on the sim backend with worker-resident objects:
+    the victims' objects migrate to survivors (no recompute) before the
+    release event fires."""
+    cost = SimCostModel(task_time_s=lambda s: 0.2, result_bytes=lambda s: 512.0,
+                        jitter=0.0, result_location="worker")
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    sim.add_workers(6)
+    sim.attach_autoscaler(
+        AutoscalerConfig(min_workers=2, max_workers=6,
+                         idle_timeout_s=1.0, scale_down_cooldown_s=0.5,
+                         max_scale_down_step=8, drain_deadline_s=2.0),
+        provision_delay_s=0.3)
+    ids = sim.run_scenario(
+        [(0.1, TaskSpec(fn=None, max_retries=10)) for _ in range(12)],
+        tick_every=0.1, drain_s=6.0)
+    assert {sim.scheduler.graph.tasks[i].state for i in ids} \
+        == {TaskState.FINISHED}
+    assert len(sim.scheduler.workers) == 2       # drained back to min
+    downs = [e for e in sim.autoscaler.events if e.action == "scale_down"]
+    assert downs and sum(e.count for e in downs) == 4
+    # released workers' outputs were migrated, not dropped: all readable
+    for i in ids:
+        out = sim.scheduler.graph.tasks[i].output
+        assert sim.store.locations(out) <= set(sim.scheduler.workers) | {"head"}
+        sim.store.get("head", out)
+    assert sim.store.stats["reconstructions"] == 0
+    assert sim.scheduler.stats["drained"] == 4
+
+
+def test_backlog_cancels_inflight_drains():
+    """Demand returning while a drain is in flight un-drains the worker
+    instead of releasing + re-provisioning."""
+    tnow = [0.0]
+    _, sched = _mk_scheduler(clock=lambda: tnow[0])
+    for i in range(3):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    released = []
+    auto = Autoscaler(sched, lambda n, res: n, released.extend,
+                      AutoscalerConfig(min_workers=1, idle_timeout_s=1.0,
+                                       scale_down_cooldown_s=0.0,
+                                       max_scale_down_step=8),
+                      clock=lambda: tnow[0])
+    # pin the drains open: pretend migrations are in flight
+    sched.migrate_fn = lambda wid, ref, dst: None
+    tnow[0] = 5.0
+    auto.tick()
+    # force at least one drain to stay open by marking a pending move
+    if auto._draining:
+        wid = next(iter(auto._draining))
+        sched._drains[wid].pending.add("synthetic-object")
+        for _ in range(6):
+            sched.submit(TaskSpec(fn=None))
+        tnow[0] = 6.0
+        auto.tick()
+        assert wid not in auto._draining          # drain cancelled
+        assert not sched.workers[wid].draining    # placeable again
+    # make the no-op explicit if every drain completed synchronously:
+    # idle workers without objects release immediately, which is also fine
+
+
+def test_drained_release_reaches_backend_hook():
+    """SimBackend.release_workers drains workers still registered instead
+    of dropping them."""
+    cost = SimCostModel(task_time_s=lambda s: 0.05, jitter=0.0,
+                        result_location="worker")
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    sim.add_workers(3)
+    sim.run_wave([TaskSpec(fn=None) for _ in range(6)])
+    b = SimBackend(ContainerSpec(), sim)
+    b.release_workers(AllocationRequest(nodes=1), "abc123", ["w0"],
+                      drain_deadline_s=1.0)
+    sim.run()
+    assert "w0" not in sim.scheduler.workers
+    assert sim.store.stats["reconstructions"] == 0
 
 
 # --------------------------------------------------------------- end to end

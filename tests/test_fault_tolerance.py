@@ -1,0 +1,316 @@
+"""Chaos fault-injection harness for the drain pipeline.
+
+Randomized scenarios kill (`fail_worker_at`) and drain (`drain_worker_at`)
+workers mid-wave on the virtual-clock backend, which drives the *real*
+Scheduler / GlobalObjectStore code. The invariants under test:
+
+  * every submitted task still reaches FINISHED -- never FAILED -- no
+    matter when workers die or drain (>= 25 seeded scenarios),
+  * after a drain completes, no object read ever raises: every object
+    that was fetchable before the drain is fetchable after it,
+  * drains are provably no worse than recompute: migrated hot objects are
+    served from survivors with ZERO lineage re-execution of their
+    producers (the drop path, by contrast, must re-execute).
+
+Seeds come through the hypothesis fallback when hypothesis is missing, so
+runs are reproducible either way.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover -- bare container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import (SchedulerConfig, SimCluster, SimCostModel, TaskSpec,
+                        TaskState)
+
+TERMINAL = {TaskState.FINISHED, TaskState.FAILED, TaskState.CANCELLED}
+
+
+def _mk_sim(seed: int, n_workers: int = 6, task_s: float = 0.1) -> SimCluster:
+    cost = SimCostModel(task_time_s=lambda s: task_s,
+                        result_bytes=lambda s: 4096.0, jitter=0.1,
+                        result_location="worker")
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9), seed=seed)
+    sim.add_workers(n_workers)
+    return sim
+
+
+def _run_until_terminal(sim: SimCluster, ids, horizon_s: float = 300.0):
+    """Drive the sim until every task in `ids` is terminal (monitor ticks
+    keep drains/stragglers moving), with a virtual-time safety horizon."""
+    deadline = sim.now + horizon_s
+
+    def monitor():
+        if sim.now > deadline:
+            raise AssertionError("chaos scenario did not converge")
+        sim.scheduler.check_stragglers()
+        sim.scheduler.check_drains(sim.now)
+        if {sim.scheduler.graph.tasks[i].state for i in ids} <= TERMINAL:
+            return
+        sim._post(0.05, monitor)
+
+    sim._post(0.05, monitor)
+    sim.run()
+    states = {sim.scheduler.graph.tasks[i].state for i in ids}
+    assert states <= TERMINAL, f"non-terminal tasks remain: {states}"
+
+
+def _produce(sim: SimCluster, n: int):
+    """Run a producer wave; return the output refs (spread over workers)."""
+    sim.run_wave([TaskSpec(fn=None, group="produce", max_retries=10)
+                  for _ in range(n)])
+    refs = [t.output for t in sim.scheduler.graph.tasks.values()
+            if t.output is not None]
+    assert len(refs) == n
+    return refs
+
+
+def _fetchable(sim: SimCluster, refs):
+    return {r.id for r in refs if sim.store.locations(r)}
+
+
+# ------------------------------------------------------------- chaos harness
+
+@pytest.mark.parametrize("seed", range(25))
+def test_chaos_kill_and_drain_mid_wave(seed):
+    """>= 25 randomized scenarios: workers are killed and drained at random
+    times while a dependent two-stage wave is in flight. Every task must
+    complete, nothing may end FAILED, and after the run every object the
+    consumers still reference is readable."""
+    rng = random.Random(seed)
+    n_workers = 6
+    sim = _mk_sim(seed, n_workers=n_workers, task_s=0.1)
+    refs = _produce(sim, rng.randint(8, 16))
+
+    # consumers depend on 1-3 random producer outputs each
+    t0 = sim.now
+    ids = []
+    for _ in range(rng.randint(10, 20)):
+        deps = rng.sample(refs, rng.randint(1, 3))
+        ids.append(sim.submit(TaskSpec(fn=None, group="consume",
+                                       max_retries=10), deps=deps).id)
+
+    # chaos: at most n_workers - 2 removals so the wave can always finish
+    workers = [f"w{i}" for i in range(n_workers)]
+    rng.shuffle(workers)
+    n_remove = rng.randint(1, n_workers - 2)
+    for wid in workers[:n_remove]:
+        at = t0 + rng.uniform(0.0, 1.0)
+        if rng.random() < 0.5:
+            sim.fail_worker_at(wid, at)
+        else:
+            deadline = rng.choice([None, 0.05, 0.3])
+            sim.drain_worker_at(wid, at, deadline_s=deadline)
+
+    _run_until_terminal(sim, ids)
+    states = [sim.scheduler.graph.tasks[i].state for i in ids]
+    assert all(s == TaskState.FINISHED for s in states), states
+
+    # no object read raises once the dust settles: anything with a live
+    # copy must actually deserialize (a *kill* may legitimately take sole
+    # copies with it -- that is what lineage is for -- but a read of any
+    # surviving object, migrated or not, must work)
+    for i in ids:
+        out = sim.scheduler.graph.tasks[i].output
+        assert out is not None
+        if sim.store.locations(out):
+            sim.store.get("head", out)
+    for r in refs:
+        if sim.store.locations(r):
+            sim.store.get("head", r)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_chaos_drain_only_never_loses_objects(seed):
+    """Drain-only chaos: with no failures injected, a drain may never cost
+    an object nor a lineage re-execution -- reads after the drain are
+    served from survivors."""
+    rng = random.Random(1000 + seed)
+    n_workers = 5
+    sim = _mk_sim(1000 + seed, n_workers=n_workers, task_s=0.08)
+    refs = _produce(sim, rng.randint(6, 12))
+    pre = _fetchable(sim, refs)
+    assert pre == {r.id for r in refs}
+
+    t0 = sim.now
+    ids = [sim.submit(TaskSpec(fn=None, group="consume", max_retries=10),
+                      deps=[rng.choice(refs)]).id
+           for _ in range(rng.randint(6, 12))]
+    workers = [f"w{i}" for i in range(n_workers)]
+    rng.shuffle(workers)
+    for wid in workers[:rng.randint(1, n_workers - 2)]:
+        sim.drain_worker_at(wid, t0 + rng.uniform(0.0, 0.5),
+                            deadline_s=rng.choice([None, 0.2]))
+
+    reconstructed_before = sim.scheduler.stats["reconstructed"]
+    _run_until_terminal(sim, ids)
+
+    assert all(sim.scheduler.graph.tasks[i].state == TaskState.FINISHED
+               for i in ids)
+    assert _fetchable(sim, refs) == pre
+    for r in refs:
+        sim.store.get("head", r)          # must not raise
+    assert sim.scheduler.stats["reconstructed"] == reconstructed_before
+    assert sim.store.stats["reconstructions"] == 0
+
+
+# ------------------------------------------------- drain-preservation property
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(1, 6))
+def test_drain_preserves_fetchable_set(seed, n_workers, n_drain):
+    """Property: after draining ANY subset of workers (always leaving one
+    survivor), the fetchable object set equals the pre-drain set, migrated
+    objects are served from survivors, and ZERO producer tasks re-execute
+    for hot objects."""
+    rng = random.Random(seed)
+    sim = _mk_sim(seed, n_workers=n_workers, task_s=0.05)
+    refs = _produce(sim, rng.randint(4, 12))
+    pre = _fetchable(sim, refs)
+    pre_locs = {r.id: set(sim.store.locations(r)) for r in refs}
+
+    victims = [f"w{i}" for i in range(min(n_drain, n_workers - 1))]
+    drained = set(victims)
+    for wid in victims:
+        sim.drain_worker_at(wid, sim.now)
+    sim.run()
+
+    for wid in victims:
+        assert wid not in sim.scheduler.workers     # release happened
+    assert _fetchable(sim, refs) == pre
+    for r in refs:
+        locs = sim.store.locations(r)
+        assert locs and not (locs & drained)        # served by survivors
+        sim.store.get("head", r)                    # and actually readable
+    # zero lineage re-execution for hot objects -- drains moved, not dropped
+    assert sim.scheduler.stats["reconstructed"] == 0
+    assert sim.store.stats["reconstructions"] == 0
+    # every object that lived only on drained workers needed >= 1 move
+    # (chained drains may move an object more than once)
+    solely_on_drained = sum(1 for r in refs if pre_locs[r.id] <= drained)
+    assert sim.store.stats["migrations"] >= solely_on_drained
+
+
+def test_drop_retirement_reexecutes_drain_does_not():
+    """The head-to-head: retiring object-holding workers via the drop path
+    (retire_worker) forces lineage re-execution when consumers arrive;
+    the drain path serves every consumer without recompute."""
+    results = {}
+    for mode in ("drop", "drain"):
+        sim = _mk_sim(42, n_workers=6, task_s=0.05)
+        refs = _produce(sim, 12)
+        victims = sorted({next(iter(sim.store.locations(r))) for r in refs})[:3]
+        if mode == "drain":
+            for wid in victims:
+                sim.drain_worker_at(wid, sim.now)
+            sim.run()
+        else:
+            for wid in victims:
+                assert sim.scheduler.retire_worker(wid)
+        before = sim.scheduler.stats["reconstructed"]
+        ids = [sim.submit(TaskSpec(fn=None, group="consume",
+                                   max_retries=10), deps=[r]).id
+               for r in refs]
+        _run_until_terminal(sim, ids)
+        assert all(sim.scheduler.graph.tasks[i].state == TaskState.FINISHED
+                   for i in ids)
+        results[mode] = sim.scheduler.stats["reconstructed"] - before
+    assert results["drain"] == 0
+    assert results["drop"] > 0
+
+
+# ---------------------------------------------------------- drain lifecycle
+
+def test_draining_worker_gets_no_new_placements():
+    sim = _mk_sim(0, n_workers=2, task_s=0.2)
+    sim.scheduler.begin_drain("w0")
+    ids = [sim.submit(TaskSpec(fn=None, max_retries=10)).id
+           for _ in range(4)]
+    _run_until_terminal(sim, ids)
+    assert all(sim.scheduler.graph.tasks[i].worker == "w1" for i in ids)
+
+
+def test_busy_worker_drains_after_tasks_finish():
+    sim = _mk_sim(0, n_workers=2, task_s=0.3)
+    ids = [sim.submit(TaskSpec(fn=None, max_retries=10)).id
+           for _ in range(2)]
+    sim.drain_worker_at("w0", 0.05)     # both workers busy at the notice
+    _run_until_terminal(sim, ids)
+    assert "w0" not in sim.scheduler.workers
+    assert all(sim.scheduler.graph.tasks[i].state == TaskState.FINISHED
+               for i in ids)
+    assert sim.scheduler.stats["preempted"] == 0   # no deadline: tasks ran out
+
+
+def test_drain_deadline_preempts_and_requeues():
+    sim = _mk_sim(0, n_workers=2, task_s=5.0)
+    t = sim.submit(TaskSpec(fn=None, max_retries=10))
+    assert t.state == TaskState.RUNNING
+    victim = t.worker
+    sim.drain_worker_at(victim, 0.1, deadline_s=0.2)
+    _run_until_terminal(sim, [t.id], horizon_s=60.0)
+    assert sim.scheduler.stats["preempted"] >= 1
+    assert t.state == TaskState.FINISHED
+    assert t.worker != victim           # finished on the survivor
+    assert victim not in sim.scheduler.workers
+
+
+def test_cancel_drain_restores_placement():
+    sim = _mk_sim(0, n_workers=1, task_s=0.05)
+    assert sim.scheduler.begin_drain("w0")
+    t = sim.submit(TaskSpec(fn=None, max_retries=10))
+    assert t.state == TaskState.READY    # sole worker is draining
+    assert sim.scheduler.cancel_drain("w0")
+    assert t.state == TaskState.RUNNING and t.worker == "w0"
+    _run_until_terminal(sim, [t.id])
+
+
+def test_concurrent_drains_of_coholding_workers_keep_object():
+    """Two draining workers that hold the only two copies of an object must
+    not each count the other as a survivor: the object still ends up on a
+    real survivor with zero reconstruction."""
+    sim = _mk_sim(0, n_workers=3, task_s=0.05)
+    [ref] = _produce(sim, 1)
+    src = next(iter(sim.store.locations(ref)))
+    others = [w for w in ("w0", "w1", "w2") if w != src]
+    sim.store.get(others[0], ref)            # replicate: copies on 2 nodes
+    assert sim.store.locations(ref) == {src, others[0]}
+    sim.drain_worker_at(src, sim.now)
+    sim.drain_worker_at(others[0], sim.now)
+    sim.run()
+    assert src not in sim.scheduler.workers
+    assert others[0] not in sim.scheduler.workers
+    locs = sim.store.locations(ref)
+    assert locs and locs <= {others[1], "head"}
+    sim.store.get("head", ref)               # must not raise
+    assert sim.store.stats["reconstructions"] == 0
+
+
+def test_preemption_does_not_burn_retry_budget():
+    """A drain-deadline preemption must not count against max_retries."""
+    sim = _mk_sim(0, n_workers=2, task_s=2.0)
+    t = sim.submit(TaskSpec(fn=None, max_retries=0))   # zero retry budget
+    assert t.state == TaskState.RUNNING
+    victim = t.worker
+    sim.drain_worker_at(victim, 0.05, deadline_s=0.1)
+    _run_until_terminal(sim, [t.id], horizon_s=60.0)
+    assert sim.scheduler.stats["preempted"] >= 1
+    assert t.state == TaskState.FINISHED               # not FAILED
+    assert t.attempts == 1                             # relaunch re-charged it
+
+
+def test_migration_hands_off_owner():
+    sim = _mk_sim(0, n_workers=2, task_s=0.05)
+    [ref] = _produce(sim, 1)
+    src = next(iter(sim.store.locations(ref)))
+    assert sim.store.owner_of(ref) == src
+    sim.drain_worker_at(src, sim.now)
+    sim.run()
+    dst = sim.store.owner_of(ref)
+    assert dst is not None and dst != src
+    assert sim.store.locations(ref) == {dst}
