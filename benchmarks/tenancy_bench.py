@@ -1,0 +1,172 @@
+"""Multi-tenant fairness benchmark: fair-share (DRF) vs the FIFO baseline.
+
+Two equal-weight tenants contend for one fixed-size gang allocation on the
+REAL scheduler code (the simulation backend drives the same Scheduler /
+GlobalObjectStore as the threaded backend):
+
+  * "steady"  -- a constant arrival stream (an online-serving tenant),
+  * "bursty"  -- one large batch dropped mid-stream (a batch-training
+                 tenant), deliberately big enough to starve the steady
+                 tenant under arrival-order dispatch.
+
+Reported per policy ("fair" = per-tenant queues + weighted dominant-share
+picker, "fifo" = the seed's single global arrival-order queue):
+
+  * dominant-share gap -- mean |share(steady) - share(bursty)| sampled at
+    every scheduler tick *while both tenants have backlog* (equal weights
+    under contention should see equal dominant shares; the gap is the
+    fairness error),
+  * p50 / p99 task sojourn per tenant (virtual seconds from arrival to
+    finish) and per-tenant makespan.
+
+The fair-share scheduler must keep the dominant-share gap under
+FAIR_GAP_BOUND while FIFO starves the steady tenant (gap near 1, steady
+p99 blowing up). `--tenancy-smoke` runs a small instance and enforces
+exactly that -- it is the CI gate next to `--drain-smoke`.
+
+Run:  PYTHONPATH=src python benchmarks/tenancy_bench.py [--quick]
+      PYTHONPATH=src python benchmarks/tenancy_bench.py --tenancy-smoke
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Tuple
+
+from repro.core import SchedulerConfig, SimCluster, SimCostModel, TaskSpec
+from repro.core.task_graph import TaskState
+
+#: fairness bound the fair-share scheduler must hold (mean weighted
+#: dominant-share gap between equal-weight tenants while both are backlogged)
+FAIR_GAP_BOUND = 0.15
+#: the FIFO baseline must exhibit at least this much unfairness (otherwise
+#: the scenario is not actually contended and the comparison is vacuous)
+FIFO_GAP_FLOOR = 0.5
+#: FIFO must inflate the steady tenant's p99 sojourn by at least this factor
+STARVATION_FACTOR = 1.5
+
+
+def _quantile(sorted_xs: List[float], q: float) -> float:
+    if not sorted_xs:
+        return 0.0
+    i = min(len(sorted_xs) - 1, int(q * len(sorted_xs)))
+    return sorted_xs[i]
+
+
+def run_contention(policy: str, n_workers: int, steady_n: int,
+                   steady_every_s: float, burst_n: int, burst_at_s: float,
+                   task_s: float = 0.5, seed: int = 1) -> Dict[str, object]:
+    """One bursty-vs-steady contention run; returns fairness metrics."""
+    cost = SimCostModel(task_time_s=lambda s: task_s,
+                        result_bytes=lambda s: 100.0, jitter=0.0)
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9,
+                                           dispatch_policy=policy), seed=seed)
+    sim.add_workers(n_workers)
+    sim.register_tenant("steady", weight=1.0)
+    sim.register_tenant("bursty", weight=1.0)
+    streams = {
+        "steady": [(steady_every_s * i, TaskSpec(fn=None, group="steady"))
+                   for i in range(steady_n)],
+        "bursty": [(burst_at_s, TaskSpec(fn=None, group="bursty"))
+                   for _ in range(burst_n)],
+    }
+    gaps: List[float] = []
+
+    def on_tick(now: float):
+        backlog = sim.scheduler.backlog_by_tenant()
+        if backlog.get("steady", 0) and backlog.get("bursty", 0):
+            shares = sim.scheduler.tenant_shares()
+            gaps.append(abs(shares.get("steady", 0.0)
+                            - shares.get("bursty", 0.0)))
+
+    placed = sim.run_tenant_scenario(streams, tick_every=0.1,
+                                     on_tick=on_tick)
+    row: Dict[str, object] = {
+        "policy": policy,
+        "dominant_share_gap": sum(gaps) / len(gaps) if gaps else 0.0,
+        "contended_samples": len(gaps),
+    }
+    for tenant, pairs in placed.items():
+        sojourns = sorted(
+            sim.scheduler.graph.tasks[tid].finished_at - t
+            for t, tid in pairs
+            if sim.scheduler.graph.tasks[tid].state == TaskState.FINISHED)
+        done = len(sojourns)
+        row[f"{tenant}_done"] = done
+        row[f"{tenant}_p50_s"] = _quantile(sojourns, 0.50)
+        row[f"{tenant}_p99_s"] = _quantile(sojourns, 0.99)
+        row[f"{tenant}_makespan_s"] = (
+            max((sim.scheduler.graph.tasks[tid].finished_at or 0.0)
+                for _, tid in pairs) - min(t for t, _ in pairs)
+            if pairs else 0.0)
+    return row
+
+
+def bench(quick: bool) -> Tuple[Dict[str, object], Dict[str, object]]:
+    kw = (dict(n_workers=8, steady_n=200, steady_every_s=0.1,
+               burst_n=150, burst_at_s=2.0) if quick else
+          dict(n_workers=16, steady_n=600, steady_every_s=0.05,
+               burst_n=600, burst_at_s=4.0))
+    return (run_contention("fair", **kw), run_contention("fifo", **kw))
+
+
+def report(fair: Dict[str, object], fifo: Dict[str, object]) -> bool:
+    cols = ["policy", "dominant_share_gap", "contended_samples",
+            "steady_p50_s", "steady_p99_s", "steady_makespan_s",
+            "bursty_p50_s", "bursty_p99_s", "bursty_makespan_s"]
+    print("=== two equal-weight tenants, fixed gang: fair-share vs FIFO "
+          "(virtual time) ===")
+    print("".join(f"{c:>20s}" for c in cols))
+    for row in (fair, fifo):
+        print("".join(f"{row[c]:>20.3f}" if isinstance(row[c], float)
+                      else f"{row[c]:>20}" for c in cols))
+
+    ok = True
+    if fair["contended_samples"] == 0 or fifo["contended_samples"] == 0:
+        print("\nFAIL: scenario never contended -- comparison is vacuous")
+        ok = False
+    if fair["dominant_share_gap"] >= FAIR_GAP_BOUND:
+        print(f"\nFAIL: fair-share dominant-share gap "
+              f"{fair['dominant_share_gap']:.3f} >= {FAIR_GAP_BOUND}")
+        ok = False
+    if fifo["dominant_share_gap"] <= FIFO_GAP_FLOOR:
+        print(f"\nFAIL: FIFO baseline gap {fifo['dominant_share_gap']:.3f} "
+              f"<= {FIFO_GAP_FLOOR} -- burst did not starve the steady "
+              f"tenant, scenario too small")
+        ok = False
+    if fifo["steady_p99_s"] <= STARVATION_FACTOR * fair["steady_p99_s"]:
+        print(f"\nFAIL: FIFO steady p99 {fifo['steady_p99_s']:.2f}s not "
+              f">= {STARVATION_FACTOR}x fair-share "
+              f"{fair['steady_p99_s']:.2f}s")
+        ok = False
+    for row in (fair, fifo):
+        for tenant in ("steady", "bursty"):
+            if not row[f"{tenant}_done"]:
+                print(f"\nFAIL: {row['policy']} finished no "
+                      f"{tenant} tasks")
+                ok = False
+    if ok:
+        print(f"\nfair-share gap {fair['dominant_share_gap']:.3f} < "
+              f"{FAIR_GAP_BOUND}; FIFO gap "
+              f"{fifo['dominant_share_gap']:.3f}; steady-tenant p99 "
+              f"{fifo['steady_p99_s']:.2f}s (FIFO) -> "
+              f"{fair['steady_p99_s']:.2f}s (fair)")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes for CI smoke")
+    ap.add_argument("--tenancy-smoke", action="store_true",
+                    help="small instance + hard fairness assertions "
+                         "(the CI gate)")
+    args = ap.parse_args()
+    fair, fifo = bench(quick=args.quick or args.tenancy_smoke)
+    ok = report(fair, fifo)
+    print("\nPASS" if ok else "\nFAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

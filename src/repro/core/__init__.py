@@ -6,10 +6,12 @@ Cloud-TPU queued resources), with a secure containerized bring-up protocol.
 """
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScalingEvent
 from repro.core.cluster import ContainerSpec, SyndeoCluster
-from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
+                                     QuotaExceededError, TenantQuota)
 from repro.core.scheduler import (DrainState, Scheduler, SchedulerConfig,
-                                  WorkerIndex, WorkerInfo)
-from repro.core.security import Capability, SecurityError, UnprivilegedProfile
+                                  TenantState, WorkerIndex, WorkerInfo)
+from repro.core.security import (Capability, NonceCache, SecurityError,
+                                 Tenant, UnprivilegedProfile)
 from repro.core.simulator import SimCluster, SimCostModel
 from repro.core.task_graph import Task, TaskSpec, TaskState
 
@@ -17,7 +19,10 @@ __all__ = [
     "Autoscaler", "AutoscalerConfig", "ScalingEvent",
     "ContainerSpec", "SyndeoCluster", "DrainState", "GlobalObjectStore",
     "NodeStore",
-    "ObjectRef", "Scheduler", "SchedulerConfig", "WorkerIndex", "WorkerInfo",
-    "Capability", "SecurityError", "UnprivilegedProfile", "SimCluster",
+    "ObjectRef", "QuotaExceededError", "TenantQuota",
+    "Scheduler", "SchedulerConfig", "TenantState", "WorkerIndex",
+    "WorkerInfo",
+    "Capability", "NonceCache", "SecurityError", "Tenant",
+    "UnprivilegedProfile", "SimCluster",
     "SimCostModel", "Task", "TaskSpec", "TaskState",
 ]

@@ -31,6 +31,11 @@ which ripe workers go first: "idle" (longest-idle, the default) or
 "reverse_join" (most-recently-joined -- GCP TPU slices, where pod 0 holds
 the jax.distributed coordinator and early ranks must stay stable).
 
+Multi-tenancy: scale-up reacts to *aggregate* backlog (attributed per
+tenant in the event reason), while scale-down respects per-tenant
+minimum-worker floors (`tenant_min_workers`) for every admitted tenant --
+see `effective_min_workers`.
+
 Cooldowns are backend-specific: `AutoscalerConfig.for_backend("gcp_tpu")`
 uses minutes-scale cooldowns (queued-resource creation latency is minutes),
 while "local"/"sim" default to seconds.
@@ -67,6 +72,12 @@ class AutoscalerConfig:
     # drain-before-release policy
     drain_deadline_s: Optional[float] = None  # preempt stragglers after this
     release_order: str = "idle"           # "idle" | "reverse_join"
+    # multi-tenancy: scale-up is driven by *aggregate* demand (backlog is
+    # attributed per tenant for observability), but scale-down never shrinks
+    # the pool below the sum of the minimums of admitted tenants -- a bursty
+    # neighbor going quiet cannot starve a steady tenant's floor away
+    # between its arrivals (see effective_min_workers).
+    tenant_min_workers: Dict[str, int] = field(default_factory=dict)
 
     #: per-backend cooldown/drain defaults (see for_backend). GCP TPU
     #: queued-resource creation latency is minutes, so its cooldowns are
@@ -139,6 +150,24 @@ class Autoscaler:
         return sum(1 for t in self.scheduler.graph.tasks.values()
                    if t.state in (TaskState.READY, TaskState.PENDING))
 
+    def effective_min_workers(self) -> int:
+        """Scale-down floor: the global minimum, or the sum of per-tenant
+        minimums over *admitted* tenants (registered with the scheduler) --
+        whichever is larger. A steady tenant's floor holds between its
+        arrivals: a bursty neighbor going quiet cannot trigger a shrink
+        below capacity another tenant was promised."""
+        tenant_floor = sum(n for t, n in self.cfg.tenant_min_workers.items()
+                           if t in self.scheduler.tenants)
+        return max(self.cfg.min_workers, tenant_floor)
+
+    def _attribution(self) -> str:
+        """Per-tenant backlog breakdown for multi-tenant scale-up reasons."""
+        by = self.scheduler.backlog_by_tenant()
+        if len(by) <= 1:
+            return ""
+        parts = ", ".join(f"{t}:{n}" for t, n in sorted(by.items()))
+        return f" [{parts}]"
+
     def _gang_demand(self, n_live: int) -> int:
         """Workers needed to satisfy the largest parked placement group."""
         need = 0
@@ -180,6 +209,10 @@ class Autoscaler:
         gang = self._gang_demand(n_live)
         if gang > want:
             want, reason = gang, "pending placement group"
+        if want > 0 and backlog > 0:
+            # aggregate demand drives the scale-up; per-tenant attribution
+            # rides along so operators see who is asking
+            reason += self._attribution()
         return want, reason
 
     # -- the control loop body -------------------------------------------------
@@ -254,9 +287,10 @@ class Autoscaler:
         if backlog == 0 \
                 and now - self._last_down >= self.cfg.scale_down_cooldown_s:
             n_live = len(workers) + self._pending_provision
-            # workers already draining are as good as gone
+            # workers already draining are as good as gone; the floor is
+            # tenant-aware (active tenants keep their per-tenant minimums)
             headroom = (n_live - len(self._draining) - len(released)
-                        - self.cfg.min_workers)
+                        - self.effective_min_workers())
             if headroom > 0:
                 ripe = [wid for wid, since in self._idle_since.items()
                         if now - since >= self.cfg.idle_timeout_s

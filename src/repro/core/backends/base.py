@@ -23,6 +23,9 @@ class AllocationRequest:
     walltime: str = "04:00:00"
     partition: str = "normal"
     shared_dir: str = "/shared/syndeo"
+    # Slurm: draw nodes from a standing reservation so elastic scale-up is
+    # guaranteed capacity instead of hoping the partition has free nodes
+    reservation: str = ""
 
 
 class Backend(abc.ABC):

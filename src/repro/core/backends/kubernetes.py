@@ -3,7 +3,15 @@
 Renders a head Service + head Pod + worker Deployment running the same
 Apptainer image (via the sif->OCI bridge or directly as an OCI image). The
 rendezvous is a ConfigMap-backed shared mount -- same write-then-poll
-protocol as the Slurm shared filesystem."""
+protocol as the Slurm shared filesystem.
+
+Elasticity is *declarative*: a HorizontalPodAutoscaler scales the worker
+Deployment on the scheduler's own demand signals (backlog per worker +
+busy-worker utilization), exported through a custom-metrics adapter that
+polls the head's authenticated `stats` op. The autoscaler's
+provision/release hooks only nudge the HPA's replica floor (`kubectl
+patch`) -- no imperative `kubectl scale` anywhere, so the HPA and the
+Syndeo autoscaler can never fight over the replica count."""
 from __future__ import annotations
 
 from typing import Dict, List
@@ -84,27 +92,164 @@ spec:
       - name: rdv
         persistentVolumeClaim: {{claimName: syndeo-shared}}
 """
-        return {f"syndeo_{cluster_id}.yaml": manifest}
+        return {f"syndeo_{cluster_id}.yaml": manifest,
+                f"syndeo_hpa_{cluster_id}.yaml":
+                    self._hpa_manifest(req, cluster_id),
+                f"syndeo_metrics_adapter_{cluster_id}.yaml":
+                    self._metrics_adapter_manifest(req, cluster_id)}
 
-    # -- elasticity: resize the worker Deployment ------------------------------
+    def _hpa_manifest(self, req: AllocationRequest, cluster_id: str) -> str:
+        """HorizontalPodAutoscaler on the scheduler's demand signals: the
+        declarative twin of AutoscalerConfig's queue-depth and
+        target-utilization policies (backlog per worker ~ 2, busy fraction
+        ~ 0.75)."""
+        return f"""\
+apiVersion: autoscaling/v2
+kind: HorizontalPodAutoscaler
+metadata:
+  name: syndeo-workers-{cluster_id}
+spec:
+  scaleTargetRef:
+    apiVersion: apps/v1
+    kind: Deployment
+    name: syndeo-workers-{cluster_id}
+  minReplicas: 1
+  maxReplicas: {max(req.nodes * 4, req.nodes)}
+  metrics:
+  # READY+PENDING backlog per worker, from the head's stats op via the
+  # custom-metrics adapter (queue_depth_per_worker policy, target 2)
+  - type: Pods
+    pods:
+      metric:
+        name: syndeo_backlog_per_worker
+      target:
+        type: AverageValue
+        averageValue: "2"
+  # busy-worker fraction (target_utilization policy, target 0.75 == 750m)
+  - type: Pods
+    pods:
+      metric:
+        name: syndeo_busy_fraction
+      target:
+        type: AverageValue
+        averageValue: "750m"
+  behavior:
+    scaleDown:
+      # the head drains pods (migrating hot objects) before they die, so
+      # give the drain plane time between downscale steps
+      stabilizationWindowSeconds: 120
+      policies:
+      - type: Pods
+        value: 8
+        periodSeconds: 60
+    scaleUp:
+      policies:
+      - type: Pods
+        value: 16
+        periodSeconds: 15
+"""
+
+    def _metrics_adapter_manifest(self, req: AllocationRequest,
+                                  cluster_id: str) -> str:
+        """Custom-metrics adapter: a small deployment that polls the head's
+        HMAC-authenticated `stats` op and serves the two scheduler signals
+        under custom.metrics.k8s.io for the HPA to consume."""
+        image = self.container.image.replace(".sif", ":latest")
+        return f"""\
+apiVersion: apps/v1
+kind: Deployment
+metadata:
+  name: syndeo-metrics-adapter-{cluster_id}
+spec:
+  replicas: 1
+  selector:
+    matchLabels: {{app: syndeo-{cluster_id}, role: metrics-adapter}}
+  template:
+    metadata:
+      labels: {{app: syndeo-{cluster_id}, role: metrics-adapter}}
+    spec:
+      securityContext:
+        runAsNonRoot: true
+        runAsUser: 1000
+      containers:
+      - name: adapter
+        image: {image}
+        # polls the head's sealed `metrics` op (scheduler backlog, busy
+        # fraction, tenant shares) and republishes it as custom metrics.
+        # API aggregation dials the adapter over TLS, so it serves HTTPS
+        # with the mounted serving cert (Secret syndeo-metrics-serving-cert,
+        # e.g. issued by cert-manager or the cluster CA).
+        command: ["python"]
+        args: ["-m", "repro.core.metrics_adapter",
+               "--rendezvous", "{req.shared_dir}",
+               "--cluster-id", "{cluster_id}",
+               "--metrics",
+               "syndeo_backlog_per_worker,syndeo_busy_fraction",
+               "--tls-cert", "/var/run/serving-cert/tls.crt",
+               "--tls-key", "/var/run/serving-cert/tls.key"]
+        volumeMounts:
+        - name: rdv
+          mountPath: {req.shared_dir}
+        - name: serving-cert
+          mountPath: /var/run/serving-cert
+          readOnly: true
+      volumes:
+      - name: rdv
+        persistentVolumeClaim: {{claimName: syndeo-shared}}
+      - name: serving-cert
+        secret: {{secretName: syndeo-metrics-serving-cert}}
+---
+apiVersion: v1
+kind: Service
+metadata:
+  name: syndeo-metrics-adapter-{cluster_id}
+spec:
+  selector:
+    app: syndeo-{cluster_id}
+    role: metrics-adapter
+  ports:
+  - port: 443
+    targetPort: 6443
+---
+apiVersion: apiregistration.k8s.io/v1
+kind: APIService
+metadata:
+  name: v1beta1.custom.metrics.k8s.io
+spec:
+  service:
+    name: syndeo-metrics-adapter-{cluster_id}
+    namespace: default
+  group: custom.metrics.k8s.io
+  version: v1beta1
+  insecureSkipTLSVerify: true
+  groupPriorityMinimum: 100
+  versionPriority: 100
+"""
+
+    # -- elasticity: nudge the HPA floor (declarative; never kubectl scale) ----
 
     def provision_workers(self, req: AllocationRequest, cluster_id: str,
                           count: int) -> Dict[str, str]:
-        deploy = f"syndeo-workers-{cluster_id}"
+        hpa = f"syndeo-workers-{cluster_id}"
         script = f"""\
 #!/bin/bash
 set -euo pipefail
-# elastic scale-up: grow the worker Deployment by {count} replicas; new pods
-# join the live head through the shared rendezvous volume.
-CUR=$(kubectl get deployment {deploy} -o jsonpath='{{.spec.replicas}}')
-kubectl scale deployment {deploy} --replicas=$((CUR + {count}))
+# elastic scale-up: raise the HPA's replica floor by {count}. The HPA (fed
+# by the scheduler's backlog/utilization custom metrics) owns the actual
+# replica count -- the floor only guarantees the capacity the inner
+# autoscaler asked for arrives even while metrics are still catching up.
+CUR=$(kubectl get hpa {hpa} -o jsonpath='{{.spec.minReplicas}}')
+MAX=$(kubectl get hpa {hpa} -o jsonpath='{{.spec.maxReplicas}}')
+NEW=$((CUR + {count})); [ "$NEW" -le "$MAX" ] || NEW=$MAX
+kubectl patch hpa {hpa} --type merge \\
+  -p "{{\\"spec\\":{{\\"minReplicas\\":$NEW}}}}"
 """
         return {f"scale_up_{cluster_id}_{count}.sh": script}
 
     def release_workers(self, req: AllocationRequest, cluster_id: str,
                         worker_ids: List[str],
                         drain_deadline_s: float = 0.0) -> Dict[str, str]:
-        deploy = f"syndeo-workers-{cluster_id}"
+        hpa = f"syndeo-workers-{cluster_id}"
         # worker id == pod hostname == pod name in this backend (the worker
         # process registers under its hostname)
         annotates = "\n".join(
@@ -113,17 +258,28 @@ kubectl scale deployment {deploy} --replicas=$((CUR + {count}))
             f"--overwrite || true"
             for wid in worker_ids)
         grace = int(drain_deadline_s) if drain_deadline_s > 0 else 0
+        # pod deletion is asynchronous through the HPA: its scaleDown
+        # stabilization window is 120s (see _hpa_manifest), so the wait
+        # must cover window + drain grace before giving up
+        wait_s = grace + 180
         script = f"""\
 #!/bin/bash
 set -euo pipefail
 # graceful scale-down: the scheduler already drained these pods (no new
 # placements, hot objects migrated). Mark them cheapest to delete, then
-# shrink the Deployment -- the ReplicaSet controller removes exactly those
-# pods, each with a {grace}s termination grace for anything still exiting.
+# lower the HPA floor -- with the demand metrics already low the HPA
+# shrinks the Deployment after its 120s stabilization window and the
+# ReplicaSet controller removes exactly the marked pods, each with a
+# {grace}s termination grace for anything still exiting.
 {annotates}
-CUR=$(kubectl get deployment {deploy} -o jsonpath='{{.spec.replicas}}')
-kubectl scale deployment {deploy} --replicas=$((CUR - {len(worker_ids)}))
+CUR=$(kubectl get hpa {hpa} -o jsonpath='{{.spec.minReplicas}}')
+NEW=$((CUR - {len(worker_ids)})); [ "$NEW" -ge 1 ] || NEW=1
+kubectl patch hpa {hpa} --type merge \\
+  -p "{{\\"spec\\":{{\\"minReplicas\\":$NEW}}}}"
+# sleep {grace}s drain grace first: a drained worker that self-exits early
+# would otherwise be restarted by the ReplicaSet before the HPA shrinks
+sleep {grace}
 kubectl wait --for=delete {' '.join(f'pod/{wid}' for wid in worker_ids)} \\
-  --timeout={grace if grace > 0 else 30}s || true
+  --timeout={wait_s}s || true
 """
         return {f"scale_down_{cluster_id}.sh": script}

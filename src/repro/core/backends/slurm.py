@@ -30,6 +30,8 @@ class SlurmBackend(Backend):
                       + ' --worker-id "$(hostname)"')
         record_host = (f'echo "$(hostname)" > '
                        f'"{req.shared_dir}/rdv/workers/$(hostname).host"')
+        reservation = (f"#SBATCH --reservation={req.reservation}\n"
+                       if req.reservation else "")
         sbatch = f"""\
 #!/bin/bash
 #SBATCH --job-name=syndeo-{cluster_id}
@@ -38,7 +40,7 @@ class SlurmBackend(Backend):
 #SBATCH --cpus-per-task={req.cpus_per_node}
 #SBATCH --time={req.walltime}
 #SBATCH --partition={req.partition}
-#SBATCH --output={req.shared_dir}/logs/%j_%n.out
+{reservation}#SBATCH --output={req.shared_dir}/logs/%j_%n.out
 
 set -euo pipefail
 mkdir -p {req.shared_dir}/logs {req.shared_dir}/rdv {req.shared_dir}/rdv/workers
@@ -84,6 +86,13 @@ wait
                                             rendezvous_dir=req.shared_dir,
                                             cluster_id=cluster_id)
                       + ' --worker-id "$(hostname)"')
+        # guaranteed gang growth instead of hoping the partition has free
+        # nodes: --dependency=singleton serializes scale-up jobs (all share
+        # this job name), so bursts of autoscaler decisions queue in order
+        # rather than racing each other for the same nodes, and an optional
+        # standing --reservation pins the capacity the growth draws from.
+        reservation = (f"#SBATCH --reservation={req.reservation}\n"
+                       if req.reservation else "")
         scale_up = f"""\
 #!/bin/bash
 #SBATCH --job-name=syndeo-{cluster_id}-scaleup
@@ -92,7 +101,8 @@ wait
 #SBATCH --cpus-per-task={req.cpus_per_node}
 #SBATCH --time={req.walltime}
 #SBATCH --partition={req.partition}
-#SBATCH --output={req.shared_dir}/logs/%j_%n.out
+#SBATCH --dependency=singleton
+{reservation}#SBATCH --output={req.shared_dir}/logs/%j_%n.out
 
 set -euo pipefail
 # elastic scale-up: every node of this job joins the *existing* head via

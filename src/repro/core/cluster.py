@@ -25,12 +25,13 @@ import uuid
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
+                                     TenantQuota)
 from repro.core.rendezvous import Endpoint, InMemoryRendezvous
 from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
-from repro.core.security import (Capability, SecurityError,
-                                 UnprivilegedProfile, mint_cluster_token,
-                                 open_sealed, seal)
+from repro.core.security import (DEFAULT_TENANT, Capability, SecurityError,
+                                 Tenant, UnprivilegedProfile,
+                                 mint_cluster_token, open_sealed, seal)
 from repro.core.task_graph import Task, TaskSpec, TaskState
 
 
@@ -72,11 +73,46 @@ class SyndeoCluster:
                                     spill_dir=self.profile.scratch_dir(self.cluster_id))
         self.store.register_node(self._head_node)
         # drain migrations are capability-checked under the cluster token:
-        # only the head (which minted this grant) may move objects around
+        # only the head (which minted this grant) may move objects around.
+        # The grant is cluster-scoped (admin), so head-driven drains may
+        # migrate any tenant's objects; tenant-scoped capabilities cannot.
         self.store.set_migration_guard(
             Capability.grant(self.token, "objects", "migrate"), self.token)
+        # tenant capabilities presented on get/put are verified against this
+        self.store.set_access_guard(self.token)
+        self._tenants: Dict[str, Tenant] = {}
+        self._tenant_min: Dict[str, int] = {}
         self.rendezvous.publish(Endpoint("127.0.0.1", 6379, self.cluster_id,
                                          self.token))
+
+    # -- multi-tenancy ---------------------------------------------------------
+
+    def register_tenant(self, tenant_id: str, weight: float = 1.0,
+                        quota_bytes: Optional[int] = None,
+                        quota_refs: Optional[int] = None,
+                        on_exceed: str = "reject",
+                        min_workers: int = 0) -> Tenant:
+        """Admit a tenant: fair-share weight on the scheduler, byte/ref
+        quota on the object store, a scale-down floor on the autoscaler,
+        and a derived per-tenant key the tenant mints capabilities with
+        (the tenant never sees the cluster token)."""
+        with self._lock:
+            self.scheduler.register_tenant(tenant_id, weight)
+            if quota_bytes is not None or quota_refs is not None:
+                self.store.set_quota(tenant_id, TenantQuota(
+                    max_bytes=quota_bytes, max_refs=quota_refs,
+                    on_exceed=on_exceed))
+            if min_workers:
+                self._tenant_min[tenant_id] = min_workers
+                if self.autoscaler is not None:
+                    self.autoscaler.cfg.tenant_min_workers[tenant_id] = \
+                        min_workers
+            tenant = Tenant.derive(self.token, tenant_id, weight)
+            self._tenants[tenant_id] = tenant
+        return tenant
+
+    def tenant(self, tenant_id: str) -> Optional[Tenant]:
+        return self._tenants.get(tenant_id)
 
     # -- phase 3: workers join -------------------------------------------------
 
@@ -164,6 +200,7 @@ class SyndeoCluster:
                     q.put(None)
                 self._threads.pop(wid, None)
 
+        cfg.tenant_min_workers.update(self._tenant_min)
         self.autoscaler = Autoscaler(self.scheduler, provision, release, cfg)
         return self.autoscaler
 
@@ -175,20 +212,24 @@ class SyndeoCluster:
                group: str = "default", name: str = "",
                max_retries: int = 3,
                placement_group: Optional[str] = None,
-               bundle_index: Optional[int] = None, **kwargs) -> Task:
+               bundle_index: Optional[int] = None,
+               tenant_id: str = DEFAULT_TENANT, **kwargs) -> Task:
         spec = TaskSpec(fn=fn, args=args, kwargs=kwargs,
                         resources=resources or {"cpu": 1.0},
                         group=group, name=name or getattr(fn, "__name__", "task"),
                         max_retries=max_retries,
                         placement_group=placement_group,
-                        bundle_index=bundle_index)
+                        bundle_index=bundle_index,
+                        tenant_id=tenant_id)
         with self._lock:
             task = self.scheduler.submit(spec, deps)
             self._futures[task.id] = threading.Event()
         return task
 
-    def put(self, value: Any) -> ObjectRef:
-        return self.store.put("head", value)
+    def put(self, value: Any, tenant_id: str = DEFAULT_TENANT,
+            capability: Optional[Capability] = None) -> ObjectRef:
+        return self.store.put("head", value, tenant=tenant_id,
+                              capability=capability)
 
     def get(self, task_or_ref, timeout: float = 60.0) -> Any:
         if isinstance(task_or_ref, ObjectRef):
@@ -253,12 +294,20 @@ class SyndeoCluster:
                     continue
                 spec, deps = task.spec, list(task.deps)
             try:
-                resolved = [self.store.get(wid, d) for d in deps]
-                cap = Capability.grant(self.token, "result", "put")
-                cap.check(self.token, "result", "put")
+                # the worker acts *as the task's tenant*: every dep fetch and
+                # the result put present a tenant-scoped capability that the
+                # store verifies against the object's owner -- a task cannot
+                # read or overwrite another tenant's objects
+                tenant = spec.tenant_id
+                resolved = [self.store.get(
+                    wid, d, capability=Capability.grant_for_tenant(
+                        self.token, tenant, d.id, "get")) for d in deps]
                 out = spec.fn(*spec.args, *resolved, **spec.kwargs)
-                ref = self.store.put(wid, out, producer_task=tid,
-                                     ref_id=f"obj-{tid}")
+                ref = self.store.put(
+                    wid, out, producer_task=tid, ref_id=f"obj-{tid}",
+                    tenant=tenant,
+                    capability=Capability.grant_for_tenant(
+                        self.token, tenant, f"obj-{tid}", "put"))
                 with self._lock:
                     self.scheduler.on_task_finished(tid, ref, worker_id=wid)
             except Exception as e:  # noqa: BLE001 -- worker never dies on task error

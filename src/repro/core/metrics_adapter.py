@@ -1,0 +1,159 @@
+"""Custom-metrics adapter: the bridge between the Syndeo scheduler and a
+Kubernetes HorizontalPodAutoscaler.
+
+The K8s backend renders an HPA that scales the worker Deployment on the
+scheduler's *own* demand signals (READY+PENDING backlog per worker, busy
+fraction) instead of pod CPU -- the declarative replacement for the old
+imperative `kubectl scale` script. This process closes that loop: it polls
+the head's HMAC-sealed `metrics` op over the same rendezvous + TCP protocol
+the workers use, and republishes the values in the
+`custom.metrics.k8s.io/v1beta1` shape the HPA consumes.
+
+Kept deliberately dependency-free (stdlib http.server): in a real cluster
+it runs behind the APIService registration the backend renders; in this
+repo the subprocess test drives it against a live HeadServer.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import ssl
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict
+from urllib.parse import urlsplit
+
+from repro.core.rendezvous import FileRendezvous
+from repro.core.security import NonceCache
+
+DEFAULT_METRICS = ("syndeo_backlog_per_worker", "syndeo_busy_fraction")
+
+
+class MetricsPoller:
+    """Background thread keeping the latest head `metrics` reply."""
+
+    def __init__(self, rendezvous_dir: str, cluster_id: str,
+                 poll_every_s: float = 2.0):
+        self.rendezvous_dir = rendezvous_dir
+        self.cluster_id = cluster_id
+        self.poll_every_s = poll_every_s
+        self.latest: Dict[str, object] = {}
+        self._nonces = NonceCache()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="syndeo-metrics-poller")
+
+    def start(self):
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+
+    def poll_once(self) -> Dict[str, object]:
+        from repro.core.worker import _request
+        ep = FileRendezvous(self.rendezvous_dir).wait(self.cluster_id,
+                                                      timeout=30.0)
+        self.latest = _request(ep.host, ep.port, ep.token,
+                               {"op": "metrics"}, nonce_cache=self._nonces)
+        return self.latest
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                self.poll_once()
+            except Exception:  # noqa: BLE001 -- a flaky head is not fatal
+                pass
+            time.sleep(self.poll_every_s)
+
+
+def _metric_item(name: str, value: float) -> Dict[str, object]:
+    # HPA Pods-metrics consume milli-quantities; serve both shapes
+    return {"metricName": name,
+            "value": f"{int(round(value * 1000))}m",
+            "valueFloat": value,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())}
+
+
+def make_server(poller: MetricsPoller, metrics: tuple, host: str = "127.0.0.1",
+                port: int = 0) -> ThreadingHTTPServer:
+    """HTTP face: /healthz, /metrics (flat JSON), and the
+    custom.metrics.k8s.io/v1beta1 resource paths the HPA queries."""
+
+    class Handler(BaseHTTPRequestHandler):
+        def _json(self, code: int, payload: Dict[str, object]):
+            blob = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(blob)))
+            self.end_headers()
+            self.wfile.write(blob)
+
+        def do_GET(self):  # noqa: N802 -- BaseHTTPRequestHandler API
+            latest = poller.latest
+            # HPA queries carry ?labelSelector=... -- route on the bare path
+            path = urlsplit(self.path).path
+            if path == "/healthz":
+                self._json(200 if latest else 503,
+                           {"ok": bool(latest)})
+                return
+            if path == "/metrics":
+                self._json(200, {m: latest.get(m, 0.0) for m in metrics})
+                return
+            if path.startswith("/apis/custom.metrics.k8s.io/v1beta1"):
+                name = path.rstrip("/").rsplit("/", 1)[-1]
+                if name in metrics:
+                    self._json(200, {
+                        "kind": "MetricValueList",
+                        "apiVersion": "custom.metrics.k8s.io/v1beta1",
+                        "items": [_metric_item(
+                            name, float(latest.get(name, 0.0)))]})
+                    return
+                self._json(200, {
+                    "kind": "APIResourceList",
+                    "apiVersion": "custom.metrics.k8s.io/v1beta1",
+                    "resources": [{"name": m, "namespaced": True}
+                                  for m in metrics]})
+                return
+            self._json(404, {"error": f"unknown path {path}"})
+
+        def log_message(self, *args):  # quiet
+            pass
+
+    return ThreadingHTTPServer((host, port), Handler)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rendezvous", required=True)
+    ap.add_argument("--cluster-id", required=True)
+    ap.add_argument("--metrics", default=",".join(DEFAULT_METRICS))
+    ap.add_argument("--port", type=int, default=6443)
+    ap.add_argument("--poll-every-s", type=float, default=2.0)
+    # API aggregation always connects over TLS (insecureSkipTLSVerify only
+    # skips *validation*): in-cluster the adapter must serve HTTPS with the
+    # mounted serving cert, or the APIService goes Unavailable
+    ap.add_argument("--tls-cert", default="")
+    ap.add_argument("--tls-key", default="")
+    args = ap.parse_args()
+    poller = MetricsPoller(args.rendezvous, args.cluster_id,
+                           args.poll_every_s)
+    poller.poll_once()
+    poller.start()
+    server = make_server(poller, tuple(args.metrics.split(",")),
+                         host="0.0.0.0", port=args.port)
+    if args.tls_cert and args.tls_key:
+        ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+        ctx.load_cert_chain(args.tls_cert, args.tls_key)
+        server.socket = ctx.wrap_socket(server.socket, server_side=True)
+    print(f"metrics adapter up on port {server.server_address[1]}",
+          flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        poller.stop()
+        server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,28 @@ rebuilt by lineage re-execution:
 Cold objects (zero refcount, not depended on) are simply dropped -- the
 drain is then provably no worse than recompute: it never re-executes a
 producer for a hot object, and never copies garbage.
+
+Multi-tenancy
+-------------
+
+Every directory entry carries the *tenant* that put it. Tenant isolation
+and accounting are layered on top of the existing machinery:
+
+  * guarded access: once the head installs the cluster token
+    (`set_access_guard`), a `get`/`put`/`migrate` that presents a
+    Capability has it verified against the object's tenant -- tenant A's
+    capability raises SecurityError on tenant B's objects, including when
+    a drain tries to migrate them with a tenant-scoped guard,
+  * quotas: `set_quota(tenant, TenantQuota(...))` bounds a tenant's live
+    directory bytes and entry count. Puts beyond the byte quota either
+    reject (`QuotaExceededError`) or spill (the blob lands on disk via the
+    node store's spill path instead of memory, so one tenant cannot evict
+    everyone else's working set),
+  * accounting: `tenant_usage(tenant)` reports live bytes/refs -- the
+    fairness benchmark and the autoscaler read this.
+
+The default path (everything under the implicit "default" tenant, no
+guard, no quota) is behavior-identical to the single-tenant store.
 """
 from __future__ import annotations
 
@@ -52,17 +74,39 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Set
 
+from repro.core.security import DEFAULT_TENANT, Capability, SecurityError
+
+
+class QuotaExceededError(SecurityError):
+    """A tenant tried to hold more than its admitted share of the store."""
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Admission limits for one tenant's footprint in the store.
+
+    `on_exceed="spill"` admits over-quota puts but forces the blob straight
+    to the node's spill dir (memory relief at admission time; a later get()
+    restores it through the normal LRU, which re-spills under node-capacity
+    pressure). On a node without a spill dir the spill policy degrades to
+    reject rather than silently keeping the blob in memory."""
+    max_bytes: Optional[int] = None     # live directory bytes; None = unlimited
+    max_refs: Optional[int] = None      # live directory entries
+    on_exceed: str = "reject"           # "reject" | "spill" (bytes only)
+
 
 @dataclass(frozen=True)
 class ObjectRef:
     id: str
     size: int = 0
     producer_task: Optional[str] = None
+    tenant: str = DEFAULT_TENANT
 
     @staticmethod
-    def fresh(producer_task: Optional[str] = None, size: int = 0) -> "ObjectRef":
+    def fresh(producer_task: Optional[str] = None, size: int = 0,
+              tenant: str = DEFAULT_TENANT) -> "ObjectRef":
         return ObjectRef(id=uuid.uuid4().hex, size=size,
-                         producer_task=producer_task)
+                         producer_task=producer_task, tenant=tenant)
 
 
 class NodeStore:
@@ -80,7 +124,11 @@ class NodeStore:
         self.stats = {"puts": 0, "gets": 0, "spills": 0, "restores": 0}
 
     def put(self, ref: ObjectRef, value: Any) -> int:
-        blob = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+        return self.put_blob(ref, pickle.dumps(
+            value, protocol=pickle.HIGHEST_PROTOCOL))
+
+    def put_blob(self, ref: ObjectRef, blob: bytes) -> int:
+        """Store already-serialized bytes (replaces any prior copy)."""
         with self._lock:
             old = self._mem.pop(ref.id, None)
             if old is not None:            # re-put (e.g. reconstruction)
@@ -142,6 +190,17 @@ class NodeStore:
             self.stats["puts"] += 1
             self._maybe_spill()
 
+    def spill(self, ref: ObjectRef) -> bool:
+        """Force one in-memory blob to disk now (tenant-quota spill path).
+        Returns False when there is nothing to spill or no spill dir."""
+        with self._lock:
+            if self.spill_dir is None or ref.id not in self._mem:
+                return False
+            blob = self._mem.pop(ref.id)
+            self._used -= len(blob)
+            self._write_spill(ref.id, blob)
+            return True
+
     def _maybe_spill(self):
         """LRU spill until under capacity (lock held)."""
         if self.spill_dir is None:
@@ -149,12 +208,15 @@ class NodeStore:
         while self._used > self.capacity and self._mem:
             oid, blob = self._mem.popitem(last=False)
             self._used -= len(blob)
-            os.makedirs(self.spill_dir, exist_ok=True)
-            path = os.path.join(self.spill_dir, f"{self.node_id}_{oid}.obj")
-            with open(path, "wb") as f:
-                f.write(blob)
-            self._spilled[oid] = path
-            self.stats["spills"] += 1
+            self._write_spill(oid, blob)
+
+    def _write_spill(self, oid: str, blob: bytes):
+        os.makedirs(self.spill_dir, exist_ok=True)
+        path = os.path.join(self.spill_dir, f"{self.node_id}_{oid}.obj")
+        with open(path, "wb") as f:
+            f.write(blob)
+        self._spilled[oid] = path
+        self.stats["spills"] += 1
 
 
 @dataclass
@@ -165,6 +227,7 @@ class _Directory:
     size: int = 0
     created: float = field(default_factory=time.monotonic)
     owner: Optional[str] = None       # node accountable for the primary copy
+    tenant: str = DEFAULT_TENANT      # principal accountable for the bytes
 
 
 class GlobalObjectStore:
@@ -180,9 +243,78 @@ class GlobalObjectStore:
         self._nodes: Dict[str, NodeStore] = {}
         self._lock = threading.Lock()
         self._migration_guard = None   # optional (capability, token) pair
+        self._token: Optional[str] = None            # set_access_guard
+        self._quotas: Dict[str, TenantQuota] = {}
+        self._usage: Dict[str, Dict[str, int]] = {}  # tenant -> bytes/refs
         self.stats = {"transfers": 0, "transfer_bytes": 0,
                       "reconstructions": 0,
-                      "migrations": 0, "migrated_bytes": 0}
+                      "migrations": 0, "migrated_bytes": 0,
+                      "quota_rejects": 0, "quota_spills": 0}
+
+    # -- multi-tenancy: guard, quota, accounting -------------------------------
+
+    def set_access_guard(self, token: str):
+        """Install the cluster token so that get/put/migrate calls that
+        present a Capability have it verified against the object's tenant.
+        Calls without a capability stay trusted (head-internal plumbing);
+        the threaded cluster passes per-task tenant capabilities, so every
+        worker-side access is verified end to end."""
+        self._token = token
+
+    def set_quota(self, tenant: str, quota: TenantQuota):
+        with self._lock:
+            self._quotas[tenant] = quota
+
+    def tenant_usage(self, tenant: str) -> Dict[str, int]:
+        with self._lock:
+            u = self._usage.get(tenant, {})
+            return {"bytes": u.get("bytes", 0), "refs": u.get("refs", 0)}
+
+    def tenant_of(self, ref_or_id) -> Optional[str]:
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            e = self._dir.get(oid)
+            return e.tenant if e else None
+
+    def _check_capability(self, capability: Optional[Capability],
+                          object_id: str, right: str, tenant: str):
+        if capability is None:
+            return
+        if self._token is None:
+            raise SecurityError(
+                "capability presented but no access guard installed "
+                "(head must set_access_guard with the cluster token)")
+        capability.verify(self._token, object_id, right, tenant)
+
+    def _usage_add(self, tenant: str, d_bytes: int, d_refs: int):
+        """Adjust a tenant's live footprint (lock held)."""
+        u = self._usage.setdefault(tenant, {"bytes": 0, "refs": 0})
+        u["bytes"] += d_bytes
+        u["refs"] += d_refs
+
+    def _quota_verdict(self, tenant: str, add_bytes: int,
+                       new_entry: bool) -> Optional[str]:
+        """None = admitted; "spill" = admit but keep the blob on disk;
+        raises QuotaExceededError on reject (lock held)."""
+        q = self._quotas.get(tenant)
+        if q is None:
+            return None
+        u = self._usage.get(tenant, {"bytes": 0, "refs": 0})
+        if new_entry and q.max_refs is not None \
+                and u["refs"] + 1 > q.max_refs:
+            self.stats["quota_rejects"] += 1
+            raise QuotaExceededError(
+                f"tenant {tenant!r} over ref quota "
+                f"({u['refs']}/{q.max_refs} live objects)")
+        if q.max_bytes is not None and u["bytes"] + add_bytes > q.max_bytes:
+            if q.on_exceed == "spill":
+                self.stats["quota_spills"] += 1
+                return "spill"
+            self.stats["quota_rejects"] += 1
+            raise QuotaExceededError(
+                f"tenant {tenant!r} over byte quota "
+                f"({u['bytes']} + {add_bytes} > {q.max_bytes})")
+        return None
 
     def register_node(self, store: NodeStore):
         with self._lock:
@@ -209,33 +341,80 @@ class GlobalObjectStore:
 
     def put(self, node_id: str, value: Any,
             producer_task: Optional[str] = None,
-            ref_id: Optional[str] = None) -> ObjectRef:
-        """Store a new object. `ref_id` pins a deterministic object id
-        (Ray-style): a reconstructed producer re-puts under the *same* id,
-        so tasks waiting on the original ref wake up when it reappears."""
-        ref = (ObjectRef(ref_id, 0, producer_task) if ref_id
-               else ObjectRef.fresh(producer_task))
-        size = self._nodes[node_id].put(ref, value)
+            ref_id: Optional[str] = None,
+            tenant: str = DEFAULT_TENANT,
+            capability: Optional[Capability] = None) -> ObjectRef:
+        """Store a new object under `tenant`. `ref_id` pins a deterministic
+        object id (Ray-style): a reconstructed producer re-puts under the
+        *same* id, so tasks waiting on the original ref wake up when it
+        reappears. A presented capability is verified (right "put", tenant
+        match); new objects are admitted against the tenant's quota --
+        beyond it the put rejects (QuotaExceededError) or spills to disk,
+        per the quota's `on_exceed` policy."""
+        ref = (ObjectRef(ref_id, 0, producer_task, tenant) if ref_id
+               else ObjectRef.fresh(producer_task, tenant=tenant))
+        self._check_capability(capability, ref.id, "put", tenant)
+        node = self._nodes[node_id]
+        blob = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+        size = len(blob)
+        spill = False
+        # one atomic directory transaction decides admission (tenant check +
+        # quota + registration) *before* any bytes land on the node store:
+        # concurrent cross-tenant puts of the same id cannot both pass the
+        # check and overwrite each other's blobs (the loser raises without
+        # ever writing)
         with self._lock:
             e = self._dir.get(ref.id)
+            if e is not None and e.tenant != tenant:
+                raise SecurityError(
+                    f"cross-tenant put denied: object {ref.id} belongs to "
+                    f"tenant {e.tenant!r}, not {tenant!r}")
             if e is not None:              # reconstruction: revive the entry
+                # already-admitted object: only the size delta is accounted
+                # (no re-admission -- rolling back a revival would lose the
+                # blob a waiting task is about to read)
+                self._usage_add(e.tenant, size - e.size, 0)
                 e.locations.add(node_id)
                 e.size = size
                 e.producer_task = producer_task or e.producer_task
                 if e.owner is None:
                     e.owner = node_id
             else:
+                spill = self._quota_verdict(tenant, size,
+                                            new_entry=True) == "spill"
+                self._usage_add(tenant, size, 1)
                 self._dir[ref.id] = _Directory(locations={node_id},
                                                producer_task=producer_task,
-                                               size=size, owner=node_id)
-        return ObjectRef(ref.id, size, producer_task)
+                                               size=size, owner=node_id,
+                                               tenant=tenant)
+        node.put_blob(ref, blob)
+        if spill and not node.spill(ref):
+            # "spill" admission requires an actual spill dir on the node:
+            # without one the blob would silently stay in memory, defeating
+            # the quota -- unwind the registration and reject instead
+            with self._lock:
+                e2 = self._dir.get(ref.id)
+                if e2 is not None and e2.locations == {node_id}:
+                    self._usage_add(e2.tenant, -e2.size, -1)
+                    del self._dir[ref.id]
+                self.stats["quota_spills"] -= 1
+                self.stats["quota_rejects"] += 1
+            self._nodes[node_id].delete(ref)
+            raise QuotaExceededError(
+                f"tenant {tenant!r} over byte quota and node {node_id!r} "
+                f"has no spill dir (on_exceed='spill' degraded to reject)")
+        return ObjectRef(ref.id, size, producer_task, tenant)
 
-    def get(self, node_id: str, ref: ObjectRef) -> Any:
-        """Fetch on `node_id`, transferring from a remote copy if needed."""
+    def get(self, node_id: str, ref: ObjectRef,
+            capability: Optional[Capability] = None) -> Any:
+        """Fetch on `node_id`, transferring from a remote copy if needed.
+        A presented capability is verified against the object's tenant."""
         with self._lock:
             entry = self._dir.get(ref.id)
             local = node_id in (entry.locations if entry else ())
             src = next(iter(entry.locations)) if entry and entry.locations else None
+            tenant = entry.tenant if entry else ref.tenant
+        self._check_capability(capability, ref.id, "get", tenant)
         if local or (entry is None):
             return self._nodes[node_id].get(ref)
         if src is None:
@@ -278,6 +457,7 @@ class GlobalObjectStore:
             if e.refcount > 0:
                 return
             locs = set(e.locations)
+            self._usage_add(e.tenant, -e.size, -1)
             del self._dir[ref.id]
         for node_id in locs:
             store = self._nodes.get(node_id)
@@ -314,7 +494,8 @@ class GlobalObjectStore:
         with self._lock:
             for oid, e in self._dir.items():
                 if node_id in e.locations:
-                    out[oid] = ObjectRef(oid, e.size, e.producer_task)
+                    out[oid] = ObjectRef(oid, e.size, e.producer_task,
+                                         e.tenant)
         return out
 
     def sole_holder(self, ref: ObjectRef, node_id: str) -> bool:
@@ -322,14 +503,29 @@ class GlobalObjectStore:
             e = self._dir.get(ref.id)
             return bool(e) and e.locations == {node_id}
 
-    def migrate(self, ref: ObjectRef, src: str, dst: str) -> bool:
+    def migrate(self, ref: ObjectRef, src: str, dst: str,
+                capability: Optional[Capability] = None) -> bool:
         """Move one object's copy src -> dst (raw blob, no pickle round-trip),
         updating the directory and handing off ownership if src owned it.
         Returns False when the move is moot (object gone, src copy gone, or
-        dst unregistered) -- drains treat that as already-done."""
+        dst unregistered) -- drains treat that as already-done.
+
+        Tenant-aware guard: the presented capability (or the installed
+        migration guard's) must cover the object's tenant. The head's guard
+        is cluster-scoped (admin) and moves anything; a tenant-scoped
+        capability raises SecurityError on another tenant's objects -- also
+        when a drain tries to use it."""
+        cap, token = capability, self._token
         if self._migration_guard is not None:
-            cap, token = self._migration_guard
-            cap.check(token, "objects", "migrate")
+            guard_cap, guard_token = self._migration_guard
+            cap = cap if cap is not None else guard_cap
+            token = token if token is not None else guard_token
+        if cap is not None:
+            if token is None:
+                raise SecurityError(
+                    "capability presented but no access guard installed")
+            cap.verify(token, "objects", "migrate",
+                       self.tenant_of(ref.id) or ref.tenant)
         with self._lock:
             e = self._dir.get(ref.id)
             src_store = self._nodes.get(src)

@@ -12,6 +12,10 @@ Features:
   * straggler mitigation: speculative re-execution past a runtime quantile,
   * retry with lineage reconstruction of lost objects on worker failure,
   * placement groups (STRICT_SPREAD / PACK) for gang-scheduled jobs,
+  * multi-tenant fair share: per-tenant ready queues with a weighted
+    dominant-share (DRF) picker layered on the WorkerIndex fast path --
+    many principals contend for one gang allocation without starving each
+    other (single-tenant clusters take the identical seed FIFO path),
   * graceful retirement: a DRAINING lifecycle state (begin_drain /
     drain_complete / finish_drain) that stops new placements, lets running
     tasks finish (or preempts them past a deadline), and migrates the
@@ -26,6 +30,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.security import SecurityError
 from repro.core.task_graph import Task, TaskGraph, TaskSpec, TaskState
 
 
@@ -72,6 +77,21 @@ class SchedulerConfig:
     locality_weight: float = 1.0         # bytes-on-node score weight
     enable_speculation: bool = True
     placement_mode: str = "indexed"      # "indexed" (heap) or "linear" (scan)
+    # "fair": per-tenant ready queues, weighted dominant-share (DRF) picker;
+    # "fifo": the seed's single global arrival-order queue (the benchmark
+    # baseline). With one tenant both are identical, so the default path is
+    # zero-cost for single-tenant clusters.
+    dispatch_policy: str = "fair"
+
+
+@dataclass
+class TenantState:
+    """Fair-share bookkeeping for one tenant (see Scheduler.register_tenant)."""
+    tenant_id: str
+    weight: float = 1.0
+    usage: Dict[str, float] = field(default_factory=dict)  # allocated now
+    launched: int = 0
+    finished: int = 0
 
 
 @dataclass
@@ -208,9 +228,69 @@ class Scheduler:
         # None executes synchronously through the store.
         self.migrate_fn: Optional[Callable[[str, ObjectRef, str], None]] = None
         self._drains: Dict[str, DrainState] = {}
+        self.tenants: Dict[str, TenantState] = {}
         self.stats = {"launched": 0, "finished": 0, "failed": 0, "retried": 0,
                       "speculative": 0, "reconstructed": 0, "cancelled": 0,
-                      "drained": 0, "migrated_objects": 0, "preempted": 0}
+                      "drained": 0, "migrated_objects": 0, "preempted": 0,
+                      "migration_denied": 0}
+
+    # -- tenancy ---------------------------------------------------------------
+
+    def register_tenant(self, tenant_id: str,
+                        weight: float = 1.0) -> TenantState:
+        """Register (or re-weight) a tenant for fair-share dispatch. Unknown
+        tenants auto-register at weight 1.0 on first submit."""
+        ts = self.tenants.get(tenant_id)
+        if ts is None:
+            ts = self.tenants[tenant_id] = TenantState(tenant_id, weight)
+        else:
+            ts.weight = weight
+        return ts
+
+    def _tenant_state(self, tenant_id: str) -> TenantState:
+        ts = self.tenants.get(tenant_id)
+        return ts if ts is not None else self.register_tenant(tenant_id)
+
+    def _cluster_totals(self) -> Dict[str, float]:
+        totals: Dict[str, float] = {}
+        for w in self.workers.values():
+            if not w.alive or w.draining:
+                continue
+            for k, v in w.resources.items():
+                totals[k] = totals.get(k, 0.0) + v
+        return totals
+
+    def _dominant_share(self, ts: TenantState,
+                        totals: Dict[str, float]) -> float:
+        """Weighted dominant share (DRF): the tenant's largest fraction of
+        any one cluster resource, divided by its weight."""
+        share = 0.0
+        for k, used in ts.usage.items():
+            total = totals.get(k, 0.0)
+            if total > 0:
+                share = max(share, used / total)
+        return share / max(ts.weight, 1e-9)
+
+    def tenant_shares(self) -> Dict[str, float]:
+        """Weighted dominant share per registered tenant (fairness metric:
+        equal-weight tenants under contention should see equal values)."""
+        totals = self._cluster_totals()
+        return {tid: self._dominant_share(ts, totals)
+                for tid, ts in self.tenants.items()}
+
+    def backlog_by_tenant(self) -> Dict[str, int]:
+        """READY+PENDING demand per tenant (autoscaler attribution)."""
+        out: Dict[str, int] = {}
+        for t in self.graph.tasks.values():
+            if t.state in (TaskState.READY, TaskState.PENDING):
+                tid = t.spec.tenant_id
+                out[tid] = out.get(tid, 0) + 1
+        return out
+
+    def _usage_add(self, tenant_id: str, req: Dict[str, float], sgn: float):
+        usage = self._tenant_state(tenant_id).usage
+        for k, v in req.items():
+            usage[k] = usage.get(k, 0.0) + sgn * v
 
     # -- membership ----------------------------------------------------------
 
@@ -350,11 +430,19 @@ class Scheduler:
             st.planned += 1
             if self.migrate_fn is not None:
                 self.migrate_fn(worker_id, ref, dst)
-            elif self.store.migrate(ref, worker_id, dst):
-                self.note_migrated(worker_id, ref)
             else:
-                # destination vanished mid-call: re-plan on the next scan
-                self.note_migration_failed(worker_id, ref)
+                try:
+                    moved = self.store.migrate(ref, worker_id, dst)
+                except SecurityError:
+                    # a tenant-scoped migration guard cannot move another
+                    # tenant's object: unmovable, degrade to drop + lineage
+                    self.note_migration_denied(worker_id, ref)
+                    continue
+                if moved:
+                    self.note_migrated(worker_id, ref)
+                else:
+                    # destination vanished mid-call: re-plan on the next scan
+                    self.note_migration_failed(worker_id, ref)
 
     def note_migrated(self, worker_id: str, ref: ObjectRef):
         """One migration landed (called by the backend's migrate executor)."""
@@ -374,6 +462,17 @@ class Scheduler:
         if st is None:
             return
         st.pending.discard(ref.id)
+
+    def note_migration_denied(self, worker_id: str, ref: ObjectRef):
+        """The migration guard refused the move (cross-tenant): the object
+        is unmovable under the installed guard, so the drain degrades to
+        the drop path for it -- lineage will rebuild it if anyone asks."""
+        st = self._drains.get(worker_id)
+        if st is None:
+            return
+        st.pending.discard(ref.id)
+        st.moved.add(ref.id)
+        self.stats["migration_denied"] += 1
 
     def check_drains(self, now: Optional[float] = None):
         """Deadline enforcement: preempt (requeue) tasks still running on a
@@ -440,6 +539,7 @@ class Scheduler:
 
     def submit(self, spec: TaskSpec, deps: Optional[List[ObjectRef]] = None) -> Task:
         task = Task(spec=spec, deps=list(deps or []))
+        self._tenant_state(spec.tenant_id)   # auto-register at weight 1.0
         for d in task.deps:
             self.store.add_ref(d)
             if self.store.locations(d):
@@ -510,32 +610,84 @@ class Scheduler:
                 return best
         return self.index.pick(req)
 
+    def _try_launch(self, task: Task, infeasible: set) -> bool:
+        """Place-and-launch one READY task; shared by the FIFO and fair
+        dispatch loops. `infeasible` is the per-pass feasibility memo:
+        availability only shrinks within a pass, so a resource signature
+        that failed once cannot place later in it (placement-group tasks
+        are exempt -- their binding is per-bundle)."""
+        sig = None
+        if not task.spec.placement_group:
+            sig = tuple(sorted(task.spec.resources.items()))
+            if sig in infeasible:
+                return False
+        w = self._pick_worker(task)
+        if w is None:
+            if sig is not None:
+                infeasible.add(sig)
+            return False
+        task.state = TaskState.RUNNING
+        task.worker = w.id
+        task.started_at = self.clock()
+        task.attempts += 1
+        w.acquire(task.spec.resources)
+        w.running.add(task.id)
+        self.index.touch(w)
+        ts = self._tenant_state(task.spec.tenant_id)
+        ts.launched += 1
+        self._usage_add(task.spec.tenant_id, task.spec.resources, +1.0)
+        self.stats["launched"] += 1
+        self.launch_fn(task, w.id)
+        return True
+
     def schedule(self):
-        # per-pass feasibility memo: availability only shrinks within a pass,
-        # so a resource signature that failed once cannot place later in it
-        # (placement-group tasks are exempt -- their binding is per-bundle)
+        ready = self.graph.ready_tasks()
+        if not ready:
+            return
         infeasible: set = set()
-        for task in sorted(self.graph.ready_tasks(),
-                           key=lambda t: t.submitted_at):
-            sig = None
-            if not task.spec.placement_group:
-                sig = tuple(sorted(task.spec.resources.items()))
-                if sig in infeasible:
+        by_tenant: Dict[str, List[Task]] = {}
+        for t in ready:
+            by_tenant.setdefault(t.spec.tenant_id, []).append(t)
+        if len(by_tenant) <= 1 or self.cfg.dispatch_policy == "fifo":
+            # single-tenant (or FIFO baseline): the seed's global
+            # arrival-order pass, byte-for-byte the old behavior
+            for task in sorted(ready, key=lambda t: t.submitted_at):
+                self._try_launch(task, infeasible)
+            return
+        self._schedule_fair(by_tenant, infeasible)
+
+    def _schedule_fair(self, by_tenant: Dict[str, List[Task]],
+                       infeasible: set):
+        """Weighted fair-share dispatch (DRF-style): repeatedly give the
+        next placement to the tenant with the smallest weighted dominant
+        share, taking its tasks in arrival order. Within a tenant the
+        ordering (and the infeasible-signature memo) matches the FIFO pass,
+        so placement-group and drain semantics are unchanged -- only the
+        interleave *between* tenants differs."""
+        queues = {tid: sorted(tasks, key=lambda t: t.submitted_at)
+                  for tid, tasks in by_tenant.items()}
+        cursor = {tid: 0 for tid in queues}
+        totals = self._cluster_totals()
+        active = set(queues)
+        while active:
+            tid = min(active,
+                      key=lambda t: (self._dominant_share(
+                          self._tenant_state(t), totals), t))
+            q, i = queues[tid], cursor[tid]
+            placed = False
+            while i < len(q):
+                task = q[i]
+                i += 1
+                if task.state != TaskState.READY:
                     continue
-            w = self._pick_worker(task)
-            if w is None:
-                if sig is not None:
-                    infeasible.add(sig)
+                if self._try_launch(task, infeasible):
+                    placed = True
+                    break
+            cursor[tid] = i
+            if not placed or i >= len(q):
+                # nothing placeable left for this tenant this pass
+                active.discard(tid)
                 continue
-            task.state = TaskState.RUNNING
-            task.worker = w.id
-            task.started_at = self.clock()
-            task.attempts += 1
-            w.acquire(task.spec.resources)
-            w.running.add(task.id)
-            self.index.touch(w)
-            self.stats["launched"] += 1
-            self.launch_fn(task, w.id)
 
     # -- completion events -----------------------------------------------------
 
@@ -551,6 +703,7 @@ class Scheduler:
         task.output = output
         self._release(task)
         self.stats["finished"] += 1
+        self._tenant_state(task.spec.tenant_id).finished += 1
         rt = task.runtime
         if rt is not None:
             self._group_runtimes.setdefault(task.spec.group, []).append(rt)
@@ -594,6 +747,7 @@ class Scheduler:
         if w and task.id in w.running:
             w.running.discard(task.id)
             w.release(task.spec.resources)
+            self._usage_add(task.spec.tenant_id, task.spec.resources, -1.0)
             self.index.touch(w)
 
     # -- failure handling --------------------------------------------------------

@@ -10,9 +10,18 @@ runtime equivalents implemented here:
   * Cluster token + HMAC-signed message envelopes -- every head<->worker
     RPC is authenticated with a token minted at rendezvous; a node that
     does not hold the token cannot join or inject work (multi-tenant
-    safety on a shared fabric).
+    safety on a shared fabric). Envelopes carry an authenticated
+    timestamp *and* a per-message nonce: a receiver that keeps a
+    (bounded) NonceCache rejects replays inside the freshness window,
+    not just stale captures outside it.
   * Capability tokens -- object-store access grants scoped to an object id
-    and a right ("get"/"put"), signed with the cluster key.
+    and a right ("get"/"put"/"migrate"), signed with the cluster key.
+  * Tenant principals -- per-tenant keys are *derived* from the cluster
+    token (HMAC), so the head can hand each tenant a key that mints
+    capabilities only for that tenant's objects. A capability carries its
+    tenant id inside the MAC: tenant A's grant cannot be replayed against
+    tenant B's objects, and the object store verifies the binding on
+    every guarded get/put/migrate.
 """
 from __future__ import annotations
 
@@ -21,9 +30,18 @@ import hmac
 import json
 import os
 import secrets
+import threading
 import time
-from dataclasses import dataclass
+from collections import OrderedDict
+from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
+
+#: capability scope that matches every tenant -- mintable only under the
+#: cluster token itself (the head's drain/migration plane), never under a
+#: derived tenant key.
+ADMIN_TENANT = "*"
+
+DEFAULT_TENANT = "default"
 
 
 class SecurityError(RuntimeError):
@@ -63,39 +81,153 @@ def sign(token: str, payload: bytes) -> str:
     return hmac.new(token.encode(), payload, hashlib.sha256).hexdigest()
 
 
-def seal(token: str, msg: Dict[str, Any]) -> Dict[str, Any]:
-    """Wrap a message in a signed envelope."""
+def tenant_key(cluster_token: str, tenant_id: str) -> str:
+    """Per-tenant signing key, derived (not stored) from the cluster token.
+
+    The head gives each tenant its derived key; the store re-derives it from
+    the capability's tenant id at verification time, so no per-tenant state
+    is needed on the verifying side."""
+    if tenant_id == ADMIN_TENANT:
+        raise SecurityError("the admin scope has no derivable tenant key")
+    return sign(cluster_token, f"tenant-key:{tenant_id}".encode())
+
+
+class NonceCache:
+    """Bounded set of recently seen envelope nonces (replay rejection).
+
+    FIFO-bounded: old nonces age out, which is safe because `open_sealed`
+    also enforces the freshness window -- an envelope old enough for its
+    nonce to have been evicted is already rejected as stale (choose
+    `max_entries` >= the message rate times the freshness window)."""
+
+    def __init__(self, max_entries: int = 65536):
+        self.max_entries = max_entries
+        self._seen: "OrderedDict[str, None]" = OrderedDict()
+        # one cache is shared across handler threads (ThreadingTCPServer):
+        # check+insert must be atomic or two concurrent replays both pass
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._seen)
+
+    def check_and_add(self, nonce: str):
+        if not nonce:
+            raise SecurityError("envelope without nonce rejected")
+        with self._lock:
+            if nonce in self._seen:
+                raise SecurityError(
+                    "replayed envelope rejected (duplicate nonce)")
+            self._seen[nonce] = None
+            while len(self._seen) > self.max_entries:
+                self._seen.popitem(last=False)
+
+
+def _envelope_bytes(msg: Dict[str, Any], ts: float, nonce: str) -> bytes:
     body = json.dumps(msg, sort_keys=True, default=repr).encode()
-    return {"body": msg, "ts": time.time(),
-            "mac": sign(token, body)}
+    # timestamp and nonce are authenticated too: a captured envelope cannot
+    # be re-stamped fresh or re-nonced without breaking the MAC
+    return f"{ts!r}|{nonce}|".encode() + body
+
+
+def seal(token: str, msg: Dict[str, Any]) -> Dict[str, Any]:
+    """Wrap a message in a signed envelope (MAC covers body + ts + nonce)."""
+    ts = time.time()
+    nonce = secrets.token_hex(16)
+    return {"body": msg, "ts": ts, "nonce": nonce,
+            "mac": sign(token, _envelope_bytes(msg, ts, nonce))}
 
 
 def open_sealed(token: str, envelope: Dict[str, Any],
-                max_age_s: float = 3600.0) -> Dict[str, Any]:
-    body = json.dumps(envelope.get("body", {}), sort_keys=True,
-                      default=repr).encode()
+                max_age_s: float = 3600.0,
+                nonce_cache: Optional[NonceCache] = None) -> Dict[str, Any]:
+    ts = envelope.get("ts", 0)
+    nonce = envelope.get("nonce", "")
     mac = envelope.get("mac", "")
-    if not hmac.compare_digest(mac, sign(token, body)):
+    want = sign(token, _envelope_bytes(envelope.get("body", {}), ts, nonce))
+    if not hmac.compare_digest(mac, want):
         raise SecurityError("HMAC verification failed: message rejected")
-    if time.time() - envelope.get("ts", 0) > max_age_s:
+    if time.time() - ts > max_age_s:
         raise SecurityError("stale message rejected (replay window)")
+    if nonce_cache is not None:
+        # inside the freshness window, duplicates are replays: the nonce is
+        # authenticated above, so an attacker cannot mint a fresh one
+        nonce_cache.check_and_add(nonce)
     return envelope["body"]
 
 
 @dataclass(frozen=True)
 class Capability:
     object_id: str
-    right: str          # "get" | "put"
+    right: str          # "get" | "put" | "migrate"
     mac: str
+    tenant_id: str = DEFAULT_TENANT
 
     @staticmethod
     def grant(token: str, object_id: str, right: str) -> "Capability":
+        """Cluster-scoped (admin) grant, minted directly under the cluster
+        token -- matches objects of every tenant. Only the head holds the
+        cluster token, so only the head can mint these."""
         mac = sign(token, f"{object_id}:{right}".encode())
-        return Capability(object_id, right, mac)
+        return Capability(object_id, right, mac, tenant_id=ADMIN_TENANT)
+
+    @staticmethod
+    def grant_for_tenant(cluster_token: str, tenant_id: str,
+                         object_id: str, right: str) -> "Capability":
+        """Tenant-scoped grant: signed with the *derived* tenant key and
+        carrying the tenant id inside the MAC, so it cannot be presented as
+        another tenant's grant."""
+        key = tenant_key(cluster_token, tenant_id)
+        mac = sign(key, f"{tenant_id}:{object_id}:{right}".encode())
+        return Capability(object_id, right, mac, tenant_id=tenant_id)
 
     def check(self, token: str, object_id: str, right: str):
+        """Legacy cluster-scope check (MAC under the cluster token)."""
         want = sign(token, f"{object_id}:{right}".encode())
         if (self.object_id != object_id or self.right != right
                 or not hmac.compare_digest(self.mac, want)):
             raise SecurityError(
                 f"capability check failed for {right}:{object_id}")
+
+    def verify(self, cluster_token: str, object_id: str, right: str,
+               object_tenant: str = DEFAULT_TENANT):
+        """Tenant-aware verification: the MAC must be valid for this
+        capability's tenant scope AND the scope must cover the object's
+        tenant. Admin capabilities (minted under the cluster token) cover
+        every tenant; a tenant capability covers only its own."""
+        if self.tenant_id == ADMIN_TENANT:
+            self.check(cluster_token, object_id, right)
+            return
+        key = tenant_key(cluster_token, self.tenant_id)
+        want = sign(key, f"{self.tenant_id}:{object_id}:{right}".encode())
+        if (self.object_id != object_id or self.right != right
+                or not hmac.compare_digest(self.mac, want)):
+            raise SecurityError(
+                f"capability check failed for {right}:{object_id} "
+                f"(tenant {self.tenant_id})")
+        if self.tenant_id != object_tenant:
+            raise SecurityError(
+                f"cross-tenant access denied: capability of tenant "
+                f"{self.tenant_id!r} cannot {right} an object of tenant "
+                f"{object_tenant!r}")
+
+
+@dataclass(frozen=True)
+class Tenant:
+    """A principal sharing the cluster: identity, fair-share weight, and the
+    derived key it mints its own capabilities with (the tenant never sees
+    the cluster token)."""
+    tenant_id: str
+    key: str = field(repr=False)
+    weight: float = 1.0
+
+    @staticmethod
+    def derive(cluster_token: str, tenant_id: str,
+               weight: float = 1.0) -> "Tenant":
+        return Tenant(tenant_id, tenant_key(cluster_token, tenant_id), weight)
+
+    def grant(self, object_id: str, right: str) -> Capability:
+        """Mint a capability for one of *this tenant's* objects -- signed
+        with the derived key, identical bytes to grant_for_tenant."""
+        mac = sign(self.key, f"{self.tenant_id}:{object_id}:{right}".encode())
+        return Capability(object_id, right, mac, tenant_id=self.tenant_id)

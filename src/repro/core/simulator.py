@@ -21,8 +21,10 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig
-from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
+                                     TenantQuota)
 from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
+from repro.core.security import SecurityError
 from repro.core.task_graph import Task, TaskSpec, TaskState
 
 
@@ -132,6 +134,18 @@ class SimCluster:
                                      clock=lambda: self.now)
         return self.autoscaler
 
+    def register_tenant(self, tenant_id: str, weight: float = 1.0,
+                        quota_bytes: Optional[int] = None,
+                        quota_refs: Optional[int] = None,
+                        on_exceed: str = "reject"):
+        """Tenant admission (SyndeoCluster.register_tenant's sim twin):
+        fair-share weight on the scheduler, optional store quota."""
+        self.scheduler.register_tenant(tenant_id, weight)
+        if quota_bytes is not None or quota_refs is not None:
+            self.store.set_quota(tenant_id, TenantQuota(
+                max_bytes=quota_bytes, max_refs=quota_refs,
+                on_exceed=on_exceed))
+
     def fail_worker_at(self, worker_id: str, t: float):
         def fail():
             self._dead.add(worker_id)
@@ -147,7 +161,14 @@ class SimCluster:
                  + ref.size / self.cost.migration_bandwidth_Bps)
 
         def land():
-            if self.store.migrate(ref, worker_id, dst):
+            try:
+                moved = self.store.migrate(ref, worker_id, dst)
+            except SecurityError:
+                # tenant-scoped guard: this object is not ours to move --
+                # degrade to drop + lineage for it
+                self.scheduler.note_migration_denied(worker_id, ref)
+                return
+            if moved:
                 self.scheduler.note_migrated(worker_id, ref)
             else:
                 # destination died or object already settled: re-plan
@@ -218,9 +239,11 @@ class SimCluster:
                 payload = {"task": task.id,
                            "bytes": int(self.cost.result_bytes(task.spec))}
                 # deterministic output id: a reconstructed producer revives
-                # the same object id, waking tasks that waited on it
+                # the same object id, waking tasks that waited on it; the
+                # artifact is owned (and billed to) the task's tenant
                 ref = self.store.put(node, payload, producer_task=task.id,
-                                     ref_id=f"obj-{task.id}")
+                                     ref_id=f"obj-{task.id}",
+                                     tenant=task.spec.tenant_id)
                 self.scheduler.on_task_finished(task.id, ref)
                 self.completed.append(cur2)
             self._post(done_at - self.now, deliver)
@@ -266,11 +289,14 @@ class SimCluster:
 
     def run_scenario(self, arrivals: List[Tuple[float, TaskSpec]],
                      tick_every: float = 0.1,
-                     drain_s: float = 0.0) -> List[str]:
+                     drain_s: float = 0.0,
+                     on_tick: Optional[Callable[[float], None]] = None
+                     ) -> List[str]:
         """Timed-arrival driver for elastic workloads: submit each spec at
         its virtual arrival time, tick stragglers + autoscaler periodically,
         and run until every arrived task is terminal plus `drain_s` of idle
-        tail (so idle scale-down gets a chance to fire). Returns task ids."""
+        tail (so idle scale-down gets a chance to fire). Returns task ids.
+        `on_tick(now)` is called at every monitor tick (fairness sampling)."""
         ids: List[str] = []
         for t, spec in arrivals:
             self._post(max(0.0, t - self.now),
@@ -290,6 +316,8 @@ class SimCluster:
             self.scheduler.check_drains(self.now)
             if self.autoscaler is not None:
                 self.autoscaler.tick(self.now)
+            if on_tick is not None:
+                on_tick(self.now)
             if settled():
                 if done_since[0] is None:
                     done_since[0] = self.now
@@ -302,3 +330,34 @@ class SimCluster:
         self._post(tick_every, monitor)
         self.run()
         return ids
+
+    def run_tenant_scenario(
+            self, streams: Dict[str, List[Tuple[float, TaskSpec]]],
+            tick_every: float = 0.1, drain_s: float = 0.0,
+            on_tick: Optional[Callable[[float], None]] = None
+    ) -> Dict[str, List[Tuple[float, str]]]:
+        """Multi-tenant contention driver: each tenant brings its own timed
+        arrival stream; specs are stamped with the tenant id and the merged
+        stream runs under `run_scenario`. Returns, per tenant, the
+        (arrival_time, task_id) pairs -- virtual-time sojourns fall out as
+        `task.finished_at - arrival_time` (the fairness benchmark's input).
+        """
+        merged: List[Tuple[float, TaskSpec]] = []
+        order: List[Tuple[str, float]] = []
+        for tenant_id, arrivals in streams.items():
+            self.scheduler._tenant_state(tenant_id)   # register, keep weight
+            for t, spec in arrivals:
+                spec.tenant_id = tenant_id
+                merged.append((t, spec))
+                order.append((tenant_id, t))
+        # stable sort keeps per-tenant arrival order for equal timestamps;
+        # run_scenario posts submissions in list order, so ids align
+        idx = sorted(range(len(merged)), key=lambda i: merged[i][0])
+        merged = [merged[i] for i in idx]
+        order = [order[i] for i in idx]
+        ids = self.run_scenario(merged, tick_every=tick_every,
+                                drain_s=drain_s, on_tick=on_tick)
+        out: Dict[str, List[Tuple[float, str]]] = {t: [] for t in streams}
+        for (tenant_id, t), tid in zip(order, ids):
+            out[tenant_id].append((t, tid))
+        return out

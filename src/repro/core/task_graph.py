@@ -36,6 +36,9 @@ class TaskSpec:
     max_retries: int = 3
     placement_group: Optional[str] = None
     bundle_index: Optional[int] = None
+    # multi-tenancy: the principal this task runs (and is billed) as --
+    # fair-share dispatch, object ownership, and quota accounting key on it
+    tenant_id: str = "default"
 
 
 @dataclass

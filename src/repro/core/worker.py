@@ -28,7 +28,7 @@ from repro.core.cluster import SyndeoCluster
 from repro.core.object_store import NodeStore
 from repro.core.rendezvous import Endpoint, FileRendezvous
 from repro.core.scheduler import WorkerInfo
-from repro.core.security import open_sealed, seal
+from repro.core.security import Capability, NonceCache, open_sealed, seal
 from repro.core.task_graph import TaskState
 
 
@@ -41,7 +41,8 @@ def _dec(blob: str) -> Any:
 
 
 def _request(host: str, port: int, token: str, msg: Dict[str, Any],
-             timeout: float = 10.0) -> Dict[str, Any]:
+             timeout: float = 10.0,
+             nonce_cache: Optional[NonceCache] = None) -> Dict[str, Any]:
     with socket.create_connection((host, port), timeout=timeout) as s:
         s.sendall((json.dumps(seal(token, msg)) + "\n").encode())
         buf = b""
@@ -50,7 +51,8 @@ def _request(host: str, port: int, token: str, msg: Dict[str, Any],
             if not chunk:
                 break
             buf += chunk
-    return open_sealed(token, json.loads(buf.decode()))
+    return open_sealed(token, json.loads(buf.decode()),
+                       nonce_cache=nonce_cache)
 
 
 class HeadServer:
@@ -60,6 +62,10 @@ class HeadServer:
                  port: int = 0):
         self.cluster = cluster
         self._outbox: Dict[str, list] = {}
+        # bounded seen-nonce set: a captured worker envelope cannot be
+        # replayed inside the freshness window (it would need a fresh nonce,
+        # and the nonce is under the MAC)
+        self._nonces = NonceCache()
         head = self
 
         class Handler(socketserver.StreamRequestHandler):
@@ -67,7 +73,8 @@ class HeadServer:
                 line = self.rfile.readline()
                 try:
                     msg = open_sealed(cluster.token,
-                                      json.loads(line.decode()))
+                                      json.loads(line.decode()),
+                                      nonce_cache=head._nonces)
                     reply = head.dispatch(msg)
                 except Exception as e:  # noqa: BLE001
                     reply = {"ok": False, "error": str(e)}
@@ -113,15 +120,46 @@ class HeadServer:
             tid = box.pop(0)
             with c._lock:
                 task = c.scheduler.graph.tasks[tid]
-                payload = _enc((task.spec.fn, task.spec.args, task.spec.kwargs,
-                                [c.store.get("head", d) for d in task.deps]))
+                tenant = task.spec.tenant_id
+                try:
+                    # deps are resolved head-side *as the task's tenant*: a
+                    # task whose deps point at another tenant's objects
+                    # fails here -- as a *task failure*, not a stranded
+                    # RUNNING task (the worker just keeps polling)
+                    payload = _enc(
+                        (task.spec.fn, task.spec.args, task.spec.kwargs,
+                         [c.store.get(
+                             "head", d,
+                             capability=Capability.grant_for_tenant(
+                                 c.token, tenant, d.id, "get"))
+                          for d in task.deps]))
+                except Exception as e:  # noqa: BLE001
+                    c.scheduler.on_task_failed(
+                        tid, f"{type(e).__name__}: {e}", worker_id=wid)
+                    ev = c._futures.get(tid)
+                    if ev:
+                        ev.set()
+                    return {"ok": True, "task": None, "draining": draining}
             return {"ok": True, "task": tid, "payload": payload,
-                    "draining": draining}
+                    "tenant": tenant, "draining": draining}
         if op == "result":
             tid, wid = msg["task"], msg["worker"]
             value = _dec(msg["payload"])
-            ref = c.store.put("head", value, producer_task=tid,
-                              ref_id=f"obj-{tid}")
+            with c._lock:
+                task = c.scheduler.graph.tasks.get(tid)
+                tenant = task.spec.tenant_id if task else "default"
+            try:
+                ref = c.store.put("head", value, producer_task=tid,
+                                  ref_id=f"obj-{tid}", tenant=tenant)
+            except Exception as e:  # noqa: BLE001 -- e.g. quota reject: the
+                # task must *fail visibly*, not sit RUNNING forever
+                with c._lock:
+                    c.scheduler.on_task_failed(
+                        tid, f"{type(e).__name__}: {e}", worker_id=wid)
+                ev = c._futures.get(tid)
+                if ev:
+                    ev.set()
+                return {"ok": True, "stored": False}
             with c._lock:
                 c.scheduler.on_task_finished(tid, ref, worker_id=wid)
             ev = c._futures.get(tid)
@@ -149,7 +187,24 @@ class HeadServer:
             return {"ok": True, "worker": wid, "complete": complete}
         if op == "stats":
             with c._lock:
-                return {"ok": True, "stats": dict(c.scheduler.stats)}
+                return {"ok": True, "stats": dict(c.scheduler.stats),
+                        "tenants": c.scheduler.tenant_shares()}
+        if op == "metrics":
+            # the scaling signals the K8s custom-metrics adapter republishes
+            # for the HorizontalPodAutoscaler (backends/kubernetes.py)
+            with c._lock:
+                workers = [w for w in c.scheduler.workers.values() if w.alive]
+                busy = sum(1 for w in workers if w.running)
+                backlog = sum(
+                    1 for t in c.scheduler.graph.tasks.values()
+                    if t.state in (TaskState.READY, TaskState.PENDING))
+                by_tenant = c.scheduler.backlog_by_tenant()
+            n = max(len(workers), 1)
+            return {"ok": True, "workers": len(workers), "busy": busy,
+                    "backlog": backlog,
+                    "syndeo_backlog_per_worker": backlog / n,
+                    "syndeo_busy_fraction": busy / n,
+                    "backlog_by_tenant": by_tenant}
         return {"ok": False, "error": f"unknown op {op!r}"}
 
     def launch(self, task, worker_id: str):
@@ -175,20 +230,23 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     rdv = FileRendezvous(rendezvous_dir)
     ep = rdv.wait(cluster_id, timeout=60.0)
     token = ep.token
+    nonces = NonceCache()        # head replies are replay-protected too
     joined = _request(ep.host, ep.port, token,
                       {"op": "join", "worker": worker_id,
-                       "resources": {"cpu": 1.0}})
+                       "resources": {"cpu": 1.0}}, nonce_cache=nonces)
     wid = joined["worker"]
     idle_since = time.monotonic()
     while time.monotonic() - idle_since < max_idle_s:
-        got = _request(ep.host, ep.port, token, {"op": "poll", "worker": wid})
+        got = _request(ep.host, ep.port, token, {"op": "poll", "worker": wid},
+                       nonce_cache=nonces)
         tid = got.get("task")
         if tid is None:
             if got.get("draining"):
                 # exit only when the head confirms the drain finished --
                 # a cancelled drain (backlog returned) keeps us serving
                 status = _request(ep.host, ep.port, token,
-                                  {"op": "drain_status", "worker": wid})
+                                  {"op": "drain_status", "worker": wid},
+                                  nonce_cache=nonces)
                 if status.get("complete"):
                     return
             time.sleep(0.05)
@@ -199,11 +257,11 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
             out = fn(*args, *deps, **kwargs)
             _request(ep.host, ep.port, token,
                      {"op": "result", "task": tid, "worker": wid,
-                      "payload": _enc(out)})
+                      "payload": _enc(out)}, nonce_cache=nonces)
         except Exception as e:  # noqa: BLE001
             _request(ep.host, ep.port, token,
                      {"op": "error", "task": tid, "worker": wid,
-                      "err": f"{type(e).__name__}: {e}"})
+                      "err": f"{type(e).__name__}: {e}"}, nonce_cache=nonces)
 
 
 def main():

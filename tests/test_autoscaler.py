@@ -307,18 +307,59 @@ def test_slurm_elastic_artifacts():
     assert "--nodelist=$HOSTS" in sh
 
 
+def test_slurm_scale_up_singleton_and_reservation():
+    """Elastic gang growth is guaranteed, not hopeful: scale-up jobs share
+    a job name and serialize under --dependency=singleton, and an optional
+    standing reservation pins the capacity they draw from."""
+    b = SlurmBackend(ContainerSpec())
+    up = next(iter(b.provision_workers(_req(), "abc123", 2).values()))
+    assert "#SBATCH --dependency=singleton" in up
+    assert "#SBATCH --job-name=syndeo-abc123-scaleup" in up
+    assert "--reservation" not in up         # optional: absent when unset
+    req = AllocationRequest(nodes=4, cpus_per_node=28,
+                            shared_dir="/shared/syndeo",
+                            reservation="syndeo-pool")
+    up2 = next(iter(b.provision_workers(req, "abc123", 2).values()))
+    assert "#SBATCH --reservation=syndeo-pool" in up2
+    assert "#SBATCH --dependency=singleton" in up2
+    # the base allocation honors the reservation too
+    boot = b.render_artifacts(req, "abc123")["submit_abc123.sbatch"]
+    assert "#SBATCH --reservation=syndeo-pool" in boot
+
+
 def test_k8s_elastic_artifacts():
     b = KubernetesBackend(ContainerSpec())
     up = next(iter(b.provision_workers(_req(), "abc123", 5).values()))
-    assert "kubectl scale deployment syndeo-workers-abc123" in up
+    # declarative scaling: the HPA owns the replica count, the hook only
+    # nudges its floor -- never an imperative `kubectl scale`
+    assert "kubectl patch hpa syndeo-workers-abc123" in up
+    assert "kubectl scale" not in up
     assert "CUR + 5" in up
     down = next(iter(b.release_workers(_req(), "abc123",
                                        ["pod-a", "pod-b"]).values()))
     assert "CUR - 2" in down
+    assert "kubectl scale" not in down
     # victims are marked for deletion *before* the shrink so the controller
     # removes exactly those pods, not arbitrary busy ones
     assert "pod-deletion-cost" in down
-    assert down.index("pod-deletion-cost") < down.index("kubectl scale")
+    assert down.index("pod-deletion-cost") < down.index("kubectl patch hpa")
+
+
+def test_k8s_hpa_and_metrics_adapter_manifests():
+    """The bring-up artifacts include a HorizontalPodAutoscaler fed by the
+    scheduler's backlog/utilization signals through a custom-metrics
+    adapter (the declarative replacement for the kubectl-scale script)."""
+    b = KubernetesBackend(ContainerSpec())
+    arts = b.render_artifacts(_req(), "abc123")
+    hpa = arts["syndeo_hpa_abc123.yaml"]
+    assert "kind: HorizontalPodAutoscaler" in hpa
+    assert "name: syndeo-workers-abc123" in hpa      # targets the Deployment
+    assert "syndeo_backlog_per_worker" in hpa
+    assert "syndeo_busy_fraction" in hpa
+    adapter = arts["syndeo_metrics_adapter_abc123.yaml"]
+    assert "custom.metrics.k8s.io" in adapter
+    assert "repro.core.metrics_adapter" in adapter
+    assert "runAsNonRoot: true" in adapter           # the Apptainer principle
 
 
 def test_gcp_tpu_elastic_artifacts():
@@ -353,7 +394,9 @@ def test_release_workers_renders_drain_deadline():
     assert "sleep 60" in slurm
     k8s = next(iter(KubernetesBackend(ContainerSpec()).release_workers(
         _req(), "abc123", ["pod-a"], drain_deadline_s=30.0).values()))
-    assert "--timeout=30s" in k8s
+    assert "sleep 30" in k8s
+    # the deletion wait covers the HPA's 120s scaleDown stabilization window
+    assert "--timeout=210s" in k8s
 
 
 def test_slurm_worker_id_hostname_reconciliation():

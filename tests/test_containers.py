@@ -1,0 +1,94 @@
+"""Golden-string tests for the container artifact renderers (paper phase 1).
+
+`apptainer_definition` / `apptainer_run_command` feed every backend's
+launch artifacts; a silent formatting drift would produce un-runnable
+sbatch / K8s scripts, so the full rendered text is pinned here."""
+from repro.core.cluster import ContainerSpec
+from repro.core.containers import apptainer_definition, apptainer_run_command
+
+
+def _spec(**kw) -> ContainerSpec:
+    defaults = dict(image="syndeo.sif", base="docker://python:3.11-slim",
+                    env={"OMP_NUM_THREADS": "1", "JAX_PLATFORMS": "cpu"},
+                    binds=["/data:/data", "/scratch:/scratch"],
+                    sandbox_writable=True)
+    defaults.update(kw)
+    return ContainerSpec(**defaults)
+
+
+GOLDEN_DEFINITION = """\
+Bootstrap: docker
+From: python:3.11-slim
+
+%files
+    src /opt/syndeo/src
+    pyproject.toml /opt/syndeo/pyproject.toml
+
+%post
+    pip install --no-cache-dir /opt/syndeo
+    # containers are immutable after build; runtime writes go to the
+    # sandbox tmpfs (--writable-tmpfs) and the bound scratch dir only
+
+%environment
+    export PYTHONPATH=/opt/syndeo/src
+    export OMP_NUM_THREADS=1
+    export JAX_PLATFORMS=cpu
+
+%runscript
+    exec python -m repro.core.worker "$@"
+"""
+
+GOLDEN_RUN_COMMAND = (
+    "apptainer exec --writable-tmpfs "
+    "--bind /shared/syndeo:/shared/syndeo "
+    "--bind /data:/data --bind /scratch:/scratch "
+    "syndeo.sif python -m repro.core.worker "
+    "--role worker --rendezvous /shared/syndeo --cluster-id abc123"
+)
+
+
+def test_apptainer_definition_golden():
+    assert apptainer_definition(_spec()) == GOLDEN_DEFINITION
+
+
+def test_apptainer_definition_env_lines_follow_spec_order():
+    d = apptainer_definition(_spec(env={"B": "2", "A": "1"}))
+    assert "    export B=2\n    export A=1" in d
+
+
+def test_apptainer_definition_no_env():
+    d = apptainer_definition(_spec(env={}))
+    # the PYTHONPATH export is structural; no stray blank exports follow
+    assert "export PYTHONPATH=/opt/syndeo/src" in d
+    assert "export =" not in d
+
+
+def test_apptainer_run_command_golden():
+    cmd = apptainer_run_command(_spec(), role="worker",
+                                rendezvous_dir="/shared/syndeo",
+                                cluster_id="abc123")
+    assert cmd == GOLDEN_RUN_COMMAND
+
+
+def test_apptainer_run_command_head_role():
+    cmd = apptainer_run_command(_spec(), role="head",
+                                rendezvous_dir="/rdv", cluster_id="c1")
+    assert "--role head" in cmd and "--cluster-id c1" in cmd
+    assert "--rendezvous /rdv" in cmd
+    # the rendezvous dir is always bound into the container
+    assert "--bind /rdv:/rdv" in cmd
+
+
+def test_apptainer_run_command_writable_tmpfs_toggle():
+    ro = apptainer_run_command(_spec(sandbox_writable=False), role="worker",
+                               rendezvous_dir="/rdv", cluster_id="c1")
+    assert "--writable-tmpfs" not in ro
+    rw = apptainer_run_command(_spec(sandbox_writable=True), role="worker",
+                               rendezvous_dir="/rdv", cluster_id="c1")
+    assert "--writable-tmpfs" in rw
+
+
+def test_apptainer_run_command_no_extra_binds():
+    cmd = apptainer_run_command(_spec(binds=[]), role="worker",
+                                rendezvous_dir="/rdv", cluster_id="c1")
+    assert cmd.count("--bind") == 1          # just the rendezvous bind

@@ -1,0 +1,596 @@
+"""Multi-tenant control-plane tests.
+
+Covers: tenant key derivation + tenant-scoped capabilities, envelope
+replay hardening (authenticated nonce + bounded seen-set), cross-tenant
+isolation on the object store (get/put/migrate, including drain
+migration), per-tenant byte/ref quotas (reject and spill policies),
+weighted fair-share (DRF) dispatch vs the FIFO baseline, per-tenant
+autoscaler floors, and the end-to-end threaded cluster path."""
+import time
+
+import pytest
+
+from repro.core import (Autoscaler, AutoscalerConfig, Capability, NonceCache,
+                        QuotaExceededError, Scheduler, SchedulerConfig,
+                        SecurityError, SimCluster, SimCostModel,
+                        SyndeoCluster, TaskSpec, TaskState, Tenant,
+                        TenantQuota, WorkerInfo)
+from repro.core.object_store import GlobalObjectStore, NodeStore
+from repro.core.security import (ADMIN_TENANT, mint_cluster_token,
+                                 open_sealed, seal, tenant_key)
+
+
+# -------------------------------------------------------- tenant capabilities
+
+def test_tenant_key_is_derived_and_stable():
+    tok = mint_cluster_token()
+    assert tenant_key(tok, "alice") == tenant_key(tok, "alice")
+    assert tenant_key(tok, "alice") != tenant_key(tok, "bob")
+    assert tenant_key(tok, "alice") != tok
+    with pytest.raises(SecurityError):
+        tenant_key(tok, ADMIN_TENANT)   # the admin scope is not derivable
+
+
+def test_tenant_capability_verifies_only_its_own_tenant():
+    tok = mint_cluster_token()
+    cap = Capability.grant_for_tenant(tok, "alice", "obj1", "get")
+    cap.verify(tok, "obj1", "get", object_tenant="alice")
+    with pytest.raises(SecurityError, match="cross-tenant"):
+        cap.verify(tok, "obj1", "get", object_tenant="bob")
+    with pytest.raises(SecurityError):
+        cap.verify(tok, "obj2", "get", object_tenant="alice")  # wrong object
+    with pytest.raises(SecurityError):
+        cap.verify(tok, "obj1", "put", object_tenant="alice")  # wrong right
+
+
+def test_tenant_capability_cannot_be_relabeled():
+    """Changing the tenant id on a minted capability breaks the MAC: the
+    tenant id is inside the signed bytes, under a *different* derived key."""
+    tok = mint_cluster_token()
+    cap = Capability.grant_for_tenant(tok, "alice", "obj1", "get")
+    forged = Capability(cap.object_id, cap.right, cap.mac, tenant_id="bob")
+    with pytest.raises(SecurityError):
+        forged.verify(tok, "obj1", "get", object_tenant="bob")
+
+
+def test_admin_capability_covers_every_tenant():
+    tok = mint_cluster_token()
+    cap = Capability.grant(tok, "objects", "migrate")
+    assert cap.tenant_id == ADMIN_TENANT
+    cap.verify(tok, "objects", "migrate", object_tenant="alice")
+    cap.verify(tok, "objects", "migrate", object_tenant="bob")
+
+
+def test_tenant_principal_mints_equivalent_grants():
+    """A Tenant holding only its derived key mints capabilities identical
+    to head-side grant_for_tenant -- it never needs the cluster token."""
+    tok = mint_cluster_token()
+    alice = Tenant.derive(tok, "alice", weight=2.0)
+    assert alice.key != tok
+    cap = alice.grant("obj1", "get")
+    assert cap == Capability.grant_for_tenant(tok, "alice", "obj1", "get")
+
+
+# ------------------------------------------------------------ replay hardening
+
+def test_sealed_envelope_replay_is_rejected():
+    tok = mint_cluster_token()
+    cache = NonceCache()
+    env = seal(tok, {"op": "poll", "worker": "w0"})
+    assert open_sealed(tok, env, nonce_cache=cache)["op"] == "poll"
+    with pytest.raises(SecurityError, match="replay"):
+        open_sealed(tok, env, nonce_cache=cache)
+    # a fresh seal of the same body is a new message, not a replay
+    open_sealed(tok, seal(tok, {"op": "poll", "worker": "w0"}),
+                nonce_cache=cache)
+
+
+def test_envelope_timestamp_and_nonce_are_authenticated():
+    tok = mint_cluster_token()
+    env = seal(tok, {"op": "join"})
+    stale = dict(env, ts=env["ts"] - 7200.0)       # re-stamp: breaks the MAC
+    with pytest.raises(SecurityError, match="HMAC"):
+        open_sealed(tok, stale)
+    renonced = dict(env, nonce="00" * 16)          # re-nonce: breaks the MAC
+    with pytest.raises(SecurityError, match="HMAC"):
+        open_sealed(tok, renonced, nonce_cache=NonceCache())
+
+
+def test_nonce_cache_is_bounded():
+    cache = NonceCache(max_entries=4)
+    for i in range(10):
+        cache.check_and_add(f"nonce-{i}")
+    assert len(cache) == 4
+    with pytest.raises(SecurityError):             # still present -> replay
+        cache.check_and_add("nonce-9")
+    cache.check_and_add("nonce-0")                 # evicted long ago: aged out
+
+
+# ------------------------------------------------- store: cross-tenant access
+
+def _store_with_two_tenants():
+    tok = mint_cluster_token()
+    g = GlobalObjectStore()
+    g.set_access_guard(tok)
+    g.register_node(NodeStore("n0"))
+    g.register_node(NodeStore("n1"))
+    ref_a = g.put("n0", {"who": "alice"}, tenant="alice")
+    ref_b = g.put("n0", {"who": "bob"}, tenant="bob")
+    return tok, g, ref_a, ref_b
+
+
+def test_cross_tenant_get_denied():
+    tok, g, ref_a, ref_b = _store_with_two_tenants()
+    cap_a = Capability.grant_for_tenant(tok, "alice", ref_b.id, "get")
+    with pytest.raises(SecurityError, match="cross-tenant"):
+        g.get("n1", ref_b, capability=cap_a)
+    # the right capability works, and alice still reads her own data
+    cap_b = Capability.grant_for_tenant(tok, "bob", ref_b.id, "get")
+    assert g.get("n1", ref_b, capability=cap_b)["who"] == "bob"
+    own = Capability.grant_for_tenant(tok, "alice", ref_a.id, "get")
+    assert g.get("n1", ref_a, capability=own)["who"] == "alice"
+
+
+def test_cross_tenant_put_denied():
+    tok, g, ref_a, _ = _store_with_two_tenants()
+    # bob cannot overwrite alice's object id, with or without a capability
+    with pytest.raises(SecurityError, match="cross-tenant"):
+        g.put("n0", {"evil": True}, ref_id=ref_a.id, tenant="bob")
+    cap = Capability.grant_for_tenant(tok, "bob", "newobj", "put")
+    with pytest.raises(SecurityError):
+        g.put("n0", {"x": 1}, ref_id="newobj", tenant="alice",
+              capability=cap)   # capability tenant != claimed tenant
+
+
+def test_cross_tenant_migrate_denied():
+    tok, g, ref_a, ref_b = _store_with_two_tenants()
+    cap_a = Capability.grant_for_tenant(tok, "alice", "objects", "migrate")
+    with pytest.raises(SecurityError, match="cross-tenant"):
+        g.migrate(ref_b, "n0", "n1", capability=cap_a)
+    assert g.locations(ref_b) == {"n0"}            # nothing moved
+    # the admin guard (what the head installs) moves anything
+    admin = Capability.grant(tok, "objects", "migrate")
+    assert g.migrate(ref_b, "n0", "n1", capability=admin)
+    assert g.locations(ref_b) == {"n1"}
+
+
+def test_drain_migration_respects_tenant_guard():
+    """A drain running under a *tenant-scoped* migration guard cannot
+    exfiltrate another tenant's objects: the denied move degrades to the
+    drop path (lineage) instead of crossing the tenant boundary."""
+    sim = SimCluster(SimCostModel(task_time_s=lambda s: 0.05,
+                                  result_bytes=lambda s: 1024.0, jitter=0.0,
+                                  result_location="worker"),
+                     SchedulerConfig(enable_speculation=False,
+                                     heartbeat_timeout=1e9), seed=7)
+    tok = mint_cluster_token()
+    sim.store.set_access_guard(tok)
+    sim.add_workers(3)
+    # bob's object lands on some worker
+    sim.run_wave([TaskSpec(fn=None, group="produce", tenant_id="bob")])
+    ref = next(t.output for t in sim.scheduler.graph.tasks.values()
+               if t.output is not None)
+    assert sim.store.tenant_of(ref) == "bob"
+    victim = next(iter(sim.store.locations(ref)))
+    # the drain plane holds only alice's migration capability
+    sim.store.set_migration_guard(
+        Capability.grant_for_tenant(tok, "alice", "objects", "migrate"), tok)
+    sim.drain_worker_at(victim, sim.now)
+    sim.run()
+    assert sim.scheduler.stats["migration_denied"] >= 1
+    assert sim.scheduler.stats["migrated_objects"] == 0
+    assert victim not in sim.scheduler.workers     # drain still completed
+    # under the admin guard (the head's own), the same drain migrates
+    sim2 = SimCluster(SimCostModel(task_time_s=lambda s: 0.05,
+                                   result_bytes=lambda s: 1024.0, jitter=0.0,
+                                   result_location="worker"),
+                      SchedulerConfig(enable_speculation=False,
+                                      heartbeat_timeout=1e9), seed=7)
+    tok2 = mint_cluster_token()
+    sim2.store.set_access_guard(tok2)
+    sim2.store.set_migration_guard(
+        Capability.grant(tok2, "objects", "migrate"), tok2)
+    sim2.add_workers(3)
+    sim2.run_wave([TaskSpec(fn=None, group="produce", tenant_id="bob")])
+    ref2 = next(t.output for t in sim2.scheduler.graph.tasks.values()
+                if t.output is not None)
+    victim2 = next(iter(sim2.store.locations(ref2)))
+    sim2.drain_worker_at(victim2, sim2.now)
+    sim2.run()
+    assert sim2.scheduler.stats["migration_denied"] == 0
+    assert sim2.scheduler.stats["migrated_objects"] >= 1
+    assert sim2.store.locations(ref2)              # bob's object survived
+
+
+# ------------------------------------------------------------------- quotas
+
+def test_byte_quota_rejects_and_rolls_back():
+    g = GlobalObjectStore()
+    node = NodeStore("n0")
+    g.register_node(node)
+    g.set_quota("alice", TenantQuota(max_bytes=4096))
+    g.put("n0", b"x" * 1024, tenant="alice")
+    with pytest.raises(QuotaExceededError):
+        g.put("n0", b"y" * 8192, tenant="alice")
+    usage = g.tenant_usage("alice")
+    assert usage["refs"] == 1 and usage["bytes"] < 4096
+    assert g.stats["quota_rejects"] == 1
+    # the rejected blob is not left behind on the node store
+    assert node._used == usage["bytes"]
+    # other tenants are unaffected
+    g.put("n0", b"z" * 8192, tenant="bob")
+
+
+def test_ref_quota_rejects():
+    g = GlobalObjectStore()
+    g.register_node(NodeStore("n0"))
+    g.set_quota("alice", TenantQuota(max_refs=2))
+    g.put("n0", 1, tenant="alice")
+    g.put("n0", 2, tenant="alice")
+    with pytest.raises(QuotaExceededError, match="ref quota"):
+        g.put("n0", 3, tenant="alice")
+    assert g.tenant_usage("alice")["refs"] == 2
+
+
+def test_byte_quota_spill_policy(tmp_path):
+    """on_exceed="spill": over-quota puts land on disk instead of memory,
+    so a greedy tenant keeps working without squeezing others out."""
+    g = GlobalObjectStore()
+    node = NodeStore("n0", capacity_bytes=1 << 30, spill_dir=str(tmp_path))
+    g.register_node(node)
+    g.set_quota("alice", TenantQuota(max_bytes=2048, on_exceed="spill"))
+    r1 = g.put("n0", b"a" * 1024, tenant="alice")
+    spills_before = node.stats["spills"]
+    r2 = g.put("n0", b"b" * 4096, tenant="alice")   # over quota -> disk
+    assert node.stats["spills"] == spills_before + 1
+    assert g.stats["quota_spills"] == 1
+    # both objects stay readable
+    assert g.get("n0", r1) == b"a" * 1024
+    assert g.get("n0", r2) == b"b" * 4096
+
+
+def test_byte_quota_spill_without_spill_dir_degrades_to_reject():
+    """on_exceed="spill" on a node without a spill dir must reject, not
+    silently keep the over-quota blob in memory."""
+    g = GlobalObjectStore()
+    node = NodeStore("n0")                         # no spill_dir
+    g.register_node(node)
+    g.set_quota("alice", TenantQuota(max_bytes=512, on_exceed="spill"))
+    with pytest.raises(QuotaExceededError, match="no spill dir"):
+        g.put("n0", b"x" * 4096, tenant="alice")
+    assert g.tenant_usage("alice") == {"bytes": 0, "refs": 0}
+    assert node._used == 0                         # fully rolled back
+    assert g.stats["quota_spills"] == 0
+
+
+def test_release_frees_quota():
+    g = GlobalObjectStore()
+    g.register_node(NodeStore("n0"))
+    g.set_quota("alice", TenantQuota(max_refs=1))
+    ref = g.put("n0", 1, tenant="alice")
+    with pytest.raises(QuotaExceededError):
+        g.put("n0", 2, tenant="alice")
+    g.release(ref)
+    assert g.tenant_usage("alice") == {"bytes": 0, "refs": 0}
+    g.put("n0", 2, tenant="alice")                 # admitted again
+
+
+# ------------------------------------------------------- fair-share dispatch
+
+def _sched_with_workers(n, policy="fair"):
+    store = GlobalObjectStore()
+    launched = []
+    sched = Scheduler(store, lambda t, w: launched.append(t),
+                      config=SchedulerConfig(enable_speculation=False,
+                                             dispatch_policy=policy))
+    for i in range(n):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    return sched, launched
+
+
+def _queue_ready(sched, n, tenant):
+    """Stage READY tasks without triggering a scheduling pass (the
+    contended-queue shape fair-share exists for)."""
+    from repro.core.task_graph import Task
+    for _ in range(n):
+        sched._tenant_state(tenant)
+        sched.graph.add(Task(spec=TaskSpec(fn=None, tenant_id=tenant)))
+
+
+def test_fair_share_interleaves_equal_weights():
+    """4 slots, 8 alice tasks queued ahead of 8 bob tasks: FIFO gives all
+    4 slots to alice; fair-share splits them 2/2."""
+    for policy, expect_alice in (("fair", 2), ("fifo", 4)):
+        sched, launched = _sched_with_workers(4, policy)
+        _queue_ready(sched, 8, "alice")
+        _queue_ready(sched, 8, "bob")
+        sched.schedule()
+        by = {}
+        for t in launched:
+            by[t.spec.tenant_id] = by.get(t.spec.tenant_id, 0) + 1
+        assert by.get("alice", 0) == expect_alice, (policy, by)
+        assert sum(by.values()) == 4
+
+
+def test_fair_share_honors_weights():
+    """Weight 3 vs weight 1 on 4 slots -> 3/1 split of placements."""
+    sched, launched = _sched_with_workers(4)
+    sched.register_tenant("heavy", weight=3.0)
+    sched.register_tenant("light", weight=1.0)
+    _queue_ready(sched, 8, "light")
+    _queue_ready(sched, 8, "heavy")
+    sched.schedule()
+    by = {}
+    for t in launched:
+        by[t.spec.tenant_id] = by.get(t.spec.tenant_id, 0) + 1
+    assert by == {"heavy": 3, "light": 1}
+
+
+def test_single_tenant_fair_matches_fifo_order():
+    """With one tenant the fair path must reproduce the seed's arrival
+    order exactly (the zero-cost default)."""
+    runs = {}
+    for policy in ("fair", "fifo"):
+        sched, launched = _sched_with_workers(3, policy)
+        for i in range(9):
+            sched.submit(TaskSpec(fn=None, name=f"t{i}"))
+        runs[policy] = [t.spec.name for t in launched]
+    assert runs["fair"] == runs["fifo"]
+
+
+def test_fair_share_tracks_usage_release():
+    """Dominant shares decay as tasks finish: usage accounting must be
+    symmetric across launch/finish/fail/preempt paths."""
+    sched, launched = _sched_with_workers(2)
+    t1 = sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+    t2 = sched.submit(TaskSpec(fn=None, tenant_id="bob"))
+    shares = sched.tenant_shares()
+    assert shares["alice"] > 0 and shares["bob"] > 0
+    from repro.core.object_store import ObjectRef
+    sched.on_task_finished(t1.id, ObjectRef("o1"))
+    sched.on_task_failed(t2.id, "boom")
+    shares = sched.tenant_shares()
+    assert shares["alice"] == 0.0
+    # bob's retry relaunched immediately on the freed worker
+    assert sched.graph.tasks[t2.id].state == TaskState.RUNNING
+
+
+def test_fair_share_preserves_placement_groups():
+    """Placement-group tasks keep their bundle binding under fair-share."""
+    sched, launched = _sched_with_workers(3)
+    assert sched.create_placement_group(
+        "gang", [{"cpu": 1.0}, {"cpu": 1.0}], strategy="STRICT_SPREAD")
+    binding = sched.placement_binding("gang")
+    sched.submit(TaskSpec(fn=None, tenant_id="alice",
+                          placement_group="gang", bundle_index=0))
+    sched.submit(TaskSpec(fn=None, tenant_id="bob",
+                          placement_group="gang", bundle_index=1))
+    placed = {t.spec.bundle_index: t.worker for t in launched}
+    assert placed[0] == binding[0] and placed[1] == binding[1]
+
+
+# ------------------------------------------------- autoscaler tenant floors
+
+def test_scale_down_respects_tenant_minimums():
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(enable_speculation=False))
+    now = [100.0]
+    sched.clock = lambda: now[0]
+    for i in range(6):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    sched.register_tenant("steady")
+    sched.register_tenant("bursty")
+    released = []
+    auto = Autoscaler(sched, lambda n, r: n, released.extend,
+                      AutoscalerConfig(min_workers=1,
+                                       tenant_min_workers={"steady": 3,
+                                                           "bursty": 1},
+                                       idle_timeout_s=0.0,
+                                       scale_down_cooldown_s=0.0,
+                                       max_scale_down_step=8),
+                      clock=lambda: now[0])
+    assert auto.effective_min_workers() == 4       # 3 + 1 admitted floors
+    for _ in range(4):
+        now[0] += 10.0
+        auto.tick()
+    assert len(sched.workers) == 4                 # not the global min of 1
+    # an unadmitted tenant's floor does not count
+    auto.cfg.tenant_min_workers["ghost"] = 10
+    assert auto.effective_min_workers() == 4
+
+
+def test_scale_up_reason_attributes_tenants():
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(enable_speculation=False))
+    sched.add_worker(WorkerInfo("w0", {"cpu": 1.0}))
+    auto = Autoscaler(sched, lambda n, r: n, lambda w: None,
+                      AutoscalerConfig(queue_depth_per_worker=1.0,
+                                       scale_up_cooldown_s=0.0))
+    for i in range(4):
+        sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+    for i in range(2):
+        sched.submit(TaskSpec(fn=None, tenant_id="bob"))
+    ev = auto.tick()
+    assert ev is not None and ev.action == "scale_up"
+    assert "alice:" in ev.reason and "bob:" in ev.reason
+
+
+# ------------------------------------------------- threaded cluster end-to-end
+
+def test_cluster_tenants_end_to_end():
+    with SyndeoCluster() as cluster:
+        alice = cluster.register_tenant("alice", weight=2.0,
+                                        quota_bytes=1 << 20)
+        cluster.register_tenant("bob")
+        for _ in range(2):
+            cluster.add_worker(resources={"cpu": 1.0})
+        ta = cluster.submit(lambda: "from-alice", tenant_id="alice")
+        tb = cluster.submit(lambda: "from-bob", tenant_id="bob")
+        assert cluster.get(ta, timeout=10.0) == "from-alice"
+        assert cluster.get(tb, timeout=10.0) == "from-bob"
+        # outputs are owned by the right tenants
+        assert cluster.store.tenant_of(f"obj-{ta.id}") == "alice"
+        assert cluster.store.tenant_of(f"obj-{tb.id}") == "bob"
+        assert alice.weight == 2.0
+        assert cluster.scheduler.tenants["alice"].finished == 1
+
+
+def test_cluster_cross_tenant_dep_fails_task():
+    """A bob task depending on alice's object fails with a SecurityError:
+    the worker fetches deps under the task's tenant capability."""
+    with SyndeoCluster() as cluster:
+        cluster.register_tenant("alice")
+        cluster.register_tenant("bob")
+        cluster.add_worker(resources={"cpu": 1.0})
+        secret = cluster.put({"alice": "secret"}, tenant_id="alice")
+        task = cluster.submit(lambda x: x, deps=[secret], tenant_id="bob",
+                              max_retries=0)
+        with pytest.raises(RuntimeError, match="cross-tenant"):
+            cluster.get(task, timeout=10.0)
+
+
+def test_cluster_quota_rejects_put():
+    with SyndeoCluster() as cluster:
+        cluster.register_tenant("alice", quota_bytes=1024)
+        with pytest.raises(QuotaExceededError):
+            cluster.put(b"x" * 4096, tenant_id="alice")
+
+
+def test_tcp_poll_cross_tenant_dep_fails_task_not_strands_it():
+    """A TCP worker polling a task whose deps are another tenant's objects
+    gets no payload, and the task *fails visibly* (retry/FAILED path)
+    instead of sitting RUNNING forever."""
+    from repro.core.worker import HeadServer
+
+    cluster = SyndeoCluster()
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        joined = server.dispatch({"op": "join", "worker": "tcp-x",
+                                  "resources": {"cpu": 1.0}})
+        assert joined["ok"]
+        secret = cluster.put({"s": 1}, tenant_id="alice")
+        task = cluster.submit(lambda x: x, deps=[secret], tenant_id="bob",
+                              max_retries=0)
+        got = server.dispatch({"op": "poll", "worker": "tcp-x"})
+        assert got["ok"] and got["task"] is None
+        cur = cluster.scheduler.graph.tasks[task.id]
+        assert cur.state == TaskState.FAILED
+        assert "cross-tenant" in (cur.error or "")
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+def test_tcp_result_over_quota_fails_task_not_strands_it():
+    """A TCP worker's result put that trips the tenant's quota must fail
+    the task (visible error), not leave it RUNNING with no owner."""
+    from repro.core.worker import HeadServer, _enc
+
+    cluster = SyndeoCluster()
+    cluster.register_tenant("alice", quota_bytes=64)
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        server.dispatch({"op": "join", "worker": "tcp-y",
+                         "resources": {"cpu": 1.0}})
+        task = cluster.submit(pow, 2, 10, tenant_id="alice", max_retries=0)
+        got = server.dispatch({"op": "poll", "worker": "tcp-y"})
+        assert got["task"] == task.id
+        reply = server.dispatch({"op": "result", "task": task.id,
+                                 "worker": "tcp-y",
+                                 "payload": _enc(b"x" * 4096)})
+        assert reply["ok"] and reply.get("stored") is False
+        cur = cluster.scheduler.graph.tasks[task.id]
+        assert cur.state == TaskState.FAILED
+        assert "QuotaExceededError" in (cur.error or "")
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+# ----------------------------------------- metrics adapter (K8s HPA bridge)
+
+def test_metrics_adapter_serves_scheduler_signals(tmp_path):
+    """The custom-metrics adapter polls the head's sealed `metrics` op and
+    serves the HPA's two signals over HTTP (the declarative replacement
+    for the imperative kubectl-scale script)."""
+    import json
+    import threading
+    import urllib.request
+
+    from repro.core.metrics_adapter import MetricsPoller, make_server
+    from repro.core.rendezvous import FileRendezvous
+    from repro.core.worker import HeadServer
+
+    cluster = SyndeoCluster(rendezvous=FileRendezvous(str(tmp_path)))
+    server = HeadServer(cluster)
+    try:
+        # 6 tasks, no workers: backlog 6, busy fraction 0
+        for _ in range(6):
+            cluster.submit(lambda: None, tenant_id="alice")
+        poller = MetricsPoller(str(tmp_path), cluster.cluster_id)
+        latest = poller.poll_once()
+        assert latest["backlog"] == 6
+        assert latest["backlog_by_tenant"] == {"alice": 6}
+        http = make_server(poller, ("syndeo_backlog_per_worker",
+                                    "syndeo_busy_fraction"))
+        threading.Thread(target=http.serve_forever, daemon=True).start()
+        try:
+            host, port = http.server_address
+            with urllib.request.urlopen(
+                    f"http://{host}:{port}/metrics", timeout=5) as r:
+                flat = json.load(r)
+            assert flat["syndeo_backlog_per_worker"] == 6.0
+            assert flat["syndeo_busy_fraction"] == 0.0
+            # real HPA queries carry a labelSelector query string
+            with urllib.request.urlopen(
+                    f"http://{host}:{port}/apis/custom.metrics.k8s.io/"
+                    f"v1beta1/namespaces/default/pods/%2A/"
+                    f"syndeo_backlog_per_worker"
+                    f"?labelSelector=app%3Dsyndeo-abc", timeout=5) as r:
+                body = json.load(r)
+            assert body["kind"] == "MetricValueList"
+            assert body["items"][0]["value"] == "6000m"
+        finally:
+            http.shutdown()
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+# ------------------------------------------------- sim: contention scenario
+
+def test_sim_tenant_scenario_fairness():
+    """Equal-weight bursty-vs-steady contention in virtual time: the
+    fair-share scheduler keeps the dominant-share gap tiny while both are
+    backlogged (the benchmark's property, at test scale)."""
+    cost = SimCostModel(task_time_s=lambda s: 0.5,
+                        result_bytes=lambda s: 100.0, jitter=0.0)
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9), seed=1)
+    sim.add_workers(4)
+    sim.register_tenant("steady")
+    sim.register_tenant("bursty")
+    gaps = []
+
+    def on_tick(now):
+        backlog = sim.scheduler.backlog_by_tenant()
+        if backlog.get("steady", 0) and backlog.get("bursty", 0):
+            s = sim.scheduler.tenant_shares()
+            gaps.append(abs(s["steady"] - s["bursty"]))
+
+    placed = sim.run_tenant_scenario(
+        {"steady": [(0.1 * i, TaskSpec(fn=None)) for i in range(100)],
+         "bursty": [(1.0, TaskSpec(fn=None)) for _ in range(80)]},
+        tick_every=0.1, on_tick=on_tick)
+    assert gaps, "scenario never contended"
+    assert sum(gaps) / len(gaps) < 0.15
+    for tenant, pairs in placed.items():
+        assert pairs, tenant
+        for _, tid in pairs:
+            task = sim.scheduler.graph.tasks[tid]
+            assert task.state == TaskState.FINISHED
+            assert task.spec.tenant_id == tenant
