@@ -1,0 +1,213 @@
+"""Decentralized data plane benchmark: peer-to-peer vs head-relay.
+
+The seed runtime relayed every dependency blob and task result through the
+head's single socket, so aggregate data-plane bandwidth was capped by one
+NIC -- the control/data-plane conflation that collapses network-bound
+scaling (paper Table II's Humanoid row). The refactored stack splits a
+metadata-only head directory from a worker-side blob plane; this benchmark
+measures exactly that split on the REAL Scheduler/ObjectStore code under
+the sim's per-link cost model:
+
+1. *Shuffle*: N producers each emit one fat object; M consumers each
+   depend on all N outputs (N x M x size of dep traffic). Under
+   `data_plane="relay"` every byte serializes on the head link; under
+   `"p2p"` transfers overlap across worker NICs. Reported per worker
+   count: makespan, head-relayed payload bytes (p2p must be ~0, relay
+   ~everything), and aggregate dep traffic.
+
+2. *Drain*: a worker solely holding fat hot objects is drained while the
+   survivors' stores are nearly too small. The bandwidth-aware planner
+   (scheduler._dispatch_moves) must land every object without overflowing
+   any destination store and spread the moves across links instead of
+   convoying behind one survivor.
+
+Run:  PYTHONPATH=src python benchmarks/dataplane_bench.py [--quick]
+      PYTHONPATH=src python benchmarks/dataplane_bench.py --dataplane-smoke
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from repro.core import (ObjectRef, SchedulerConfig, SimCluster, SimCostModel,
+                        TaskSpec)
+
+MB = 1_000_000
+
+
+# ------------------------------------------------------------------- shuffle
+
+
+def _noop():
+    return None
+
+
+def shuffle_run(data_plane: str, n_workers: int, n_producers: int,
+                n_consumers: int, obj_bytes: int,
+                bandwidth_Bps: float = 1.0e9) -> Dict[str, float]:
+    """One shuffle wave under the given data plane; returns the metrics."""
+    cost = SimCostModel(
+        task_time_s=lambda s: 0.02,
+        result_bytes=lambda s: float(obj_bytes) if s.group == "produce"
+        else 1024.0,
+        jitter=0.0,
+        head_bandwidth_Bps=bandwidth_Bps,
+        node_bandwidth_Bps=bandwidth_Bps,
+        data_plane=data_plane,
+        result_location="worker" if data_plane == "p2p" else "head")
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    sim.add_workers(n_workers)
+    t0 = sim.now
+    producers = [sim.submit(TaskSpec(fn=_noop, name=f"p{i}", group="produce"))
+                 for i in range(n_producers)]
+    sim.run()
+    outputs: List[ObjectRef] = []
+    for p in producers:
+        task = sim.scheduler.graph.tasks[p.id]
+        assert task.output is not None, f"producer {p.id} did not finish"
+        outputs.append(task.output)
+    consumers = [sim.submit(TaskSpec(fn=_noop, name=f"c{i}", group="consume"),
+                            deps=list(outputs))
+                 for i in range(n_consumers)]
+    sim.run()
+    for cns in consumers:
+        assert sim.scheduler.graph.tasks[cns.id].output is not None
+    dep_traffic = float(n_consumers) * sum(o.size for o in outputs)
+    return {"makespan_s": sim.now - t0,
+            "head_relayed_bytes": float(
+                sim.store.stats["head_relayed_bytes"]),
+            "dep_traffic_bytes": dep_traffic}
+
+
+def bench_shuffle(worker_counts: List[int], obj_bytes: int) -> List[Dict]:
+    rows = []
+    for n in worker_counts:
+        relay = shuffle_run("relay", n, n, n, obj_bytes)
+        p2p = shuffle_run("p2p", n, n, n, obj_bytes)
+        rows.append({"workers": n, "relay": relay, "p2p": p2p})
+    return rows
+
+
+def print_shuffle(rows: List[Dict]):
+    print("\n== shuffle (N producers x N consumers, fat objects) ==")
+    print(f"{'workers':>8} {'relay s':>9} {'p2p s':>9} {'speedup':>8} "
+          f"{'relay head MB':>14} {'p2p head MB':>12}")
+    for r in rows:
+        speed = r["relay"]["makespan_s"] / max(r["p2p"]["makespan_s"], 1e-12)
+        print(f"{r['workers']:>8} {r['relay']['makespan_s']:>9.3f} "
+              f"{r['p2p']['makespan_s']:>9.3f} {speed:>7.1f}x "
+              f"{r['relay']['head_relayed_bytes'] / MB:>14.1f} "
+              f"{r['p2p']['head_relayed_bytes'] / MB:>12.1f}")
+
+
+# --------------------------------------------------------------------- drain
+
+
+def drain_run(n_objects: int = 8, obj_bytes: int = 8 * MB,
+              n_survivors: int = 4,
+              survivor_capacity: int = 24 * MB) -> Dict[str, object]:
+    """Drain a worker solely holding `n_objects` fat hot objects while the
+    survivors can each take only a few -- the bandwidth-aware planner must
+    pack under capacity and spread across links."""
+    cost = SimCostModel(task_time_s=lambda s: 0.01, jitter=0.0,
+                        data_plane="p2p", result_location="worker",
+                        migration_bandwidth_Bps=1.0e9)
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    victim = sim.add_workers(1, capacity_bytes=1 << 30)[0]
+    survivors = sim.add_workers(n_survivors,
+                                capacity_bytes=survivor_capacity)
+    refs = [sim.store.put(victim, bytearray(obj_bytes))
+            for _ in range(n_objects)]     # refcount 1 each: hot
+    t0 = sim.now
+    sim.drain_worker_at(victim, t=0.0)
+    sim.run()
+    assert victim not in sim.scheduler.workers, "drain did not finish"
+    dests = {}
+    for r in refs:
+        locs = sim.store.locations(r)
+        assert locs, f"hot object {r.id} lost by the drain"
+        for n in locs:
+            dests[n] = dests.get(n, 0) + r.size
+    over = {n: (used, sim.store._nodes[n].capacity)
+            for n, used in dests.items()
+            if n in survivors
+            and sim.store._nodes[n].used_bytes
+            > sim.store._nodes[n].capacity}
+    return {"drain_s": sim.now - t0,
+            "destinations": sorted(d for d in dests if d != victim),
+            "bytes_by_destination": dests,
+            "over_capacity": over,
+            "reconstructions": sim.store.stats["reconstructions"],
+            "migrated": sim.store.stats["migrations"]}
+
+
+def print_drain(res: Dict[str, object]):
+    print("\n== bandwidth-aware drain (fat objects, tight survivors) ==")
+    print(f"  drain latency      : {res['drain_s']:.3f} s (virtual)")
+    print(f"  migrations         : {res['migrated']}")
+    print(f"  destinations used  : {len(res['destinations'])} "
+          f"({', '.join(res['destinations'])})")
+    for n, b in sorted(res["bytes_by_destination"].items()):
+        print(f"    {n:>6}: {b / MB:.1f} MB")
+    print(f"  over-capacity dests: {res['over_capacity'] or 'none'}")
+    print(f"  reconstructions    : {res['reconstructions']}")
+
+
+# --------------------------------------------------------------------- smoke
+
+
+def smoke() -> int:
+    """CI gate: p2p moves zero payload bytes through the head, beats relay
+    on the shuffle at >= 4 workers, and the drain planner respects
+    destination capacity while spreading moves."""
+    rows = bench_shuffle([4, 8], obj_bytes=4 * MB)
+    print_shuffle(rows)
+    ok = True
+    for r in rows:
+        relay, p2p = r["relay"], r["p2p"]
+        if p2p["head_relayed_bytes"] != 0:
+            print(f"FAIL: p2p relayed {p2p['head_relayed_bytes']} bytes "
+                  f"through the head at {r['workers']} workers")
+            ok = False
+        if relay["head_relayed_bytes"] < 0.95 * relay["dep_traffic_bytes"]:
+            print(f"FAIL: relay should push ~all dep traffic through the "
+                  f"head ({relay['head_relayed_bytes']:.0f} of "
+                  f"{relay['dep_traffic_bytes']:.0f})")
+            ok = False
+        if p2p["makespan_s"] >= relay["makespan_s"]:
+            print(f"FAIL: p2p not faster than relay at {r['workers']} "
+                  f"workers ({p2p['makespan_s']:.3f} vs "
+                  f"{relay['makespan_s']:.3f})")
+            ok = False
+    res = drain_run()
+    print_drain(res)
+    if res["over_capacity"]:
+        print(f"FAIL: drain overflowed destinations: {res['over_capacity']}")
+        ok = False
+    if len(res["destinations"]) < 2:
+        print("FAIL: drain convoyed onto a single destination")
+        ok = False
+    if res["reconstructions"]:
+        print("FAIL: drain cost lineage reconstructions")
+        ok = False
+    print("\ndataplane smoke:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dataplane-smoke", action="store_true")
+    args = ap.parse_args()
+    if args.dataplane_smoke:
+        raise SystemExit(smoke())
+    counts = [2, 4, 8] if args.quick else [2, 4, 8, 16, 32]
+    rows = bench_shuffle(counts, obj_bytes=4 * MB)
+    print_shuffle(rows)
+    print_drain(drain_run())
+
+
+if __name__ == "__main__":
+    main()

@@ -3,26 +3,35 @@
 Scheduler-inside-a-scheduler: a dynamic, dependency-driven head-worker
 cluster (this package) hosted inside a static gang allocation (Slurm / K8s /
 Cloud-TPU queued resources), with a secure containerized bring-up protocol.
+The control plane (directory, scheduling, quotas, tickets) lives on the
+head; the data plane (blobs) moves peer to peer between worker stores.
 """
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScalingEvent
 from repro.core.cluster import ContainerSpec, SyndeoCluster
-from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
-                                     QuotaExceededError, TenantQuota)
-from repro.core.scheduler import (DrainState, Scheduler, SchedulerConfig,
-                                  TenantState, WorkerIndex, WorkerInfo)
+from repro.core.object_store import (GlobalObjectStore, InProcessTransport,
+                                     NodeStore, ObjectRef,
+                                     QuotaExceededError, RemoteNodeStore,
+                                     TCPTransport, TenantQuota, Transport)
+from repro.core.scheduler import (DrainState, RateLimitExceeded, Scheduler,
+                                  SchedulerConfig, TenantState, TokenBucket,
+                                  WorkerIndex, WorkerInfo)
 from repro.core.security import (Capability, NonceCache, SecurityError,
-                                 Tenant, UnprivilegedProfile)
-from repro.core.simulator import SimCluster, SimCostModel
+                                 Tenant, TransferTicket, UnprivilegedProfile)
+from repro.core.simulator import (SimCluster, SimCostModel,
+                                  lognormal_provision_latency)
 from repro.core.task_graph import Task, TaskSpec, TaskState
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "ScalingEvent",
     "ContainerSpec", "SyndeoCluster", "DrainState", "GlobalObjectStore",
-    "NodeStore",
-    "ObjectRef", "QuotaExceededError", "TenantQuota",
-    "Scheduler", "SchedulerConfig", "TenantState", "WorkerIndex",
+    "InProcessTransport", "NodeStore",
+    "ObjectRef", "QuotaExceededError", "RateLimitExceeded",
+    "RemoteNodeStore", "TCPTransport", "TenantQuota", "Transport",
+    "Scheduler", "SchedulerConfig", "TenantState", "TokenBucket",
+    "TransferTicket", "WorkerIndex",
     "WorkerInfo",
     "Capability", "NonceCache", "SecurityError", "Tenant",
     "UnprivilegedProfile", "SimCluster",
     "SimCostModel", "Task", "TaskSpec", "TaskState",
+    "lognormal_provision_latency",
 ]

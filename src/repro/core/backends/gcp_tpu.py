@@ -86,7 +86,8 @@ for I in $(seq 0 {count - 1}); do
       docker run --privileged=false --net=host --user 1000:1000 \\
         {image} \\
         python -m repro.core.worker --role worker \\
-          --rendezvous gs://syndeo-rdv/{cluster_id} --cluster-id {cluster_id}
+          --rendezvous gs://syndeo-rdv/{cluster_id} --cluster-id {cluster_id} \\
+          --blob-host \\$(hostname -i | cut -d' ' -f1)
     " &
 done
 wait

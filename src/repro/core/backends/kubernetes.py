@@ -81,8 +81,14 @@ spec:
       - name: worker
         image: {image}
         command: ["{self.container.entrypoint.split()[0]}"]
+        # --blob-host: the p2p blob server advertises the pod IP (downward
+        # API), so peer workers dial this pod instead of their own loopback
         args: ["-m", "repro.core.worker", "--role", "worker",
-               "--rendezvous", "{req.shared_dir}", "--cluster-id", "{cluster_id}"]
+               "--rendezvous", "{req.shared_dir}", "--cluster-id", "{cluster_id}",
+               "--blob-host", "$(POD_IP)"]
+        env:
+        - name: POD_IP
+          valueFrom: {{fieldRef: {{fieldPath: status.podIP}}}}
         resources:
           requests: {{cpu: "{req.cpus_per_node}"}}
         volumeMounts:

@@ -24,10 +24,14 @@ class SlurmBackend(Backend):
         # Syndeo worker id == Slurm NodeName: workers join under $(hostname)
         # and record the mapping under the rendezvous, so scale-down can
         # resolve the scheduler's worker ids back to drainable hosts.
+        # --blob-host: the p2p blob server must advertise the node's
+        # fabric address, not the 127.0.0.1 default, or peers dial their
+        # own loopback
         worker_cmd = (apptainer_run_command(self.container, role="worker",
                                             rendezvous_dir=req.shared_dir,
                                             cluster_id=cluster_id)
-                      + ' --worker-id "$(hostname)"')
+                      + ' --worker-id "$(hostname)"'
+                      + ' --blob-host "$(hostname -i | cut -d\' \' -f1)"')
         record_host = (f'echo "$(hostname)" > '
                        f'"{req.shared_dir}/rdv/workers/$(hostname).host"')
         reservation = (f"#SBATCH --reservation={req.reservation}\n"
@@ -85,7 +89,8 @@ wait
         worker_cmd = (apptainer_run_command(self.container, role="worker",
                                             rendezvous_dir=req.shared_dir,
                                             cluster_id=cluster_id)
-                      + ' --worker-id "$(hostname)"')
+                      + ' --worker-id "$(hostname)"'
+                      + ' --blob-host "$(hostname -i | cut -d\' \' -f1)"')
         # guaranteed gang growth instead of hoping the partition has free
         # nodes: --dependency=singleton serializes scale-up jobs (all share
         # this job name), so bursts of autoscaler decisions queue in order

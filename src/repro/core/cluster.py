@@ -52,8 +52,14 @@ class SyndeoCluster:
     def __init__(self, container: Optional[ContainerSpec] = None,
                  scheduler_config: SchedulerConfig = SchedulerConfig(),
                  profile: Optional[UnprivilegedProfile] = None,
-                 rendezvous=None):
+                 rendezvous=None, data_plane: str = "p2p"):
         self.container = container or ContainerSpec()
+        # "p2p" (default): TCP workers run blob servers, results stay on
+        # the producer, the head serves metadata + transfer tickets only.
+        # "relay": every payload rides the head's socket -- the single-node
+        # backward-compat mode and the benchmark baseline. The threaded
+        # local backend is in-process either way; HeadServer reads this.
+        self.data_plane = data_plane
         self.cluster_id = uuid.uuid4().hex[:12]
         self.token = mint_cluster_token()
         self.profile = profile or UnprivilegedProfile(allow_root=True)
@@ -80,6 +86,9 @@ class SyndeoCluster:
             Capability.grant(self.token, "objects", "migrate"), self.token)
         # tenant capabilities presented on get/put are verified against this
         self.store.set_access_guard(self.token)
+        # worker-destined transfers must carry a head-minted ticket whose
+        # MAC binds (object, source, destination worker, tenant, expiry)
+        self.store.set_transfer_guard(True)
         self._tenants: Dict[str, Tenant] = {}
         self._tenant_min: Dict[str, int] = {}
         self.rendezvous.publish(Endpoint("127.0.0.1", 6379, self.cluster_id,
@@ -91,17 +100,25 @@ class SyndeoCluster:
                         quota_bytes: Optional[int] = None,
                         quota_refs: Optional[int] = None,
                         on_exceed: str = "reject",
-                        min_workers: int = 0) -> Tenant:
+                        min_workers: int = 0,
+                        submit_rate: Optional[float] = None,
+                        submit_burst: Optional[float] = None) -> Tenant:
         """Admit a tenant: fair-share weight on the scheduler, byte/ref
-        quota on the object store, a scale-down floor on the autoscaler,
-        and a derived per-tenant key the tenant mints capabilities with
-        (the tenant never sees the cluster token)."""
+        quota on the object store, an optional token-bucket submit rate
+        (`submit_rate` tasks/s sustained, `submit_burst` peak -- exceeding
+        it raises RateLimitExceeded exactly like a quota reject), a
+        scale-down floor on the autoscaler, and a derived per-tenant key
+        the tenant mints capabilities with (the tenant never sees the
+        cluster token)."""
         with self._lock:
             self.scheduler.register_tenant(tenant_id, weight)
             if quota_bytes is not None or quota_refs is not None:
                 self.store.set_quota(tenant_id, TenantQuota(
                     max_bytes=quota_bytes, max_refs=quota_refs,
                     on_exceed=on_exceed))
+            if submit_rate is not None:
+                self.scheduler.set_submit_rate(tenant_id, submit_rate,
+                                               submit_burst)
             if min_workers:
                 self._tenant_min[tenant_id] = min_workers
                 if self.autoscaler is not None:
@@ -238,22 +255,31 @@ class SyndeoCluster:
         ev = self._futures.get(task.id)
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
+            output = None
             with self._lock:
                 cur = self.scheduler.graph.tasks.get(task.id)
-                if cur and cur.state == TaskState.FINISHED:
-                    try:
-                        return self.store.get("head", cur.output)
-                    except KeyError:
-                        # output's only copy died with its worker: lineage
-                        # reconstruction -- re-run the producing task
-                        self.store.note_reconstruction()
-                        cur.state = TaskState.READY
-                        cur.output = None
-                        cur.attempts = 0
-                        self.scheduler.schedule()
-                        continue
                 if cur and cur.state == TaskState.FAILED:
                     raise RuntimeError(f"task failed: {cur.error}")
+                if cur and cur.state == TaskState.FINISHED:
+                    output = cur.output
+            if output is not None:
+                try:
+                    # the blob fetch may cross the network (a p2p worker
+                    # holds the primary): NEVER under the cluster lock, or
+                    # one slow source stalls every control-plane op
+                    return self.store.get("head", output)
+                except KeyError:
+                    # output's only copy died with its worker: lineage
+                    # reconstruction -- re-run the producing task
+                    with self._lock:
+                        cur = self.scheduler.graph.tasks.get(task.id)
+                        if cur and cur.state == TaskState.FINISHED:
+                            self.store.note_reconstruction()
+                            cur.state = TaskState.READY
+                            cur.output = None
+                            cur.attempts = 0
+                            self.scheduler.schedule()
+                    continue
             if ev is not None:
                 ev.wait(0.02)
                 ev.clear()
@@ -299,9 +325,24 @@ class SyndeoCluster:
                 # store verifies against the object's owner -- a task cannot
                 # read or overwrite another tenant's objects
                 tenant = spec.tenant_id
-                resolved = [self.store.get(
-                    wid, d, capability=Capability.grant_for_tenant(
-                        self.token, tenant, d.id, "get")) for d in deps]
+                resolved = []
+                for d in deps:
+                    # every remote dep fetch rides the ticketed data plane:
+                    # grant_fetch picks the source (locality + link load)
+                    # and refuses cross-tenant reads at mint time
+                    cap = Capability.grant_for_tenant(
+                        self.token, tenant, d.id, "get")
+                    ticket = self.store.grant_fetch(d, wid, tenant)
+                    try:
+                        resolved.append(self.store.get(
+                            wid, d, capability=cap, ticket=ticket))
+                    except KeyError:
+                        # the ticket-pinned source lost its copy (e.g. it
+                        # migrated mid-drain): re-mint against a survivor
+                        # before burning a task retry
+                        ticket = self.store.grant_fetch(d, wid, tenant)
+                        resolved.append(self.store.get(
+                            wid, d, capability=cap, ticket=ticket))
                 out = spec.fn(*spec.args, *resolved, **spec.kwargs)
                 ref = self.store.put(
                     wid, out, producer_task=tid, ref_id=f"obj-{tid}",

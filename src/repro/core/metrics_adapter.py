@@ -27,7 +27,9 @@ from urllib.parse import urlsplit
 from repro.core.rendezvous import FileRendezvous
 from repro.core.security import NonceCache
 
-DEFAULT_METRICS = ("syndeo_backlog_per_worker", "syndeo_busy_fraction")
+DEFAULT_METRICS = ("syndeo_backlog_per_worker", "syndeo_busy_fraction",
+                   "syndeo_tenant_dominant_share",
+                   "syndeo_tenant_quota_fraction")
 
 
 class MetricsPoller:
@@ -103,11 +105,23 @@ def make_server(poller: MetricsPoller, metrics: tuple, host: str = "127.0.0.1",
             if path.startswith("/apis/custom.metrics.k8s.io/v1beta1"):
                 name = path.rstrip("/").rsplit("/", 1)[-1]
                 if name in metrics:
+                    value = latest.get(name, 0.0)
+                    if isinstance(value, dict):
+                        # per-tenant metric (dominant share, quota
+                        # pressure): one item per tenant, named so an HPA
+                        # or dashboard can select a single principal
+                        items = [dict(_metric_item(name, float(v)),
+                                      describedObject={
+                                          "kind": "Tenant",
+                                          "apiVersion": "syndeo/v1",
+                                          "name": tenant})
+                                 for tenant, v in sorted(value.items())]
+                    else:
+                        items = [_metric_item(name, float(value))]
                     self._json(200, {
                         "kind": "MetricValueList",
                         "apiVersion": "custom.metrics.k8s.io/v1beta1",
-                        "items": [_metric_item(
-                            name, float(latest.get(name, 0.0)))]})
+                        "items": items})
                     return
                 self._json(200, {
                     "kind": "APIResourceList",

@@ -15,6 +15,39 @@ TPU cluster large tensors move as sharded checkpoint files instead; the
 store then carries references (paths + manifests), which is exactly how the
 paper's shared-filesystem rendezvous behaves.
 
+Control plane vs data plane
+---------------------------
+
+The head holds only *metadata*: the directory maps each object id to
+``(size, locations, owner, refcount, lineage, tenant)``. Blobs live in the
+per-node ``NodeStore``s and move **peer to peer**:
+
+  * ``record(node_id, size, ...)`` registers a result that already lives in
+    a (possibly remote) worker's local store -- the metadata-only twin of
+    ``put`` with identical tenant/quota admission, but no bytes head-side,
+  * ``fetch(node_id, ref, ticket=...)`` materializes a copy on ``node_id``
+    by pulling the blob from a peer through the pluggable ``Transport``
+    (``InProcessTransport`` for the threaded/sim backends,
+    ``TCPTransport`` + a worker-side blob server for real sockets),
+  * sources are chosen by locality and link load (``choose_source``:
+    prefer peer workers over the head, then the least-trafficked NIC --
+    ``link_load`` tracks cumulative bytes per node link),
+  * when the head installs the transfer guard (``set_transfer_guard``),
+    a worker-destined fetch must present a ``TransferTicket`` whose MAC
+    binds (object, source, requesting worker, tenant, expiry) -- minted
+    only by the head (``grant_fetch``), so holding the directory answer
+    is itself the authorization to move those exact bytes,
+  * ``RemoteNodeStore`` is the head-side proxy for a remote worker's
+    store: it holds no bytes and serves ``export_blob``/``import_blob``
+    over the worker's blob server, which keeps ``get``/``migrate``/
+    ``release`` working unchanged over remote nodes.
+
+Wire format (blob server / TCPTransport): every frame is an 8-byte
+big-endian length followed by the payload streamed in 64 KiB chunks. A
+request is one sealed-JSON frame (HMAC envelope, security.py) naming the
+op, object, requester and ticket; a "put"/"get" moves the blob as a second
+raw frame whose sha256 is authenticated inside the sealed header.
+
 Drain / migration
 -----------------
 
@@ -65,16 +98,55 @@ guard, no quota) is behavior-identical to the single-tenant store.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import pickle
+import socket
+import struct
 import threading
 import time
 import uuid
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Set
+from typing import Any, Callable, Dict, Optional, Set, Tuple
 
-from repro.core.security import DEFAULT_TENANT, Capability, SecurityError
+from repro.core.security import (ADMIN_TENANT, DEFAULT_TENANT, Capability,
+                                 SecurityError, TransferTicket, open_sealed,
+                                 seal)
+
+#: data-plane framing: 8-byte big-endian length prefix, 64 KiB chunks
+FRAME_CHUNK = 64 * 1024
+_LEN = struct.Struct(">Q")
+
+
+def send_frame(sock: socket.socket, payload: bytes):
+    """Write one chunked length-prefixed frame."""
+    sock.sendall(_LEN.pack(len(payload)))
+    view = memoryview(payload)
+    for off in range(0, len(view), FRAME_CHUNK):
+        sock.sendall(view[off:off + FRAME_CHUNK])
+
+
+def recv_frame(sock: socket.socket, max_bytes: int = 1 << 32) -> bytes:
+    """Read one chunked length-prefixed frame (raises on truncation)."""
+    header = _recv_exact(sock, _LEN.size)
+    (length,) = _LEN.unpack(header)
+    if length > max_bytes:
+        raise ValueError(f"frame of {length} bytes exceeds cap {max_bytes}")
+    return _recv_exact(sock, length)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    parts = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(FRAME_CHUNK, n - got))
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame")
+        parts.append(chunk)
+        got += len(chunk)
+    return b"".join(parts)
 
 
 class QuotaExceededError(SecurityError):
@@ -122,6 +194,16 @@ class NodeStore:
         self._used = 0
         self._lock = threading.Lock()
         self.stats = {"puts": 0, "gets": 0, "spills": 0, "restores": 0}
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    @property
+    def free_bytes(self) -> int:
+        with self._lock:
+            return max(0, self.capacity - self._used)
 
     def put(self, ref: ObjectRef, value: Any) -> int:
         return self.put_blob(ref, pickle.dumps(
@@ -219,6 +301,180 @@ class NodeStore:
         self.stats["spills"] += 1
 
 
+# -- data plane: transports ---------------------------------------------------
+
+
+class Transport:
+    """How blobs move between node stores. The control plane (directory,
+    tickets, source choice) stays in GlobalObjectStore; a Transport only
+    moves already-authorized bytes."""
+
+    def fetch(self, src_store, ref: ObjectRef,
+              ticket: Optional[TransferTicket] = None) -> bytes:
+        raise NotImplementedError
+
+
+class InProcessTransport(Transport):
+    """Local/sim data plane: the 'wire' is a function call. Remote-proxy
+    node stores still reach their real peers (export_blob does the socket
+    work), so this transport is correct for mixed local+remote clusters."""
+
+    def fetch(self, src_store, ref: ObjectRef,
+              ticket: Optional[TransferTicket] = None) -> bytes:
+        return src_store.export_blob(ref)
+
+
+class TCPTransport(Transport):
+    """Worker-side p2p client: pulls/pushes blobs against a peer's blob
+    server (see worker.BlobServer) with the chunked length-prefixed frame
+    protocol. `endpoint_of(node_id)` resolves a peer to (host, port)."""
+
+    def __init__(self, endpoint_of: Callable[[str], Optional[Tuple[str, int]]],
+                 token: str, requester: str, timeout: float = 15.0):
+        self.endpoint_of = endpoint_of
+        self.token = token
+        self.requester = requester
+        self.timeout = timeout
+
+    def _rpc(self, node_id: str, header: Dict[str, Any],
+             blob: Optional[bytes] = None) -> Tuple[Dict[str, Any],
+                                                    Optional[bytes]]:
+        ep = self.endpoint_of(node_id)
+        if ep is None:
+            raise KeyError(f"no blob endpoint for node {node_id}")
+        with socket.create_connection(tuple(ep), timeout=self.timeout) as s:
+            send_frame(s, json.dumps(seal(self.token, header)).encode())
+            if blob is not None:
+                send_frame(s, blob)
+            reply = open_sealed(self.token, json.loads(recv_frame(s).decode()))
+            body = None
+            if reply.get("ok") and reply.get("size") is not None:
+                body = recv_frame(s)
+                if len(body) != reply["size"] or hashlib.sha256(
+                        body).hexdigest() != reply.get("sha256"):
+                    raise SecurityError(
+                        f"blob integrity check failed for {header.get('object')}")
+        if not reply.get("ok"):
+            err = reply.get("error", "blob request refused")
+            # the server formats errors as "<TypeName>: <message>" --
+            # classify on the exact type-name prefix, never by substring
+            # (an object id containing "ticket" must not look like a
+            # security failure to recovery paths keyed on KeyError)
+            if err.split(":", 1)[0].strip() in ("SecurityError",
+                                                "QuotaExceededError"):
+                raise SecurityError(err)
+            raise KeyError(err)
+        return reply, body
+
+    def fetch(self, src_store, ref: ObjectRef,
+              ticket: Optional[TransferTicket] = None) -> bytes:
+        node_id = src_store if isinstance(src_store, str) else src_store.node_id
+        header = {"op": "get", "object": ref.id, "requester": self.requester,
+                  "ticket": ticket.to_wire() if ticket else None}
+        _, body = self._rpc(node_id, header)
+        return body or b""
+
+    def push(self, node_id: str, ref: ObjectRef, blob: bytes,
+             ticket: Optional[TransferTicket] = None):
+        header = {"op": "put", "object": ref.id, "requester": self.requester,
+                  "ticket": ticket.to_wire() if ticket else None,
+                  "size": len(blob),
+                  "sha256": hashlib.sha256(blob).hexdigest()}
+        self._rpc(node_id, header, blob=blob)
+
+    def has(self, node_id: str, object_id: str,
+            ticket: Optional[TransferTicket] = None) -> bool:
+        """Existence probe -- ticketed like a fetch: knowing *where* an
+        object lives is placement metadata a tenant must not free-ride."""
+        try:
+            reply, _ = self._rpc(node_id, {
+                "op": "has", "object": object_id,
+                "requester": self.requester,
+                "ticket": ticket.to_wire() if ticket else None})
+        except (OSError, KeyError, SecurityError):
+            return False
+        return bool(reply.get("has"))
+
+    def delete(self, node_id: str, object_id: str,
+               ticket: Optional[TransferTicket] = None) -> bool:
+        try:
+            self._rpc(node_id, {"op": "del", "object": object_id,
+                                "requester": self.requester,
+                                "ticket": ticket.to_wire() if ticket else None})
+        except (OSError, KeyError, SecurityError):
+            return False
+        return True
+
+
+class RemoteNodeStore:
+    """Head-side *proxy* for a worker's node store in the p2p data plane.
+
+    Holds zero bytes. The directory keeps treating the worker as a regular
+    location; export/import/get/delete are served over the worker's blob
+    server, authorized by admin transfer tickets minted under the cluster
+    token (only the head constructs these proxies). This is what keeps
+    `GlobalObjectStore.get/migrate/release` working unchanged when the
+    primary copies live outside the head process."""
+
+    #: proxies have no local memory budget -- capacity is the remote
+    #: worker's concern (node_free_bytes reports None = unknown)
+    capacity = None
+
+    def __init__(self, node_id: str, endpoint: Tuple[str, int], token: str,
+                 requester: str = "head", ticket_ttl_s: float = 30.0):
+        self.node_id = node_id
+        self.endpoint = tuple(endpoint)
+        self._token = token
+        self._requester = requester
+        self._ttl = ticket_ttl_s
+        self._transport = TCPTransport(lambda _nid: self.endpoint, token,
+                                       requester)
+        self.stats = {"puts": 0, "gets": 0, "spills": 0, "restores": 0}
+
+    def _ticket(self, object_id: str, right: str) -> TransferTicket:
+        return TransferTicket.grant(self._token, object_id, self.node_id,
+                                    self._requester, ADMIN_TENANT, right,
+                                    ttl_s=self._ttl)
+
+    @property
+    def used_bytes(self) -> int:
+        return 0
+
+    def export_blob(self, ref: ObjectRef) -> bytes:
+        self.stats["gets"] += 1
+        return self._transport.fetch(self.node_id, ref,
+                                     self._ticket(ref.id, "get"))
+
+    def import_blob(self, ref: ObjectRef, blob: bytes):
+        self.stats["puts"] += 1
+        self._transport.push(self.node_id, ref, blob,
+                             self._ticket(ref.id, "put"))
+
+    def put_blob(self, ref: ObjectRef, blob: bytes) -> int:
+        self.import_blob(ref, blob)
+        return len(blob)
+
+    def put(self, ref: ObjectRef, value: Any) -> int:
+        return self.put_blob(ref, pickle.dumps(
+            value, protocol=pickle.HIGHEST_PROTOCOL))
+
+    def get(self, ref: ObjectRef) -> Any:
+        return pickle.loads(self.export_blob(ref))
+
+    def has(self, ref: ObjectRef) -> bool:
+        return self._transport.has(self.node_id, ref.id,
+                                   self._ticket(ref.id, "get"))
+
+    def delete(self, ref: ObjectRef):
+        # best-effort distributed GC; an unreachable (dying) worker's
+        # copies disappear with the worker anyway
+        self._transport.delete(self.node_id, ref.id,
+                               self._ticket(ref.id, "del"))
+
+    def spill(self, ref: ObjectRef) -> bool:
+        return False     # spill policy is the remote worker's own
+
+
 @dataclass
 class _Directory:
     locations: Set[str] = field(default_factory=set)
@@ -238,18 +494,27 @@ class GlobalObjectStore:
     communication-cost model reads these counters).
     """
 
-    def __init__(self):
+    def __init__(self, transport: Optional[Transport] = None):
         self._dir: Dict[str, _Directory] = {}
         self._nodes: Dict[str, NodeStore] = {}
         self._lock = threading.Lock()
         self._migration_guard = None   # optional (capability, token) pair
         self._token: Optional[str] = None            # set_access_guard
+        self._require_tickets = False                # set_transfer_guard
         self._quotas: Dict[str, TenantQuota] = {}
         self._usage: Dict[str, Dict[str, int]] = {}  # tenant -> bytes/refs
+        self.transport = transport or InProcessTransport()
+        # data-plane load accounting: cumulative bytes over each node's
+        # link and per (src, dst) pair -- source choice and the drain
+        # planner spread traffic by reading these
+        self._link_bytes: Dict[str, int] = {}
+        self.bytes_by_link: Dict[Tuple[str, str], int] = {}
         self.stats = {"transfers": 0, "transfer_bytes": 0,
                       "reconstructions": 0,
                       "migrations": 0, "migrated_bytes": 0,
-                      "quota_rejects": 0, "quota_spills": 0}
+                      "quota_rejects": 0, "quota_spills": 0,
+                      "records": 0, "head_relayed_bytes": 0,
+                      "ticket_rejects": 0}
 
     # -- multi-tenancy: guard, quota, accounting -------------------------------
 
@@ -261,6 +526,79 @@ class GlobalObjectStore:
         worker-side access is verified end to end."""
         self._token = token
 
+    def set_transfer_guard(self, require_tickets: bool = True):
+        """Require a valid TransferTicket for every fetch that materializes
+        bytes on a *worker* node. The head's own store stays trusted (it is
+        the directory authority minting the tickets); everything else must
+        present the head's short-lived grant for those exact bytes."""
+        self._require_tickets = require_tickets
+
+    # -- data plane: source choice, link accounting, tickets -------------------
+
+    def link_load(self, node_id: str) -> int:
+        """Cumulative data-plane bytes over `node_id`'s link (in + out)."""
+        with self._lock:
+            return self._link_bytes.get(node_id, 0)
+
+    def note_link_bytes(self, src: str, dst: str, size: int):
+        """Account one transfer on both endpoints' links. Called internally
+        by fetch/migrate and by backends that *model* transfers (the sim's
+        virtual NICs) so planners see one coherent load picture."""
+        with self._lock:
+            self._link_bytes[src] = self._link_bytes.get(src, 0) + size
+            self._link_bytes[dst] = self._link_bytes.get(dst, 0) + size
+            key = (src, dst)
+            self.bytes_by_link[key] = self.bytes_by_link.get(key, 0) + size
+
+    def rank_sources(self, ref: ObjectRef, dst: str) -> list:
+        """All live serving peers for a fetch onto `dst`, best first:
+        prefer worker peers over the head (keep the head's NIC out of the
+        data plane), then the least-trafficked link, then name order
+        (determinism). The single policy behind choose_source, the head's
+        ticketed poll replies, and any future placement term."""
+        with self._lock:
+            e = self._dir.get(ref.id)
+            if e is None:
+                return []
+            srcs = [n for n in e.locations if n != dst and n in self._nodes]
+            return sorted(srcs, key=lambda n: (n == "head",
+                                               self._link_bytes.get(n, 0), n))
+
+    def choose_source(self, ref: ObjectRef, dst: str) -> Optional[str]:
+        """Best serving peer for a fetch onto `dst` (see rank_sources)."""
+        ranked = self.rank_sources(ref, dst)
+        return ranked[0] if ranked else None
+
+    def grant_fetch(self, ref: ObjectRef, dst: str, acting_tenant: str,
+                    ttl_s: float = 30.0,
+                    src: Optional[str] = None) -> Optional[TransferTicket]:
+        """Head-side ticket mint for one dep fetch: choose a source and
+        bind (object, source, destination worker, tenant, expiry) under
+        the cluster token. Returns None when `dst` already holds a copy or
+        nothing does (caller decides whether that is a miss or a no-op).
+        Cross-tenant requests are refused *here*, at mint time -- a task
+        acting as tenant B never even learns where tenant A's bytes live."""
+        if self._token is None:
+            raise SecurityError(
+                "cannot mint transfer tickets before set_access_guard")
+        tenant = self.tenant_of(ref.id)
+        if tenant is None:
+            return None
+        if acting_tenant != ADMIN_TENANT and acting_tenant != tenant:
+            self.stats["ticket_rejects"] += 1
+            raise SecurityError(
+                f"cross-tenant fetch denied: tenant {acting_tenant!r} "
+                f"cannot read an object of tenant {tenant!r}")
+        with self._lock:
+            e = self._dir.get(ref.id)
+            if e is None or dst in e.locations:
+                return None
+        src = src if src is not None else self.choose_source(ref, dst)
+        if src is None:
+            return None
+        return TransferTicket.grant(self._token, ref.id, src, dst,
+                                    acting_tenant, "get", ttl_s=ttl_s)
+
     def set_quota(self, tenant: str, quota: TenantQuota):
         with self._lock:
             self._quotas[tenant] = quota
@@ -269,6 +607,25 @@ class GlobalObjectStore:
         with self._lock:
             u = self._usage.get(tenant, {})
             return {"bytes": u.get("bytes", 0), "refs": u.get("refs", 0)}
+
+    def quota_of(self, tenant: str) -> Optional[TenantQuota]:
+        with self._lock:
+            return self._quotas.get(tenant)
+
+    def tenant_quota_fraction(self, tenant: str) -> float:
+        """Live bytes / byte quota (0.0 when unlimited) -- the pressure
+        signal the metrics op and the K8s adapter surface per tenant."""
+        with self._lock:
+            q = self._quotas.get(tenant)
+            if q is None or not q.max_bytes:
+                return 0.0
+            used = self._usage.get(tenant, {}).get("bytes", 0)
+            return used / q.max_bytes
+
+    def quota_tenants(self) -> Set[str]:
+        """Tenants with a quota or live usage (metrics enumeration)."""
+        with self._lock:
+            return set(self._quotas) | set(self._usage)
 
     def tenant_of(self, ref_or_id) -> Optional[str]:
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
@@ -339,54 +696,40 @@ class GlobalObjectStore:
         with self._lock:
             return node_id in self._nodes
 
+    def node_free_bytes(self, node_id: str) -> Optional[int]:
+        """Free in-memory capacity of a node's store; None when unknown
+        (remote proxies don't report). The drain planner packs moves under
+        this ceiling so a migration never evicts the destination's
+        working set."""
+        store = self._nodes.get(node_id)
+        cap = getattr(store, "capacity", None)
+        if store is None or cap is None:
+            return None
+        return max(0, cap - getattr(store, "used_bytes", 0))
+
     def put(self, node_id: str, value: Any,
             producer_task: Optional[str] = None,
             ref_id: Optional[str] = None,
             tenant: str = DEFAULT_TENANT,
-            capability: Optional[Capability] = None) -> ObjectRef:
+            capability: Optional[Capability] = None,
+            size_hint: Optional[int] = None) -> ObjectRef:
         """Store a new object under `tenant`. `ref_id` pins a deterministic
         object id (Ray-style): a reconstructed producer re-puts under the
         *same* id, so tasks waiting on the original ref wake up when it
         reappears. A presented capability is verified (right "put", tenant
         match); new objects are admitted against the tenant's quota --
         beyond it the put rejects (QuotaExceededError) or spills to disk,
-        per the quota's `on_exceed` policy."""
+        per the quota's `on_exceed` policy. `size_hint` overrides the
+        directory-accounted size (the sim backend stores token payloads
+        but models fat artifacts -- timing, locality and quotas must see
+        the modeled bytes)."""
         ref = (ObjectRef(ref_id, 0, producer_task, tenant) if ref_id
                else ObjectRef.fresh(producer_task, tenant=tenant))
         self._check_capability(capability, ref.id, "put", tenant)
         node = self._nodes[node_id]
         blob = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
-        size = len(blob)
-        spill = False
-        # one atomic directory transaction decides admission (tenant check +
-        # quota + registration) *before* any bytes land on the node store:
-        # concurrent cross-tenant puts of the same id cannot both pass the
-        # check and overwrite each other's blobs (the loser raises without
-        # ever writing)
-        with self._lock:
-            e = self._dir.get(ref.id)
-            if e is not None and e.tenant != tenant:
-                raise SecurityError(
-                    f"cross-tenant put denied: object {ref.id} belongs to "
-                    f"tenant {e.tenant!r}, not {tenant!r}")
-            if e is not None:              # reconstruction: revive the entry
-                # already-admitted object: only the size delta is accounted
-                # (no re-admission -- rolling back a revival would lose the
-                # blob a waiting task is about to read)
-                self._usage_add(e.tenant, size - e.size, 0)
-                e.locations.add(node_id)
-                e.size = size
-                e.producer_task = producer_task or e.producer_task
-                if e.owner is None:
-                    e.owner = node_id
-            else:
-                spill = self._quota_verdict(tenant, size,
-                                            new_entry=True) == "spill"
-                self._usage_add(tenant, size, 1)
-                self._dir[ref.id] = _Directory(locations={node_id},
-                                               producer_task=producer_task,
-                                               size=size, owner=node_id,
-                                               tenant=tenant)
+        size = len(blob) if size_hint is None else int(size_hint)
+        spill = self._admit(ref, node_id, size, producer_task, tenant)
         node.put_blob(ref, blob)
         if spill and not node.spill(ref):
             # "spill" admission requires an actual spill dir on the node:
@@ -405,27 +748,178 @@ class GlobalObjectStore:
                 f"has no spill dir (on_exceed='spill' degraded to reject)")
         return ObjectRef(ref.id, size, producer_task, tenant)
 
+    def _admit(self, ref: ObjectRef, node_id: str, size: int,
+               producer_task: Optional[str], tenant: str) -> bool:
+        """One atomic directory transaction deciding admission (tenant
+        check + quota + registration) *before* any bytes land anywhere:
+        concurrent cross-tenant puts of the same id cannot both pass the
+        check and overwrite each other's blobs (the loser raises without
+        ever writing). Returns True when the quota verdict is "spill"."""
+        with self._lock:
+            e = self._dir.get(ref.id)
+            if e is not None and e.tenant != tenant:
+                raise SecurityError(
+                    f"cross-tenant put denied: object {ref.id} belongs to "
+                    f"tenant {e.tenant!r}, not {tenant!r}")
+            if e is not None:              # reconstruction: revive the entry
+                # already-admitted object: only the size delta is accounted
+                # (no re-admission -- rolling back a revival would lose the
+                # blob a waiting task is about to read)
+                self._usage_add(e.tenant, size - e.size, 0)
+                e.locations.add(node_id)
+                e.size = size
+                e.producer_task = producer_task or e.producer_task
+                if e.owner is None:
+                    e.owner = node_id
+                return False
+            spill = self._quota_verdict(tenant, size,
+                                        new_entry=True) == "spill"
+            self._usage_add(tenant, size, 1)
+            self._dir[ref.id] = _Directory(locations={node_id},
+                                           producer_task=producer_task,
+                                           size=size, owner=node_id,
+                                           tenant=tenant)
+            return spill
+
+    def record(self, node_id: str, size: int,
+               producer_task: Optional[str] = None,
+               ref_id: Optional[str] = None,
+               tenant: str = DEFAULT_TENANT,
+               capability: Optional[Capability] = None
+               ) -> Tuple[ObjectRef, bool]:
+        """Metadata-only result registration: the blob already lives in
+        `node_id`'s local store (a remote worker's data plane); the head
+        records only (ref, size, location, owner, tenant). Admission is
+        byte-for-byte the same transaction as `put` -- quota rejects raise
+        here exactly like a relayed put would -- but no payload ever
+        transits the head. Returns (ref, spill): a True spill verdict asks
+        the *owner* to move its local copy to disk (the head cannot)."""
+        if node_id not in self._nodes:
+            raise KeyError(f"cannot record object on unknown node {node_id}")
+        ref = (ObjectRef(ref_id, size, producer_task, tenant) if ref_id
+               else ObjectRef.fresh(producer_task, size=size, tenant=tenant))
+        self._check_capability(capability, ref.id, "put", tenant)
+        spill = self._admit(ref, node_id, size, producer_task, tenant)
+        self.stats["records"] += 1
+        return ObjectRef(ref.id, size, producer_task, tenant), spill
+
     def get(self, node_id: str, ref: ObjectRef,
-            capability: Optional[Capability] = None) -> Any:
+            capability: Optional[Capability] = None,
+            ticket: Optional[TransferTicket] = None) -> Any:
         """Fetch on `node_id`, transferring from a remote copy if needed.
-        A presented capability is verified against the object's tenant."""
+        A presented capability is verified against the object's tenant;
+        with the transfer guard installed, worker-destined transfers also
+        need a `ticket` (see fetch)."""
         with self._lock:
             entry = self._dir.get(ref.id)
             local = node_id in (entry.locations if entry else ())
-            src = next(iter(entry.locations)) if entry and entry.locations else None
             tenant = entry.tenant if entry else ref.tenant
         self._check_capability(capability, ref.id, "get", tenant)
         if local or (entry is None):
             return self._nodes[node_id].get(ref)
+        self.fetch(node_id, ref, ticket=ticket)
+        return self._nodes[node_id].get(ref)
+
+    def fetch(self, node_id: str, ref: ObjectRef,
+              ticket: Optional[TransferTicket] = None,
+              capability: Optional[Capability] = None,
+              src: Optional[str] = None) -> int:
+        """Materialize a copy of `ref` on `node_id` through the data plane:
+        pick a source (ticket-pinned, else by locality + link load), move
+        the raw blob via the Transport, record the new location. Returns
+        bytes moved (0 when already local). With the transfer guard
+        installed, a worker-destined fetch without a ticket whose MAC binds
+        this exact (object, source, destination, tenant) is refused -- the
+        head's own store stays trusted, everything else pays the toll."""
+        with self._lock:
+            entry = self._dir.get(ref.id)
+            if entry is None:
+                raise KeyError(f"object {ref.id} is not in the directory")
+            if node_id in entry.locations:
+                return 0
+            tenant = entry.tenant
+        self._check_capability(capability, ref.id, "get", tenant)
+        if src is not None and (src not in self.locations(ref)
+                                or src not in self._nodes):
+            src = None                 # stale pin: fall through to choice
+        if self._require_tickets and node_id != "head":
+            if ticket is None:
+                if self.choose_source(ref, node_id) is None:
+                    # no copies is the real condition -- report it as such
+                    # (KeyError drives lineage reconstruction, a ticket
+                    # complaint would mask it)
+                    raise KeyError(f"object {ref.id} has no live copies")
+                self.stats["ticket_rejects"] += 1
+                raise SecurityError(
+                    f"transfer ticket required to fetch {ref.id} "
+                    f"onto {node_id}")
+            try:
+                ticket.verify(self._token or "", ref.id, ticket.src,
+                              node_id, "get", tenant)
+            except SecurityError:
+                self.stats["ticket_rejects"] += 1
+                raise
+            src = ticket.src
+            if src not in self.locations(ref) or src not in self._nodes:
+                raise KeyError(
+                    f"ticket source {src} no longer holds {ref.id}")
+        elif ticket is not None and ticket.src in self.locations(ref) \
+                and ticket.src in self._nodes:
+            src = ticket.src           # honor the head's placement hint
+        if src is None:
+            src = self.choose_source(ref, node_id)
         if src is None:
             raise KeyError(f"object {ref.id} has no live copies")
-        value = self._nodes[src].get(ref)
-        self._nodes[node_id].put(ref, value)
+        blob = self.transport.fetch(self._nodes[src], ref, ticket)
+        self._nodes[node_id].import_blob(ref, blob)
         with self._lock:
-            self._dir[ref.id].locations.add(node_id)
+            e = self._dir.get(ref.id)
+            if e is None:              # released mid-fetch
+                self._nodes[node_id].delete(ref)
+                return 0
+            # the directory size is authoritative (it may be a modeled
+            # size_hint larger than the physical token blob)
+            size = e.size if e.size else len(blob)
+            e.locations.add(node_id)
             self.stats["transfers"] += 1
-            self.stats["transfer_bytes"] += self._dir[ref.id].size
-        return value
+            self.stats["transfer_bytes"] += size
+            if src == "head":
+                # bytes the head's NIC served to the data plane -- the
+                # p2p-vs-relay benchmarks read exactly this counter
+                self.stats["head_relayed_bytes"] += size
+        self.note_link_bytes(src, node_id, size)
+        return size
+
+    def confirm_replica(self, ref_or_id, node_id: str) -> bool:
+        """Verify-then-record a claimed out-of-band replica: the node's
+        store is probed for the blob (a ticketed TCP `has` for remote
+        proxies) before the directory believes it. An unverified claim
+        would count as drain cover and could cost the last real copy."""
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            node = self._nodes.get(node_id)
+            known = oid in self._dir
+        if node is None or not known:
+            return False
+        try:
+            if not node.has(ObjectRef(oid)):
+                return False
+        except Exception:  # noqa: BLE001 -- unreachable node = unconfirmed
+            return False
+        self.note_replica(oid, node_id)
+        return True
+
+    def note_replica(self, ref_or_id, node_id: str):
+        """Record that a copy of an object landed on `node_id` through an
+        out-of-band data-plane move (e.g. a leaving worker's replication
+        pushes) -- directory-only, the bytes already moved peer to peer."""
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            e = self._dir.get(oid)
+            if e is not None and node_id in self._nodes:
+                e.locations.add(node_id)
+                if e.owner is None:
+                    e.owner = node_id
 
     def locations(self, ref: ObjectRef) -> Set[str]:
         with self._lock:
@@ -554,7 +1048,12 @@ class GlobalObjectStore:
             e.locations.discard(src)
             if e.owner == src:
                 e.owner = dst                # owner handoff
+            # the directory size is authoritative (size_hint-modeled blobs
+            # carry token payloads): the planner's link_load signal must
+            # see the modeled bytes, same as fetch()
+            size = e.size if e.size else len(blob)
             self.stats["migrations"] += 1
-            self.stats["migrated_bytes"] += len(blob)
+            self.stats["migrated_bytes"] += size
+        self.note_link_bytes(src, dst, size)
         src_store.delete(ref)
         return True

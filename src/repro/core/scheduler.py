@@ -94,6 +94,33 @@ class TenantState:
     finished: int = 0
 
 
+class RateLimitExceeded(SecurityError):
+    """A tenant submitted tasks faster than its admitted rate (quotas
+    bound *state*, rate limits bound *churn*)."""
+
+
+@dataclass
+class TokenBucket:
+    """Classic token bucket: `rate_per_s` sustained, `burst` peak."""
+    rate_per_s: float
+    burst: float
+    tokens: float = 0.0
+    last: Optional[float] = None
+
+    def __post_init__(self):
+        self.tokens = self.burst
+
+    def try_take(self, now: float) -> bool:
+        if self.last is not None:
+            self.tokens = min(self.burst, self.tokens
+                              + max(0.0, now - self.last) * self.rate_per_s)
+        self.last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
 @dataclass
 class DrainState:
     """Bookkeeping for one DRAINING worker (see Scheduler.begin_drain)."""
@@ -103,7 +130,21 @@ class DrainState:
     pending: set = field(default_factory=set)   # object ids mid-migration
     moved: set = field(default_factory=set)     # object ids settled
     planned: int = 0                            # migrations dispatched
-    rr: int = 0                                 # round-robin dst cursor
+    # bandwidth-aware planner state: bytes of in-flight moves per
+    # destination (released as they land/fail), and where each pending
+    # object was sent -- capacity/link projections read these
+    assigned_bytes: Dict[str, int] = field(default_factory=dict)
+    inflight_to: Dict[str, Tuple[str, int]] = field(default_factory=dict)
+
+    def _unassign(self, object_id: str):
+        dst_size = self.inflight_to.pop(object_id, None)
+        if dst_size is not None:
+            dst, size = dst_size
+            left = self.assigned_bytes.get(dst, 0) - size
+            if left > 0:
+                self.assigned_bytes[dst] = left
+            else:
+                self.assigned_bytes.pop(dst, None)
 
 
 class WorkerIndex:
@@ -229,10 +270,11 @@ class Scheduler:
         self.migrate_fn: Optional[Callable[[str, ObjectRef, str], None]] = None
         self._drains: Dict[str, DrainState] = {}
         self.tenants: Dict[str, TenantState] = {}
+        self._rate_limits: Dict[str, TokenBucket] = {}
         self.stats = {"launched": 0, "finished": 0, "failed": 0, "retried": 0,
                       "speculative": 0, "reconstructed": 0, "cancelled": 0,
                       "drained": 0, "migrated_objects": 0, "preempted": 0,
-                      "migration_denied": 0}
+                      "migration_denied": 0, "rate_limited": 0}
 
     # -- tenancy ---------------------------------------------------------------
 
@@ -250,6 +292,19 @@ class Scheduler:
     def _tenant_state(self, tenant_id: str) -> TenantState:
         ts = self.tenants.get(tenant_id)
         return ts if ts is not None else self.register_tenant(tenant_id)
+
+    def set_submit_rate(self, tenant_id: str, rate_per_s: float,
+                        burst: Optional[float] = None):
+        """Token-bucket submit rate limit for one tenant: `rate_per_s`
+        sustained submissions with bursts up to `burst` (default: one
+        second's worth, at least 1). Quotas bound a tenant's live *state*;
+        this bounds its *churn* -- a submit loop cannot monopolize the
+        head's admission path. Pass rate_per_s <= 0 to remove the limit."""
+        if rate_per_s <= 0:
+            self._rate_limits.pop(tenant_id, None)
+            return
+        burst = max(1.0, rate_per_s if burst is None else burst)
+        self._rate_limits[tenant_id] = TokenBucket(rate_per_s, burst)
 
     def _cluster_totals(self) -> Dict[str, float]:
         totals: Dict[str, float] = {}
@@ -388,7 +443,18 @@ class Scheduler:
         nodes must not each count the other as cover and drop the last
         copies). Called again from drain_complete(): a running task that
         finishes *during* the drain may store fresh results on the node,
-        and a holder that started draining since the last scan re-arms."""
+        and a holder that started draining since the last scan re-arms.
+
+        Destination choice is **bandwidth-aware** (it used to round-robin):
+        objects are packed largest-first onto the survivor whose link
+        carries the least traffic -- cumulative data-plane bytes
+        (store.link_load) plus this drain's own in-flight moves -- among
+        survivors with store capacity left for the blob. A survivor whose
+        free memory (minus in-flight assignments) cannot hold the blob is
+        skipped, so a drain never evicts a destination's working set; when
+        nothing fits, the head store is the fallback, then the emptiest
+        survivor. Big fan-out drains therefore spread across idle NICs
+        instead of convoying behind one hot destination."""
         st = self._drains.get(worker_id)
         if st is None:
             return
@@ -397,17 +463,37 @@ class Scheduler:
             return
         draining = set(self._drains)
         # hoisted per scan, not per object: the hot-dependency set (one
-        # pass over tasks) and the ordered survivor list
+        # pass over tasks), the survivor list, and the capacity snapshot
         active = (TaskState.PENDING, TaskState.READY, TaskState.RUNNING)
         hot_deps = {d.id for t in self.graph.tasks.values()
                     if t.state in active for d in t.deps}
         cands = sorted(
-            (w for w in self.workers.values()
+            (w.id for w in self.workers.values()
              if w.alive and not w.draining and w.id != worker_id
              and self.store.has_node(w.id)),
-            key=lambda w: (w.load, self.index.seq_of(w.id)))
+            key=lambda wid: self.index.seq_of(wid))
         head_ok = self.store.has_node("head")
-        for oid, ref in objs.items():
+        free: Dict[str, Optional[int]] = {
+            c: self.store.node_free_bytes(c) for c in cands}
+        if head_ok:
+            free["head"] = self.store.node_free_bytes("head")
+        # net the snapshot of EVERY drain's in-flight moves: concurrent
+        # drains must not jointly overbook one survivor, and this drain's
+        # own pending moves from earlier scans are not yet in used_bytes
+        inflight: Dict[str, int] = {}
+        for st2 in self._drains.values():
+            for c, b in st2.assigned_bytes.items():
+                inflight[c] = inflight.get(c, 0) + b
+                if free.get(c) is not None:
+                    free[c] -= b
+        # bytes newly committed to each destination *within this scan* --
+        # stays charged even after a synchronous move lands (the `free`
+        # snapshot predates the landing, so the charge must not vanish
+        # with the in-flight assignment)
+        planned_now: Dict[str, int] = {}
+        # largest blobs plan first: they have the fewest feasible
+        # destinations, and spreading them dominates drain latency
+        for oid, ref in sorted(objs.items(), key=lambda kv: -kv[1].size):
             if oid in st.pending or oid in st.moved:
                 continue
             covered = any(n != worker_id and n not in draining
@@ -418,16 +504,16 @@ class Scheduler:
             if self.store.refcount(oid) <= 0 and oid not in hot_deps:
                 st.moved.add(oid)    # cold: dropping it costs nothing
                 continue
-            if cands:
-                dst = cands[st.rr % len(cands)].id
-                st.rr += 1
-            elif head_ok:
-                dst = "head"
-            else:
+            dst = self._plan_destination(st, ref, cands, free, head_ok,
+                                         planned_now, inflight)
+            if dst is None:
                 st.moved.add(oid)    # no survivor: degrade to drop+lineage
                 continue
             st.pending.add(oid)
             st.planned += 1
+            planned_now[dst] = planned_now.get(dst, 0) + ref.size
+            st.assigned_bytes[dst] = st.assigned_bytes.get(dst, 0) + ref.size
+            st.inflight_to[oid] = (dst, ref.size)
             if self.migrate_fn is not None:
                 self.migrate_fn(worker_id, ref, dst)
             else:
@@ -444,6 +530,44 @@ class Scheduler:
                     # destination vanished mid-call: re-plan on the next scan
                     self.note_migration_failed(worker_id, ref)
 
+    def _plan_destination(self, st: DrainState, ref: ObjectRef,
+                          cands: List[str], free: Dict[str, Optional[int]],
+                          head_ok: bool, planned_now: Dict[str, int],
+                          inflight: Dict[str, int]) -> Optional[str]:
+        """One placement decision of the bandwidth-aware drain planner:
+        least-loaded link among capacity-feasible survivors; head fallback;
+        else the emptiest survivor (least-bad overflow). `free` is already
+        net of every drain's in-flight moves; `planned_now` charges this
+        scan's own commitments (landed or not) on top; `inflight` is the
+        scan-start snapshot of all drains' pending bytes per destination
+        (precomputed once -- a per-object re-sum over every DrainState
+        would make large drains quadratic on the head)."""
+        def projected_link(c: str) -> int:
+            # link_load counts landed transfers, inflight + planned_now
+            # the committed ones; a this-scan synchronous landing appears
+            # in both link_load and planned_now -- the slight double
+            # charge only strengthens the spreading pressure
+            return self.store.link_load(c) + inflight.get(c, 0) \
+                + planned_now.get(c, 0)
+
+        def fits(c: str) -> bool:
+            f = free.get(c)
+            return f is None or f - planned_now.get(c, 0) >= ref.size
+
+        feasible = [c for c in cands if fits(c)]
+        if feasible:
+            return min(feasible,
+                       key=lambda c: (projected_link(c),
+                                      self.index.seq_of(c)))
+        if head_ok and fits("head"):
+            return "head"
+        if cands:      # everything over capacity: emptiest survivor wins
+            return max(cands,
+                       key=lambda c: ((free.get(c) if free.get(c) is not None
+                                       else float("inf"))
+                                      - planned_now.get(c, 0)))
+        return "head" if head_ok else None
+
     def note_migrated(self, worker_id: str, ref: ObjectRef):
         """One migration landed (called by the backend's migrate executor)."""
         st = self._drains.get(worker_id)
@@ -451,6 +575,7 @@ class Scheduler:
             return
         if ref.id in st.pending:
             st.pending.discard(ref.id)
+            st._unassign(ref.id)
             st.moved.add(ref.id)
             self.stats["migrated_objects"] += 1
 
@@ -462,6 +587,7 @@ class Scheduler:
         if st is None:
             return
         st.pending.discard(ref.id)
+        st._unassign(ref.id)
 
     def note_migration_denied(self, worker_id: str, ref: ObjectRef):
         """The migration guard refused the move (cross-tenant): the object
@@ -471,6 +597,7 @@ class Scheduler:
         if st is None:
             return
         st.pending.discard(ref.id)
+        st._unassign(ref.id)
         st.moved.add(ref.id)
         self.stats["migration_denied"] += 1
 
@@ -538,6 +665,14 @@ class Scheduler:
     # -- submission ----------------------------------------------------------
 
     def submit(self, spec: TaskSpec, deps: Optional[List[ObjectRef]] = None) -> Task:
+        bucket = self._rate_limits.get(spec.tenant_id)
+        if bucket is not None and not bucket.try_take(self.clock()):
+            # surfaced exactly like a quota reject: the submit call raises,
+            # nothing is admitted, nothing is left half-registered
+            self.stats["rate_limited"] += 1
+            raise RateLimitExceeded(
+                f"tenant {spec.tenant_id!r} over submit rate "
+                f"({bucket.rate_per_s:g}/s, burst {bucket.burst:g})")
         task = Task(spec=spec, deps=list(deps or []))
         self._tenant_state(spec.tenant_id)   # auto-register at weight 1.0
         for d in task.deps:
@@ -557,6 +692,10 @@ class Scheduler:
     # -- core scheduling pass --------------------------------------------------
 
     def _locality_score(self, task: Task, worker: WorkerInfo) -> float:
+        """Byte-weighted locality: dependency bytes already resident on
+        `worker` -- exactly the traffic the data plane does NOT have to
+        move if the task lands there. Fat deps dominate the placement the
+        way they dominate the fetch, which is the point."""
         score = 0.0
         for d in task.deps:
             if worker.id in self.store.locations(d):
@@ -583,7 +722,12 @@ class Scheduler:
         for w in self.workers.values():
             if not w.alive or w.draining or not w.fits(req):
                 continue
-            key = (self._locality_score(task, w), -w.load)
+            score = self._locality_score(task, w)
+            # the idle-link tiebreak applies only between dep holders
+            # (score > 0) -- mirroring the indexed fast-path, which sends
+            # zero-locality tasks through the load-ordered heap instead
+            key = (score, -self.store.link_load(w.id) if score > 0 else 0.0,
+                   -w.load)
             if best_key is None or key > best_key:
                 best, best_key = w, key
         return best
@@ -603,7 +747,10 @@ class Scheduler:
                 score = self._locality_score(task, w)
                 if score <= 0:
                     continue
-                key = (score, -w.load, -self.index._seq.get(wid, 0))
+                # equal bytes co-located: prefer the worker whose NIC has
+                # carried less data-plane traffic (idle-link tiebreak)
+                key = (score, -self.store.link_load(wid), -w.load,
+                       -self.index._seq.get(wid, 0))
                 if best_key is None or key > best_key:
                     best, best_key = w, key
             if best is not None:

@@ -22,6 +22,14 @@ runtime equivalents implemented here:
     tenant id inside the MAC: tenant A's grant cannot be replayed against
     tenant B's objects, and the object store verifies the binding on
     every guarded get/put/migrate.
+  * Transfer tickets -- short-lived capabilities for the peer-to-peer
+    data plane. The head's poll reply names *where* a dependency lives
+    (metadata only); the ticket authorizes the requesting worker to pull
+    that one blob from that one source before the ticket expires. The MAC
+    binds (object, source node, requesting worker, tenant, right, expiry),
+    so a captured ticket cannot be relabeled for another object, replayed
+    by another worker, pointed at another source, or presented after the
+    fetch window closes.
 """
 from __future__ import annotations
 
@@ -210,6 +218,80 @@ class Capability:
                 f"cross-tenant access denied: capability of tenant "
                 f"{self.tenant_id!r} cannot {right} an object of tenant "
                 f"{object_tenant!r}")
+
+
+@dataclass(frozen=True)
+class TransferTicket:
+    """Short-lived grant for one peer-to-peer blob transfer.
+
+    Minted by the head (the only directory authority) when it hands a
+    worker the *locations* of a dependency instead of the bytes. The
+    serving blob server re-verifies under the cluster token: every field
+    below is inside the MAC, so none can be swapped after minting."""
+    object_id: str
+    src: str              # node that may serve the blob
+    worker_id: str        # node allowed to pull it
+    tenant_id: str        # tenant the blob belongs to (ADMIN_TENANT = any)
+    right: str            # "get" (pull) | "put" (push, e.g. migration)
+    expires_at: float     # unix time; the fetch window
+    mac: str
+
+    @staticmethod
+    def _mac(token: str, object_id: str, src: str, worker_id: str,
+             tenant_id: str, right: str, expires_at: float) -> str:
+        return sign(token, f"xfer:{object_id}:{src}:{worker_id}:"
+                           f"{tenant_id}:{right}:{expires_at!r}".encode())
+
+    @staticmethod
+    def grant(token: str, object_id: str, src: str, worker_id: str,
+              tenant_id: str = DEFAULT_TENANT, right: str = "get",
+              ttl_s: float = 30.0,
+              now: Optional[float] = None) -> "TransferTicket":
+        now = time.time() if now is None else now
+        exp = now + ttl_s
+        return TransferTicket(
+            object_id, src, worker_id, tenant_id, right, exp,
+            TransferTicket._mac(token, object_id, src, worker_id,
+                                tenant_id, right, exp))
+
+    def verify(self, token: str, object_id: str, src: str, worker_id: str,
+               right: str = "get", object_tenant: str = DEFAULT_TENANT,
+               now: Optional[float] = None):
+        """Server-side check before any bytes move. Field mismatches and
+        bad MACs are indistinguishable to the caller (one SecurityError),
+        so a probing client learns nothing about which binding failed."""
+        want = TransferTicket._mac(token, self.object_id, self.src,
+                                   self.worker_id, self.tenant_id,
+                                   self.right, self.expires_at)
+        if (not hmac.compare_digest(self.mac, want)
+                or self.object_id != object_id or self.src != src
+                or self.worker_id != worker_id or self.right != right):
+            raise SecurityError(
+                f"transfer ticket rejected for {right}:{object_id} "
+                f"({self.worker_id} <- {src})")
+        now = time.time() if now is None else now
+        if now > self.expires_at:
+            raise SecurityError(
+                f"transfer ticket expired for {object_id} "
+                f"({now - self.expires_at:.1f}s past the fetch window)")
+        if self.tenant_id != ADMIN_TENANT and self.tenant_id != object_tenant:
+            raise SecurityError(
+                f"cross-tenant transfer denied: ticket of tenant "
+                f"{self.tenant_id!r} cannot {right} an object of tenant "
+                f"{object_tenant!r}")
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {"object_id": self.object_id, "src": self.src,
+                "worker_id": self.worker_id, "tenant_id": self.tenant_id,
+                "right": self.right, "expires_at": self.expires_at,
+                "mac": self.mac}
+
+    @staticmethod
+    def from_wire(d: Dict[str, Any]) -> "TransferTicket":
+        return TransferTicket(
+            str(d["object_id"]), str(d["src"]), str(d["worker_id"]),
+            str(d["tenant_id"]), str(d.get("right", "get")),
+            float(d["expires_at"]), str(d["mac"]))
 
 
 @dataclass(frozen=True)

@@ -43,6 +43,35 @@ class SimCostModel:
     # on the head store) or "worker" (Ray-faithful: the producer's node
     # store owns the primary copy -- what drains must migrate)
     result_location: str = "head"
+    # per-link data-plane model. None = legacy (dependency transfers are
+    # not modeled -- the seed behavior every older benchmark ran under).
+    # "relay": every dep fetch serializes on the head's one NIC (the
+    # conflated control/data plane the paper's Table II suffers from);
+    # "p2p": deps move producer-worker -> consumer-worker, each node's NIC
+    # serializing independently, so aggregate bandwidth scales with the
+    # worker count. Pair "relay" with result_location="head" and "p2p"
+    # with result_location="worker" for a coherent comparison.
+    data_plane: Optional[str] = None
+    node_bandwidth_Bps: float = 1.0e9         # per-worker NIC
+    link_latency_s: float = 0.0005            # per-transfer setup cost
+
+
+def lognormal_provision_latency(median_s: float = 120.0, sigma: float = 1.0,
+                                floor_s: float = 5.0
+                                ) -> Callable[[random.Random], float]:
+    """Heavy-tailed provisioning latency sampler for the outer resource
+    manager, shaped like GCP TPU queued-resource creation: lognormal with
+    the given median, so sigma=1.0 puts p95 near 5x the median and the
+    occasional slice arrives an order of magnitude late. Feed it to
+    `SimCluster.set_provision_latency` to sanity-check
+    `AutoscalerConfig.for_backend("gcp_tpu")` cooldowns against realistic
+    allocation tails."""
+    import math
+    mu = math.log(max(median_s, 1e-9))
+
+    def sample(rng: random.Random) -> float:
+        return max(floor_s, rng.lognormvariate(mu, sigma))
+    return sample
 
 
 class SimCluster:
@@ -65,11 +94,17 @@ class SimCluster:
         self.store.register_node(self._head_store)
         self._head_link_free = 0.0   # serialized head NIC
         self._head_dispatch_free = 0.0
+        self._nic_free: Dict[str, float] = {}   # per-worker NIC serialization
         self._worker_speed: Dict[str, float] = {}
         self._next_worker = 0        # monotonic: retired ids never reused
         self._dead: set = set()
         self.autoscaler: Optional[Autoscaler] = None
         self.completed: List[Task] = []
+        # heavy-tailed outer-RM provisioning latency (e.g. GCP TPU queued
+        # resources): when set, each provisioned worker joins after its own
+        # sampled delay instead of the fixed provision_workers delay_s
+        self.provision_latency_fn: Optional[
+            Callable[[random.Random], float]] = None
 
     # -- event loop -------------------------------------------------------------
 
@@ -89,12 +124,14 @@ class SimCluster:
     # -- membership ----------------------------------------------------------------
 
     def add_workers(self, n: int, cpus_per_worker: float = 1.0,
-                    speed: float = 1.0, prefix: str = "w") -> List[str]:
+                    speed: float = 1.0, prefix: str = "w",
+                    capacity_bytes: int = 1 << 30) -> List[str]:
         ids = []
         for i in range(n):
             wid = f"{prefix}{self._next_worker}"
             self._next_worker += 1
-            self.store.register_node(NodeStore(wid, capacity_bytes=1 << 30))
+            self.store.register_node(NodeStore(wid,
+                                               capacity_bytes=capacity_bytes))
             self._worker_speed[wid] = speed
             self.scheduler.add_worker(WorkerInfo(wid, {"cpu": cpus_per_worker}))
             ids.append(wid)
@@ -108,12 +145,33 @@ class SimCluster:
     def provision_workers(self, n: int, cpus_per_worker: float = 1.0,
                           delay_s: float = 1.0):
         """Provision `n` workers that join after `delay_s` of virtual time
-        (the outer resource manager's allocation latency)."""
+        (the outer resource manager's allocation latency). When a
+        provisioning-latency distribution is installed
+        (`set_provision_latency`), each worker instead joins after its own
+        sampled delay -- queued-resource slices land one by one, sometimes
+        minutes apart, which is what the gcp_tpu cooldown defaults are
+        tuned against."""
+        def join_one():
+            for wid in self.add_workers(1, cpus_per_worker=cpus_per_worker):
+                if self.autoscaler is not None:
+                    self.autoscaler.note_joined(wid)
+
+        if self.provision_latency_fn is not None:
+            for _ in range(n):
+                self._post(max(0.0, float(self.provision_latency_fn(self.rng))),
+                           join_one)
+            return
+
         def join():
             for wid in self.add_workers(n, cpus_per_worker=cpus_per_worker):
                 if self.autoscaler is not None:
                     self.autoscaler.note_joined(wid)
         self._post(delay_s, join)
+
+    def set_provision_latency(self, fn: Callable[[random.Random], float]):
+        """Install a per-worker provisioning latency sampler (see
+        `lognormal_provision_latency`)."""
+        self.provision_latency_fn = fn
 
     def release_workers(self, worker_ids: List[str]):
         for wid in worker_ids:
@@ -204,11 +262,60 @@ class SimCluster:
 
     # -- the cost model in action ---------------------------------------------------------
 
+    def _fetch_deps(self, task: Task, worker_id: str, start: float) -> float:
+        """Model dependency transfers onto `worker_id`; returns when the
+        last dep lands. "p2p": each move serializes the two endpoints'
+        NICs only (transfers between disjoint pairs overlap). "relay":
+        every move serializes on the head's single link -- one hop when
+        the head already holds the blob, two (worker->head->worker) when
+        it must relay a worker-resident primary. The blob is also really
+        copied through the store, so directory locality, link-load
+        accounting and the planners see the same world the timing does."""
+        done = start
+        for d in task.deps:
+            locs = self.store.locations(d)
+            if worker_id in locs or not locs:
+                continue
+            size = self.store.size_of(d)
+            if self.cost.data_plane == "p2p":
+                src = self.store.choose_source(d, worker_id)
+                if src is None:
+                    continue
+                # each endpoint's NIC serializes its own byte stream
+                # (fair-shared links, coflow-style): the transfer is done
+                # when the slower of the two has pushed/pulled the bytes
+                dt = self.cost.link_latency_s \
+                    + size / self.cost.node_bandwidth_Bps
+                t_src = max(self._nic_free.get(src, 0.0), start) + dt
+                t_dst = max(self._nic_free.get(worker_id, 0.0), start) + dt
+                self._nic_free[src] = t_src
+                self._nic_free[worker_id] = t_dst
+                t1 = max(t_src, t_dst)
+            else:                       # relay: the head's NIC is the bus
+                src = "head" if "head" in locs else min(locs)
+                hops = 1 if src == "head" else 2
+                t0 = max(self._head_link_free, start)
+                t1 = t0 + hops * (self.cost.link_latency_s
+                                  + size / self.cost.head_bandwidth_Bps)
+                self._head_link_free = t1
+                if src != "head":
+                    # worker-resident blob relayed through the head: the
+                    # store only counts head-sourced bytes by itself
+                    self.store.stats["head_relayed_bytes"] += size
+            try:
+                self.store.fetch(worker_id, d, src=src)
+            except KeyError:
+                continue               # copy vanished mid-model: dep is lost
+            done = max(done, t1)
+        return done
+
     def _launch(self, task: Task, worker_id: str):
         # serialized head dispatch
         self._head_dispatch_free = max(self._head_dispatch_free, self.now) \
             + self.cost.dispatch_overhead_s
         start = self._head_dispatch_free
+        if self.cost.data_plane is not None and task.deps:
+            start = self._fetch_deps(task, worker_id, start)
         speed = self._worker_speed.get(worker_id, 1.0)
         base = self.cost.task_time_s(task.spec) / max(speed, 1e-9)
         noise = 1.0 + self.cost.jitter * (self.rng.random() * 2 - 1)
@@ -221,10 +328,19 @@ class SimCluster:
             cur = self.scheduler.graph.tasks.get(task.id)
             if cur is None or cur.state != TaskState.RUNNING or cur.worker != worker_id:
                 return
-            # result artifact flows through the head's serialized link
-            xfer = self.cost.result_bytes(task.spec) / self.cost.head_bandwidth_Bps
-            self._head_link_free = max(self._head_link_free, self.now) + xfer
-            done_at = self._head_link_free
+            if self.cost.data_plane == "p2p" \
+                    and self.cost.result_location == "worker" \
+                    and self.store.has_node(worker_id):
+                # decentralized result: a local store write -- only the
+                # metadata record crosses the head, not the payload
+                done_at = self.now + self.cost.link_latency_s
+            else:
+                # result artifact flows through the head's serialized link
+                xfer = self.cost.result_bytes(task.spec) \
+                    / self.cost.head_bandwidth_Bps
+                self._head_link_free = max(self._head_link_free,
+                                           self.now) + xfer
+                done_at = self._head_link_free
 
             def deliver():
                 cur2 = self.scheduler.graph.tasks.get(task.id)
@@ -240,10 +356,14 @@ class SimCluster:
                            "bytes": int(self.cost.result_bytes(task.spec))}
                 # deterministic output id: a reconstructed producer revives
                 # the same object id, waking tasks that waited on it; the
-                # artifact is owned (and billed to) the task's tenant
+                # artifact is owned (and billed to) the task's tenant.
+                # The payload is a token; the directory accounts the
+                # *modeled* artifact size, so dep-transfer timing, quotas
+                # and the drain planner all see the fat object
                 ref = self.store.put(node, payload, producer_task=task.id,
                                      ref_id=f"obj-{task.id}",
-                                     tenant=task.spec.tenant_id)
+                                     tenant=task.spec.tenant_id,
+                                     size_hint=payload["bytes"])
                 self.scheduler.on_task_finished(task.id, ref)
                 self.completed.append(cur2)
             self._post(done_at - self.now, deliver)

@@ -7,9 +7,76 @@ handshakes, then pulls tasks over IP -- the paper's phases 2-4 over real
 sockets. Used by the subprocess integration test and by the rendered Slurm /
 K8s / GCP artifacts.
 
-Protocol: one JSON envelope per connection (HMAC-sealed, security.py);
-payloads are pickled+base64 (the container image pins the code version, so
-pickle compatibility holds by construction).
+Control plane vs data plane
+---------------------------
+
+The head's TCP socket is **metadata only** in the default `p2p` data
+plane: task payloads name *where* dependencies live (plus transfer
+tickets authorizing the pull), results are registered by `(ref, size,
+location)` while the blob stays in the producing worker's local
+``NodeStore``, and workers move blobs among themselves through per-worker
+**blob servers**. Aggregate data-plane bandwidth therefore scales with
+the number of worker NICs instead of being capped by the head's one
+socket. The legacy `relay` mode (every payload through the head) is kept
+for single-node deployments and as the benchmark baseline
+(``benchmarks/dataplane_bench.py``).
+
+Control-plane ops (one HMAC-sealed JSON envelope per connection, nonce
+replay protection, head TCP port):
+
+  op           direction       request fields -> reply
+  -----------  --------------  -------------------------------------------
+  join         worker -> head  worker, resources, [blob_host, blob_port]
+                               -> worker (assigned id), data_plane
+  poll         worker -> head  worker ->
+                                 p2p:   task, payload=(fn, args, kwargs),
+                                        tenant, draining, deps=[{ref,
+                                        size, tenant, sources=[{node,
+                                        host, port, ticket}]}]
+                                 relay: task, payload=(fn, args, kwargs,
+                                        dep values), tenant, draining
+                                 idle:  task=None, draining
+  result_meta  worker -> head  task, worker, size -- p2p result: the blob
+                               stays in the worker's store; the head
+                               records (ref, size, location) only
+                               -> stored, spill (spill=True asks the
+                               worker to move its copy to disk: the
+                               tenant is over byte quota)
+  result       worker -> head  task, worker, payload (pickled value) --
+                               relay mode / backward compatibility
+  error        worker -> head  task, worker, err
+  leave        worker -> head  worker -- idle-exit request. Refused
+                               (exit=False) while the worker still solely
+                               holds hot blobs; the reply's
+                               replicate=[{ref, node, host, port,
+                               ticket}] assigns p2p pushes that make the
+                               exit safe
+  ticket       worker -> head  worker, task, object -- mid-fetch re-mint:
+                               fresh ticketed sources for one dep whose
+                               poll-time tickets expired while earlier
+                               fat deps streamed
+  pushed       worker -> head  worker, object, node -- one replicate
+                               assignment landed (or a dep cache was
+                               registered); the directory adds the copy
+                               (third-party claims are probed first)
+  drain        operator->head  worker, [deadline_s] -- eviction notice
+  drain_status worker -> head  worker -> complete
+  stats        any -> head     -> scheduler stats + tenant shares
+  metrics      adapter -> head -> autoscaling signals incl. per-tenant
+                               syndeo_tenant_dominant_share and
+                               syndeo_tenant_quota_fraction
+
+Blob-server wire format (worker data plane, one request per connection):
+every frame is an 8-byte big-endian length followed by the payload in
+64 KiB chunks (`object_store.send_frame`/`recv_frame`). Request = one
+sealed-JSON frame {op: get|put|del|has, object, requester, ticket};
+"put" is followed by one raw blob frame whose sha256 the sealed header
+authenticates. Reply = one sealed-JSON frame {ok, size, sha256 | error};
+a successful "get" is followed by the raw blob frame. Tickets
+(`security.TransferTicket`) are verified under the cluster token before
+any bytes move: the MAC binds (object, source, requesting worker,
+tenant, right, expiry), so a ticket cannot be relabeled, replayed by
+another worker, or used after its fetch window.
 """
 from __future__ import annotations
 
@@ -17,18 +84,22 @@ import argparse
 import base64
 import json
 import pickle
+import shutil
 import socket
 import socketserver
+import tempfile
 import threading
 import time
 import uuid
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import SyndeoCluster
-from repro.core.object_store import NodeStore
+from repro.core.object_store import (NodeStore, ObjectRef, RemoteNodeStore,
+                                     TCPTransport, recv_frame, send_frame)
 from repro.core.rendezvous import Endpoint, FileRendezvous
 from repro.core.scheduler import WorkerInfo
-from repro.core.security import Capability, NonceCache, open_sealed, seal
+from repro.core.security import (Capability, NonceCache, SecurityError,
+                                 TransferTicket, open_sealed, seal)
 from repro.core.task_graph import TaskState
 
 
@@ -55,17 +126,176 @@ def _request(host: str, port: int, token: str, msg: Dict[str, Any],
                        nonce_cache=nonce_cache)
 
 
+class BlobServer:
+    """Per-node data-plane server: serves one NodeStore's blobs to peers.
+
+    Every request is ticket-checked under the cluster token (see the
+    module docstring's wire format). `tenant_of(object_id)` supplies the
+    object's tenant when this node knows it (its own results, cached
+    deps); for unknown objects the ticket's own tenant binding -- already
+    cross-checked at mint time by the head -- is authoritative."""
+
+    #: pre-auth request headers are tiny sealed JSON -- cap them well below
+    #: the blob-frame limit so an unauthenticated peer cannot buffer GiBs
+    MAX_HEADER_BYTES = 64 * 1024
+    SOCKET_TIMEOUT_S = 30.0
+
+    def __init__(self, store: NodeStore, token: str,
+                 host: str = "127.0.0.1", port: int = 0,
+                 tenant_of: Optional[Callable[[str], Optional[str]]] = None,
+                 on_delete: Optional[Callable[[str], None]] = None):
+        self.store = store
+        self.token = token
+        self.tenant_of = tenant_of or (lambda oid: None)
+        self.on_delete = on_delete
+        self._nonces = NonceCache()
+        self.stats = {"serves": 0, "served_bytes": 0,
+                      "receives": 0, "rejects": 0}
+        blob_srv = self
+
+        class Handler(socketserver.BaseRequestHandler):
+            def handle(self):
+                blob_srv._handle(self.request)
+
+        self.server = socketserver.ThreadingTCPServer((host, port), Handler,
+                                                      bind_and_activate=True)
+        self.server.daemon_threads = True
+        self.host = host
+        self.port = self.server.server_address[1]
+        self._thread = threading.Thread(target=self.server.serve_forever,
+                                        daemon=True,
+                                        name=f"blob-{store.node_id}")
+        self._thread.start()
+
+    @property
+    def endpoint(self) -> Tuple[str, int]:
+        return (self.host, self.port)
+
+    def shutdown(self):
+        self.server.shutdown()
+
+    # -- one request ----------------------------------------------------------
+
+    def _handle(self, sock: socket.socket):
+        blob_out: Optional[bytes] = None
+        try:
+            sock.settimeout(self.SOCKET_TIMEOUT_S)   # a stalled peer cannot
+            # pin this handler thread forever
+            header = open_sealed(self.token,
+                                 json.loads(recv_frame(
+                                     sock, self.MAX_HEADER_BYTES).decode()),
+                                 nonce_cache=self._nonces)
+            blob_in = None
+            if header.get("op") == "put":
+                # ticket verified BEFORE the blob frame is read, and the
+                # read is capped at the header's declared size -- a peer
+                # without a valid put ticket cannot make us buffer bytes
+                self._verify(header, "put")
+                blob_in = recv_frame(
+                    sock, max_bytes=int(header.get("size", 0)) + 1024)
+            reply, blob_out = self._dispatch(header, blob_in)
+        except Exception as e:  # noqa: BLE001 -- reply, never crash the server
+            self.stats["rejects"] += 1
+            reply = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        try:
+            send_frame(sock, json.dumps(seal(self.token, reply)).encode())
+            if blob_out is not None:
+                send_frame(sock, blob_out)
+        except OSError:
+            pass                       # peer went away mid-reply
+
+    def _verify(self, header: Dict[str, Any], right: str):
+        oid = header.get("object", "")
+        ticket_wire = header.get("ticket")
+        if not ticket_wire:
+            raise SecurityError(f"blob {right} without transfer ticket")
+        ticket = TransferTicket.from_wire(ticket_wire)
+        tenant = self.tenant_of(oid)
+        ticket.verify(self.token, oid, self.store.node_id,
+                      str(header.get("requester", "")), right,
+                      object_tenant=tenant if tenant is not None
+                      else ticket.tenant_id)
+
+    def _dispatch(self, header: Dict[str, Any],
+                  blob_in: Optional[bytes]
+                  ) -> Tuple[Dict[str, Any], Optional[bytes]]:
+        import hashlib
+        op = header.get("op")
+        oid = str(header.get("object", ""))
+        ref = ObjectRef(oid)
+        if op == "get":
+            self._verify(header, "get")
+            blob = self.store.export_blob(ref)
+            self.stats["serves"] += 1
+            self.stats["served_bytes"] += len(blob)
+            return ({"ok": True, "size": len(blob),
+                     "sha256": hashlib.sha256(blob).hexdigest()}, blob)
+        if op == "put":
+            # already verified by _handle BEFORE the blob frame was read
+            # (the authoritative check); no second MAC computation here
+            if blob_in is None:
+                raise ValueError("put without blob frame")
+            if (len(blob_in) != int(header.get("size", -1))
+                    or hashlib.sha256(blob_in).hexdigest()
+                    != header.get("sha256")):
+                raise SecurityError(f"blob integrity check failed for {oid}")
+            self.store.import_blob(ref, blob_in)
+            self.stats["receives"] += 1
+            return ({"ok": True}, None)
+        if op == "has":
+            # existence is placement metadata: ticketed like a read, so a
+            # tenant cannot probe where another tenant's results live
+            self._verify(header, "get")
+            return ({"ok": True, "has": self.store.has(ref)}, None)
+        if op == "del":
+            self._verify(header, "del")
+            self.store.delete(ref)
+            if self.on_delete is not None:
+                self.on_delete(oid)    # e.g. prune the owner's tenant map
+            return ({"ok": True}, None)
+        raise ValueError(f"unknown blob op {op!r}")
+
+
 class HeadServer:
-    """TCP face of a SyndeoCluster (pull-based workers)."""
+    """TCP face of a SyndeoCluster (pull-based workers).
+
+    `data_plane="p2p"` (default): workers that advertise a blob endpoint
+    at join get metadata-only polls (dep locations + transfer tickets)
+    and register their results by size; the head's directory gains a
+    RemoteNodeStore proxy per worker so get/migrate/release keep working
+    over remote primaries, and the head runs its own BlobServer so
+    client-put artifacts are fetchable without relaying through the
+    control socket. Workers that join without a blob endpoint -- and
+    every worker when `data_plane="relay"` -- take the legacy path where
+    the head resolves deps and stores results itself.
+
+    `head_payload_bytes` counts data-plane payload bytes that transited
+    the head's control socket (dep values + result pickles in relay
+    mode); the CI dataplane smoke asserts it stays 0 under p2p."""
 
     def __init__(self, cluster: SyndeoCluster, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, data_plane: Optional[str] = None,
+                 ticket_ttl_s: float = 30.0):
         self.cluster = cluster
+        self.data_plane = data_plane or getattr(cluster, "data_plane", "p2p")
+        data_plane = self.data_plane
+        self.ticket_ttl_s = ticket_ttl_s
         self._outbox: Dict[str, list] = {}
+        self._blob_eps: Dict[str, Tuple[str, int]] = {}
+        self.head_payload_bytes = 0
         # bounded seen-nonce set: a captured worker envelope cannot be
         # replayed inside the freshness window (it would need a fresh nonce,
         # and the nonce is under the MAC)
         self._nonces = NonceCache()
+        self._blob_srv: Optional[BlobServer] = None
+        if data_plane == "p2p":
+            self._blob_srv = BlobServer(cluster._head_node, cluster.token,
+                                        host=host)
+            # drain migrations over RemoteNodeStore proxies are real TCP
+            # transfers: execute them on background threads so begin_drain
+            # (called under the cluster lock by the `drain` op) never
+            # stalls the control plane behind data-plane I/O
+            cluster.scheduler.migrate_fn = self._migrate_async
         head = self
 
         class Handler(socketserver.StreamRequestHandler):
@@ -94,18 +324,117 @@ class HeadServer:
 
     # head-side handling ------------------------------------------------------
 
+    def _migrate_async(self, worker_id: str, ref: ObjectRef, dst: str):
+        """Scheduler migrate hook for the p2p head: one blob move on its
+        own thread (the blocking export/import RPCs run lock-free), with
+        the landing reported back under the cluster lock."""
+        c = self.cluster
+
+        def run():
+            try:
+                moved = c.store.migrate(ref, worker_id, dst)
+            except SecurityError:
+                with c._lock:
+                    c.scheduler.note_migration_denied(worker_id, ref)
+                return
+            except Exception:  # noqa: BLE001 -- e.g. peer unreachable
+                moved = False
+            with c._lock:
+                if moved:
+                    c.scheduler.note_migrated(worker_id, ref)
+                else:
+                    c.scheduler.note_migration_failed(worker_id, ref)
+
+        threading.Thread(target=run, daemon=True,
+                         name=f"migrate-{ref.id[:8]}").start()
+
+    def _source_endpoints(self, node_id: str) -> Optional[Tuple[str, int]]:
+        if node_id in self._blob_eps:
+            return self._blob_eps[node_id]
+        if node_id == "head" and self._blob_srv is not None:
+            return self._blob_srv.endpoint
+        return None
+
+    def _dep_meta(self, d: ObjectRef, wid: str,
+                  tenant: str) -> Dict[str, Any]:
+        """Metadata-only descriptor for ONE dependency: its size, tenant,
+        and up to three ticketed sources ordered worker-peers first, idle
+        links first. Cross-tenant deps are refused here, at mint time --
+        the polling worker never learns where the bytes are. Also serves
+        the `ticket` op, which re-mints mid-fetch when a long chain
+        outlives the tickets batched at poll time."""
+        c = self.cluster
+        own = c.store.tenant_of(d.id)
+        if own is not None and own != tenant:
+            raise SecurityError(
+                f"cross-tenant dep denied: task of tenant {tenant!r} "
+                f"depends on an object of tenant {own!r}")
+        locs = c.store.rank_sources(d, wid)
+        sources = []
+        for n in locs:
+            ep = self._source_endpoints(n)
+            if ep is None:
+                continue
+            ticket = TransferTicket.grant(
+                c.token, d.id, n, wid, tenant, "get",
+                ttl_s=self.ticket_ttl_s)
+            sources.append({"node": n, "host": ep[0], "port": ep[1],
+                            "ticket": ticket.to_wire()})
+            if len(sources) >= 3:
+                break
+        if not sources and locs:
+            # every copy sits in an endpoint-less head-process store
+            # (a relay worker's node store, e.g. after a migration):
+            # stage a head copy and serve it from the head blob server
+            try:
+                c.store.fetch("head", d)
+                ep = self._source_endpoints("head")
+                if ep is not None:
+                    ticket = TransferTicket.grant(
+                        c.token, d.id, "head", wid, tenant, "get",
+                        ttl_s=self.ticket_ttl_s)
+                    sources.append({"node": "head", "host": ep[0],
+                                    "port": ep[1],
+                                    "ticket": ticket.to_wire()})
+            except KeyError:
+                pass                   # no live copy: the worker reports it
+        return {"ref": d.id, "size": c.store.size_of(d),
+                "tenant": own or tenant, "sources": sources}
+
+    def _deps_meta(self, task, wid: str, tenant: str) -> List[Dict[str, Any]]:
+        return [self._dep_meta(d, wid, tenant) for d in task.deps]
+
+    def _fail_task(self, tid: str, wid: str, err: str):
+        c = self.cluster
+        with c._lock:
+            c.scheduler.on_task_failed(tid, err, worker_id=wid)
+        ev = c._futures.get(tid)
+        if ev:
+            ev.set()
+
     def dispatch(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         op = msg.get("op")
         c = self.cluster
         if op == "join":
             wid = msg.get("worker") or f"tcp-{uuid.uuid4().hex[:6]}"
             self._outbox.setdefault(wid, [])
-            store = NodeStore(wid)  # head-side proxy store for this worker
-            c.store.register_node(store)
+            plane = "relay"
+            if (self.data_plane == "p2p" and msg.get("blob_port")
+                    and msg.get("blob_host")):
+                # p2p worker: the head holds only a metadata proxy; the
+                # blobs stay on (and are served by) the worker itself
+                self._blob_eps[wid] = (str(msg["blob_host"]),
+                                       int(msg["blob_port"]))
+                c.store.register_node(RemoteNodeStore(
+                    wid, self._blob_eps[wid], c.token))
+                plane = "p2p"
+            else:
+                store = NodeStore(wid)  # head-side store for relay workers
+                c.store.register_node(store)
             with c._lock:
                 c.scheduler.add_worker(
                     WorkerInfo(wid, msg.get("resources", {"cpu": 1.0})))
-            return {"ok": True, "worker": wid}
+            return {"ok": True, "worker": wid, "data_plane": plane}
         if op == "poll":
             wid = msg["worker"]
             with c._lock:
@@ -118,14 +447,34 @@ class HeadServer:
                 # finishes the drain once migrations land and tasks stop
                 return {"ok": True, "task": None, "draining": draining}
             tid = box.pop(0)
+            p2p = wid in self._blob_eps
             with c._lock:
                 task = c.scheduler.graph.tasks[tid]
                 tenant = task.spec.tenant_id
+            if p2p:
                 try:
-                    # deps are resolved head-side *as the task's tenant*: a
-                    # task whose deps point at another tenant's objects
-                    # fails here -- as a *task failure*, not a stranded
-                    # RUNNING task (the worker just keeps polling)
+                    # metadata-only dispatch: control payload + dep
+                    # locations/tickets; the worker pulls the bytes peer
+                    # to peer. Built OUTSIDE the cluster lock -- the
+                    # head-staging fallback may do a real transfer, and
+                    # data-plane I/O must never stall the control plane
+                    # (the store has its own lock)
+                    return {"ok": True, "task": tid,
+                            "payload": _enc((task.spec.fn, task.spec.args,
+                                             task.spec.kwargs)),
+                            "deps": self._deps_meta(task, wid, tenant),
+                            "tenant": tenant, "draining": draining}
+                except Exception as e:  # noqa: BLE001
+                    self._fail_task(tid, wid, f"{type(e).__name__}: {e}")
+                    return {"ok": True, "task": None, "draining": draining}
+            with c._lock:
+                try:
+                    # relay: deps are resolved head-side *as the task's
+                    # tenant*: a task whose deps point at another tenant's
+                    # objects fails here -- as a *task failure*, not a
+                    # stranded RUNNING task (the worker just keeps
+                    # polling). Relay stores live in this process, so
+                    # these are memory copies, safe under the lock.
                     payload = _enc(
                         (task.spec.fn, task.spec.args, task.spec.kwargs,
                          [c.store.get(
@@ -133,6 +482,8 @@ class HeadServer:
                              capability=Capability.grant_for_tenant(
                                  c.token, tenant, d.id, "get"))
                           for d in task.deps]))
+                    self.head_payload_bytes += sum(
+                        c.store.size_of(d) for d in task.deps)
                 except Exception as e:  # noqa: BLE001
                     c.scheduler.on_task_failed(
                         tid, f"{type(e).__name__}: {e}", worker_id=wid)
@@ -142,6 +493,31 @@ class HeadServer:
                     return {"ok": True, "task": None, "draining": draining}
             return {"ok": True, "task": tid, "payload": payload,
                     "tenant": tenant, "draining": draining}
+        if op == "result_meta":
+            # p2p result: the blob already lives in the worker's local
+            # store; the head records (ref, size, location) -- same tenant
+            # + quota admission as a relayed put, zero payload bytes here
+            tid, wid = msg["task"], msg["worker"]
+            size = int(msg["size"])
+            with c._lock:
+                task = c.scheduler.graph.tasks.get(tid)
+                tenant = task.spec.tenant_id if task else "default"
+            try:
+                ref, spill = c.store.record(
+                    wid, size, producer_task=tid, ref_id=f"obj-{tid}",
+                    tenant=tenant,
+                    capability=Capability.grant_for_tenant(
+                        c.token, tenant, f"obj-{tid}", "put"))
+            except Exception as e:  # noqa: BLE001 -- quota reject etc.: the
+                # task must *fail visibly*, not sit RUNNING forever
+                self._fail_task(tid, wid, f"{type(e).__name__}: {e}")
+                return {"ok": True, "stored": False}
+            with c._lock:
+                c.scheduler.on_task_finished(tid, ref, worker_id=wid)
+            ev = c._futures.get(tid)
+            if ev:
+                ev.set()
+            return {"ok": True, "stored": True, "spill": spill}
         if op == "result":
             tid, wid = msg["task"], msg["worker"]
             value = _dec(msg["payload"])
@@ -153,14 +529,12 @@ class HeadServer:
                                   ref_id=f"obj-{tid}", tenant=tenant)
             except Exception as e:  # noqa: BLE001 -- e.g. quota reject: the
                 # task must *fail visibly*, not sit RUNNING forever
-                with c._lock:
-                    c.scheduler.on_task_failed(
-                        tid, f"{type(e).__name__}: {e}", worker_id=wid)
-                ev = c._futures.get(tid)
-                if ev:
-                    ev.set()
+                self._fail_task(tid, wid, f"{type(e).__name__}: {e}")
                 return {"ok": True, "stored": False}
             with c._lock:
+                # counter writes stay under the cluster lock: handler
+                # threads run concurrently and += is not atomic
+                self.head_payload_bytes += ref.size
                 c.scheduler.on_task_finished(tid, ref, worker_id=wid)
             ev = c._futures.get(tid)
             if ev:
@@ -171,6 +545,73 @@ class HeadServer:
                 c.scheduler.on_task_failed(msg["task"], msg["err"],
                                            worker_id=msg.get("worker"))
             return {"ok": True}
+        if op == "leave":
+            # idle-exit handshake: a worker may only walk away once no hot
+            # object's last copy lives on it. The head hands back p2p push
+            # assignments (peer blob servers, put tickets) for the at-risk
+            # blobs; the worker replicates, reports `pushed`, and re-asks.
+            wid = msg["worker"]
+            with c._lock:
+                w = c.scheduler.workers.get(wid)
+                if w is None:
+                    return {"ok": True, "exit": True}
+                if w.running:
+                    return {"ok": True, "exit": False, "replicate": []}
+                at_risk = self._at_risk_objects(wid)
+                if at_risk and wid not in self._blob_eps:
+                    # relay worker: its "node store" lives in THIS process
+                    # (results were relayed), so the head migrates the
+                    # blobs itself -- asking the worker to push bytes it
+                    # never held would refuse the exit forever
+                    for ref in at_risk:
+                        try:
+                            c.store.migrate(ref, wid, "head")
+                        except Exception:  # noqa: BLE001 -- keep refusing
+                            pass
+                    at_risk = self._at_risk_objects(wid)
+                if not at_risk:
+                    ok = c.scheduler.retire_worker(wid)
+                    if ok:
+                        self._outbox.pop(wid, None)
+                        self._blob_eps.pop(wid, None)
+                    return {"ok": True, "exit": bool(ok)}
+                if wid not in self._blob_eps:
+                    # relay worker whose blobs could not be migrated (e.g.
+                    # a tenant-scoped guard): nothing the worker itself can
+                    # push -- release it and degrade to drop + lineage,
+                    # exactly like a drain would, rather than livelock
+                    ok = c.scheduler.retire_worker(wid)
+                    if ok:
+                        self._outbox.pop(wid, None)
+                    return {"ok": True, "exit": bool(ok), "replicate": []}
+                moves = self._replication_plan(wid, at_risk)
+            return {"ok": True, "exit": False, "replicate": moves}
+        if op == "ticket":
+            # mid-fetch re-mint: a task with many fat deps can outlive the
+            # tickets batched into its poll reply -- the worker asks for a
+            # fresh descriptor per remaining dep (same tenant checks)
+            wid, tid = msg["worker"], msg.get("task", "")
+            with c._lock:
+                task = c.scheduler.graph.tasks.get(tid)
+                tenant = task.spec.tenant_id if task else None
+            if tenant is None:
+                return {"ok": False, "error": f"unknown task {tid!r}"}
+            try:
+                ref = ObjectRef(str(msg["object"]))
+                return {"ok": True, "dep": self._dep_meta(ref, wid, tenant)}
+            except SecurityError as e:
+                return {"ok": False, "error": str(e)}
+        if op == "pushed":
+            # a worker registering its OWN cache is trusted at the same
+            # level as its result_meta size claims (sealed envelope, its
+            # bytes, its node) -- no probe on the hot dep-cache path.
+            # Third-party claims ("node X now holds it") are probed before
+            # the directory (and thus drain cover) believes them.
+            if msg.get("worker") == msg["node"]:
+                c.store.note_replica(msg["object"], msg["node"])
+                return {"ok": True}
+            ok = c.store.confirm_replica(msg["object"], msg["node"])
+            return {"ok": ok}
         if op == "drain":
             # eviction notice for a remote worker: the outer resource
             # manager (or an operator) asks the head to retire this node
@@ -199,13 +640,57 @@ class HeadServer:
                     1 for t in c.scheduler.graph.tasks.values()
                     if t.state in (TaskState.READY, TaskState.PENDING))
                 by_tenant = c.scheduler.backlog_by_tenant()
+                shares = c.scheduler.tenant_shares()
+            quota_tenants = set(shares) | c.store.quota_tenants()
             n = max(len(workers), 1)
             return {"ok": True, "workers": len(workers), "busy": busy,
                     "backlog": backlog,
                     "syndeo_backlog_per_worker": backlog / n,
                     "syndeo_busy_fraction": busy / n,
-                    "backlog_by_tenant": by_tenant}
+                    "backlog_by_tenant": by_tenant,
+                    # per-tenant fairness + quota-pressure signals
+                    "syndeo_tenant_dominant_share": shares,
+                    "syndeo_tenant_quota_fraction": {
+                        t: self.cluster.store.tenant_quota_fraction(t)
+                        for t in sorted(quota_tenants)}}
         return {"ok": False, "error": f"unknown op {op!r}"}
+
+    def _at_risk_objects(self, wid: str) -> List[ObjectRef]:
+        """Hot objects whose only copy sits on `wid` (caller holds the
+        cluster lock). Same hotness rule as the drain planner."""
+        c = self.cluster
+        active = (TaskState.PENDING, TaskState.READY, TaskState.RUNNING)
+        hot_deps = {d.id for t in c.scheduler.graph.tasks.values()
+                    if t.state in active for d in t.deps}
+        return [ref for oid, ref in c.store.objects_on(wid).items()
+                if c.store.sole_holder(ref, wid)
+                and (c.store.refcount(oid) > 0 or oid in hot_deps)]
+
+    def _replication_plan(self, wid: str,
+                          at_risk: List[ObjectRef]) -> List[Dict[str, Any]]:
+        """Push assignments for a leaving worker's at-risk blobs: each goes
+        to the peer (or the head's blob server) with the least-loaded
+        link, authorized by a put ticket bound to the pushing worker."""
+        c = self.cluster
+        peers = sorted((p for p in self._blob_eps if p != wid
+                        and c.store.has_node(p)),
+                       key=lambda p: (c.store.link_load(p), p))
+        moves = []
+        for ref in at_risk:
+            dst = peers[0] if peers else "head"
+            ep = self._source_endpoints(dst)
+            if ep is None:
+                continue               # nowhere to push: keep refusing exit
+            tenant = c.store.tenant_of(ref.id) or ref.tenant
+            ticket = TransferTicket.grant(c.token, ref.id, dst, wid,
+                                          tenant, "put",
+                                          ttl_s=max(self.ticket_ttl_s, 60.0))
+            moves.append({"ref": ref.id, "node": dst,
+                          "host": ep[0], "port": ep[1],
+                          "ticket": ticket.to_wire()})
+            if peers:
+                peers.append(peers.pop(0))   # rotate: spread the pushes
+        return moves
 
     def launch(self, task, worker_id: str):
         self._outbox.setdefault(worker_id, []).append(task.id)
@@ -223,45 +708,237 @@ class HeadServer:
 
     def shutdown(self):
         self.server.shutdown()
+        if self._blob_srv is not None:
+            self._blob_srv.shutdown()
 
 
 def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
-               max_idle_s: float = 30.0):
+               max_idle_s: float = 30.0, data_plane: str = "p2p",
+               blob_host: str = "127.0.0.1",
+               capacity_bytes: int = 256 << 20,
+               spill_dir: Optional[str] = None):
+    """Worker main loop. In the default p2p data plane the worker runs a
+    blob server over its local NodeStore, pulls dependencies peer-to-peer
+    with head-minted transfer tickets, and registers results by metadata
+    only. `data_plane="relay"` (or a head running in relay mode) falls
+    back to the legacy everything-through-the-head protocol.
+
+    Idle-exit safety: the idle clock resets on task *completion* (a long
+    task must not count toward idleness), and the worker refuses to exit
+    -- even past `max_idle_s` -- until the head confirms no hot object's
+    last copy lives here (`leave` handshake, replicating blobs to peers
+    first if needed)."""
     rdv = FileRendezvous(rendezvous_dir)
     ep = rdv.wait(cluster_id, timeout=60.0)
     token = ep.token
     nonces = NonceCache()        # head replies are replay-protected too
-    joined = _request(ep.host, ep.port, token,
-                      {"op": "join", "worker": worker_id,
-                       "resources": {"cpu": 1.0}}, nonce_cache=nonces)
+    tenants: Dict[str, str] = {}   # object id -> tenant (blobs held here)
+    blob_srv: Optional[BlobServer] = None
+    own_spill: Optional[str] = None
+    join_msg: Dict[str, Any] = {"op": "join", "worker": worker_id,
+                                "resources": {"cpu": 1.0}}
+    if data_plane == "p2p" and spill_dir is None:
+        # relay workers never touch the local store -- only the p2p plane
+        # needs a spill dir, and one we made we also clean up on exit
+        spill_dir = own_spill = tempfile.mkdtemp(prefix="syndeo-blob-")
+    local = NodeStore(worker_id or f"pending-{uuid.uuid4().hex[:6]}",
+                      capacity_bytes=capacity_bytes, spill_dir=spill_dir)
+    if data_plane == "p2p":
+        blob_srv = BlobServer(local, token, host=blob_host,
+                              tenant_of=tenants.get,
+                              on_delete=lambda oid: tenants.pop(oid, None))
+        join_msg["blob_host"] = blob_host
+        join_msg["blob_port"] = blob_srv.port
+    joined = _request(ep.host, ep.port, token, join_msg, nonce_cache=nonces)
     wid = joined["worker"]
-    idle_since = time.monotonic()
-    while time.monotonic() - idle_since < max_idle_s:
-        got = _request(ep.host, ep.port, token, {"op": "poll", "worker": wid},
-                       nonce_cache=nonces)
-        tid = got.get("task")
-        if tid is None:
-            if got.get("draining"):
-                # exit only when the head confirms the drain finished --
-                # a cancelled drain (backlog returned) keeps us serving
-                status = _request(ep.host, ep.port, token,
-                                  {"op": "drain_status", "worker": wid},
-                                  nonce_cache=nonces)
-                if status.get("complete"):
-                    return
-            time.sleep(0.05)
-            continue
-        idle_since = time.monotonic()
-        fn, args, kwargs, deps = _dec(got["payload"])
+    local.node_id = wid            # assigned id names the store (spill files)
+
+    def resolve_dep(meta: Dict[str, Any], tid: str) -> Any:
+        oid = meta["ref"]
+        ref = ObjectRef(oid, int(meta.get("size", 0)))
+        if local.has(ref):
+            return pickle.loads(local.export_blob(ref))
+        last_err: Optional[Exception] = None
+        for attempt in range(2):
+            for src in meta.get("sources", []):
+                try:
+                    ticket = (TransferTicket.from_wire(src["ticket"])
+                              if src.get("ticket") else None)
+                    transport = TCPTransport(
+                        lambda _n, _ep=(src["host"], int(src["port"])): _ep,
+                        token, wid)
+                    blob = transport.fetch(src["node"], ref, ticket)
+                    local.put_blob(ref, blob)  # cache: later tasks hit local
+                    tenants[oid] = meta.get("tenant", "default")
+                    try:
+                        # register the cached replica: the directory can
+                        # now offer this node as a source, count it as
+                        # drain cover, and -- critically -- delete it on
+                        # release() (an unregistered cache would outlive
+                        # its object)
+                        _request(ep.host, ep.port, token,
+                                 {"op": "pushed", "worker": wid,
+                                  "object": oid, "node": wid},
+                                 nonce_cache=nonces)
+                    except OSError:
+                        pass           # head unreachable: cache stays local
+                    return pickle.loads(blob)
+                except Exception as e:  # noqa: BLE001 -- try the next source
+                    last_err = e
+            if attempt == 0:
+                # the batch of tickets minted at poll time may have expired
+                # while earlier fat deps streamed (or the sources moved):
+                # ask the head for a fresh descriptor and retry once
+                try:
+                    fresh = _request(ep.host, ep.port, token,
+                                     {"op": "ticket", "worker": wid,
+                                      "task": tid, "object": oid},
+                                     nonce_cache=nonces)
+                except OSError:
+                    break
+                if not fresh.get("ok"):
+                    break
+                meta = fresh["dep"]
+        raise last_err or KeyError(f"dependency {oid} has no reachable source")
+
+    def run_task(tid: str, got: Dict[str, Any]):
         try:
+            if "deps" in got:          # p2p: control payload + dep metadata
+                fn, args, kwargs = _dec(got["payload"])
+                deps = [resolve_dep(m, tid) for m in got["deps"]]
+            else:                      # relay: dep values ride the payload
+                fn, args, kwargs, deps = _dec(got["payload"])
             out = fn(*args, *deps, **kwargs)
-            _request(ep.host, ep.port, token,
-                     {"op": "result", "task": tid, "worker": wid,
-                      "payload": _enc(out)}, nonce_cache=nonces)
         except Exception as e:  # noqa: BLE001
             _request(ep.host, ep.port, token,
                      {"op": "error", "task": tid, "worker": wid,
                       "err": f"{type(e).__name__}: {e}"}, nonce_cache=nonces)
+            return
+        try:
+            if "deps" in got and blob_srv is not None:
+                # result stays local: the head records metadata only
+                ref = ObjectRef(f"obj-{tid}")
+                blob = pickle.dumps(out, protocol=pickle.HIGHEST_PROTOCOL)
+                local.put_blob(ref, blob)
+                tenants[ref.id] = got.get("tenant", "default")
+                reply = _request(ep.host, ep.port, token,
+                                 {"op": "result_meta", "task": tid,
+                                  "worker": wid, "size": len(blob)},
+                                 nonce_cache=nonces)
+                if not reply.get("stored", False):
+                    local.delete(ref)      # admission failed head-side
+                    tenants.pop(ref.id, None)
+                elif reply.get("spill"):
+                    local.spill(ref)   # over byte quota: degrade self to disk
+            else:
+                _request(ep.host, ep.port, token,
+                         {"op": "result", "task": tid, "worker": wid,
+                          "payload": _enc(out)}, nonce_cache=nonces)
+        except Exception as e:  # noqa: BLE001 -- reporting must never kill
+            # the worker: a truncated reply (JSONDecodeError), a stale
+            # envelope (SecurityError) or an unreachable head all degrade
+            # to a best-effort error report + requeue-via-heartbeat, and
+            # our local blobs survive for the leave/drain handshake
+            try:
+                _request(ep.host, ep.port, token,
+                         {"op": "error", "task": tid, "worker": wid,
+                          "err": f"result delivery failed: "
+                                 f"{type(e).__name__}: {e}"},
+                         nonce_cache=nonces)
+            except Exception:  # noqa: BLE001
+                pass
+            return
+
+    def safe_to_leave() -> bool:
+        """Idle-exit handshake: replicate solely-held hot blobs to the
+        head's push assignments until the head confirms the exit."""
+        failures = 0
+        for _ in range(50):            # bounded: a wedged peer set cannot
+            try:                       # spin the worker forever
+                left = _request(ep.host, ep.port, token,
+                                {"op": "leave", "worker": wid},
+                                nonce_cache=nonces)
+            except Exception:  # noqa: BLE001
+                # one refused connect must NOT bypass the sole-copy
+                # handshake -- only a persistently unreachable head
+                # (cluster gone) releases the worker
+                failures += 1
+                if failures >= 5:
+                    return True
+                time.sleep(0.2)
+                continue
+            failures = 0
+            if left.get("exit", True):
+                return True
+            moves = left.get("replicate", [])
+            if not moves:
+                return False           # busy again: keep serving
+            for mv in moves:
+                ref = ObjectRef(mv["ref"])
+                try:
+                    blob = local.export_blob(ref)
+                    transport = TCPTransport(
+                        lambda _n, _ep=(mv["host"], int(mv["port"])): _ep,
+                        token, wid)
+                    transport.push(mv["node"], ref, blob,
+                                   TransferTicket.from_wire(mv["ticket"]))
+                    _request(ep.host, ep.port, token,
+                             {"op": "pushed", "worker": wid,
+                              "object": ref.id, "node": mv["node"]},
+                             nonce_cache=nonces)
+                except Exception:  # noqa: BLE001 -- re-planned next round
+                    pass
+            time.sleep(0.02)
+        return False
+
+    try:
+        idle_since = time.monotonic()
+        poll_failures = 0
+        while True:
+            if time.monotonic() - idle_since >= max_idle_s:
+                if safe_to_leave():
+                    return
+                idle_since = time.monotonic()   # still needed: keep serving
+            try:
+                got = _request(ep.host, ep.port, token,
+                               {"op": "poll", "worker": wid},
+                               nonce_cache=nonces)
+            except OSError:
+                # same tolerance as the leave handshake: one refused
+                # connect (listen-backlog burst, transient timeout) must
+                # not kill a worker that may hold sole copies -- only a
+                # persistently unreachable head means the cluster is over
+                poll_failures += 1
+                if poll_failures >= 5:
+                    return
+                time.sleep(0.2)
+                continue
+            poll_failures = 0
+            tid = got.get("task")
+            if tid is None:
+                if got.get("draining"):
+                    # exit only when the head confirms the drain finished --
+                    # a cancelled drain (backlog returned) keeps us serving
+                    try:
+                        status = _request(ep.host, ep.port, token,
+                                          {"op": "drain_status",
+                                           "worker": wid},
+                                          nonce_cache=nonces)
+                    except OSError:
+                        status = {}    # transient: re-ask on the next poll
+                    if status.get("complete"):
+                        return
+                time.sleep(0.05)
+                continue
+            run_task(tid, got)
+            # the idle clock starts *after* completion: a long task's next
+            # empty poll must not read as max_idle_s of idleness
+            idle_since = time.monotonic()
+    finally:
+        if blob_srv is not None:
+            blob_srv.shutdown()
+        if own_spill is not None:
+            shutil.rmtree(own_spill, ignore_errors=True)
 
 
 def main():
@@ -271,15 +948,21 @@ def main():
     ap.add_argument("--cluster-id", required=True)
     ap.add_argument("--worker-id", default="")
     ap.add_argument("--max-idle-s", type=float, default=30.0)
+    ap.add_argument("--data-plane", choices=["p2p", "relay"], default="p2p")
+    ap.add_argument("--blob-host", default="127.0.0.1",
+                    help="address this worker's blob server advertises to "
+                         "peers -- on multi-machine fabrics pass the node's "
+                         "reachable IP (e.g. $(hostname -i))")
     args = ap.parse_args()
     if args.role == "worker":
         run_worker(args.rendezvous, args.cluster_id, args.worker_id,
-                   args.max_idle_s)
+                   args.max_idle_s, data_plane=args.data_plane,
+                   blob_host=args.blob_host)
     else:
         rdv = FileRendezvous(args.rendezvous)
         cluster = SyndeoCluster(rendezvous=rdv)
         cluster.cluster_id = args.cluster_id
-        server = HeadServer(cluster)
+        server = HeadServer(cluster, data_plane=args.data_plane)
         server.attach()
         print(f"head up on port {server.port}", flush=True)
         try:

@@ -1,0 +1,573 @@
+"""Decentralized data plane: peer-to-peer transfers, transfer tickets,
+metadata-only results, the leave handshake, and the bandwidth-aware drain
+planner.
+
+The property tests drive random object graphs through BOTH planes and
+assert byte-identical fetches; the socket tests run a real head + three
+worker threads over TCP and assert zero payload bytes transit the head for
+worker-to-worker dependencies."""
+import pickle
+import random
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover -- bare container
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import (GlobalObjectStore, NodeStore, ObjectRef,
+                        RateLimitExceeded, Scheduler, SchedulerConfig,
+                        SecurityError, SimCluster, SimCostModel,
+                        SyndeoCluster, TaskSpec, TaskState, TransferTicket,
+                        WorkerInfo)
+from repro.core.rendezvous import FileRendezvous
+from repro.core.security import ADMIN_TENANT, mint_cluster_token
+from repro.core.worker import BlobServer, HeadServer, run_worker
+
+TOKEN = mint_cluster_token()
+
+
+# ----------------------------------------------------------- transfer tickets
+
+
+def test_ticket_roundtrip_and_bindings():
+    t = TransferTicket.grant(TOKEN, "obj1", "w0", "w1", "alice", "get",
+                             ttl_s=30.0)
+    t.verify(TOKEN, "obj1", "w0", "w1", "get", object_tenant="alice")
+    wire = TransferTicket.from_wire(t.to_wire())
+    wire.verify(TOKEN, "obj1", "w0", "w1", "get", object_tenant="alice")
+    # every binding is inside the MAC
+    with pytest.raises(SecurityError):
+        t.verify(TOKEN, "obj2", "w0", "w1", "get")          # other object
+    with pytest.raises(SecurityError):
+        t.verify(TOKEN, "obj1", "w9", "w1", "get")          # other source
+    with pytest.raises(SecurityError):
+        t.verify(TOKEN, "obj1", "w0", "w9", "get")          # other worker
+    with pytest.raises(SecurityError):
+        t.verify(TOKEN, "obj1", "w0", "w1", "put")          # other right
+    with pytest.raises(SecurityError):
+        t.verify("0" * 64, "obj1", "w0", "w1", "get")       # other key
+    with pytest.raises(SecurityError, match="cross-tenant"):
+        t.verify(TOKEN, "obj1", "w0", "w1", "get", object_tenant="bob")
+
+
+def test_ticket_expiry_and_relabel():
+    t = TransferTicket.grant(TOKEN, "obj1", "w0", "w1", "alice", "get",
+                             ttl_s=1.0, now=1000.0)
+    t.verify(TOKEN, "obj1", "w0", "w1", "get", object_tenant="alice",
+             now=1000.5)
+    with pytest.raises(SecurityError, match="expired"):
+        t.verify(TOKEN, "obj1", "w0", "w1", "get", object_tenant="alice",
+                 now=1002.0)
+    # relabeling the tenant (or extending expiry) breaks the MAC
+    forged = TransferTicket("obj1", "w0", "w1", "bob", "get",
+                            t.expires_at, t.mac)
+    with pytest.raises(SecurityError):
+        forged.verify(TOKEN, "obj1", "w0", "w1", "get", object_tenant="bob",
+                      now=1000.5)
+    extended = TransferTicket("obj1", "w0", "w1", "alice", "get",
+                              t.expires_at + 3600, t.mac)
+    with pytest.raises(SecurityError):
+        extended.verify(TOKEN, "obj1", "w0", "w1", "get",
+                        object_tenant="alice", now=1002.0)
+
+
+def test_store_requires_tickets_for_worker_fetches():
+    g = GlobalObjectStore()
+    g.set_access_guard(TOKEN)
+    g.set_transfer_guard(True)
+    g.register_node(NodeStore("w0"))
+    g.register_node(NodeStore("w1"))
+    ref = g.put("w0", {"v": 1}, tenant="alice")
+    # no ticket -> refused; head remains trusted
+    with pytest.raises(SecurityError, match="ticket"):
+        g.fetch("w1", ref)
+    g.register_node(NodeStore("head"))
+    assert g.get("head", ref) == {"v": 1}
+    # the head's mint authorizes exactly this (object, src, dst)
+    ticket = g.grant_fetch(ref, "w1", "alice")
+    assert ticket is not None and ticket.src == "w0"
+    assert g.fetch("w1", ref, ticket=ticket) > 0
+    assert "w1" in g.locations(ref)
+    # already local: the mint declines (nothing to move)
+    assert g.grant_fetch(ref, "w1", "alice") is None
+
+
+def test_grant_fetch_refuses_cross_tenant_at_mint():
+    g = GlobalObjectStore()
+    g.set_access_guard(TOKEN)
+    g.set_transfer_guard(True)
+    g.register_node(NodeStore("w0"))
+    g.register_node(NodeStore("w1"))
+    ref = g.put("w0", b"secret", tenant="alice")
+    with pytest.raises(SecurityError, match="cross-tenant"):
+        g.grant_fetch(ref, "w1", "bob")
+    # a ticket somebody minted for bob's own scope fails verification
+    # against alice's object even if presented
+    forged = TransferTicket.grant(TOKEN, ref.id, "w0", "w1", "bob", "get")
+    with pytest.raises(SecurityError):
+        g.fetch("w1", ref, ticket=forged)
+    assert g.locations(ref) == {"w0"}
+
+
+# ------------------------------------------- metadata-only record() admission
+
+
+def test_record_registers_without_bytes_and_enforces_quota():
+    from repro.core import QuotaExceededError, TenantQuota
+    g = GlobalObjectStore()
+    g.register_node(NodeStore("w0"))
+    g.set_quota("alice", TenantQuota(max_bytes=1000))
+    ref, spill = g.record("w0", 600, producer_task="t1", ref_id="obj-t1",
+                          tenant="alice")
+    assert not spill and ref.size == 600
+    assert g.locations(ref) == {"w0"}
+    assert g.owner_of(ref) == "w0"
+    assert g.tenant_usage("alice")["bytes"] == 600
+    with pytest.raises(QuotaExceededError):
+        g.record("w0", 600, ref_id="obj-t2", tenant="alice")
+    # reject rolled back: usage unchanged, directory clean
+    assert g.tenant_usage("alice")["bytes"] == 600
+    assert g.locations(ObjectRef("obj-t2")) == set()
+
+
+def test_record_spill_verdict_returned_to_owner():
+    from repro.core import TenantQuota
+    g = GlobalObjectStore()
+    g.register_node(NodeStore("w0"))
+    g.set_quota("alice", TenantQuota(max_bytes=100, on_exceed="spill"))
+    _, spill = g.record("w0", 600, ref_id="obj-a", tenant="alice")
+    assert spill    # the worker (who holds the bytes) is asked to spill
+
+
+# ------------------------------------------------- p2p == relay property test
+
+
+def _value(rng: random.Random, i: int):
+    kind = rng.randrange(3)
+    if kind == 0:
+        return {"i": i, "blob": bytes(rng.getrandbits(8)
+                                      for _ in range(rng.randrange(1, 512)))}
+    if kind == 1:
+        return list(range(i, i + rng.randrange(1, 50)))
+    return f"obj-{i}-" + "x" * rng.randrange(200)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(3, 20))
+def test_p2p_fetch_matches_relay_bytes(seed, n_nodes, n_objects):
+    """Property: fetching through the ticketed p2p path yields exactly the
+    bytes the trusted head-relay path yields, for random object graphs --
+    including blobs forced through the spill path."""
+    rng = random.Random(seed)
+    tok = mint_cluster_token()
+
+    def build(tmp):
+        g = GlobalObjectStore()
+        g.set_access_guard(tok)
+        g.register_node(NodeStore("head", capacity_bytes=1 << 30,
+                                  spill_dir=tmp))
+        for i in range(n_nodes):
+            # tiny capacity on some nodes forces LRU spills mid-graph
+            cap = rng.choice([256, 1 << 20])
+            g.register_node(NodeStore(f"w{i}", capacity_bytes=cap,
+                                      spill_dir=tmp))
+        return g
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp_a, \
+            tempfile.TemporaryDirectory() as tmp_b:
+        rng_state = rng.getstate()
+        relay = build(tmp_a)
+        rng.setstate(rng_state)
+        p2p = build(tmp_b)
+        p2p.set_transfer_guard(True)
+        refs = []
+        for i in range(n_objects):
+            node = f"w{rng.randrange(n_nodes)}"
+            value = _value(rng, i)
+            tenant = rng.choice(["alice", "bob"])
+            r1 = relay.put(node, value, ref_id=f"o{i}", tenant=tenant)
+            r2 = p2p.put(node, value, ref_id=f"o{i}", tenant=tenant)
+            assert r1.size == r2.size
+            refs.append((r1, tenant))
+        for ref, tenant in refs:
+            dst = f"w{rng.randrange(n_nodes)}"
+            expect = relay.get("head", ref)    # trusted control-plane path
+            ticket = p2p.grant_fetch(ref, dst, tenant)
+            got = p2p.get(dst, ref, ticket=ticket)
+            assert pickle.dumps(got) == pickle.dumps(expect)
+            # cross-tenant mint is denied for the other principal
+            other = "bob" if tenant == "alice" else "alice"
+            dst2 = f"w{(int(dst[1:]) + 1) % n_nodes}"
+            if dst2 not in p2p.locations(ref):
+                with pytest.raises(SecurityError):
+                    p2p.grant_fetch(ref, dst2, other)
+
+
+# -------------------------------------------------- real sockets, 3 workers
+
+
+def _mul(a, b):
+    return a * b
+
+
+def _pair(x, y):
+    return (x, y)
+
+
+def _slow():
+    time.sleep(1.0)
+    return "done"
+
+
+@pytest.fixture()
+def tcp_cluster(tmp_path):
+    cluster = SyndeoCluster(rendezvous=FileRendezvous(str(tmp_path)))
+    server = HeadServer(cluster)
+    server.attach()
+    yield cluster, server, str(tmp_path)
+    server.shutdown()
+    cluster.shutdown()
+
+
+def _start_workers(rdv_dir, cluster_id, n, max_idle_s=60.0):
+    threads = []
+    for i in range(n):
+        t = threading.Thread(
+            target=run_worker,
+            args=(rdv_dir, cluster_id, f"tcp-w{i}"),
+            kwargs={"max_idle_s": max_idle_s}, daemon=True)
+        t.start()
+        threads.append(t)
+    return threads
+
+
+def _wait_workers(cluster, n, timeout=20.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if sum(1 for w in cluster.scheduler.workers.values()
+               if w.alive) >= n:
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"{n} workers did not join")
+
+
+def test_three_worker_p2p_zero_head_payload_bytes(tcp_cluster):
+    """Integration: 3 real socket workers; producers' fat results stay on
+    their nodes, consumers pull them peer-to-peer -- the head's control
+    socket carries ZERO payload bytes."""
+    cluster, server, rdv = tcp_cluster
+    _start_workers(rdv, cluster.cluster_id, 3)
+    _wait_workers(cluster, 3)
+    producers = [cluster.submit(_mul, i, 1000) for i in range(4)]
+    assert cluster.wait_all(producers, timeout=60) == [
+        i * 1000 for i in range(4)]
+    out_refs = [cluster.scheduler.graph.tasks[p.id].output
+                for p in producers]
+    # the primary copy is owned by the producing worker; the head only
+    # gained a *client read* copy when wait_all collected the values
+    for ref in out_refs:
+        owner = cluster.store.owner_of(ref)
+        assert owner is not None and owner.startswith("tcp-")
+    consumers = [cluster.submit(_pair, deps=[out_refs[i], out_refs[i + 1]])
+                 for i in range(3)]
+    got = cluster.wait_all(consumers, timeout=60)
+    assert got == [(i * 1000, (i + 1) * 1000) for i in range(3)]
+    assert server.head_payload_bytes == 0
+    # tickets were actually minted and blobs actually served p2p
+    assert cluster.store.stats["records"] >= 4
+
+
+def test_three_worker_relay_mode_counts_head_bytes(tmp_path):
+    """The backward-compat relay plane still works -- and every payload
+    byte shows up on the head counter (the p2p contrast)."""
+    cluster = SyndeoCluster(rendezvous=FileRendezvous(str(tmp_path)),
+                            data_plane="relay")
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        _start_workers(str(tmp_path), cluster.cluster_id, 2)
+        _wait_workers(cluster, 2)
+        t1 = cluster.submit(_mul, 3, 7)
+        assert cluster.get(t1, timeout=60) == 21
+        ref = cluster.scheduler.graph.tasks[t1.id].output
+        assert "head" in cluster.store.locations(ref)
+        t2 = cluster.submit(_pair, 0, deps=[ref])
+        assert cluster.get(t2, timeout=60) == (0, 21)
+        assert server.head_payload_bytes > 0
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+def test_blob_server_rejects_forged_and_expired_tickets(tmp_path):
+    """Wire-level denial: a worker's blob server refuses fetches with no
+    ticket, an expired ticket, a wrong-worker ticket, and a relabeled
+    (forged-tenant) ticket -- and serves the genuine one."""
+    from repro.core import TCPTransport
+    store = NodeStore("w0", spill_dir=str(tmp_path))
+    ref = ObjectRef("objx")
+    store.put(ref, {"secret": 42})
+    srv = BlobServer(store, TOKEN, tenant_of={"objx": "alice"}.get)
+    try:
+        def transport(requester):
+            return TCPTransport(lambda _n: srv.endpoint, TOKEN, requester)
+
+        good = TransferTicket.grant(TOKEN, "objx", "w0", "w1", "alice",
+                                    "get", ttl_s=30)
+        value = pickle.loads(transport("w1").fetch("w0", ref, good))
+        assert value == {"secret": 42}
+        with pytest.raises((SecurityError, KeyError)):
+            transport("w1").fetch("w0", ref, None)            # no ticket
+        expired = TransferTicket.grant(TOKEN, "objx", "w0", "w1", "alice",
+                                       "get", ttl_s=-1.0)
+        with pytest.raises(SecurityError):
+            transport("w1").fetch("w0", ref, expired)
+        with pytest.raises(SecurityError):
+            transport("w9").fetch("w0", ref, good)            # other worker
+        relabeled = TransferTicket("objx", "w0", "w1", "bob", "get",
+                                   good.expires_at, good.mac)
+        with pytest.raises(SecurityError):
+            transport("w1").fetch("w0", ref, relabeled)
+        wrong_key = TransferTicket.grant(mint_cluster_token(), "objx",
+                                         "w0", "w1", "alice", "get")
+        with pytest.raises(SecurityError):
+            transport("w1").fetch("w0", ref, wrong_key)
+    finally:
+        srv.shutdown()
+
+
+# ----------------------------------------------------- idle-exit (leave) race
+
+
+def test_idle_clock_resets_on_completion(tcp_cluster):
+    """A worker that just finished a long task must not idle-exit on its
+    next empty poll: the idle clock starts at completion."""
+    cluster, server, rdv = tcp_cluster
+    # max_idle_s shorter than the task runtime: under the old accounting
+    # (clock reset at dispatch) the worker would exceed it mid-task
+    threads = _start_workers(rdv, cluster.cluster_id, 1, max_idle_s=0.7)
+    _wait_workers(cluster, 1)
+    t = cluster.submit(_slow)
+    assert cluster.get(t, timeout=30) == "done"
+    # worker is still serving right after the long task
+    t2 = cluster.submit(_mul, 2, 5)
+    assert cluster.get(t2, timeout=30) == 10
+    del threads
+
+
+def test_leave_refused_until_sole_blobs_replicated(tcp_cluster):
+    """A worker solely holding hot blobs may not idle-exit: the head hands
+    back replication pushes; only once a peer holds the copies does the
+    exit land -- and the objects stay fetchable."""
+    cluster, server, rdv = tcp_cluster
+    _start_workers(rdv, cluster.cluster_id, 2, max_idle_s=0.4)
+    _wait_workers(cluster, 2)
+    producers = [cluster.submit(_mul, i, 11) for i in range(4)]
+    # wait on scheduler state WITHOUT collecting values: a client read
+    # would replicate the results onto the head and defuse the scenario
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        with cluster._lock:
+            states = {cluster.scheduler.graph.tasks[p.id].state
+                      for p in producers}
+        if states == {TaskState.FINISHED}:
+            break
+        time.sleep(0.05)
+    assert states == {TaskState.FINISHED}
+    refs = [cluster.scheduler.graph.tasks[p.id].output for p in producers]
+    holders = {n for r in refs for n in cluster.store.locations(r)}
+    assert holders and "head" not in holders
+    # workers idle out; the leave handshake must replicate before exit
+    deadline = time.time() + 30
+    while time.time() < deadline and any(
+            w.alive for w in cluster.scheduler.workers.values()):
+        time.sleep(0.1)
+    assert not any(w.alive for w in cluster.scheduler.workers.values())
+    for r in refs:   # every hot object survived the exits
+        assert cluster.store.locations(r)
+        assert cluster.get(r) is not None
+
+
+# ------------------------------------------------ bandwidth-aware drain plan
+
+
+def _drain_sim(n_survivors, survivor_cap, n_objects, obj_bytes):
+    sim = SimCluster(SimCostModel(task_time_s=lambda s: 0.01, jitter=0.0,
+                                  data_plane="p2p",
+                                  result_location="worker"),
+                     SchedulerConfig(enable_speculation=False,
+                                     heartbeat_timeout=1e9))
+    victim = sim.add_workers(1, capacity_bytes=1 << 30)[0]
+    survivors = sim.add_workers(n_survivors, capacity_bytes=survivor_cap)
+    refs = [sim.store.put(victim, bytearray(obj_bytes))
+            for _ in range(n_objects)]
+    return sim, victim, survivors, refs
+
+
+def test_drain_planner_respects_capacity_and_spreads():
+    sim, victim, survivors, refs = _drain_sim(
+        n_survivors=4, survivor_cap=300_000, n_objects=8, obj_bytes=100_000)
+    sim.drain_worker_at(victim, 0.0)
+    sim.run()
+    assert victim not in sim.scheduler.workers
+    used_dsts = set()
+    for r in refs:
+        locs = sim.store.locations(r)
+        assert locs, "hot object lost"
+        used_dsts |= locs
+    for s in survivors:
+        node = sim.store._nodes[s]
+        assert node.used_bytes <= node.capacity, \
+            f"{s} over capacity: {node.used_bytes}"
+    # 8 x 100KB into 4 x 300KB: must use at least 3 distinct survivors
+    assert len(used_dsts & set(survivors)) >= 3
+    assert sim.store.stats["reconstructions"] == 0
+
+
+def test_drain_planner_overflows_to_head_when_survivors_full():
+    sim, victim, survivors, refs = _drain_sim(
+        n_survivors=2, survivor_cap=120_000, n_objects=6, obj_bytes=100_000)
+    sim.drain_worker_at(victim, 0.0)
+    sim.run()
+    assert victim not in sim.scheduler.workers
+    for r in refs:
+        assert sim.store.locations(r), "hot object lost"
+    for s in survivors:
+        node = sim.store._nodes[s]
+        assert node.used_bytes <= node.capacity
+    # the overflow went to the head store, not over a survivor's budget
+    on_head = sum(1 for r in refs if "head" in sim.store.locations(r))
+    assert on_head >= 4
+
+
+# ------------------------------------------------------- submit rate limits
+
+
+def test_submit_rate_limit_token_bucket():
+    clock = [0.0]
+    sched = Scheduler(GlobalObjectStore(), lambda t, w: None,
+                      config=SchedulerConfig(enable_speculation=False),
+                      clock=lambda: clock[0])
+    sched.set_submit_rate("alice", rate_per_s=2.0, burst=3)
+    for _ in range(3):          # burst admits
+        sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+    with pytest.raises(RateLimitExceeded, match="alice"):
+        sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+    assert sched.stats["rate_limited"] == 1
+    # other tenants are unaffected
+    sched.submit(TaskSpec(fn=None, tenant_id="bob"))
+    # tokens refill with the clock
+    clock[0] += 1.0             # +2 tokens
+    sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+    sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+    with pytest.raises(RateLimitExceeded):
+        sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+    # removing the limit restores unbounded submit
+    sched.set_submit_rate("alice", 0)
+    for _ in range(10):
+        sched.submit(TaskSpec(fn=None, tenant_id="alice"))
+
+
+def test_cluster_register_tenant_wires_rate_limit():
+    with SyndeoCluster() as cluster:
+        cluster.register_tenant("alice", submit_rate=1.0, submit_burst=2)
+        cluster.add_worker()
+        cluster.submit(_mul, 1, 1, tenant_id="alice")
+        cluster.submit(_mul, 2, 2, tenant_id="alice")
+        with pytest.raises(RateLimitExceeded):
+            cluster.submit(_mul, 3, 3, tenant_id="alice")
+        # surfaced like a quota reject: nothing half-registered
+        assert cluster.scheduler.stats["rate_limited"] == 1
+
+
+# --------------------------------------------------- per-tenant metrics op
+
+
+def test_metrics_op_surfaces_tenant_shares_and_quota(tcp_cluster):
+    cluster, server, rdv = tcp_cluster
+    cluster.register_tenant("alice", quota_bytes=1000)
+    cluster.register_tenant("bob")
+    cluster.put(b"x" * 400, tenant_id="alice")
+    reply = server.dispatch({"op": "metrics"})
+    assert reply["ok"]
+    assert "alice" in reply["syndeo_tenant_dominant_share"]
+    frac = reply["syndeo_tenant_quota_fraction"]["alice"]
+    assert 0.4 <= frac <= 0.5
+    assert reply["syndeo_tenant_quota_fraction"].get("bob", 0.0) == 0.0
+
+
+def test_drain_planner_sync_path_respects_capacity():
+    """Regression (review): the synchronous migrate path (backends without
+    a migrate_fn) lands moves mid-scan -- landed bytes must stay charged
+    against the capacity snapshot or one survivor absorbs everything."""
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(enable_speculation=False))
+    store.register_node(NodeStore("head", capacity_bytes=1 << 30))
+    store.register_node(NodeStore("v", capacity_bytes=1 << 30))
+    store.register_node(NodeStore("s", capacity_bytes=150))
+    sched.add_worker(WorkerInfo("v", {"cpu": 1.0}))
+    sched.add_worker(WorkerInfo("s", {"cpu": 1.0}))
+    refs = [store.put("v", b"x" * 40) for _ in range(5)]   # hot (refcount 1)
+    assert sched.begin_drain("v")
+    assert sched.drain_complete("v")
+    assert sched.finish_drain("v")
+    node_s = store._nodes["s"]
+    assert node_s.used_bytes <= node_s.capacity, \
+        f"survivor overbooked: {node_s.used_bytes}/{node_s.capacity}"
+    for r in refs:
+        assert store.locations(r), "hot object lost by the drain"
+    assert any("head" in store.locations(r) for r in refs), \
+        "overflow should have spilled to the head store"
+
+
+def test_concurrent_drains_share_capacity_projection():
+    """Regression (review): two drains planning against the same tight
+    survivor must see each other's in-flight assignments -- their joint
+    plan may not overbook it."""
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(enable_speculation=False))
+    moves = []
+    sched.migrate_fn = lambda w, ref, dst: moves.append((w, ref, dst))
+    store.register_node(NodeStore("head", capacity_bytes=1 << 30))
+    for n in ("v1", "v2", "s"):
+        cap = 150 if n == "s" else 1 << 30
+        store.register_node(NodeStore(n, capacity_bytes=cap))
+        sched.add_worker(WorkerInfo(n, {"cpu": 1.0}))
+    blobs = {v: [store.put(v, b"y" * 40) for _ in range(3)]
+             for v in ("v1", "v2")}
+    assert sched.begin_drain("v1")
+    assert sched.begin_drain("v2")    # plans while v1's moves are in flight
+    per_dst = {}
+    for _w, ref, dst in moves:
+        per_dst[dst] = per_dst.get(dst, 0) + ref.size
+    cap_s = store._nodes["s"].capacity
+    assert per_dst.get("s", 0) <= cap_s, \
+        f"joint plan overbooks survivor: {per_dst}"
+    assert len(moves) == 6            # every hot blob got a destination
+    del blobs
+
+
+def test_leave_relay_worker_head_migrates_blobs(tcp_cluster):
+    """Regression (review): a relay-joined worker never physically holds
+    its node store's blobs (they live in the head process), so the leave
+    handshake must not assign it pushes it cannot serve -- the head
+    migrates head-resident blobs itself and lets the worker go."""
+    cluster, server, rdv = tcp_cluster
+    joined = server.dispatch({"op": "join", "worker": "tcp-relay0",
+                              "resources": {"cpu": 1.0}})
+    assert joined["ok"] and joined["data_plane"] == "relay"
+    # a blob parked on the worker's head-side store (as a drain migration
+    # or replication push would leave it)
+    ref = cluster.store.put("tcp-relay0", {"v": 1})
+    assert cluster.store.sole_holder(ref, "tcp-relay0")
+    left = server.dispatch({"op": "leave", "worker": "tcp-relay0"})
+    assert left["exit"] is True, left
+    assert "head" in cluster.store.locations(ref)
+    assert cluster.store.get("head", ref) == {"v": 1}
