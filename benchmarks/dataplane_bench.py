@@ -21,8 +21,16 @@ the sim's per-link cost model:
    any destination store and spread the moves across links instead of
    convoying behind one survivor.
 
+3. *Drain plane* (p2p vs relay): the same fat-object drain executed as
+   direct worker->worker pushes (the two-phase migrate protocol) vs
+   relayed through the head's serialized NIC. p2p must move ZERO bytes
+   over the head's link during the drain and finish no slower than the
+   relay -- scale-down under load is exactly when the head's NIC must
+   stay out of the data path.
+
 Run:  PYTHONPATH=src python benchmarks/dataplane_bench.py [--quick]
       PYTHONPATH=src python benchmarks/dataplane_bench.py --dataplane-smoke
+      PYTHONPATH=src python benchmarks/dataplane_bench.py --drain-p2p-smoke
 """
 from __future__ import annotations
 
@@ -155,6 +163,80 @@ def print_drain(res: Dict[str, object]):
     print(f"  reconstructions    : {res['reconstructions']}")
 
 
+# --------------------------------------------------- drain plane: p2p vs relay
+
+
+def drain_plane_run(data_plane: str, n_objects: int = 8,
+                    obj_bytes: int = 8 * MB,
+                    n_survivors: int = 3) -> Dict[str, float]:
+    """Drain a worker solely holding fat hot objects under the given
+    migration plane; report drain latency and the bytes the head's NIC
+    relayed *for the drain itself* (p2p direct pushes must report 0)."""
+    cost = SimCostModel(task_time_s=lambda s: 0.01, jitter=0.0,
+                        data_plane=data_plane,
+                        result_location="worker" if data_plane == "p2p"
+                        else "head",
+                        head_bandwidth_Bps=1.0e9,
+                        node_bandwidth_Bps=1.0e9,
+                        migration_bandwidth_Bps=1.0e9)
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    victim = sim.add_workers(1, capacity_bytes=1 << 30)[0]
+    sim.add_workers(n_survivors, capacity_bytes=1 << 30)
+    refs = [sim.store.put(victim, bytearray(obj_bytes))
+            for _ in range(n_objects)]     # refcount 1 each: hot
+    head0 = sim.store.stats["head_relayed_bytes"]
+    t0 = sim.now
+    sim.drain_worker_at(victim, t=0.0)
+    sim.run()
+    assert victim not in sim.scheduler.workers, "drain did not finish"
+    for r in refs:
+        assert sim.store.locations(r), f"hot object {r.id} lost"
+    return {"drain_s": sim.now - t0,
+            "head_relayed_bytes": float(
+                sim.store.stats["head_relayed_bytes"] - head0),
+            "moved_bytes": float(n_objects * obj_bytes),
+            "migrated": float(sim.store.stats["migrations"]),
+            "reconstructions": float(sim.store.stats["reconstructions"])}
+
+
+def print_drain_plane(p2p: Dict[str, float], relay: Dict[str, float]):
+    print("\n== drain plane: direct p2p pushes vs head relay ==")
+    print(f"{'plane':>8} {'drain s':>9} {'head MB':>9} {'moved MB':>9}")
+    for name, r in (("p2p", p2p), ("relay", relay)):
+        print(f"{name:>8} {r['drain_s']:>9.3f} "
+              f"{r['head_relayed_bytes'] / MB:>9.1f} "
+              f"{r['moved_bytes'] / MB:>9.1f}")
+
+
+def drain_p2p_smoke() -> int:
+    """CI gate: during a drain, direct p2p moves put ZERO bytes on the
+    head's link while the relay plane pays for every byte -- at no
+    makespan cost (p2p drain <= relay drain)."""
+    p2p = drain_plane_run("p2p")
+    relay = drain_plane_run("relay")
+    print_drain_plane(p2p, relay)
+    ok = True
+    if p2p["head_relayed_bytes"] != 0:
+        print(f"FAIL: p2p drain relayed {p2p['head_relayed_bytes']:.0f} "
+              f"bytes through the head")
+        ok = False
+    if relay["head_relayed_bytes"] < relay["moved_bytes"]:
+        print(f"FAIL: relay drain should pay the head's NIC for every "
+              f"moved byte ({relay['head_relayed_bytes']:.0f} of "
+              f"{relay['moved_bytes']:.0f})")
+        ok = False
+    if p2p["drain_s"] > relay["drain_s"]:
+        print(f"FAIL: p2p drain slower than relay "
+              f"({p2p['drain_s']:.3f} vs {relay['drain_s']:.3f})")
+        ok = False
+    if p2p["reconstructions"] or relay["reconstructions"]:
+        print("FAIL: a drain cost lineage reconstructions")
+        ok = False
+    print("\ndrain-p2p smoke:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
 # --------------------------------------------------------------------- smoke
 
 
@@ -200,13 +282,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--dataplane-smoke", action="store_true")
+    ap.add_argument("--drain-p2p-smoke", action="store_true")
     args = ap.parse_args()
     if args.dataplane_smoke:
         raise SystemExit(smoke())
+    if args.drain_p2p_smoke:
+        raise SystemExit(drain_p2p_smoke())
     counts = [2, 4, 8] if args.quick else [2, 4, 8, 16, 32]
     rows = bench_shuffle(counts, obj_bytes=4 * MB)
     print_shuffle(rows)
     print_drain(drain_run())
+    print_drain_plane(drain_plane_run("p2p"), drain_plane_run("relay"))
 
 
 if __name__ == "__main__":

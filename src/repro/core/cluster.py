@@ -102,7 +102,8 @@ class SyndeoCluster:
                         on_exceed: str = "reject",
                         min_workers: int = 0,
                         submit_rate: Optional[float] = None,
-                        submit_burst: Optional[float] = None) -> Tenant:
+                        submit_burst: Optional[float] = None,
+                        quota_bytes_per_node: Optional[int] = None) -> Tenant:
         """Admit a tenant: fair-share weight on the scheduler, byte/ref
         quota on the object store, an optional token-bucket submit rate
         (`submit_rate` tasks/s sustained, `submit_burst` peak -- exceeding
@@ -112,10 +113,12 @@ class SyndeoCluster:
         cluster token)."""
         with self._lock:
             self.scheduler.register_tenant(tenant_id, weight)
-            if quota_bytes is not None or quota_refs is not None:
+            if (quota_bytes is not None or quota_refs is not None
+                    or quota_bytes_per_node is not None):
                 self.store.set_quota(tenant_id, TenantQuota(
                     max_bytes=quota_bytes, max_refs=quota_refs,
-                    on_exceed=on_exceed))
+                    on_exceed=on_exceed,
+                    max_bytes_per_node=quota_bytes_per_node))
             if submit_rate is not None:
                 self.scheduler.set_submit_rate(tenant_id, submit_rate,
                                                submit_burst)
@@ -250,7 +253,12 @@ class SyndeoCluster:
 
     def get(self, task_or_ref, timeout: float = 60.0) -> Any:
         if isinstance(task_or_ref, ObjectRef):
-            return self.store.get("head", task_or_ref)
+            value = self.store.get("head", task_or_ref)
+            # replica GC hint: this head copy serves a client read, not
+            # the data plane -- it is released when the refcount next
+            # drops instead of lingering for the cluster lifetime
+            self.store.mark_client_read(task_or_ref)
+            return value
         task = task_or_ref
         ev = self._futures.get(task.id)
         deadline = time.monotonic() + timeout
@@ -267,7 +275,9 @@ class SyndeoCluster:
                     # the blob fetch may cross the network (a p2p worker
                     # holds the primary): NEVER under the cluster lock, or
                     # one slow source stalls every control-plane op
-                    return self.store.get("head", output)
+                    value = self.store.get("head", output)
+                    self.store.mark_client_read(output)
+                    return value
                 except KeyError:
                     # output's only copy died with its worker: lineage
                     # reconstruction -- re-run the producing task

@@ -59,16 +59,31 @@ rebuilt by lineage re-execution:
   * `objects_on(node)` enumerates directory entries held on a node and
     whether the node is the sole holder -- the scheduler's migration
     planner reads this to decide what must move,
-  * `migrate(ref, src, dst)` copies the raw blob between node stores
-    without a pickle round-trip, records the new location, drops the old
-    one, and **hands off ownership** if the source owned the object; the
-    move is capability-checked when the cluster installs a migration
-    capability (`set_migration_guard`), so a tenant cannot exfiltrate
-    another tenant's objects by draining a shared node,
+  * moves are **two-phase**. `begin_move(ref, src, dst)` (PREPARE)
+    records an in-flight move in the directory -- ownership and
+    locations stay untouched, so a crash at any point strands nothing.
+    The bytes then move *directly* source -> destination (a worker's
+    blob server pushes under a head-minted "migrate"-right
+    TransferTicket; in-process backends call `complete_move`). Only the
+    destination's acknowledgement commits: `commit_move(ref, src, dst)`
+    adds the destination location, drops the source one, **hands off
+    ownership**, and deletes the source's copy. A move that never acks
+    is `abort_move`-ed -- which first *probes* the destination and
+    promotes to a commit when the push actually landed and only the ack
+    was lost -- and then re-planned by the scheduler. The head's NIC
+    carries zero payload bytes for a p2p move; `migrate(ref, src, dst)`
+    is the one-call synchronous wrapper (begin + copy + commit) kept for
+    in-process node stores and as the relay *fallback* when a direct
+    push keeps failing,
+  * every phase is capability-checked when the cluster installs a
+    migration capability (`set_migration_guard`), so a tenant cannot
+    exfiltrate another tenant's objects by draining a shared node,
   * after migration `unregister_node(src)` loses nothing: every hot
     object is served from a survivor, so no lineage reconstruction fires
     (the drain-vs-drop benchmark and the fault-tolerance property tests
-    assert exactly this).
+    assert exactly this). Unregistering a node also aborts every
+    in-flight move that touches it -- a crashed source or destination
+    never strands or duplicates ownership.
 
 Cold objects (zero refcount, not depended on) are simply dropped -- the
 drain is then provably no worse than recompute: it never re-executes a
@@ -165,6 +180,11 @@ class TenantQuota:
     max_bytes: Optional[int] = None     # live directory bytes; None = unlimited
     max_refs: Optional[int] = None      # live directory entries
     on_exceed: str = "reject"           # "reject" | "spill" (bytes only)
+    # per-node placement cap consulted by the drain planner: a migration
+    # may not land where the tenant already holds this many bytes (keeps
+    # one tenant's drain traffic from piling onto the node where it is
+    # already memory-rich). Admission (put/record) is not affected.
+    max_bytes_per_node: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -421,7 +441,8 @@ class RemoteNodeStore:
     capacity = None
 
     def __init__(self, node_id: str, endpoint: Tuple[str, int], token: str,
-                 requester: str = "head", ticket_ttl_s: float = 30.0):
+                 requester: str = "head", ticket_ttl_s: float = 30.0,
+                 control_timeout_s: float = 2.0):
         self.node_id = node_id
         self.endpoint = tuple(endpoint)
         self._token = token
@@ -429,6 +450,12 @@ class RemoteNodeStore:
         self._ttl = ticket_ttl_s
         self._transport = TCPTransport(lambda _nid: self.endpoint, token,
                                        requester)
+        # control-sized ops (existence probes, deletes) get a short
+        # timeout of their own: the migration sweep probes destinations
+        # while the head holds its cluster lock, and a partitioned peer
+        # must cost ~2 s there, not the blob transport's full 15 s
+        self._control = TCPTransport(lambda _nid: self.endpoint, token,
+                                     requester, timeout=control_timeout_s)
         self.stats = {"puts": 0, "gets": 0, "spills": 0, "restores": 0}
 
     def _ticket(self, object_id: str, right: str) -> TransferTicket:
@@ -462,14 +489,14 @@ class RemoteNodeStore:
         return pickle.loads(self.export_blob(ref))
 
     def has(self, ref: ObjectRef) -> bool:
-        return self._transport.has(self.node_id, ref.id,
-                                   self._ticket(ref.id, "get"))
+        return self._control.has(self.node_id, ref.id,
+                                 self._ticket(ref.id, "get"))
 
     def delete(self, ref: ObjectRef):
         # best-effort distributed GC; an unreachable (dying) worker's
         # copies disappear with the worker anyway
-        self._transport.delete(self.node_id, ref.id,
-                               self._ticket(ref.id, "del"))
+        self._control.delete(self.node_id, ref.id,
+                             self._ticket(ref.id, "del"))
 
     def spill(self, ref: ObjectRef) -> bool:
         return False     # spill policy is the remote worker's own
@@ -484,6 +511,17 @@ class _Directory:
     created: float = field(default_factory=time.monotonic)
     owner: Optional[str] = None       # node accountable for the primary copy
     tenant: str = DEFAULT_TENANT      # principal accountable for the bytes
+
+
+@dataclass
+class _Move:
+    """One PREPAREd (in-flight) migration: src still owns the object and
+    still appears in the directory; only commit_move changes either."""
+    src: str
+    dst: str
+    tenant: str = DEFAULT_TENANT
+    size: int = 0
+    started: float = field(default_factory=time.monotonic)
 
 
 class GlobalObjectStore:
@@ -503,6 +541,10 @@ class GlobalObjectStore:
         self._require_tickets = False                # set_transfer_guard
         self._quotas: Dict[str, TenantQuota] = {}
         self._usage: Dict[str, Dict[str, int]] = {}  # tenant -> bytes/refs
+        self._moves: Dict[str, _Move] = {}           # oid -> in-flight move
+        # GC hints: head copies that exist only to serve a client read --
+        # dropped as soon as the refcount moves (see mark_client_read)
+        self._client_reads: Set[str] = set()
         self.transport = transport or InProcessTransport()
         # data-plane load accounting: cumulative bytes over each node's
         # link and per (src, dst) pair -- source choice and the drain
@@ -514,7 +556,10 @@ class GlobalObjectStore:
                       "migrations": 0, "migrated_bytes": 0,
                       "quota_rejects": 0, "quota_spills": 0,
                       "records": 0, "head_relayed_bytes": 0,
-                      "ticket_rejects": 0}
+                      "ticket_rejects": 0,
+                      "moves_started": 0, "moves_committed": 0,
+                      "moves_aborted": 0, "relay_fallbacks": 0,
+                      "replica_gc": 0}
 
     # -- multi-tenancy: guard, quota, accounting -------------------------------
 
@@ -612,6 +657,15 @@ class GlobalObjectStore:
         with self._lock:
             return self._quotas.get(tenant)
 
+    def tenant_bytes_on(self, node_id: str, tenant: str) -> int:
+        """Live directory bytes `tenant` holds on one node -- the drain
+        planner's quota-aware destination signal (TenantQuota
+        .max_bytes_per_node): a move must not land where the tenant is
+        already memory-rich."""
+        with self._lock:
+            return sum(e.size for e in self._dir.values()
+                       if e.tenant == tenant and node_id in e.locations)
+
     def tenant_quota_fraction(self, tenant: str) -> float:
         """Live bytes / byte quota (0.0 when unlimited) -- the pressure
         signal the metrics op and the K8s adapter surface per tenant."""
@@ -683,6 +737,14 @@ class GlobalObjectStore:
         lost = set()
         with self._lock:
             self._nodes.pop(node_id, None)
+            # abort every in-flight move touching the node: a crashed
+            # source or destination must never strand half a move (a push
+            # that DID land before the source died is recovered when the
+            # destination's late ack arrives -- see confirm_replica)
+            for oid in [o for o, mv in self._moves.items()
+                        if node_id in (mv.src, mv.dst)]:
+                del self._moves[oid]
+                self.stats["moves_aborted"] += 1
             for oid, entry in self._dir.items():
                 entry.locations.discard(node_id)
                 if entry.owner == node_id:
@@ -909,6 +971,24 @@ class GlobalObjectStore:
         self.note_replica(oid, node_id)
         return True
 
+    def purge_copy(self, ref_or_id, node_id: str) -> bool:
+        """Best-effort delete of a node's copy of an object the directory
+        no longer tracks (e.g. a drain push that landed after the object
+        was released) -- refuses to touch copies of live objects. A
+        control-sized `del` for remote stores."""
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            if oid in self._dir:
+                return False
+            node = self._nodes.get(node_id)
+        if node is None:
+            return False
+        try:
+            node.delete(ObjectRef(oid))
+        except Exception:  # noqa: BLE001 -- unreachable peer: its copy
+            return False   # disappears with it anyway
+        return True
+
     def note_replica(self, ref_or_id, node_id: str):
         """Record that a copy of an object landed on `node_id` through an
         out-of-band data-plane move (e.g. a leaving worker's replication
@@ -941,18 +1021,58 @@ class GlobalObjectStore:
             if ref.id in self._dir:
                 self._dir[ref.id].refcount += n
 
+    def mark_client_read(self, ref_or_id):
+        """GC hint: the head's copy of this object exists only because a
+        client read materialized it (the owner's copy is elsewhere). Such
+        replicas are dropped as soon as the refcount next drops -- the
+        head store is a staging buffer, not a cache for the cluster
+        lifetime (see release)."""
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            e = self._dir.get(oid)
+            if (e is not None and "head" in e.locations
+                    and e.owner != "head" and len(e.locations) > 1):
+                self._client_reads.add(oid)
+
     def release(self, ref: ObjectRef):
-        """Decrement refcount; free all copies at zero."""
+        """Decrement refcount; free all copies at zero. A refcount drop
+        that leaves the object alive still GCs hinted client-read head
+        replicas (mark_client_read) -- the owner keeps serving."""
+        gc_head = None
+        freed = False
+        mv, locs = None, set()
         with self._lock:
             e = self._dir.get(ref.id)
             if e is None:
                 return
             e.refcount -= 1
             if e.refcount > 0:
-                return
-            locs = set(e.locations)
-            self._usage_add(e.tenant, -e.size, -1)
-            del self._dir[ref.id]
+                if (ref.id in self._client_reads and "head" in e.locations
+                        and e.owner != "head" and len(e.locations) > 1):
+                    e.locations.discard("head")
+                    self._client_reads.discard(ref.id)
+                    self.stats["replica_gc"] += 1
+                    gc_head = self._nodes.get("head")
+            else:
+                freed = True
+                locs = set(e.locations)
+                mv = self._moves.pop(ref.id, None)
+                self._client_reads.discard(ref.id)
+                self._usage_add(e.tenant, -e.size, -1)
+                del self._dir[ref.id]
+        if gc_head is not None:
+            gc_head.delete(ref)
+        if not freed:     # decided under the lock: a racing final release
+            return        # must not send this thread down the free path
+        if mv is not None and mv.dst not in locs:
+            # a push was in flight: the destination may hold an
+            # unregistered partial copy -- best-effort drop it too
+            dst_store = self._nodes.get(mv.dst)
+            if dst_store is not None:
+                try:
+                    dst_store.delete(ref)
+                except Exception:  # noqa: BLE001 -- unreachable peer
+                    pass
         for node_id in locs:
             store = self._nodes.get(node_id)
             if store is not None:
@@ -997,18 +1117,14 @@ class GlobalObjectStore:
             e = self._dir.get(ref.id)
             return bool(e) and e.locations == {node_id}
 
-    def migrate(self, ref: ObjectRef, src: str, dst: str,
-                capability: Optional[Capability] = None) -> bool:
-        """Move one object's copy src -> dst (raw blob, no pickle round-trip),
-        updating the directory and handing off ownership if src owned it.
-        Returns False when the move is moot (object gone, src copy gone, or
-        dst unregistered) -- drains treat that as already-done.
-
-        Tenant-aware guard: the presented capability (or the installed
-        migration guard's) must cover the object's tenant. The head's guard
-        is cluster-scoped (admin) and moves anything; a tenant-scoped
-        capability raises SecurityError on another tenant's objects -- also
-        when a drain tries to use it."""
+    def _check_migration_guard(self, ref: ObjectRef,
+                               capability: Optional[Capability]):
+        """Tenant-aware migration guard shared by every phase of a move:
+        the presented capability (or the installed migration guard's)
+        must cover the object's tenant. The head's guard is cluster-scoped
+        (admin) and moves anything; a tenant-scoped capability raises
+        SecurityError on another tenant's objects -- also when a drain
+        tries to use it."""
         cap, token = capability, self._token
         if self._migration_guard is not None:
             guard_cap, guard_token = self._migration_guard
@@ -1020,6 +1136,166 @@ class GlobalObjectStore:
                     "capability presented but no access guard installed")
             cap.verify(token, "objects", "migrate",
                        self.tenant_of(ref.id) or ref.tenant)
+
+    # -- two-phase move protocol (PREPARE / push / COMMIT / ABORT) ------------
+
+    def begin_move(self, ref: ObjectRef, src: str, dst: str,
+                   capability: Optional[Capability] = None) -> bool:
+        """PREPARE one migration: guard-check it and record the in-flight
+        move. The directory is untouched -- src still owns the object and
+        serves reads -- so a crash anywhere before COMMIT strands nothing.
+        Returns False when the move is moot (object gone, src copy gone,
+        dst unregistered) or the object is already mid-move."""
+        self._check_migration_guard(ref, capability)
+        with self._lock:
+            e = self._dir.get(ref.id)
+            if (e is None or src not in e.locations
+                    or dst not in self._nodes or ref.id in self._moves):
+                return False
+            self._moves[ref.id] = _Move(src, dst, e.tenant,
+                                        e.size if e.size else ref.size)
+            self.stats["moves_started"] += 1
+        return True
+
+    def migrate_ticket(self, ref: ObjectRef, src: str, dst: str,
+                       ttl_s: float = 60.0) -> TransferTicket:
+        """Mint the push grant for a PREPAREd move: authorizes `src` (and
+        only `src`) to push this one object into `dst`'s blob store under
+        the "migrate" right. Head-only (requires the cluster token)."""
+        if self._token is None:
+            raise SecurityError(
+                "cannot mint migrate tickets before set_access_guard")
+        tenant = self.tenant_of(ref.id) or ref.tenant
+        return TransferTicket.grant_migrate(self._token, ref.id, dst, src,
+                                            tenant, ttl_s=ttl_s)
+
+    def move_in_flight(self, ref_or_id) -> Optional[Tuple[str, str]]:
+        """(src, dst) of the object's in-flight move, or None."""
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            mv = self._moves.get(oid)
+            return (mv.src, mv.dst) if mv else None
+
+    def commit_move(self, ref_or_id, src: str, dst: str) -> bool:
+        """COMMIT a PREPAREd move once the destination confirmed it holds
+        the blob (its metadata ack, or an explicit probe): record the new
+        location, drop the old one, hand off ownership, and delete the
+        source's copy (a control-sized `del` for remote stores -- no
+        payload transits the head). Returns False when no matching move
+        is in flight or the object was released mid-move (the pushed
+        copy is dropped rather than stranded)."""
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        ref = ObjectRef(oid)
+        cleanup, failed = None, False
+        with self._lock:
+            mv = self._moves.get(oid)
+            if mv is None or mv.src != src or mv.dst != dst:
+                return False
+            del self._moves[oid]
+            e = self._dir.get(oid)
+            dst_store = self._nodes.get(dst)
+            src_store = self._nodes.get(src)
+            if e is None or dst_store is None:
+                cleanup, failed = dst_store, True
+            else:
+                # the directory size is authoritative (size_hint-modeled
+                # blobs carry token payloads): the planner's link_load
+                # signal must see the modeled bytes, same as fetch()
+                size = e.size if e.size else mv.size
+                e.locations.add(dst)
+                e.locations.discard(src)
+                if e.owner == src or e.owner is None:
+                    e.owner = dst            # owner handoff
+                self.stats["migrations"] += 1
+                self.stats["migrated_bytes"] += size
+                self.stats["moves_committed"] += 1
+        if failed:         # released, or destination unregistered, mid-move
+            if cleanup is not None:
+                try:
+                    cleanup.delete(ref)
+                except Exception:  # noqa: BLE001 -- best-effort GC
+                    pass
+            return False
+        self.note_link_bytes(src, dst, size)
+        if src_store is not None:
+            try:
+                src_store.delete(ref)
+            except Exception:  # noqa: BLE001 -- a dying source's copy
+                pass           # disappears with the source anyway
+        return True
+
+    def abort_move(self, ref_or_id, probe: bool = True) -> bool:
+        """ABORT a move that never acked. With `probe` (the default when
+        the destination might be alive), the destination store is asked
+        whether the push actually landed -- if it did, the move is
+        *promoted to a COMMIT* instead (the ack, not the push, was lost)
+        and True is returned. Otherwise the in-flight record is dropped,
+        the directory is untouched (src still owns the object), and the
+        caller re-plans. Returns whether the move ended up committed."""
+        oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._lock:
+            mv = self._moves.get(oid)
+            if mv is None:
+                return False
+            dst_store = self._nodes.get(mv.dst) if probe else None
+        if dst_store is not None:
+            held = False
+            try:
+                held = dst_store.has(ObjectRef(oid))
+            except Exception:  # noqa: BLE001 -- unreachable = not landed
+                held = False
+            if held and self.commit_move(oid, mv.src, mv.dst):
+                return True
+        with self._lock:
+            if self._moves.pop(oid, None) is None:
+                return False               # raced a commit/release
+            self.stats["moves_aborted"] += 1
+        return False
+
+    def complete_move(self, ref: ObjectRef, src: str, dst: str) -> bool:
+        """Execute the data copy for a PREPAREd move and COMMIT it -- the
+        in-process path (threaded/sim backends and the head-relay
+        fallback, where this process can reach both stores). The TCP p2p
+        path never calls this: the source worker pushes and the
+        destination's ack commits."""
+        with self._lock:
+            mv = self._moves.get(ref.id)
+            src_store = self._nodes.get(src)
+            dst_store = self._nodes.get(dst)
+        if mv is None or mv.src != src or mv.dst != dst:
+            return False
+        if src_store is None or dst_store is None:
+            return self.abort_move(ref.id, probe=False)
+        try:
+            blob = src_store.export_blob(ref)
+            dst_store.import_blob(ref, blob)
+        except Exception:  # noqa: BLE001 -- src blob/peer gone mid-copy
+            return self.abort_move(ref.id, probe=True)
+        if self.commit_move(ref.id, src, dst):
+            return True
+        # commit refused (released or aborted mid-copy): drop the copy we
+        # just imported unless the directory adopted it meanwhile
+        with self._lock:
+            e = self._dir.get(ref.id)
+            adopted = e is not None and dst in e.locations
+        if not adopted:
+            try:
+                dst_store.delete(ref)
+            except Exception:  # noqa: BLE001
+                pass
+        return False
+
+    def migrate(self, ref: ObjectRef, src: str, dst: str,
+                capability: Optional[Capability] = None) -> bool:
+        """Move one object's copy src -> dst (raw blob, no pickle
+        round-trip) through the two-phase protocol in one synchronous
+        call: PREPARE, copy, COMMIT. Returns False when the move is moot
+        (object gone, src copy gone, or dst unregistered) -- drains treat
+        that as already-done. Over RemoteNodeStore proxies this relays
+        the blob through the calling process -- which is exactly why the
+        p2p drain path replaced it with direct pushes; it remains the
+        backward-compat path and the transient-transport fallback."""
+        self._check_migration_guard(ref, capability)
         with self._lock:
             e = self._dir.get(ref.id)
             src_store = self._nodes.get(src)
@@ -1037,23 +1313,6 @@ class GlobalObjectStore:
             return True
         if src_store is None:
             return False
-        blob = src_store.export_blob(ref)
-        dst_store.import_blob(ref, blob)
-        with self._lock:
-            e = self._dir.get(ref.id)
-            if e is None:                    # released mid-copy
-                dst_store.delete(ref)
-                return False
-            e.locations.add(dst)
-            e.locations.discard(src)
-            if e.owner == src:
-                e.owner = dst                # owner handoff
-            # the directory size is authoritative (size_hint-modeled blobs
-            # carry token payloads): the planner's link_load signal must
-            # see the modeled bytes, same as fetch()
-            size = e.size if e.size else len(blob)
-            self.stats["migrations"] += 1
-            self.stats["migrated_bytes"] += size
-        self.note_link_bytes(src, dst, size)
-        src_store.delete(ref)
-        return True
+        if not self.begin_move(ref, src, dst, capability=capability):
+            return False
+        return self.complete_move(ref, src, dst)

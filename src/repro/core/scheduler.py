@@ -82,6 +82,10 @@ class SchedulerConfig:
     # baseline). With one tenant both are identical, so the default path is
     # zero-cost for single-tenant clusters.
     dispatch_policy: str = "fair"
+    # two-phase drain moves: a dispatched migration that has not been
+    # acknowledged within this window is aborted (probe-first: a push
+    # whose ack was lost is promoted to a commit) and re-planned.
+    migration_timeout_s: float = 10.0
 
 
 @dataclass
@@ -135,8 +139,12 @@ class DrainState:
     # object was sent -- capacity/link projections read these
     assigned_bytes: Dict[str, int] = field(default_factory=dict)
     inflight_to: Dict[str, Tuple[str, int]] = field(default_factory=dict)
+    # when each pending move was dispatched -- the migration-timeout
+    # sweep aborts (probe-first) and re-plans moves that never acked
+    dispatched_at: Dict[str, float] = field(default_factory=dict)
 
     def _unassign(self, object_id: str):
+        self.dispatched_at.pop(object_id, None)
         dst_size = self.inflight_to.pop(object_id, None)
         if dst_size is not None:
             dst, size = dst_size
@@ -491,6 +499,12 @@ class Scheduler:
         # snapshot predates the landing, so the charge must not vanish
         # with the in-flight assignment)
         planned_now: Dict[str, int] = {}
+        # quota-aware destinations: per-(tenant, node) live bytes, read
+        # lazily from the store and charged as this scan plans (a landed
+        # sync move may be charged twice -- over-counting only tightens
+        # the cap, never breaches it)
+        tenant_caps: Dict[str, Optional[int]] = {}
+        tenant_on: Dict[Tuple[str, str], int] = {}
         # largest blobs plan first: they have the fewest feasible
         # destinations, and spreading them dominates drain latency
         for oid, ref in sorted(objs.items(), key=lambda kv: -kv[1].size):
@@ -504,16 +518,36 @@ class Scheduler:
             if self.store.refcount(oid) <= 0 and oid not in hot_deps:
                 st.moved.add(oid)    # cold: dropping it costs nothing
                 continue
+            if self.store.move_in_flight(oid) is not None:
+                if any(oid in st2.pending for st2 in self._drains.values()):
+                    # ANOTHER drain's move of this co-held object is in
+                    # flight: its landing covers this drain too --
+                    # aborting it here would ping-pong two drains into
+                    # killing each other's transfers forever
+                    continue
+                # an in-flight store move no drain tracks anymore (its
+                # dispatch failed, or its COMMIT was dropped): resolve it
+                # before re-planning -- the probe promotes a landed push
+                # to a COMMIT, anything else is aborted so a fresh
+                # begin_move can succeed
+                if self.store.abort_move(oid, probe=True):
+                    st.moved.add(oid)
+                    self.stats["migrated_objects"] += 1
+                    continue
             dst = self._plan_destination(st, ref, cands, free, head_ok,
-                                         planned_now, inflight)
+                                         planned_now, inflight,
+                                         tenant_caps, tenant_on)
             if dst is None:
                 st.moved.add(oid)    # no survivor: degrade to drop+lineage
                 continue
             st.pending.add(oid)
             st.planned += 1
             planned_now[dst] = planned_now.get(dst, 0) + ref.size
+            if (ref.tenant, dst) in tenant_on:
+                tenant_on[(ref.tenant, dst)] += ref.size
             st.assigned_bytes[dst] = st.assigned_bytes.get(dst, 0) + ref.size
             st.inflight_to[oid] = (dst, ref.size)
+            st.dispatched_at[oid] = self.clock()
             if self.migrate_fn is not None:
                 self.migrate_fn(worker_id, ref, dst)
             else:
@@ -533,9 +567,13 @@ class Scheduler:
     def _plan_destination(self, st: DrainState, ref: ObjectRef,
                           cands: List[str], free: Dict[str, Optional[int]],
                           head_ok: bool, planned_now: Dict[str, int],
-                          inflight: Dict[str, int]) -> Optional[str]:
+                          inflight: Dict[str, int],
+                          tenant_caps: Dict[str, Optional[int]],
+                          tenant_on: Dict[Tuple[str, str], int]
+                          ) -> Optional[str]:
         """One placement decision of the bandwidth-aware drain planner:
-        least-loaded link among capacity-feasible survivors; head fallback;
+        least-loaded link among capacity-feasible survivors where the
+        owning tenant's per-node quota is not breached; head fallback;
         else the emptiest survivor (least-bad overflow). `free` is already
         net of every drain's in-flight moves; `planned_now` charges this
         scan's own commitments (landed or not) on top; `inflight` is the
@@ -554,7 +592,26 @@ class Scheduler:
             f = free.get(c)
             return f is None or f - planned_now.get(c, 0) >= ref.size
 
-        feasible = [c for c in cands if fits(c)]
+        if ref.tenant not in tenant_caps:
+            quota = self.store.quota_of(ref.tenant)
+            tenant_caps[ref.tenant] = getattr(quota, "max_bytes_per_node",
+                                              None) if quota else None
+        cap = tenant_caps[ref.tenant]
+
+        def tenant_fits(c: str) -> bool:
+            # quota-aware destination: skip survivors where the move would
+            # breach the owning tenant's per-node cap (the tenant is
+            # already memory-rich there); the head fallback and the
+            # last-resort overflow stay exempt -- an operator escape hatch
+            # beats dropping the last copy
+            if cap is None:
+                return True
+            key = (ref.tenant, c)
+            if key not in tenant_on:
+                tenant_on[key] = self.store.tenant_bytes_on(c, ref.tenant)
+            return tenant_on[key] + ref.size <= cap
+
+        feasible = [c for c in cands if fits(c) and tenant_fits(c)]
         if feasible:
             return min(feasible,
                        key=lambda c: (projected_link(c),
@@ -567,6 +624,16 @@ class Scheduler:
                                        else float("inf"))
                                       - planned_now.get(c, 0)))
         return "head" if head_ok else None
+
+    def note_move_dispatched(self, worker_id: str, object_id: str):
+        """Restart a pending move's timeout clock: called when the bytes
+        actually start moving (the source worker picked the directive up,
+        or the head fell back to a relay copy) -- a slow poll or a long
+        relay transfer must not be aborted against a window that started
+        at *plan* time."""
+        st = self._drains.get(worker_id)
+        if st is not None and object_id in st.dispatched_at:
+            st.dispatched_at[object_id] = self.clock()
 
     def note_migrated(self, worker_id: str, ref: ObjectRef):
         """One migration landed (called by the backend's migrate executor)."""
@@ -604,8 +671,12 @@ class Scheduler:
     def check_drains(self, now: Optional[float] = None):
         """Deadline enforcement: preempt (requeue) tasks still running on a
         draining worker past its deadline. Preemption is not a failure --
-        it does not count against max_retries."""
+        it does not count against max_retries. Also sweeps dispatched
+        migrations that never acknowledged within migration_timeout_s:
+        each is aborted probe-first (a push whose ack was lost is promoted
+        to a COMMIT) and the drain re-plans the rest."""
         now = self.clock() if now is None else now
+        self._check_move_timeouts(now)
         preempted = False
         for wid, st in list(self._drains.items()):
             w = self.workers.get(wid)
@@ -627,6 +698,27 @@ class Scheduler:
                 preempted = True
         if preempted:
             self.schedule()
+
+    def _check_move_timeouts(self, now: float):
+        """Abort-and-re-plan sweep for two-phase moves stuck in flight:
+        a source that crashed mid-push, a destination that died pre-ack,
+        or a dropped COMMIT all look the same from here -- no ack. The
+        store-side abort probes the destination first, so the
+        dropped-commit case converges to a COMMIT, not a re-copy."""
+        timeout = self.cfg.migration_timeout_s
+        for wid, st in list(self._drains.items()):
+            expired = [oid for oid, t0 in st.dispatched_at.items()
+                       if now - t0 >= timeout]
+            replan = False
+            for oid in expired:
+                ref = ObjectRef(oid)
+                if self.store.abort_move(oid, probe=True):
+                    self.note_migrated(wid, ref)     # push landed; only
+                else:                                # the ack was lost
+                    self.note_migration_failed(wid, ref)
+                    replan = True
+            if replan:
+                self._dispatch_moves(wid)
 
     def drain_complete(self, worker_id: str) -> bool:
         """True once the worker has no running tasks and every planned
@@ -923,6 +1015,17 @@ class Scheduler:
         self.index.remove(worker_id)
         self._drains.pop(worker_id, None)    # a dying drain is just a failure
         del self.workers[worker_id]
+        # the dead node may be the *destination* of other drains' in-flight
+        # moves (the store already aborted the matching two-phase records):
+        # put those objects back on the planning table immediately instead
+        # of waiting out the migration timeout
+        for wid2, st in list(self._drains.items()):
+            stale = [oid for oid, (dst, _sz) in st.inflight_to.items()
+                     if dst == worker_id]
+            for oid in stale:
+                self.note_migration_failed(wid2, ObjectRef(oid))
+            if stale:
+                self._dispatch_moves(wid2)
         self.schedule()
 
     def _deps_live(self, task: Task) -> bool:

@@ -29,7 +29,13 @@ runtime equivalents implemented here:
     binds (object, source node, requesting worker, tenant, right, expiry),
     so a captured ticket cannot be relabeled for another object, replayed
     by another worker, pointed at another source, or presented after the
-    fetch window closes.
+    fetch window closes. Three rights exist: "get" (pull), "put"
+    (replication push, e.g. the leave handshake), and "migrate" -- the
+    drain-move push right, minted only by the head when it PREPAREs a
+    two-phase worker-to-worker move. A migrate ticket authorizes exactly
+    one source worker to push exactly one object into exactly one
+    destination's blob store; the destination's ack (not the ticket) is
+    what commits the directory's owner handoff.
 """
 from __future__ import annotations
 
@@ -229,10 +235,10 @@ class TransferTicket:
     serving blob server re-verifies under the cluster token: every field
     below is inside the MAC, so none can be swapped after minting."""
     object_id: str
-    src: str              # node that may serve the blob
-    worker_id: str        # node allowed to pull it
+    src: str              # node that may serve the blob (push: the receiver)
+    worker_id: str        # node allowed to pull it (push: the pusher)
     tenant_id: str        # tenant the blob belongs to (ADMIN_TENANT = any)
-    right: str            # "get" (pull) | "put" (push, e.g. migration)
+    right: str            # "get" (pull) | "put" (push) | "migrate" (drain move)
     expires_at: float     # unix time; the fetch window
     mac: str
 
@@ -253,6 +259,21 @@ class TransferTicket:
             object_id, src, worker_id, tenant_id, right, exp,
             TransferTicket._mac(token, object_id, src, worker_id,
                                 tenant_id, right, exp))
+
+    @staticmethod
+    def grant_migrate(token: str, object_id: str, dst: str, src_worker: str,
+                      tenant_id: str = DEFAULT_TENANT,
+                      ttl_s: float = 60.0,
+                      now: Optional[float] = None) -> "TransferTicket":
+        """Drain-move push grant (the two-phase migrate protocol's PREPARE
+        artifact): authorizes `src_worker` -- and only it -- to push
+        `object_id` into `dst`'s blob store under the "migrate" right.
+        The receiving blob server verifies it exactly like a put ticket
+        but with right="migrate", so a replication put ticket cannot be
+        replayed as a drain move (or vice versa)."""
+        return TransferTicket.grant(token, object_id, dst, src_worker,
+                                    tenant_id, "migrate", ttl_s=ttl_s,
+                                    now=now)
 
     def verify(self, token: str, object_id: str, src: str, worker_id: str,
                right: str = "get", object_tenant: str = DEFAULT_TENANT,

@@ -195,14 +195,17 @@ class SimCluster:
     def register_tenant(self, tenant_id: str, weight: float = 1.0,
                         quota_bytes: Optional[int] = None,
                         quota_refs: Optional[int] = None,
-                        on_exceed: str = "reject"):
+                        on_exceed: str = "reject",
+                        quota_bytes_per_node: Optional[int] = None):
         """Tenant admission (SyndeoCluster.register_tenant's sim twin):
         fair-share weight on the scheduler, optional store quota."""
         self.scheduler.register_tenant(tenant_id, weight)
-        if quota_bytes is not None or quota_refs is not None:
+        if (quota_bytes is not None or quota_refs is not None
+                or quota_bytes_per_node is not None):
             self.store.set_quota(tenant_id, TenantQuota(
                 max_bytes=quota_bytes, max_refs=quota_refs,
-                on_exceed=on_exceed))
+                on_exceed=on_exceed,
+                max_bytes_per_node=quota_bytes_per_node))
 
     def fail_worker_at(self, worker_id: str, t: float):
         def fail():
@@ -213,20 +216,48 @@ class SimCluster:
     # -- drain pipeline (graceful retirement with object migration) ------------
 
     def _migrate_object(self, worker_id: str, ref, dst: str):
-        """Scheduler migrate hook: one object moves worker -> survivor after
-        a modeled transfer delay (size / node NIC bandwidth)."""
-        delay = (self.cost.migration_overhead_s
-                 + ref.size / self.cost.migration_bandwidth_Bps)
+        """Scheduler migrate hook: one two-phase object move. PREPARE at
+        dispatch (directory in-flight state, guard-checked), then the
+        modeled transfer, then the copy lands and COMMITs.
+
+        Link model mirrors _fetch_deps: under `data_plane="p2p"` the move
+        is a *direct* worker->survivor push serializing only the two
+        endpoints' NICs (the head's link carries zero migration bytes --
+        what the drain-p2p benchmark asserts); under `"relay"` every move
+        is two hops on the head's serialized NIC and is counted in
+        head_relayed_bytes; None keeps the legacy flat-latency model."""
+        try:
+            prepared = self.store.begin_move(ref, worker_id, dst)
+        except SecurityError:
+            # tenant-scoped guard: this object is not ours to move --
+            # degrade to drop + lineage for it
+            self.scheduler.note_migration_denied(worker_id, ref)
+            return
+        if not prepared:
+            # object gone / already mid-move: re-plan on the next scan
+            self.scheduler.note_migration_failed(worker_id, ref)
+            return
+        if self.cost.data_plane == "p2p":
+            dt = (self.cost.migration_overhead_s + self.cost.link_latency_s
+                  + ref.size / self.cost.migration_bandwidth_Bps)
+            t_src = max(self._nic_free.get(worker_id, 0.0), self.now) + dt
+            t_dst = max(self._nic_free.get(dst, 0.0), self.now) + dt
+            self._nic_free[worker_id] = t_src
+            self._nic_free[dst] = t_dst
+            delay = max(t_src, t_dst) - self.now
+        elif self.cost.data_plane == "relay":
+            dt = 2 * (self.cost.link_latency_s
+                      + ref.size / self.cost.head_bandwidth_Bps)
+            t1 = max(self._head_link_free, self.now) + dt
+            self._head_link_free = t1
+            self.store.stats["head_relayed_bytes"] += ref.size
+            delay = t1 - self.now
+        else:
+            delay = (self.cost.migration_overhead_s
+                     + ref.size / self.cost.migration_bandwidth_Bps)
 
         def land():
-            try:
-                moved = self.store.migrate(ref, worker_id, dst)
-            except SecurityError:
-                # tenant-scoped guard: this object is not ours to move --
-                # degrade to drop + lineage for it
-                self.scheduler.note_migration_denied(worker_id, ref)
-                return
-            if moved:
+            if self.store.complete_move(ref, worker_id, dst):
                 self.scheduler.note_migrated(worker_id, ref)
             else:
                 # destination died or object already settled: re-plan

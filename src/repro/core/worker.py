@@ -36,6 +36,13 @@ replay protection, head TCP port):
                                  relay: task, payload=(fn, args, kwargs,
                                         dep values), tenant, draining
                                  idle:  task=None, draining
+                               a draining p2p worker's reply may carry
+                               migrations=[{ref, size, node, host, port,
+                               ticket}]: direct-push drain directives the
+                               worker executes source -> destination (the
+                               head PREPAREd each move and minted the
+                               migrate-right ticket; no payload byte of
+                               the move ever touches the head)
   result_meta  worker -> head  task, worker, size -- p2p result: the blob
                                stays in the worker's store; the head
                                records (ref, size, location) only
@@ -59,6 +66,21 @@ replay protection, head TCP port):
                                assignment landed (or a dep cache was
                                registered); the directory adds the copy
                                (third-party claims are probed first)
+  migrated     worker -> head  worker (destination), object -- the
+                               result_meta of the migrate protocol: the
+                               destination confirms one direct drain push
+                               landed in its store; the head COMMITs the
+                               owner handoff only now. A late ack whose
+                               move was already aborted (or whose source
+                               died) is probed and, if real, registered
+                               as a recovered replica
+  migrate_failed worker->head  worker (source), object, retryable, err --
+                               the push could not land. Retryable
+                               transport faults degrade to the old
+                               head-relay copy (never to lineage while
+                               the head is healthy); anything else
+                               ABORTs + re-plans toward a fresh
+                               destination/ticket
   drain        operator->head  worker, [deadline_s] -- eviction notice
   drain_status worker -> head  worker -> complete
   stats        any -> head     -> scheduler stats + tenant shares
@@ -126,6 +148,30 @@ def _request(host: str, port: int, token: str, msg: Dict[str, Any],
                        nonce_cache=nonce_cache)
 
 
+def push_with_retry(transport, node_id: str, ref: ObjectRef, blob: bytes,
+                    ticket: Optional[TransferTicket],
+                    retries: int = 1) -> Tuple[Optional[Exception], bool]:
+    """One direct blob push with bounded retry. Transient TCP faults
+    (refused connect, reset, timeout -- OSError family) retry `retries`
+    times; protocol refusals (SecurityError: bad/expired ticket; KeyError:
+    server-side refusal) never do, because retrying cannot fix them.
+    Returns (error, retryable): (None, False) on success; a truthy
+    retryable tells the caller to degrade to the head-relay fallback
+    rather than give the move up to lineage reconstruction."""
+    last: Optional[Exception] = None
+    for _ in range(retries + 1):
+        try:
+            transport.push(node_id, ref, blob, ticket)
+            return None, False
+        except (SecurityError, KeyError) as e:
+            return e, False
+        except OSError as e:
+            last = e
+        except Exception as e:  # noqa: BLE001 -- malformed reply etc.
+            return e, False
+    return last, True
+
+
 class BlobServer:
     """Per-node data-plane server: serves one NodeStore's blobs to peers.
 
@@ -143,11 +189,16 @@ class BlobServer:
     def __init__(self, store: NodeStore, token: str,
                  host: str = "127.0.0.1", port: int = 0,
                  tenant_of: Optional[Callable[[str], Optional[str]]] = None,
-                 on_delete: Optional[Callable[[str], None]] = None):
+                 on_delete: Optional[Callable[[str], None]] = None,
+                 on_migrate: Optional[Callable[[str, str], None]] = None):
         self.store = store
         self.token = token
         self.tenant_of = tenant_of or (lambda oid: None)
         self.on_delete = on_delete
+        # called as on_migrate(object_id, tenant_id) after a put arriving
+        # under a "migrate"-right ticket lands: the destination's hook to
+        # send the head the metadata ack that COMMITs the move
+        self.on_migrate = on_migrate
         self._nonces = NonceCache()
         self.stats = {"serves": 0, "served_bytes": 0,
                       "receives": 0, "rejects": 0}
@@ -186,14 +237,15 @@ class BlobServer:
                                      sock, self.MAX_HEADER_BYTES).decode()),
                                  nonce_cache=self._nonces)
             blob_in = None
+            put_ticket = None
             if header.get("op") == "put":
                 # ticket verified BEFORE the blob frame is read, and the
                 # read is capped at the header's declared size -- a peer
                 # without a valid put ticket cannot make us buffer bytes
-                self._verify(header, "put")
+                put_ticket = self._verify(header, "put")
                 blob_in = recv_frame(
                     sock, max_bytes=int(header.get("size", 0)) + 1024)
-            reply, blob_out = self._dispatch(header, blob_in)
+            reply, blob_out = self._dispatch(header, blob_in, put_ticket)
         except Exception as e:  # noqa: BLE001 -- reply, never crash the server
             self.stats["rejects"] += 1
             reply = {"ok": False, "error": f"{type(e).__name__}: {e}"}
@@ -204,20 +256,27 @@ class BlobServer:
         except OSError:
             pass                       # peer went away mid-reply
 
-    def _verify(self, header: Dict[str, Any], right: str):
+    def _verify(self, header: Dict[str, Any], right: str) -> TransferTicket:
         oid = header.get("object", "")
         ticket_wire = header.get("ticket")
         if not ticket_wire:
             raise SecurityError(f"blob {right} without transfer ticket")
         ticket = TransferTicket.from_wire(ticket_wire)
+        if right == "put" and ticket.right == "migrate":
+            # a drain-move push arrives as a put under the "migrate"
+            # right; the right is inside the MAC, so verifying against
+            # the declared right never widens what the head granted
+            right = "migrate"
         tenant = self.tenant_of(oid)
         ticket.verify(self.token, oid, self.store.node_id,
                       str(header.get("requester", "")), right,
                       object_tenant=tenant if tenant is not None
                       else ticket.tenant_id)
+        return ticket
 
     def _dispatch(self, header: Dict[str, Any],
-                  blob_in: Optional[bytes]
+                  blob_in: Optional[bytes],
+                  put_ticket: Optional[TransferTicket] = None
                   ) -> Tuple[Dict[str, Any], Optional[bytes]]:
         import hashlib
         op = header.get("op")
@@ -241,6 +300,11 @@ class BlobServer:
                 raise SecurityError(f"blob integrity check failed for {oid}")
             self.store.import_blob(ref, blob_in)
             self.stats["receives"] += 1
+            if (put_ticket is not None and put_ticket.right == "migrate"
+                    and self.on_migrate is not None):
+                # destination-side metadata ack: the head COMMITs the
+                # directory's owner handoff only on this signal
+                self.on_migrate(oid, put_ticket.tenant_id)
             return ({"ok": True}, None)
         if op == "has":
             # existence is placement metadata: ticketed like a read, so a
@@ -280,8 +344,14 @@ class HeadServer:
         self.data_plane = data_plane or getattr(cluster, "data_plane", "p2p")
         data_plane = self.data_plane
         self.ticket_ttl_s = ticket_ttl_s
+        # migrate tickets live longer than fetch tickets: the directive
+        # waits for the source's next poll before any byte moves
+        self.migrate_ttl_s = max(ticket_ttl_s, 60.0)
         self._outbox: Dict[str, list] = {}
         self._blob_eps: Dict[str, Tuple[str, int]] = {}
+        # PREPAREd drain-move directives awaiting each source worker's
+        # next poll ({ref, size, node, host, port, ticket} dicts)
+        self._pending_migrations: Dict[str, List[Dict[str, Any]]] = {}
         self.head_payload_bytes = 0
         # bounded seen-nonce set: a captured worker envelope cannot be
         # replayed inside the freshness window (it would need a fresh nonce,
@@ -290,12 +360,21 @@ class HeadServer:
         self._blob_srv: Optional[BlobServer] = None
         if data_plane == "p2p":
             self._blob_srv = BlobServer(cluster._head_node, cluster.token,
-                                        host=host)
-            # drain migrations over RemoteNodeStore proxies are real TCP
-            # transfers: execute them on background threads so begin_drain
-            # (called under the cluster lock by the `drain` op) never
-            # stalls the control plane behind data-plane I/O
-            cluster.scheduler.migrate_fn = self._migrate_async
+                                        host=host,
+                                        on_migrate=self._head_migrate_ack)
+            # drain migrations are peer-to-peer: the head PREPAREs each
+            # move and hands the source worker a push directive; only the
+            # relay fallback (below) still copies through this process
+            cluster.scheduler.migrate_fn = self._migrate_directive
+            # a dead source's queued directives can never be delivered:
+            # drop them with the worker (same wrap style as attach())
+            orig_failed = cluster.scheduler.on_worker_failed
+
+            def on_failed(worker_id, reason="failure"):
+                self._pending_migrations.pop(worker_id, None)
+                orig_failed(worker_id, reason)
+
+            cluster.scheduler.on_worker_failed = on_failed
         head = self
 
         class Handler(socketserver.StreamRequestHandler):
@@ -324,10 +403,41 @@ class HeadServer:
 
     # head-side handling ------------------------------------------------------
 
-    def _migrate_async(self, worker_id: str, ref: ObjectRef, dst: str):
-        """Scheduler migrate hook for the p2p head: one blob move on its
-        own thread (the blocking export/import RPCs run lock-free), with
-        the landing reported back under the cluster lock."""
+    def _migrate_directive(self, worker_id: str, ref: ObjectRef, dst: str):
+        """Scheduler migrate hook for the p2p head: PREPARE the move
+        (directory in-flight state + migrate-right ticket) and queue a
+        push directive for the source worker's next poll. The blob then
+        moves *directly* source -> destination; the destination's
+        `migrated` ack COMMITs; a move that never acks is aborted and
+        re-planned by the scheduler's timeout sweep. Sources without a
+        blob endpoint (relay-joined workers, whose stores live in this
+        process) keep the old head-side copy path."""
+        c = self.cluster
+        dst_ep = self._source_endpoints(dst)
+        if worker_id not in self._blob_eps or dst_ep is None:
+            self._migrate_relay(worker_id, ref, dst)
+            return
+        try:
+            if not c.store.begin_move(ref, worker_id, dst):
+                c.scheduler.note_migration_failed(worker_id, ref)
+                return
+            ticket = c.store.migrate_ticket(ref, worker_id, dst,
+                                            ttl_s=self.migrate_ttl_s)
+        except SecurityError:
+            c.scheduler.note_migration_denied(worker_id, ref)
+            return
+        self._pending_migrations.setdefault(worker_id, []).append({
+            "ref": ref.id, "size": ref.size, "node": dst,
+            "host": dst_ep[0], "port": dst_ep[1],
+            "ticket": ticket.to_wire()})
+
+    def _migrate_relay(self, worker_id: str, ref: ObjectRef, dst: str):
+        """Head-relayed move on a background thread (the blocking
+        export/import RPCs run lock-free): the pre-p2p path, kept for
+        relay-joined workers and as the transient-transport *fallback* --
+        strictly better than lineage reconstruction while the head is
+        healthy. Bytes relayed for remote endpoints are counted against
+        the head's NIC (head_relayed_bytes)."""
         c = self.cluster
 
         def run():
@@ -339,6 +449,10 @@ class HeadServer:
                 return
             except Exception:  # noqa: BLE001 -- e.g. peer unreachable
                 moved = False
+            if moved and (worker_id in self._blob_eps
+                          or dst in self._blob_eps):
+                c.store.stats["head_relayed_bytes"] += \
+                    c.store.size_of(ref) or ref.size
             with c._lock:
                 if moved:
                     c.scheduler.note_migrated(worker_id, ref)
@@ -347,6 +461,19 @@ class HeadServer:
 
         threading.Thread(target=run, daemon=True,
                          name=f"migrate-{ref.id[:8]}").start()
+
+    def _head_migrate_ack(self, oid: str, tenant: str):
+        """on_migrate hook of the head's own blob server: a drain push
+        whose destination is the head store commits here directly (there
+        is no remote worker to send the `migrated` op)."""
+        c = self.cluster
+        mv = c.store.move_in_flight(oid)
+        if mv is None or mv[1] != "head":
+            return
+        src, dst = mv
+        if c.store.commit_move(oid, src, dst):
+            with c._lock:
+                c.scheduler.note_migrated(src, ObjectRef(oid))
 
     def _source_endpoints(self, node_id: str) -> Optional[Tuple[str, int]]:
         if node_id in self._blob_eps:
@@ -441,13 +568,48 @@ class HeadServer:
                 c.scheduler.heartbeat(wid)
                 w = c.scheduler.workers.get(wid)
                 draining = bool(w and w.draining)
+            # PREPAREd drain-move directives ride the poll reply: the
+            # source executes the pushes itself, so the head hands out
+            # metadata only. Popped only for p2p workers (relay workers
+            # never receive directives -- _migrate_directive routes them
+            # to the head-side copy path, and popping here would drop
+            # the batch on a reply path that cannot carry it); the
+            # timeout clock restarts at delivery, so a slow poll does
+            # not burn the push window (dict.pop is atomic; directives
+            # re-queue via the abort/re-plan sweep if the worker dies)
+            p2p = wid in self._blob_eps
+            # popped under the cluster lock: _migrate_directive appends
+            # under it, and an unlocked pop could orphan a directive
+            # appended between the pop and the append's setdefault
+            if p2p:
+                with c._lock:
+                    moves = self._pending_migrations.pop(wid, [])
+            else:
+                moves = []
+            if moves:
+                # directives whose move was aborted/re-planned since they
+                # were queued (timeout sweep, destination death) are
+                # dropped here instead of burning a redundant fat push
+                moves = [m for m in moves
+                         if c.store.move_in_flight(m["ref"])
+                         == (wid, m["node"])]
+            if moves:
+                with c._lock:
+                    for mv in moves:
+                        c.scheduler.note_move_dispatched(wid, mv["ref"])
+
+            def with_moves(reply: Dict[str, Any]) -> Dict[str, Any]:
+                if moves:
+                    reply["migrations"] = moves
+                return reply
+
             box = self._outbox.get(wid, [])
             if not box:
                 # a drained worker with an empty queue may exit: the head
                 # finishes the drain once migrations land and tasks stop
-                return {"ok": True, "task": None, "draining": draining}
+                return with_moves({"ok": True, "task": None,
+                                   "draining": draining})
             tid = box.pop(0)
-            p2p = wid in self._blob_eps
             with c._lock:
                 task = c.scheduler.graph.tasks[tid]
                 tenant = task.spec.tenant_id
@@ -459,14 +621,16 @@ class HeadServer:
                     # head-staging fallback may do a real transfer, and
                     # data-plane I/O must never stall the control plane
                     # (the store has its own lock)
-                    return {"ok": True, "task": tid,
-                            "payload": _enc((task.spec.fn, task.spec.args,
-                                             task.spec.kwargs)),
-                            "deps": self._deps_meta(task, wid, tenant),
-                            "tenant": tenant, "draining": draining}
+                    return with_moves(
+                        {"ok": True, "task": tid,
+                         "payload": _enc((task.spec.fn, task.spec.args,
+                                          task.spec.kwargs)),
+                         "deps": self._deps_meta(task, wid, tenant),
+                         "tenant": tenant, "draining": draining})
                 except Exception as e:  # noqa: BLE001
                     self._fail_task(tid, wid, f"{type(e).__name__}: {e}")
-                    return {"ok": True, "task": None, "draining": draining}
+                    return with_moves({"ok": True, "task": None,
+                                       "draining": draining})
             with c._lock:
                 try:
                     # relay: deps are resolved head-side *as the task's
@@ -574,6 +738,7 @@ class HeadServer:
                     if ok:
                         self._outbox.pop(wid, None)
                         self._blob_eps.pop(wid, None)
+                        self._pending_migrations.pop(wid, None)
                     return {"ok": True, "exit": bool(ok)}
                 if wid not in self._blob_eps:
                     # relay worker whose blobs could not be migrated (e.g.
@@ -612,6 +777,77 @@ class HeadServer:
                 return {"ok": True}
             ok = c.store.confirm_replica(msg["object"], msg["node"])
             return {"ok": ok}
+        if op == "migrated":
+            # destination ack for one direct drain push -- the
+            # result_meta of the migrate protocol. Only now does the head
+            # COMMIT the directory's owner handoff; the commit also
+            # deletes the source's copy (a control-sized `del`, zero
+            # payload through the head).
+            wid, oid = msg["worker"], str(msg["object"])
+            mv = c.store.move_in_flight(oid)
+            if mv is None:
+                # the move was already aborted (timeout sweep) or its
+                # source died mid-drain: a landed push is still a real
+                # copy -- probe before believing (same rule as
+                # third-party `pushed` claims), then wake any tasks the
+                # apparent loss parked
+                if c.store.confirm_replica(oid, wid):
+                    with c._lock:
+                        c.scheduler.graph.object_available(ObjectRef(oid))
+                        c.scheduler.schedule()
+                    return {"ok": True, "committed": False,
+                            "recovered": True}
+                # the object was released mid-move: the landed copy is
+                # garbage -- purge it so it does not squat in the
+                # destination's store with no directory entry to GC it
+                c.store.purge_copy(oid, wid)
+                return {"ok": True, "committed": False}
+            src, dst = mv
+            if wid != dst:
+                # a STALE directive's push landed somewhere the current
+                # (re-planned) move no longer points: register the probed
+                # copy as an ordinary replica so the bytes stay
+                # directory-tracked -- and GC-able on release -- instead
+                # of leaking unrecorded in the old destination's store
+                replica = c.store.confirm_replica(oid, wid)
+                return {"ok": True, "committed": False, "replica": replica}
+            # commit OUTSIDE the cluster lock: it may issue the ticketed
+            # `del` of the source's copy over TCP
+            committed = c.store.commit_move(oid, src, dst)
+            if committed:
+                with c._lock:
+                    c.scheduler.note_migrated(src, ObjectRef(oid))
+            return {"ok": True, "committed": committed}
+        if op == "migrate_failed":
+            # source-side push failure report. Probe-first abort: a push
+            # that landed right before a timed-out reply is promoted to a
+            # COMMIT. A *retryable* transport fault (after the worker's
+            # own bounded retry) degrades to the head-relay copy -- never
+            # to lineage reconstruction while the head is healthy;
+            # anything else re-plans toward a fresh destination + ticket.
+            wid, oid = msg["worker"], str(msg["object"])
+            mv = c.store.move_in_flight(oid)
+            if mv is None or mv[0] != wid:
+                return {"ok": True}
+            src, dst = mv
+            ref = ObjectRef(oid)
+            if c.store.abort_move(oid, probe=True):
+                with c._lock:
+                    c.scheduler.note_migrated(src, ref)
+                return {"ok": True, "committed": True}
+            if msg.get("retryable"):
+                c.store.stats["relay_fallbacks"] += 1
+                with c._lock:
+                    # the relay copy starts NOW: restart the move's
+                    # timeout clock so a long transfer is not aborted
+                    # against a window that began at plan time
+                    c.scheduler.note_move_dispatched(src, oid)
+                self._migrate_relay(src, ref, dst)
+                return {"ok": True, "fallback": "relay"}
+            with c._lock:
+                c.scheduler.note_migration_failed(src, ref)
+                c.scheduler._dispatch_moves(src)
+            return {"ok": True}
         if op == "drain":
             # eviction notice for a remote worker: the outer resource
             # manager (or an operator) asks the head to retire this node
@@ -625,6 +861,10 @@ class HeadServer:
                 complete = c.scheduler.drain_complete(wid)
                 if complete:
                     c.scheduler.finish_drain(wid)
+            if complete:
+                # the worker exits on this reply: nothing will ever poll
+                # its remaining directives out of the queue
+                self._pending_migrations.pop(wid, None)
             return {"ok": True, "worker": wid, "complete": complete}
         if op == "stats":
             with c._lock:
@@ -752,6 +992,58 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     joined = _request(ep.host, ep.port, token, join_msg, nonce_cache=nonces)
     wid = joined["worker"]
     local.node_id = wid            # assigned id names the store (spill files)
+
+    def ack_migration(oid: str, tenant: str):
+        """Destination-side metadata ack (the migrate protocol's
+        result_meta): a drain push just landed in our local store --
+        adopt its tenant and tell the head, which COMMITs the owner
+        handoff. A lost ack is recovered by the head's probe-on-timeout."""
+        tenants[oid] = tenant
+        try:
+            _request(ep.host, ep.port, token,
+                     {"op": "migrated", "worker": wid, "object": oid},
+                     nonce_cache=nonces)
+        except Exception:  # noqa: BLE001 -- head sweep probes + commits
+            pass
+
+    if blob_srv is not None:
+        blob_srv.on_migrate = ack_migration
+
+    def run_migrations(moves: List[Dict[str, Any]]):
+        """Source-side executor for the head's direct-push drain
+        directives: export the local blob and push it straight to the
+        destination peer under the migrate-right ticket (one bounded
+        retry on transient TCP errors). Success is acked by the
+        *destination*; failures are reported so the head can fall back
+        to the relay path (retryable) or ABORT + re-plan. The local copy
+        is kept -- the head deletes it after COMMIT."""
+        for mv in moves:
+            ref = ObjectRef(str(mv["ref"]), int(mv.get("size", 0)))
+            err: Optional[Exception] = None
+            retryable = False
+            try:
+                blob = local.export_blob(ref)
+            except Exception as e:  # noqa: BLE001 -- KeyError (gone) but
+                # also e.g. an unreadable spill file: a failed export must
+                # degrade to a migrate_failed report, never kill a worker
+                # that still holds sole copies of the other drain objects
+                err = e
+            if err is None:
+                transport = TCPTransport(
+                    lambda _n, _ep=(mv["host"], int(mv["port"])): _ep,
+                    token, wid)
+                err, retryable = push_with_retry(
+                    transport, mv["node"], ref, blob,
+                    TransferTicket.from_wire(mv["ticket"]))
+            if err is not None:
+                try:
+                    _request(ep.host, ep.port, token,
+                             {"op": "migrate_failed", "worker": wid,
+                              "object": ref.id, "retryable": retryable,
+                              "err": f"{type(err).__name__}: {err}"},
+                             nonce_cache=nonces)
+                except Exception:  # noqa: BLE001 -- the head's timeout
+                    pass           # sweep aborts + re-plans anyway
 
     def resolve_dep(meta: Dict[str, Any], tid: str) -> Any:
         oid = meta["ref"]
@@ -914,6 +1206,11 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                 time.sleep(0.2)
                 continue
             poll_failures = 0
+            if got.get("migrations"):
+                # drain-move directives ride the poll reply: push the
+                # blobs peer to peer before anything else -- the drain
+                # cannot finish until these land (or fail and re-plan)
+                run_migrations(got["migrations"])
             tid = got.get("task")
             if tid is None:
                 if got.get("draining"):

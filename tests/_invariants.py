@@ -1,0 +1,66 @@
+"""Global invariant checker for the drain/migration chaos harness.
+
+Every chaos scenario -- kill, drain, partition, dropped commit, expired
+ticket, at any point of a two-phase move -- must leave the storage layer
+in a state where ALL of the following hold (see tests/README.md):
+
+  1. directory ⊆ reality: every location the directory lists actually
+     holds the blob (a phantom location would serve as false drain cover
+     and could cost the last real copy),
+  2. exactly-one owner per live ref: an object with any live copy has
+     exactly one owner, and that owner is one of its locations (a move
+     must hand ownership off atomically -- never zero owners, never an
+     owner pointing at a node that dropped its copy),
+  3. in-flight moves are anchored: a PREPAREd move's source still holds
+     the object (an aborted/committed move must not linger),
+  4. fetchable-set preservation (opt-in): everything fetchable before a
+     *graceful* operation is fetchable after it,
+  5. zero hot-producer re-execution (opt-in): drains migrate, they never
+     recompute.
+
+Call it after the dust settles (it snapshots under the store lock but
+probes node stores outside it, so a racing mutation could false-positive).
+"""
+from repro.core import ObjectRef
+
+
+def check_invariants(store, expect_fetchable=None, scheduler=None,
+                     expect_zero_reconstructions=False):
+    """Assert the global storage invariants; returns the directory
+    snapshot ({oid: (locations, owner, refcount)}) for extra checks."""
+    with store._lock:
+        snapshot = {oid: (set(e.locations), e.owner, e.refcount)
+                    for oid, e in store._dir.items()}
+        nodes = dict(store._nodes)
+        moves = {oid: (mv.src, mv.dst) for oid, mv in store._moves.items()}
+
+    for oid, (locs, owner, _rc) in snapshot.items():
+        ref = ObjectRef(oid)
+        for n in locs:
+            node = nodes.get(n)
+            assert node is not None, \
+                f"{oid}: directory lists unregistered node {n}"
+            assert node.has(ref), \
+                f"{oid}: directory lists {n} but its store lacks the blob"
+        if locs:
+            assert owner is not None and owner in locs, \
+                f"{oid}: owner {owner!r} is not among locations {locs}"
+
+    for oid, (src, _dst) in moves.items():
+        assert oid in snapshot, f"in-flight move for released object {oid}"
+        locs, _, _ = snapshot[oid]
+        assert src in locs, \
+            f"in-flight move of {oid}: source {src} no longer holds it"
+
+    if expect_fetchable is not None:
+        fetchable = {oid for oid, (locs, _, _) in snapshot.items() if locs}
+        missing = set(expect_fetchable) - fetchable
+        assert not missing, f"fetchable set not preserved: lost {missing}"
+
+    if expect_zero_reconstructions:
+        assert store.stats["reconstructions"] == 0, \
+            "a graceful operation cost lineage reconstructions"
+        if scheduler is not None:
+            assert scheduler.stats["reconstructed"] == 0, \
+                "a hot producer was re-executed"
+    return snapshot

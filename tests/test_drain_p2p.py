@@ -1,0 +1,784 @@
+"""Direct worker<->worker drain migration: the two-phase move protocol
+(PREPARE / direct push / destination-ack COMMIT / probe-first ABORT +
+re-plan), the migrate-right tickets that authorize it, and the chaos
+conformance scenarios for every fault class on the migration path --
+source kill, destination kill, dropped commit, expired ticket, partition.
+
+The protocol scenarios run over REAL sockets (each fake peer is a live
+BlobServer + NodeStore joined to a real HeadServer); the harness drives
+the control-plane messages one by one so a fault can be injected between
+any two of them. After every scenario the global invariant checker
+(tests/_invariants.py, documented in tests/README.md) must pass and the
+head's control socket must have carried zero payload bytes."""
+import pickle
+import socket
+import threading
+import time
+
+import pytest
+
+from _invariants import check_invariants
+from repro.core import (GlobalObjectStore, NodeStore, ObjectRef, Scheduler,
+                        SchedulerConfig, SecurityError, SimCluster,
+                        SimCostModel, SyndeoCluster, TCPTransport,
+                        TenantQuota, TransferTicket, WorkerInfo)
+from repro.core.rendezvous import FileRendezvous
+from repro.core.security import mint_cluster_token
+from repro.core.task_graph import TaskState
+from repro.core.worker import (BlobServer, HeadServer, push_with_retry,
+                               run_worker)
+
+TOKEN = mint_cluster_token()
+
+
+# ------------------------------------------------ two-phase move state machine
+
+
+def _store_with(*nodes):
+    g = GlobalObjectStore()
+    for n in nodes:
+        g.register_node(NodeStore(n, capacity_bytes=1 << 30))
+    return g
+
+
+def test_begin_commit_hands_off_owner():
+    g = _store_with("head", "w0", "w1")
+    ref = g.put("w0", {"v": 1})
+    assert g.begin_move(ref, "w0", "w1")
+    # PREPARE changes nothing visible: src still owns and serves
+    assert g.move_in_flight(ref) == ("w0", "w1")
+    assert g.locations(ref) == {"w0"} and g.owner_of(ref) == "w0"
+    check_invariants(g)
+    # the push lands (out of band), then the destination ack commits
+    g._nodes["w1"].import_blob(ref, g._nodes["w0"].export_blob(ref))
+    assert g.commit_move(ref, "w0", "w1")
+    assert g.locations(ref) == {"w1"} and g.owner_of(ref) == "w1"
+    assert not g._nodes["w0"].has(ref)         # source copy deleted
+    assert g.move_in_flight(ref) is None
+    assert g.stats["moves_committed"] == 1
+    check_invariants(g)
+
+
+def test_begin_move_refuses_double_prepare_and_stale_args():
+    g = _store_with("head", "w0", "w1")
+    ref = g.put("w0", b"x")
+    assert not g.begin_move(ref, "w1", "w0")         # src holds nothing
+    assert not g.begin_move(ref, "w0", "nope")       # unknown destination
+    assert g.begin_move(ref, "w0", "w1")
+    assert not g.begin_move(ref, "w0", "head")       # already mid-move
+    # commit must name the exact prepared (src, dst)
+    assert not g.commit_move(ref, "w0", "head")
+    assert g.move_in_flight(ref) == ("w0", "w1")
+
+
+def test_abort_probe_promotes_landed_push_to_commit():
+    """Dropped COMMIT: the push landed but the ack was lost -- the abort
+    probe finds the blob at the destination and commits instead of
+    re-copying (zero wasted bytes, no duplicated ownership)."""
+    g = _store_with("head", "w0", "w1")
+    ref = g.put("w0", bytearray(1000))
+    assert g.begin_move(ref, "w0", "w1")
+    g._nodes["w1"].import_blob(ref, g._nodes["w0"].export_blob(ref))
+    assert g.abort_move(ref, probe=True) is True     # promoted to COMMIT
+    assert g.locations(ref) == {"w1"} and g.owner_of(ref) == "w1"
+    assert g.stats["moves_committed"] == 1
+    assert g.stats["moves_aborted"] == 0
+    check_invariants(g)
+
+
+def test_abort_without_landed_push_strands_nothing():
+    g = _store_with("head", "w0", "w1")
+    ref = g.put("w0", b"y" * 100)
+    assert g.begin_move(ref, "w0", "w1")
+    assert g.abort_move(ref, probe=True) is False
+    # the directory never changed: src still owns, and a fresh PREPARE works
+    assert g.locations(ref) == {"w0"} and g.owner_of(ref) == "w0"
+    assert g.stats["moves_aborted"] == 1
+    assert g.begin_move(ref, "w0", "w1")
+    check_invariants(g)
+
+
+def test_release_mid_move_drops_pushed_copy():
+    """An object released while its move is in flight must not strand the
+    pushed bytes at the destination."""
+    g = _store_with("head", "w0", "w1")
+    ref = g.put("w0", b"z" * 500)
+    assert g.begin_move(ref, "w0", "w1")
+    g._nodes["w1"].import_blob(ref, g._nodes["w0"].export_blob(ref))
+    g.release(ref)                                   # refcount 1 -> 0
+    assert g.move_in_flight(ref) is None
+    assert not g._nodes["w1"].has(ref)
+    assert not g.commit_move(ref, "w0", "w1")        # late ack: no-op
+    check_invariants(g)
+
+
+def test_node_death_aborts_involving_moves():
+    g = _store_with("head", "w0", "w1", "w2")
+    a = g.put("w0", b"a")
+    b = g.put("w1", b"b")
+    assert g.begin_move(a, "w0", "w2")               # w0 is a source
+    assert g.begin_move(b, "w1", "w0")               # w0 is a destination
+    g.unregister_node("w0")
+    assert g.move_in_flight(a) is None
+    assert g.move_in_flight(b) is None
+    # b is untouched (its source survives); a lost its only copy
+    assert g.locations(b) == {"w1"} and g.owner_of(b) == "w1"
+    assert g.locations(a) == set()
+    check_invariants(g)
+
+
+def test_commit_move_with_unregistered_destination_returns_false():
+    """Regression (review): a COMMIT whose destination store vanished
+    must report failure cleanly -- directory untouched, source copy
+    kept -- not crash."""
+    g = _store_with("head", "w0", "w1")
+    ref = g.put("w0", b"q" * 200)
+    assert g.begin_move(ref, "w0", "w1")
+    # the destination unregisters out from under the move, but the move
+    # record is re-created (simulating a commit racing the unregister)
+    with g._lock:
+        del g._nodes["w1"]
+    assert g.commit_move(ref, "w0", "w1") is False
+    assert g.locations(ref) == {"w0"} and g.owner_of(ref) == "w0"
+    assert g._nodes["w0"].has(ref)
+
+
+def test_coheld_object_under_two_drains_moves_once():
+    """Regression (review): two draining workers co-holding an object
+    must not abort each other's in-flight move -- the object lands on
+    the survivor without transfer ping-pong."""
+    cost = SimCostModel(task_time_s=lambda s: 0.01, jitter=0.0,
+                        data_plane="p2p", result_location="worker",
+                        migration_bandwidth_Bps=1.0e6)   # slow: wide window
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    w0, w1, w2 = sim.add_workers(3)
+    ref = sim.store.put(w0, bytearray(500_000))          # ~0.5s per move
+    sim.store.get(w1, ref)                               # co-held: w0 + w1
+    assert sim.store.locations(ref) == {w0, w1}
+    sim.drain_worker_at(w0, 0.0)
+    sim.drain_worker_at(w1, 0.0)
+    sim.run()
+    assert w0 not in sim.scheduler.workers
+    assert w1 not in sim.scheduler.workers
+    locs = sim.store.locations(ref)
+    assert locs and locs <= {w2, "head"}
+    assert sim.store.stats["moves_aborted"] == 0         # no ping-pong
+    check_invariants(sim.store, expect_fetchable={ref.id},
+                     scheduler=sim.scheduler,
+                     expect_zero_reconstructions=True)
+
+
+def test_complete_move_is_begin_plus_commit():
+    """The in-process path (sim / threaded backends / relay fallback)."""
+    g = _store_with("head", "w0", "w1")
+    ref = g.put("w0", {"k": [1, 2, 3]})
+    assert g.begin_move(ref, "w0", "w1")
+    assert g.complete_move(ref, "w0", "w1")
+    assert g.locations(ref) == {"w1"} and g.owner_of(ref) == "w1"
+    assert g.get("head", ref) == {"k": [1, 2, 3]}
+    check_invariants(g)
+
+
+# ------------------------------------------------- migrate-right ticket wire
+
+
+def test_migrate_ticket_bindings():
+    t = TransferTicket.grant_migrate(TOKEN, "obj1", "dstW", "srcW", "alice",
+                                     ttl_s=30.0)
+    assert t.right == "migrate"
+    t.verify(TOKEN, "obj1", "dstW", "srcW", "migrate",
+             object_tenant="alice")
+    with pytest.raises(SecurityError):
+        t.verify(TOKEN, "obj1", "dstW", "srcW", "put")   # not a put grant
+    with pytest.raises(SecurityError):
+        t.verify(TOKEN, "obj1", "dstW", "evil", "migrate")  # other pusher
+    with pytest.raises(SecurityError):
+        t.verify(TOKEN, "obj1", "other", "srcW", "migrate")  # other dest
+
+
+def test_blob_server_accepts_migrate_push_and_fires_ack(tmp_path):
+    """Wire-level: a put under a migrate-right ticket is admitted, adopts
+    the ticket's tenant, and fires the destination's on_migrate ack; a
+    get-right ticket presented for a push is refused."""
+    store = NodeStore("dstW", spill_dir=str(tmp_path))
+    acks = []
+    srv = BlobServer(store, TOKEN,
+                     on_migrate=lambda oid, tenant: acks.append((oid,
+                                                                 tenant)))
+    try:
+        transport = TCPTransport(lambda _n: srv.endpoint, TOKEN, "srcW")
+        ref = ObjectRef("objm")
+        blob = pickle.dumps({"fat": 1})
+        wrong = TransferTicket.grant(TOKEN, "objm", "dstW", "srcW",
+                                     "alice", "get", ttl_s=30)
+        with pytest.raises(SecurityError):
+            transport.push("dstW", ref, blob, wrong)
+        assert acks == []
+        good = TransferTicket.grant_migrate(TOKEN, "objm", "dstW", "srcW",
+                                            "alice", ttl_s=30)
+        transport.push("dstW", ref, blob, good)
+        assert store.has(ref)
+        assert acks == [("objm", "alice")]
+        # a plain replication put (right "put") does NOT fire the ack
+        put = TransferTicket.grant(TOKEN, "objp", "dstW", "srcW",
+                                   "alice", "put", ttl_s=30)
+        transport.push("dstW", ObjectRef("objp"), blob, put)
+        assert acks == [("objm", "alice")]
+    finally:
+        srv.shutdown()
+
+
+# ------------------------------------------ transient-transport retry/fallback
+
+
+class _FlakyTransport:
+    """Transport fake: raises the scripted exceptions, then succeeds."""
+
+    def __init__(self, failures):
+        self.failures = list(failures)
+        self.calls = 0
+
+    def push(self, node_id, ref, blob, ticket=None):
+        self.calls += 1
+        if self.failures:
+            raise self.failures.pop(0)
+
+
+def test_push_with_retry_flaky_transport():
+    # one transient fault: retried once, succeeds, no error surfaced
+    t = _FlakyTransport([ConnectionResetError("reset")])
+    err, retryable = push_with_retry(t, "d", ObjectRef("o"), b"b", None)
+    assert err is None and not retryable and t.calls == 2
+    # persistent transport fault: surfaced as retryable (head falls back
+    # to the relay path, never to lineage)
+    t = _FlakyTransport([socket.timeout("t"), ConnectionRefusedError("r")])
+    err, retryable = push_with_retry(t, "d", ObjectRef("o"), b"b", None)
+    assert isinstance(err, OSError) and retryable and t.calls == 2
+    # protocol refusal (bad/expired ticket): no retry, not retryable
+    t = _FlakyTransport([SecurityError("expired")])
+    err, retryable = push_with_retry(t, "d", ObjectRef("o"), b"b", None)
+    assert isinstance(err, SecurityError) and not retryable and t.calls == 1
+
+
+# ---------------------------------------------- quota-aware drain destinations
+
+
+def test_drain_planner_skips_quota_pinched_survivor():
+    """A move must not land where the owning tenant is already memory-rich:
+    the survivor breaching TenantQuota.max_bytes_per_node is skipped even
+    though it would win on link load / join order."""
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(enable_speculation=False))
+    moves = []
+    sched.migrate_fn = lambda w, ref, dst: moves.append((ref.id, dst))
+    store.register_node(NodeStore("head", capacity_bytes=1 << 30))
+    for n in ("v", "s1", "s2"):
+        store.register_node(NodeStore(n, capacity_bytes=1 << 30))
+        sched.add_worker(WorkerInfo(n, {"cpu": 1.0}))
+    store.set_quota("t", TenantQuota(max_bytes_per_node=100_000))
+    store.put("s1", b"x" * 90_000, tenant="t")       # memory-rich on s1
+    ref = store.put("v", b"y" * 50_000, tenant="t")
+    assert sched.begin_drain("v")
+    assert moves == [(ref.id, "s2")]
+    # without the pinch the planner would have taken s1 (earlier join)
+    moves2 = []
+    sched2 = Scheduler(store2 := GlobalObjectStore(), lambda t, w: None,
+                       config=SchedulerConfig(enable_speculation=False))
+    sched2.migrate_fn = lambda w, ref, dst: moves2.append((ref.id, dst))
+    store2.register_node(NodeStore("head", capacity_bytes=1 << 30))
+    for n in ("v", "s1", "s2"):
+        store2.register_node(NodeStore(n, capacity_bytes=1 << 30))
+        sched2.add_worker(WorkerInfo(n, {"cpu": 1.0}))
+    store2.put("s1", b"x" * 90_000, tenant="t")
+    r2 = store2.put("v", b"y" * 50_000, tenant="t")
+    assert sched2.begin_drain("v")
+    assert moves2 == [(r2.id, "s1")]
+
+
+def test_quota_pinched_everywhere_still_overflows_to_head():
+    """When every survivor breaches the tenant's per-node cap, the head
+    fallback still takes the move -- dropping the last copy is worse."""
+    store = GlobalObjectStore()
+    sched = Scheduler(store, lambda t, w: None,
+                      config=SchedulerConfig(enable_speculation=False))
+    moves = []
+    sched.migrate_fn = lambda w, ref, dst: moves.append((ref.id, dst))
+    store.register_node(NodeStore("head", capacity_bytes=1 << 30))
+    for n in ("v", "s1"):
+        store.register_node(NodeStore(n, capacity_bytes=1 << 30))
+        sched.add_worker(WorkerInfo(n, {"cpu": 1.0}))
+    store.set_quota("t", TenantQuota(max_bytes_per_node=10_000))
+    store.put("s1", b"x" * 9_000, tenant="t")
+    ref = store.put("v", b"y" * 5_000, tenant="t")
+    assert sched.begin_drain("v")
+    assert moves == [(ref.id, "head")]
+
+
+# ------------------------------------------------------- replica GC hints
+
+
+def test_client_read_replicas_released_on_refcount_drop():
+    """Regression (ROADMAP "Remaining"): head copies materialized by
+    client reads are GCed once the refcount drops -- the head store
+    footprint returns to baseline after a read burst."""
+    g = _store_with("head", "w0")
+    baseline = g._nodes["head"].used_bytes
+    refs = [g.put("w0", bytes(10_000)) for _ in range(5)]
+    for r in refs:
+        g.add_ref(r)                       # a consumer still holds it
+        assert g.get("head", r) is not None    # the client read burst
+        g.mark_client_read(r)
+    assert g._nodes["head"].used_bytes > baseline
+    for r in refs:
+        g.release(r)                       # refcount 2 -> 1: still alive
+    assert g._nodes["head"].used_bytes == baseline
+    assert g.stats["replica_gc"] == 5
+    for r in refs:
+        assert g.locations(r) == {"w0"} and g.owner_of(r) == "w0"
+        assert g.refcount(r) == 1
+        assert g.get("head", r) is not None    # still fetchable (re-stages)
+    check_invariants(g)
+
+
+def test_owner_copy_on_head_is_never_gced():
+    g = _store_with("head", "w0")
+    ref = g.put("head", bytes(1000))       # the head IS the owner
+    g.add_ref(ref)
+    g.mark_client_read(ref)                # hint refused: owner copy
+    g.release(ref)
+    assert g.locations(ref) == {"head"}
+    assert g.stats["replica_gc"] == 0
+
+
+def test_cluster_get_marks_client_reads():
+    def produce():
+        return bytes(5000)
+
+    with SyndeoCluster() as cluster:
+        cluster.add_worker()
+        t = cluster.submit(produce)
+        assert cluster.get(t, timeout=30) is not None
+        ref = cluster.scheduler.graph.tasks[t.id].output
+        assert ref.id in cluster.store._client_reads
+
+
+# ------------------------------------------------- sim: drain plane modeling
+
+
+def _p2p_sim(migration_timeout_s=10.0, seed=0):
+    cost = SimCostModel(task_time_s=lambda s: 0.01, jitter=0.0,
+                        data_plane="p2p", result_location="worker")
+    return SimCluster(cost, SchedulerConfig(
+        enable_speculation=False, heartbeat_timeout=1e9,
+        migration_timeout_s=migration_timeout_s), seed=seed)
+
+
+def test_sim_p2p_drain_moves_zero_head_bytes():
+    sim = _p2p_sim()
+    victim = sim.add_workers(1)[0]
+    sim.add_workers(2)
+    refs = [sim.store.put(victim, bytearray(100_000)) for _ in range(4)]
+    sim.drain_worker_at(victim, 0.0)
+    sim.run()
+    assert victim not in sim.scheduler.workers
+    assert sim.store.stats["head_relayed_bytes"] == 0
+    check_invariants(sim.store, expect_fetchable={r.id for r in refs},
+                     scheduler=sim.scheduler,
+                     expect_zero_reconstructions=True)
+
+
+def test_sim_dropped_commit_recovered_by_probe():
+    """Chaos: the copy lands but the COMMIT is dropped. The re-plan scan
+    probes the destination, finds the blob, and promotes the move to a
+    COMMIT -- no re-copy, no lost object, no duplicate ownership."""
+    sim = _p2p_sim(migration_timeout_s=0.5)
+    victim = sim.add_workers(1)[0]
+    survivors = sim.add_workers(2)
+    ref = sim.store.put(victim, bytearray(50_000))
+    orig_complete = sim.store.complete_move
+    state = {"dropped": False}
+
+    def lossy_complete(r, src, dst):
+        if not state["dropped"]:
+            state["dropped"] = True
+            # the push lands at dst but the COMMIT never happens
+            blob = sim.store._nodes[src].export_blob(r)
+            sim.store._nodes[dst].import_blob(r, blob)
+            return False
+        return orig_complete(r, src, dst)
+
+    sim.store.complete_move = lossy_complete
+    sim.drain_worker_at(victim, 0.0)
+    sim.run()
+    assert state["dropped"]
+    assert victim not in sim.scheduler.workers
+    locs = sim.store.locations(ref)
+    assert locs and locs <= set(survivors) | {"head"}
+    assert sim.store.owner_of(ref) in locs
+    assert sim.store.stats["moves_committed"] == 1   # probe-commit, no redo
+    check_invariants(sim.store, expect_fetchable={ref.id},
+                     scheduler=sim.scheduler,
+                     expect_zero_reconstructions=True)
+
+
+def test_sim_destination_death_mid_move_replans():
+    """Chaos: the destination dies while the push is in flight -- the
+    move aborts and the object re-plans onto a live survivor."""
+    cost = SimCostModel(task_time_s=lambda s: 0.01, jitter=0.0,
+                        data_plane="p2p", result_location="worker",
+                        migration_bandwidth_Bps=1.0e6)    # slow: wide window
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    victim = sim.add_workers(1)[0]
+    s1, s2 = sim.add_workers(2)
+    ref = sim.store.put(victim, bytearray(1_000_000))     # ~1s transfer
+    sim.drain_worker_at(victim, 0.0)
+    # the planner picks the first survivor; kill it mid-transfer
+    sim.fail_worker_at(s1, 0.3)
+    sim.run()
+    assert victim not in sim.scheduler.workers
+    locs = sim.store.locations(ref)
+    assert locs and locs <= {s2, "head"}
+    check_invariants(sim.store, expect_fetchable={ref.id},
+                     scheduler=sim.scheduler,
+                     expect_zero_reconstructions=True)
+
+
+# ----------------------------------- TCP protocol conformance (real sockets)
+
+
+class _Peer:
+    """A controllable p2p worker: a REAL NodeStore + BlobServer joined to
+    a real HeadServer over the join op. Tests drive the migrate protocol
+    message by message (poll, push, ack, failure report) so a fault can
+    be injected between any two steps."""
+
+    def __init__(self, cluster, server, name):
+        self.cluster, self.server, self.name = cluster, server, name
+        self.tenants = {}
+        self.store = NodeStore(name, capacity_bytes=1 << 30)
+        self.srv = BlobServer(self.store, cluster.token,
+                              tenant_of=self.tenants.get,
+                              on_delete=self.tenants.pop)
+        joined = server.dispatch({"op": "join", "worker": name,
+                                  "resources": {"cpu": 1.0},
+                                  "blob_host": self.srv.host,
+                                  "blob_port": self.srv.port})
+        assert joined["ok"] and joined["data_plane"] == "p2p"
+
+    def auto_ack(self):
+        """Wire the destination-side ack (what run_worker does)."""
+        def ack(oid, tenant):
+            self.tenants[oid] = tenant
+            self.server.dispatch({"op": "migrated", "worker": self.name,
+                                  "object": oid})
+        self.srv.on_migrate = ack
+
+    def add_blob(self, payload, oid: str):
+        ref = ObjectRef(oid)
+        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        self.store.put_blob(ref, blob)
+        rec, _ = self.cluster.store.record(self.name, len(blob),
+                                           ref_id=oid)
+        return rec
+
+    def poll(self):
+        return self.server.dispatch({"op": "poll", "worker": self.name})
+
+    def run_directives(self, moves, endpoint_override=None):
+        """Source-side executor mirroring run_worker.run_migrations."""
+        for mv in moves:
+            ref = ObjectRef(str(mv["ref"]), int(mv.get("size", 0)))
+            err, retryable = None, False
+            try:
+                blob = self.store.export_blob(ref)
+            except KeyError as e:
+                err = e
+            if err is None:
+                ep = endpoint_override or (mv["host"], int(mv["port"]))
+                transport = TCPTransport(lambda _n, _ep=ep: _ep,
+                                         self.cluster.token, self.name,
+                                         timeout=2.0)
+                err, retryable = push_with_retry(
+                    transport, mv["node"], ref, blob,
+                    TransferTicket.from_wire(mv["ticket"]))
+            if err is not None:
+                self.server.dispatch(
+                    {"op": "migrate_failed", "worker": self.name,
+                     "object": ref.id, "retryable": retryable,
+                     "err": f"{type(err).__name__}: {err}"})
+
+    def shutdown(self):
+        self.srv.shutdown()
+
+
+@pytest.fixture()
+def proto(tmp_path):
+    """A real head + three controllable peers; src holds one fat object."""
+    cluster = SyndeoCluster(
+        rendezvous=FileRendezvous(str(tmp_path)),
+        scheduler_config=SchedulerConfig(enable_speculation=False,
+                                         migration_timeout_s=0.4))
+    server = HeadServer(cluster)
+    server.attach()
+    peers = {name: _Peer(cluster, server, name)
+             for name in ("tcp-src", "tcp-d1", "tcp-d2")}
+    ref = peers["tcp-src"].add_blob(b"\xab" * 64_000, "obj-fat")
+    yield cluster, server, peers, ref
+    for p in peers.values():
+        p.shutdown()
+    server.shutdown()
+    cluster.shutdown()
+
+
+def _finish_drain(cluster, server, wid, timeout=10.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        reply = server.dispatch({"op": "drain_status", "worker": wid})
+        if reply.get("complete"):
+            return True
+        time.sleep(0.02)
+    return False
+
+
+def _assert_clean(cluster, server, ref, expect_on=None):
+    check_invariants(cluster.store, expect_fetchable={ref.id},
+                     scheduler=cluster.scheduler,
+                     expect_zero_reconstructions=True)
+    assert server.head_payload_bytes == 0
+    if expect_on is not None:
+        locs = cluster.store.locations(ref)
+        assert locs and locs <= expect_on, locs
+        assert cluster.store.owner_of(ref) in locs
+
+
+def test_proto_happy_path_direct_push_commits(proto):
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    for p in peers.values():
+        p.auto_ack()
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    got = src.poll()
+    moves = got.get("migrations", [])
+    assert len(moves) == 1 and moves[0]["ref"] == ref.id
+    dst = moves[0]["node"]
+    assert dst in ("tcp-d1", "tcp-d2")
+    src.run_directives(moves)                  # push -> dest acks -> COMMIT
+    assert _finish_drain(cluster, server, src.name)
+    assert src.name not in cluster.scheduler.workers
+    _assert_clean(cluster, server, ref, expect_on={dst})
+    assert not src.store.has(ObjectRef(ref.id))    # source copy deleted
+    assert cluster.store.stats["head_relayed_bytes"] == 0
+    assert cluster.store.stats["relay_fallbacks"] == 0
+    # destination actually serves the bytes
+    assert cluster.store.get("head", ref) is not None
+
+
+def test_proto_source_killed_before_push_loses_gracefully(proto):
+    """Fault class: source kill. The move aborts with the node; nothing
+    is stranded, ownership is not duplicated, and the directory honestly
+    reports the object unfetchable (lineage's job from here)."""
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    assert src.poll().get("migrations")        # directive issued...
+    with cluster._lock:                        # ...but the source dies
+        cluster.scheduler.on_worker_failed(src.name, reason="injected")
+    assert cluster.store.move_in_flight(ref.id) is None
+    assert cluster.store.locations(ref) == set()
+    check_invariants(cluster.store)
+    assert server.head_payload_bytes == 0
+
+
+def test_proto_source_killed_after_push_recovers_copy(proto):
+    """Fault class: source kill, but the push had already landed -- the
+    destination's late ack is probed and registers the surviving copy
+    (no lineage re-execution needed)."""
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    moves = src.poll().get("migrations", [])
+    assert moves
+    dst = moves[0]["node"]
+    src.run_directives(moves)                  # push lands (no auto_ack)
+    with cluster._lock:                        # source dies pre-ack
+        cluster.scheduler.on_worker_failed(src.name, reason="injected")
+    assert cluster.store.locations(ref) == set()
+    # the destination worker finally sends its ack (late)
+    reply = server.dispatch({"op": "migrated", "worker": dst,
+                             "object": ref.id})
+    assert reply["ok"] and reply.get("recovered")
+    _assert_clean(cluster, server, ref, expect_on={dst})
+
+
+def test_proto_destination_killed_pre_ack_replans(proto):
+    """Fault class: destination kill. The push landed but the destination
+    dies before acking -- the head aborts with the node and immediately
+    re-plans onto the other survivor."""
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    moves = src.poll().get("migrations", [])
+    assert moves
+    first = moves[0]["node"]
+    src.run_directives(moves)                  # push lands, ack withheld
+    with cluster._lock:
+        cluster.scheduler.on_worker_failed(first, reason="injected")
+    other = next(n for n in ("tcp-d1", "tcp-d2") if n != first)
+    peers[other].auto_ack()
+    moves2 = src.poll().get("migrations", [])
+    assert moves2 and moves2[0]["node"] == other    # re-planned directive
+    src.run_directives(moves2)
+    assert _finish_drain(cluster, server, src.name)
+    _assert_clean(cluster, server, ref, expect_on={other})
+
+
+def test_proto_dropped_commit_probed_into_commit(proto):
+    """Fault class: dropped COMMIT. The push landed, the ack vanished --
+    the migration-timeout sweep probes the destination and promotes the
+    move to a COMMIT without moving a single byte again."""
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    moves = src.poll().get("migrations", [])
+    assert moves
+    dst = moves[0]["node"]
+    src.run_directives(moves)                  # push lands; ack dropped
+    receives = peers[dst].srv.stats["receives"]
+    time.sleep(0.5)                            # > migration_timeout_s
+    cluster.health_check()                     # sweep: probe + COMMIT
+    assert _finish_drain(cluster, server, src.name)
+    _assert_clean(cluster, server, ref, expect_on={dst})
+    assert peers[dst].srv.stats["receives"] == receives    # no re-push
+    assert cluster.store.stats["moves_committed"] >= 1
+
+
+def test_proto_expired_ticket_replans_with_fresh_grant(proto):
+    """Fault class: the migrate ticket expires mid-transfer. The
+    destination refuses the push at the wire; the source's failure
+    report ABORTs and the re-plan mints a fresh ticket that works."""
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    server.migrate_ttl_s = -1.0                # mint already-expired
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    moves = src.poll().get("migrations", [])
+    assert moves
+    for p in peers.values():
+        p.auto_ack()
+    src.run_directives(moves)                  # push refused: SecurityError
+    assert cluster.store.locations(ref) == {src.name}   # nothing moved
+    server.migrate_ttl_s = 60.0
+    # the failure report already re-planned -- drive the poll/push/report
+    # loop like a real worker until a fresh-TTL mint lands the move
+    done = False
+    for _ in range(5):
+        moves2 = src.poll().get("migrations", [])
+        if moves2:
+            src.run_directives(moves2)
+        if _finish_drain(cluster, server, src.name, timeout=1.0):
+            done = True
+            break
+    assert done, "expired-ticket re-plan never converged"
+    dst_locs = cluster.store.locations(ref)
+    _assert_clean(cluster, server, ref, expect_on=dst_locs)
+    assert dst_locs <= {"tcp-d1", "tcp-d2"}
+    assert cluster.store.stats["relay_fallbacks"] == 0
+
+
+def test_proto_partition_degrades_to_relay_not_lineage(proto):
+    """Fault class: partition. The source cannot reach the destination
+    (retries exhausted) while the head can reach both -- the move
+    degrades to the old head-relay copy, never to lineage."""
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    moves = src.poll().get("migrations", [])
+    assert moves
+    dst = moves[0]["node"]
+    # black-hole the src->dst path: push goes to a dead endpoint
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        dead = s.getsockname()                 # bound, never accepting
+        src.run_directives(moves, endpoint_override=dead)
+    assert cluster.store.stats["relay_fallbacks"] == 1
+    deadline = time.time() + 10
+    while time.time() < deadline:              # relay thread lands the move
+        if dst in cluster.store.locations(ref):
+            break
+        time.sleep(0.02)
+    assert _finish_drain(cluster, server, src.name)
+    _assert_clean(cluster, server, ref, expect_on={dst})
+    assert cluster.store.stats["head_relayed_bytes"] > 0   # the price paid
+    assert cluster.store.stats["reconstructions"] == 0     # never lineage
+
+
+# ------------------------------------- full-stack 3-worker integration (TCP)
+
+
+def _fat(i):
+    return bytes([i % 256]) * 150_000
+
+
+def test_three_worker_p2p_drain_zero_head_bytes(tmp_path):
+    """Acceptance: drain of fat objects over real sockets with real
+    workers driving the whole protocol themselves -- completes with
+    head_payload_bytes == 0, zero head-relayed drain bytes, and the
+    invariant checker passing."""
+    cluster = SyndeoCluster(rendezvous=FileRendezvous(str(tmp_path)))
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        for i in range(3):
+            threading.Thread(
+                target=run_worker,
+                args=(str(tmp_path), cluster.cluster_id, f"tcp-w{i}"),
+                kwargs={"max_idle_s": 60.0}, daemon=True).start()
+        deadline = time.time() + 20
+        while time.time() < deadline and sum(
+                1 for w in cluster.scheduler.workers.values()
+                if w.alive) < 3:
+            time.sleep(0.05)
+        tasks = [cluster.submit(_fat, i) for i in range(4)]
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            with cluster._lock:
+                states = {cluster.scheduler.graph.tasks[t.id].state
+                          for t in tasks}
+            if states == {TaskState.FINISHED}:
+                break
+            time.sleep(0.05)
+        assert states == {TaskState.FINISHED}
+        refs = [cluster.scheduler.graph.tasks[t.id].output for t in tasks]
+        holders = {n for r in refs for n in cluster.store.locations(r)}
+        assert holders and "head" not in holders
+        victim = sorted(holders)[0]
+        pre_fetchable = {r.id for r in refs}
+        assert server.dispatch({"op": "drain", "worker": victim})["ok"]
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            with cluster._lock:
+                gone = victim not in cluster.scheduler.workers
+            if gone:
+                break
+            cluster.health_check()
+            time.sleep(0.05)
+        assert victim not in cluster.scheduler.workers, "drain stuck"
+        # the tentpole claim: zero payload bytes through the head, for
+        # the tasks AND the drain
+        assert server.head_payload_bytes == 0
+        assert cluster.store.stats["head_relayed_bytes"] == 0
+        assert cluster.store.stats["relay_fallbacks"] == 0
+        check_invariants(cluster.store, expect_fetchable=pre_fetchable,
+                         scheduler=cluster.scheduler,
+                         expect_zero_reconstructions=True)
+        for r in refs:
+            locs = cluster.store.locations(r)
+            assert locs and victim not in locs
+        # values survived the drain byte-for-byte
+        assert [cluster.get(r) for r in refs] == [_fat(i)
+                                                  for i in range(4)]
+    finally:
+        server.shutdown()
+        cluster.shutdown()

@@ -24,6 +24,7 @@ try:
 except ImportError:  # pragma: no cover -- bare container without dev deps
     from _hypothesis_fallback import given, settings, strategies as st
 
+from _invariants import check_invariants
 from repro.core import (SchedulerConfig, SimCluster, SimCostModel, TaskSpec,
                         TaskState)
 
@@ -123,6 +124,7 @@ def test_chaos_kill_and_drain_mid_wave(seed):
     for r in refs:
         if sim.store.locations(r):
             sim.store.get("head", r)
+    check_invariants(sim.store)
 
 
 @pytest.mark.parametrize("seed", range(10))
@@ -157,6 +159,7 @@ def test_chaos_drain_only_never_loses_objects(seed):
         sim.store.get("head", r)          # must not raise
     assert sim.scheduler.stats["reconstructed"] == reconstructed_before
     assert sim.store.stats["reconstructions"] == 0
+    check_invariants(sim.store, expect_fetchable=pre)
 
 
 # ------------------------------------------------- drain-preservation property
@@ -194,6 +197,58 @@ def test_drain_preserves_fetchable_set(seed, n_workers, n_drain):
     # (chained drains may move an object more than once)
     solely_on_drained = sum(1 for r in refs if pre_locs[r.id] <= drained)
     assert sim.store.stats["migrations"] >= solely_on_drained
+    check_invariants(sim.store, expect_fetchable=pre,
+                     scheduler=sim.scheduler,
+                     expect_zero_reconstructions=True)
+
+
+# ------------------------------------- p2p migration-path chaos (two-phase)
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 7), st.integers(1, 3))
+def test_chaos_p2p_migration_faults_keep_invariants(seed, n_workers,
+                                                    n_events):
+    """Property: random object graphs moved by the two-phase p2p drain
+    protocol keep the global invariants (directory subset of reality,
+    exactly-one owner per live ref, anchored in-flight moves) under
+    randomly timed kills of sources AND destinations mid-move. Fat blobs
+    over a slow migration link keep moves in flight long enough for the
+    faults to land inside the push window."""
+    rng = random.Random(seed)
+    sizes = [4096, 262_144, 1 << 20]
+    cost = SimCostModel(
+        task_time_s=lambda s: 0.05,
+        result_bytes=lambda s: float(rng.choice(sizes)),
+        jitter=0.0, result_location="worker", data_plane="p2p",
+        migration_bandwidth_Bps=2.0e6)        # ~0.5s per fat move
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9,
+                                           migration_timeout_s=2.0),
+                     seed=seed)
+    sim.add_workers(n_workers)
+    refs = _produce(sim, rng.randint(6, 12))
+    workers = [f"w{i}" for i in range(n_workers)]
+    rng.shuffle(workers)
+    victims = workers[:min(n_events + 1, n_workers - 2)]
+    # the first victims drain (their moves go in flight); later events
+    # kill workers -- sometimes a drain's source, sometimes a move's
+    # destination -- inside the migration window
+    sim.drain_worker_at(victims[0], 0.0)
+    for wid in victims[1:]:
+        at = rng.uniform(0.05, 1.5)
+        if rng.random() < 0.5:
+            sim.fail_worker_at(wid, at)
+        else:
+            sim.drain_worker_at(wid, at)
+    sim.run()
+    check_invariants(sim.store)
+    # drained-only workers are gone; killed ones too
+    for wid in victims:
+        assert wid not in sim.scheduler.workers
+    # surviving copies actually deserialize
+    for r in refs:
+        if sim.store.locations(r):
+            sim.store.get("head", r)
 
 
 def test_drop_retirement_reexecutes_drain_does_not():
