@@ -1,0 +1,33 @@
+"""syndeo-lint: concurrency + wire-protocol static analysis.
+
+Three AST passes over the Syndeo control plane (``src/repro/core``):
+
+* ``locks``  -- SYN-L001 blocking I/O under a lock, SYN-L002
+  lock-acquisition-order cycles.
+* ``taint``  -- SYN-A001 unverified socket data reaching a store
+  mutation, SYN-A002 op branches that mutate before ticket
+  verification, SYN-A003 ``open_sealed()`` without a nonce cache.
+* ``wire``   -- SYN-W001/W002/W003 client/handler op-frame drift.
+
+Run as a CI gate with ``python -m repro.analysis src/repro/core``;
+reviewed suppressions live in ``analysis/baseline.toml``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from repro.analysis.locks import check_locks
+from repro.analysis.model import CodeModel, Finding, build_model
+from repro.analysis.taint import check_taint
+from repro.analysis.wire import check_wire
+
+__all__ = ["CodeModel", "Finding", "build_model", "check_locks",
+           "check_taint", "check_wire", "run_analysis"]
+
+
+def run_analysis(paths: Iterable[str]) -> List[Finding]:
+    model = build_model(paths)
+    findings = (check_locks(model) + check_taint(model)
+                + check_wire(model))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule, f.message))
+    return findings

@@ -1,0 +1,62 @@
+"""CLI for syndeo-lint: ``python -m repro.analysis [paths...]``.
+
+Exit status 0 when every finding is suppressed by the reviewed
+baseline (or there are none); 1 otherwise.  The default baseline is
+``analysis/baseline.toml`` relative to the current directory when it
+exists -- CI runs from the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import run_analysis
+from repro.analysis.baseline import apply_baseline, load_baseline
+
+DEFAULT_BASELINE = "analysis/baseline.toml"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Concurrency + wire-protocol lints for the Syndeo "
+                    "control plane.")
+    ap.add_argument("paths", nargs="*", default=["src/repro/core"],
+                    help="files or directories to analyze "
+                         "(default: src/repro/core)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"suppression file (default: "
+                         f"{DEFAULT_BASELINE} when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    args = ap.parse_args(argv)
+
+    findings = run_analysis(args.paths)
+    entries = []
+    if not args.no_baseline:
+        baseline = args.baseline
+        if baseline is None and Path(DEFAULT_BASELINE).is_file():
+            baseline = DEFAULT_BASELINE
+        if baseline:
+            entries = load_baseline(baseline)
+    unsuppressed, suppressed, unused = apply_baseline(findings, entries)
+
+    for f in unsuppressed:
+        print(f.render())
+    for e in unused:
+        print(f"# warning: unused baseline suppression: {e}",
+              file=sys.stderr)
+    if unsuppressed:
+        print(f"# syndeo-lint: {len(unsuppressed)} unsuppressed "
+              f"finding(s), {len(suppressed)} suppressed",
+              file=sys.stderr)
+        return 1
+    print(f"# syndeo-lint: clean ({len(suppressed)} finding(s) "
+          f"suppressed by baseline)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""syndeo-lint pass 1: lock discipline.
+
+SYN-L001  blocking call (socket op, Transport.fetch/push, sleep/wait,
+          subprocess) reachable while a ``with self._lock`` region is
+          held.  Direct leaves and transitive call chains both count;
+          transitive findings carry a witness chain in the message.
+
+SYN-L002  lock-acquisition-order cycle: an edge A -> B is recorded when
+          lock B is acquired (directly, or anywhere in a callee) while
+          A is held.  Any cycle in that graph is a potential deadlock.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.model import CodeModel, Finding
+
+
+def check_locks(model: CodeModel) -> List[Finding]:
+    findings = _blocking_under_lock(model)
+    findings.extend(_lock_order_cycles(model))
+    return findings
+
+
+def _blocking_under_lock(model: CodeModel) -> List[Finding]:
+    findings: List[Finding] = []
+    blocking = model.blocking_info()
+    seen: Set[Tuple[str, int]] = set()
+    for fn in model.functions.values():
+        for cs in fn.calls:
+            if not cs.under_locks:
+                continue
+            dedupe = (fn.file, cs.line)
+            if dedupe in seen:
+                continue
+            if cs.blocking:
+                seen.add(dedupe)
+                findings.append(Finding(
+                    "SYN-L001", fn.file, cs.line, fn.qualname,
+                    f"blocking call {cs.display}() while holding "
+                    f"{cs.under_locks[-1]}"))
+                continue
+            for tgt in model.resolve_call(fn, cs):
+                if tgt.key in blocking:
+                    seen.add(dedupe)
+                    chain = model.blocking_chain(tgt.key)
+                    findings.append(Finding(
+                        "SYN-L001", fn.file, cs.line, fn.qualname,
+                        f"call {cs.display}() can block while holding "
+                        f"{cs.under_locks[-1]} (via {chain})"))
+                    break
+    return findings
+
+
+def _lock_order_cycles(model: CodeModel) -> List[Finding]:
+    # edge (held -> acquired) -> first witness (file, line, function)
+    edges: Dict[Tuple[str, str], Tuple[str, int, str]] = {}
+    acquired = model.acquired_info()
+    for fn in model.functions.values():
+        for acq in fn.lock_acqs:
+            for held in acq.held:
+                if held != acq.lock_id:
+                    edges.setdefault((held, acq.lock_id),
+                                     (fn.file, acq.line, fn.qualname))
+        for cs in fn.calls:
+            if not cs.under_locks:
+                continue
+            for tgt in model.resolve_call(fn, cs):
+                for lid in acquired.get(tgt.key, {}):
+                    for held in cs.under_locks:
+                        if held != lid:
+                            edges.setdefault(
+                                (held, lid),
+                                (fn.file, cs.line, fn.qualname))
+
+    adj: Dict[str, List[str]] = {}
+    for a, b in edges:
+        adj.setdefault(a, []).append(b)
+
+    findings: List[Finding] = []
+    reported: Set[Tuple[str, ...]] = set()
+    for a, b in sorted(edges):
+        path = _find_path(adj, b, a)
+        if path is None:
+            continue
+        cycle = [a] + path  # a -> b -> ... -> a
+        canon = _canonical_cycle(cycle)
+        if canon in reported:
+            continue
+        reported.add(canon)
+        file, line, func = edges[(a, b)]
+        pretty = " -> ".join(cycle + [cycle[0]]
+                             if cycle[-1] != cycle[0] else cycle)
+        findings.append(Finding(
+            "SYN-L002", file, line, func,
+            f"lock-order cycle: {pretty} "
+            f"(edge {a} -> {b} witnessed here)"))
+    return findings
+
+
+def _find_path(adj: Dict[str, List[str]], start: str,
+               goal: str) -> "List[str] | None":
+    """DFS path start..goal (inclusive), or None."""
+    stack: List[Tuple[str, List[str]]] = [(start, [start])]
+    seen: Set[str] = set()
+    while stack:
+        node, path = stack.pop()
+        if node == goal:
+            return path
+        if node in seen:
+            continue
+        seen.add(node)
+        for nxt in adj.get(node, ()):
+            stack.append((nxt, path + [nxt]))
+    return None
+
+
+def _canonical_cycle(nodes: List[str]) -> Tuple[str, ...]:
+    ring = nodes[:-1] if len(nodes) > 1 and nodes[-1] == nodes[0] \
+        else nodes
+    if not ring:
+        return ()
+    pivot = min(range(len(ring)), key=lambda i: ring[i])
+    return tuple(ring[pivot:] + ring[:pivot])

@@ -1,0 +1,589 @@
+"""syndeo-lint: shared AST code model.
+
+Parses a set of Python files into a light-weight model -- classes,
+functions, per-function call sites, lock regions and blocking leaves --
+that the three analysis passes (``locks``, ``taint``, ``wire``) share.
+
+The model is deliberately conservative and name-based:
+
+* Receiver types come from parameter annotations, ``self``/``cls``,
+  local aliases (``c = self.cluster``), and attribute assignments in
+  methods (``self.store = GlobalObjectStore()``).  No real inference.
+* A method call on an *unknown* receiver fans out to every class method
+  with that name, except for a skip-list of names too common to be
+  meaningful (``get``, ``close``, ``pop`` ...).  Over-approximating the
+  call graph is the right failure mode for a linter that hunts "can
+  this path block while a lock is held".
+* Calls inside ``lambda`` bodies and nested ``def``s are attributed to
+  the nested function (which runs later), never to the enclosing
+  statement.  Callbacks stored in attributes (``launch_fn``,
+  ``migrate_fn``) are therefore invisible edges -- see
+  tests/README.md for the documented blind spots.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+# Method names whose call is treated as a blocking leaf no matter the
+# receiver: raw socket ops, transport RPCs, sleeps and waits.
+BLOCKING_ATTRS = {
+    "accept", "connect", "create_connection", "fetch", "push",
+    "readline", "recv", "recvfrom", "select", "sendall", "sleep",
+    "wait",
+}
+
+# Receiver names whose every method call blocks (process spawning).
+BLOCKING_RECEIVERS = {"subprocess"}
+
+# Too-common method names: never fan out on an unknown receiver.
+AMBIGUOUS_METHODS = {
+    "acquire", "add", "append", "clear", "close", "copy", "count",
+    "debug", "decode", "discard", "encode", "error", "exists",
+    "extend", "flush", "format", "get", "info", "insert", "items",
+    "join", "keys", "kill", "mkdir", "open", "pop", "popitem", "put",
+    "read", "register", "release", "remove", "run", "seek", "send",
+    "serve_forever", "set", "setdefault", "shutdown", "sort", "split",
+    "start", "stop", "strip", "submit", "tell", "terminate", "unlink",
+    "update", "values", "warning", "write",
+}
+
+
+@dataclass
+class Finding:
+    rule: str
+    file: str
+    line: int
+    function: str
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.file}:{self.line}: {self.rule} "
+                f"[{self.function}] {self.message}")
+
+
+@dataclass
+class CallSite:
+    line: int
+    name: str                     # called attribute / function name
+    kind: str                     # "bare" | "method"
+    recv_type: Optional[str]      # inferred receiver class, if any
+    display: str                  # source-ish text for messages
+    under_locks: Tuple[str, ...]  # lock ids held at the call site
+    blocking: Optional[str]       # leaf description if directly blocking
+
+
+@dataclass
+class LockAcq:
+    lock_id: str
+    line: int
+    held: Tuple[str, ...]         # locks already held when acquired
+
+
+@dataclass
+class FunctionInfo:
+    file: str
+    qualname: str
+    name: str
+    class_name: Optional[str]
+    node: ast.AST
+    calls: List[CallSite] = field(default_factory=list)
+    lock_acqs: List[LockAcq] = field(default_factory=list)
+
+    @property
+    def key(self) -> str:
+        return f"{self.file}::{self.qualname}"
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    file: str
+    bases: List[str]
+    methods: Dict[str, FunctionInfo] = field(default_factory=dict)
+    attr_types: Dict[str, str] = field(default_factory=dict)
+
+
+def _src(node: ast.AST, limit: int = 48) -> str:
+    try:
+        text = ast.unparse(node)
+    except Exception:  # pragma: no cover -- unparse is total on 3.9+
+        text = "<expr>"
+    return text if len(text) <= limit else text[:limit - 3] + "..."
+
+
+def _annotation_type(ann: Optional[ast.AST]) -> Optional[str]:
+    """Best-effort class name out of an annotation node."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split("[")[0].split(".")[-1].strip("'\" ") or None
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Subscript):
+        base = _annotation_type(ann.value)
+        if base == "Optional":
+            return _annotation_type(ann.slice)
+    return None
+
+
+class CodeModel:
+    """Classes + functions + a conservative name-based call graph."""
+
+    def __init__(self) -> None:
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.classes: Dict[str, List[ClassInfo]] = {}
+        self.module_functions: Dict[str, List[FunctionInfo]] = {}
+        self._subclasses: Dict[str, Set[str]] = {}
+        self._blocking: Optional[
+            Dict[str, Tuple[str, int, Optional[str]]]] = None
+        self._acquired: Optional[
+            Dict[str, Dict[str, Tuple[str, int]]]] = None
+
+    # -- construction -----------------------------------------------------
+
+    def index_subclasses(self) -> None:
+        direct: Dict[str, Set[str]] = {}
+        for cls_list in self.classes.values():
+            for ci in cls_list:
+                for b in ci.bases:
+                    direct.setdefault(b, set()).add(ci.name)
+        # transitive closure
+        def close(name: str, seen: Set[str]) -> Set[str]:
+            out: Set[str] = set()
+            for sub in direct.get(name, ()):
+                if sub in seen:
+                    continue
+                seen.add(sub)
+                out.add(sub)
+                out |= close(sub, seen)
+            return out
+
+        for name in self.classes:
+            self._subclasses[name] = close(name, {name})
+
+    # -- typing helpers ---------------------------------------------------
+
+    def type_of(self, e: ast.AST, env: Dict[str, str]) -> Optional[str]:
+        if isinstance(e, ast.Name):
+            return env.get(e.id)
+        if isinstance(e, ast.Attribute):
+            base = self.type_of(e.value, env)
+            if base:
+                for ci in self.classes.get(base, []):
+                    t = ci.attr_types.get(e.attr)
+                    if t:
+                        return t
+            return None
+        if isinstance(e, ast.Call):
+            fname = None
+            if isinstance(e.func, ast.Name):
+                fname = e.func.id
+            elif isinstance(e.func, ast.Attribute):
+                fname = e.func.attr
+            if fname in self.classes:
+                return fname
+            return None
+        if isinstance(e, ast.BoolOp):
+            for v in reversed(e.values):
+                t = self.type_of(v, env)
+                if t:
+                    return t
+            return None
+        if isinstance(e, ast.IfExp):
+            return (self.type_of(e.body, env)
+                    or self.type_of(e.orelse, env))
+        if isinstance(e, ast.Await):
+            return self.type_of(e.value, env)
+        return None
+
+    # -- call resolution --------------------------------------------------
+
+    def _lookup_method(self, cname: str, mname: str,
+                       seen: Set[str]) -> Optional[FunctionInfo]:
+        if cname in seen:
+            return None
+        seen.add(cname)
+        for ci in self.classes.get(cname, []):
+            if mname in ci.methods:
+                return ci.methods[mname]
+            for b in ci.bases:
+                hit = self._lookup_method(b, mname, seen)
+                if hit:
+                    return hit
+        return None
+
+    def methods_of(self, cname: str, mname: str) -> List[FunctionInfo]:
+        """Method `mname` on class `cname`, its base chain, and any
+        subclass override (subclasses matter because attributes are often
+        typed as the base while holding a remote/blocking variant)."""
+        out: List[FunctionInfo] = []
+        seen_keys: Set[str] = set()
+        names = [cname] + sorted(self._subclasses.get(cname, ()))
+        for nm in names:
+            hit = self._lookup_method(nm, mname, set())
+            if hit and hit.key not in seen_keys:
+                seen_keys.add(hit.key)
+                out.append(hit)
+        return out
+
+    def resolve_call(self, fn: FunctionInfo,
+                     cs: CallSite) -> List[FunctionInfo]:
+        if cs.kind == "bare":
+            out: List[FunctionInfo] = []
+            nested = self.functions.get(
+                f"{fn.file}::{fn.qualname}.{cs.name}")
+            if nested:
+                out.append(nested)
+            out.extend(self.module_functions.get(cs.name, []))
+            return out
+        if cs.recv_type:
+            targets = self.methods_of(cs.recv_type, cs.name)
+            if targets:
+                return targets
+        if cs.name in AMBIGUOUS_METHODS:
+            return []
+        out, seen = [], set()
+        for cls_list in self.classes.values():
+            for ci in cls_list:
+                m = ci.methods.get(cs.name)
+                if m and m.key not in seen:
+                    seen.add(m.key)
+                    out.append(m)
+        return out
+
+    # -- fixpoints --------------------------------------------------------
+
+    def blocking_info(self) -> Dict[str, Tuple[str, int, Optional[str]]]:
+        """fn key -> (display, line, next key or None for a leaf)."""
+        if self._blocking is not None:
+            return self._blocking
+        info: Dict[str, Tuple[str, int, Optional[str]]] = {}
+        for key, fn in self.functions.items():
+            for cs in fn.calls:
+                if cs.blocking:
+                    info[key] = (cs.display, cs.line, None)
+                    break
+        changed = True
+        while changed:
+            changed = False
+            for key, fn in self.functions.items():
+                if key in info:
+                    continue
+                hit = None
+                for cs in fn.calls:
+                    for tgt in self.resolve_call(fn, cs):
+                        if tgt.key in info and tgt.key != key:
+                            hit = (cs.display, cs.line, tgt.key)
+                            break
+                    if hit:
+                        break
+                if hit:
+                    info[key] = hit
+                    changed = True
+        self._blocking = info
+        return info
+
+    def blocking_chain(self, key: str, limit: int = 6) -> str:
+        info = self.blocking_info()
+        parts: List[str] = []
+        cur: Optional[str] = key
+        for _ in range(limit):
+            if cur is None or cur not in info:
+                break
+            display, _line, nxt = info[cur]
+            parts.append(f"{display}()")
+            cur = nxt
+        return " -> ".join(parts)
+
+    def acquired_info(self) -> Dict[str, Dict[str, Tuple[str, int]]]:
+        """fn key -> {lock id acquired during execution: witness}."""
+        if self._acquired is not None:
+            return self._acquired
+        acq: Dict[str, Dict[str, Tuple[str, int]]] = {}
+        for key, fn in self.functions.items():
+            acq[key] = {a.lock_id: (fn.file, a.line) for a in fn.lock_acqs}
+        changed = True
+        while changed:
+            changed = False
+            for key, fn in self.functions.items():
+                mine = acq[key]
+                for cs in fn.calls:
+                    for tgt in self.resolve_call(fn, cs):
+                        for lid, wit in acq.get(tgt.key, {}).items():
+                            if lid not in mine:
+                                mine[lid] = wit
+                                changed = True
+        self._acquired = acq
+        return acq
+
+
+# -- builder --------------------------------------------------------------
+
+
+def _py_files(paths: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def _display_path(p: Path) -> str:
+    try:
+        return os.path.relpath(p)
+    except ValueError:  # pragma: no cover -- different drive on win32
+        return str(p)
+
+
+def build_model(paths: Iterable[str]) -> CodeModel:
+    model = CodeModel()
+    trees: List[Tuple[str, ast.Module]] = []
+    for f in _py_files(paths):
+        trees.append((_display_path(f),
+                      ast.parse(f.read_text(), filename=str(f))))
+    for fname, tree in trees:
+        _register(model, fname, tree.body, qual=[], cls=None, depth=0)
+    model.index_subclasses()
+    for _ in range(2):  # two rounds: attribute types that chain
+        for cls_list in model.classes.values():
+            for ci in cls_list:
+                _infer_attr_types(model, ci)
+    for fn in list(model.functions.values()):
+        _scan_function(model, fn)
+    return model
+
+
+def _register(model: CodeModel, fname: str, stmts: List[ast.stmt],
+              qual: List[str], cls: Optional[ClassInfo],
+              depth: int) -> None:
+    for st in stmts:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            qn = ".".join(qual + [st.name])
+            fn = FunctionInfo(file=fname, qualname=qn, name=st.name,
+                              class_name=cls.name if cls else None,
+                              node=st)
+            model.functions[fn.key] = fn
+            if cls is not None:
+                cls.methods.setdefault(st.name, fn)
+            elif depth == 0:
+                model.module_functions.setdefault(st.name, []).append(fn)
+            _register(model, fname, st.body, qual + [st.name], None,
+                      depth + 1)
+        elif isinstance(st, ast.ClassDef):
+            bases = [b for b in (_annotation_type(x) for x in st.bases)
+                     if b]
+            ci = ClassInfo(name=st.name, file=fname, bases=bases)
+            model.classes.setdefault(st.name, []).append(ci)
+            _register(model, fname, st.body, qual + [st.name], ci,
+                      depth + 1)
+        elif isinstance(st, (ast.If, ast.Try, ast.With)):
+            # defs guarded by try/except ImportError etc.
+            for body in _sub_bodies(st):
+                _register(model, fname, body, qual, cls, depth)
+
+
+def _sub_bodies(st: ast.stmt) -> Iterator[List[ast.stmt]]:
+    if isinstance(st, ast.If):
+        yield st.body
+        yield st.orelse
+    elif isinstance(st, ast.Try):
+        yield st.body
+        for h in st.handlers:
+            yield h.body
+        yield st.orelse
+        yield st.finalbody
+    elif isinstance(st, ast.With):
+        yield st.body
+
+
+def _param_env(fn: FunctionInfo) -> Dict[str, str]:
+    env: Dict[str, str] = {}
+    node = fn.node
+    args = node.args
+    for a in args.posonlyargs + args.args + args.kwonlyargs:
+        t = _annotation_type(a.annotation)
+        if t:
+            env[a.arg] = t
+    positional = args.posonlyargs + args.args
+    if fn.class_name and positional:
+        env[positional[0].arg] = fn.class_name
+    return env
+
+
+def _infer_attr_types(model: CodeModel, ci: ClassInfo) -> None:
+    for method in ci.methods.values():
+        env = _param_env(method)
+        for st in _own_statements(method.node):
+            if isinstance(st, ast.Assign):
+                for tgt in st.targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"):
+                        t = model.type_of(st.value, env)
+                        if t:
+                            ci.attr_types[tgt.attr] = t
+            elif isinstance(st, ast.AnnAssign):
+                tgt = st.target
+                if (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    t = (_annotation_type(st.annotation)
+                         or (st.value is not None
+                             and model.type_of(st.value, env) or None))
+                    if t:
+                        ci.attr_types[tgt.attr] = t
+
+
+def _own_statements(node: ast.AST) -> Iterator[ast.stmt]:
+    """All statements of a function body, not descending into nested
+    function/class definitions."""
+    stack: List[ast.stmt] = list(getattr(node, "body", []))
+    while stack:
+        st = stack.pop()
+        yield st
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            continue
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.stmt):
+                stack.append(child)
+            elif isinstance(child, (ast.ExceptHandler,)):
+                stack.extend(child.body)
+
+
+def calls_in(e: ast.AST) -> Iterator[ast.Call]:
+    """Every Call in an expression, not descending into lambdas."""
+    stack: List[ast.AST] = [e]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Lambda):
+            continue
+        if isinstance(n, ast.Call):
+            yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _scan_function(model: CodeModel, fn: FunctionInfo) -> None:
+    env = _param_env(fn)
+    _scan_block(model, fn, list(getattr(fn.node, "body", [])), env, [])
+
+
+def _scan_block(model: CodeModel, fn: FunctionInfo,
+                stmts: List[ast.stmt], env: Dict[str, str],
+                locks: List[str]) -> None:
+    for st in stmts:
+        _scan_stmt(model, fn, st, env, locks)
+
+
+def _lock_id(model: CodeModel, e: ast.AST,
+             env: Dict[str, str]) -> Optional[str]:
+    if isinstance(e, ast.Attribute) and e.attr in ("_lock", "lock"):
+        t = model.type_of(e.value, env)
+        return f"{t or '?'}.{e.attr}"
+    if isinstance(e, ast.Name) and e.id.endswith("_lock"):
+        return f"<local>.{e.id}"
+    return None
+
+
+def _scan_stmt(model: CodeModel, fn: FunctionInfo, st: ast.stmt,
+               env: Dict[str, str], locks: List[str]) -> None:
+    if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                       ast.ClassDef)):
+        return  # separate FunctionInfo; runs later, not under these locks
+    if isinstance(st, ast.Assign):
+        _scan_expr(model, fn, st.value, env, locks)
+        t = model.type_of(st.value, env)
+        for tgt in st.targets:
+            if isinstance(tgt, ast.Name):
+                if t:
+                    env[tgt.id] = t
+                else:
+                    env.pop(tgt.id, None)
+            else:
+                _scan_expr(model, fn, tgt, env, locks)
+        return
+    if isinstance(st, ast.AnnAssign):
+        if st.value is not None:
+            _scan_expr(model, fn, st.value, env, locks)
+        if isinstance(st.target, ast.Name):
+            t = _annotation_type(st.annotation)
+            if t:
+                env[st.target.id] = t
+        return
+    if isinstance(st, ast.AugAssign):
+        _scan_expr(model, fn, st.value, env, locks)
+        return
+    if isinstance(st, (ast.With, ast.AsyncWith)):
+        inner = list(locks)
+        for item in st.items:
+            lid = _lock_id(model, item.context_expr, env)
+            if lid:
+                fn.lock_acqs.append(
+                    LockAcq(lid, item.context_expr.lineno, tuple(inner)))
+                inner.append(lid)
+            else:
+                _scan_expr(model, fn, item.context_expr, env, inner)
+        _scan_block(model, fn, st.body, env, inner)
+        return
+    if isinstance(st, ast.If):
+        _scan_expr(model, fn, st.test, env, locks)
+        _scan_block(model, fn, st.body, env, locks)
+        _scan_block(model, fn, st.orelse, env, locks)
+        return
+    if isinstance(st, ast.While):
+        _scan_expr(model, fn, st.test, env, locks)
+        _scan_block(model, fn, st.body, env, locks)
+        _scan_block(model, fn, st.orelse, env, locks)
+        return
+    if isinstance(st, ast.For):
+        _scan_expr(model, fn, st.iter, env, locks)
+        _scan_block(model, fn, st.body, env, locks)
+        _scan_block(model, fn, st.orelse, env, locks)
+        return
+    if isinstance(st, ast.Try):
+        _scan_block(model, fn, st.body, env, locks)
+        for h in st.handlers:
+            _scan_block(model, fn, h.body, env, locks)
+        _scan_block(model, fn, st.orelse, env, locks)
+        _scan_block(model, fn, st.finalbody, env, locks)
+        return
+    for child in ast.iter_child_nodes(st):
+        if isinstance(child, ast.expr):
+            _scan_expr(model, fn, child, env, locks)
+
+
+def _scan_expr(model: CodeModel, fn: FunctionInfo, e: ast.AST,
+               env: Dict[str, str], locks: List[str]) -> None:
+    for call in calls_in(e):
+        _record_call(model, fn, call, env, locks)
+
+
+def _record_call(model: CodeModel, fn: FunctionInfo, call: ast.Call,
+                 env: Dict[str, str], locks: List[str]) -> None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        fn.calls.append(CallSite(
+            line=call.lineno, name=f.id, kind="bare", recv_type=None,
+            display=f.id, under_locks=tuple(locks), blocking=None))
+        return
+    if isinstance(f, ast.Attribute):
+        blocking = None
+        display = _src(f)
+        if f.attr in BLOCKING_ATTRS:
+            blocking = display
+        if (isinstance(f.value, ast.Name)
+                and f.value.id in BLOCKING_RECEIVERS):
+            blocking = display
+        fn.calls.append(CallSite(
+            line=call.lineno, name=f.attr, kind="method",
+            recv_type=model.type_of(f.value, env), display=display,
+            under_locks=tuple(locks), blocking=blocking))

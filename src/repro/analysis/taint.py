@@ -1,0 +1,275 @@
+"""syndeo-lint pass 2: auth-before-use taint.
+
+SYN-A001  data read straight off a socket (``recv``/``readline``/
+          ``recv_frame``) reaches a store mutation (``put_blob``,
+          ``import_blob``, ``record`` ...) without flowing through a
+          sanitizer (``open_sealed``, ``TransferTicket.verify``,
+          ``_verify``).  Intra-procedural, statement-ordered.
+
+SYN-A002  an op-dispatch branch of a ticket-checking server (a class
+          that defines ``_verify``) mutates the store before any
+          ``_verify``/``.verify()`` call in that branch.
+
+SYN-A003  ``open_sealed()`` called without a ``nonce_cache=`` keyword:
+          the envelope's age window alone leaves it replayable.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.model import CodeModel, Finding, calls_in
+
+SOURCE_NAMES = {"recv", "readline", "recvfrom", "recv_frame"}
+SANITIZER_NAMES = {"open_sealed", "verify", "_verify"}
+STORE_MUTATORS = {"put_blob", "import_blob", "delete", "put", "record",
+                  "note_replica", "migrate"}
+
+
+def check_taint(model: CodeModel) -> List[Finding]:
+    findings: List[Finding] = []
+    defines_open_sealed = {
+        fn.file for fn in model.functions.values()
+        if fn.name == "open_sealed" and fn.class_name is None}
+    for fn in model.functions.values():
+        findings.extend(_flow_taint(fn))
+        if fn.file not in defines_open_sealed:
+            findings.extend(_nonce_cache_required(fn))
+    findings.extend(_branch_auth(model))
+    return findings
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _is_store_mutation(call: ast.Call) -> bool:
+    f = call.func
+    if not isinstance(f, ast.Attribute) or f.attr not in STORE_MUTATORS:
+        return False
+    try:
+        recv = ast.unparse(f.value).lower()
+    except Exception:  # pragma: no cover
+        return False
+    return "store" in recv
+
+
+# -- SYN-A001: source -> sink flow ---------------------------------------
+
+
+def _expr_tainted(e: ast.AST, tainted: Set[str]) -> bool:
+    if isinstance(e, ast.Lambda):
+        return False
+    if isinstance(e, ast.Call):
+        name = _call_name(e)
+        if name in SANITIZER_NAMES:
+            return False  # sanitizer output is clean by definition
+        if name in SOURCE_NAMES:
+            return True
+        return any(_expr_tainted(c, tainted)
+                   for c in ast.iter_child_nodes(e))
+    if isinstance(e, ast.Name):
+        return e.id in tainted
+    return any(_expr_tainted(c, tainted)
+               for c in ast.iter_child_nodes(e))
+
+
+def _flow_taint(fn) -> List[Finding]:
+    findings: List[Finding] = []
+    tainted: Set[str] = set()
+    _flow_block(fn, list(getattr(fn.node, "body", [])), tainted,
+                findings)
+    return findings
+
+
+def _flow_block(fn, stmts: List[ast.stmt], tainted: Set[str],
+                findings: List[Finding]) -> None:
+    for st in stmts:
+        _flow_stmt(fn, st, tainted, findings)
+
+
+def _check_sinks(fn, node: ast.AST, tainted: Set[str],
+                 findings: List[Finding]) -> None:
+    for call in calls_in(node):
+        if not _is_store_mutation(call):
+            continue
+        hot = [a for a in list(call.args)
+               + [k.value for k in call.keywords]
+               if _expr_tainted(a, tainted)]
+        if hot:
+            findings.append(Finding(
+                "SYN-A001", fn.file, call.lineno, fn.qualname,
+                f"unverified socket data reaches store mutation "
+                f"{_call_name(call)}() (argument "
+                f"{ast.unparse(hot[0])!r} is tainted)"))
+
+
+def _flow_stmt(fn, st: ast.stmt, tainted: Set[str],
+               findings: List[Finding]) -> None:
+    if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                       ast.ClassDef)):
+        return
+    if isinstance(st, ast.Assign):
+        _check_sinks(fn, st.value, tainted, findings)
+        is_hot = _expr_tainted(st.value, tainted)
+        for tgt in st.targets:
+            if isinstance(tgt, ast.Name):
+                if is_hot:
+                    tainted.add(tgt.id)
+                else:
+                    tainted.discard(tgt.id)
+            elif isinstance(tgt, ast.Tuple):
+                for el in tgt.elts:
+                    if isinstance(el, ast.Name):
+                        if is_hot:
+                            tainted.add(el.id)
+                        else:
+                            tainted.discard(el.id)
+            elif (isinstance(tgt, ast.Subscript)
+                  and isinstance(tgt.value, ast.Name) and is_hot):
+                tainted.add(tgt.value.id)  # d[k] = hot taints d
+        return
+    if isinstance(st, ast.AnnAssign) and st.value is not None:
+        _check_sinks(fn, st.value, tainted, findings)
+        if isinstance(st.target, ast.Name):
+            if _expr_tainted(st.value, tainted):
+                tainted.add(st.target.id)
+            else:
+                tainted.discard(st.target.id)
+        return
+    if isinstance(st, ast.AugAssign):
+        _check_sinks(fn, st.value, tainted, findings)
+        if (isinstance(st.target, ast.Name)
+                and _expr_tainted(st.value, tainted)):
+            tainted.add(st.target.id)
+        return
+    if isinstance(st, ast.If):
+        _check_sinks(fn, st.test, tainted, findings)
+        t_body = set(tainted)
+        t_else = set(tainted)
+        _flow_block(fn, st.body, t_body, findings)
+        _flow_block(fn, st.orelse, t_else, findings)
+        tainted |= t_body | t_else  # conservative merge
+        return
+    if isinstance(st, (ast.While, ast.For)):
+        head = st.test if isinstance(st, ast.While) else st.iter
+        _check_sinks(fn, head, tainted, findings)
+        if (isinstance(st, ast.For) and isinstance(st.target, ast.Name)
+                and _expr_tainted(st.iter, tainted)):
+            tainted.add(st.target.id)
+        # two passes: loop bodies can taint names used earlier in the body
+        t_loop = set(tainted)
+        _flow_block(fn, st.body, t_loop, [])
+        tainted |= t_loop
+        _flow_block(fn, st.body, tainted, findings)
+        _flow_block(fn, st.orelse, tainted, findings)
+        return
+    if isinstance(st, (ast.With, ast.AsyncWith)):
+        for item in st.items:
+            _check_sinks(fn, item.context_expr, tainted, findings)
+        _flow_block(fn, st.body, tainted, findings)
+        return
+    if isinstance(st, ast.Try):
+        _flow_block(fn, st.body, tainted, findings)
+        for h in st.handlers:
+            _flow_block(fn, h.body, tainted, findings)
+        _flow_block(fn, st.orelse, tainted, findings)
+        _flow_block(fn, st.finalbody, tainted, findings)
+        return
+    for child in ast.iter_child_nodes(st):
+        if isinstance(child, ast.expr):
+            _check_sinks(fn, child, tainted, findings)
+
+
+# -- SYN-A002: verify-before-mutate in dispatch branches -----------------
+
+
+def _branch_auth(model: CodeModel) -> List[Finding]:
+    findings: List[Finding] = []
+    for cls_list in model.classes.values():
+        for ci in cls_list:
+            if "_verify" not in ci.methods:
+                continue
+            for mname, method in ci.methods.items():
+                if mname == "_verify":
+                    continue
+                findings.extend(_check_dispatch(method))
+    return findings
+
+
+def _op_branches(node: ast.AST) -> List[ast.If]:
+    """``if op == "x":`` / ``if hdr.get("op") == "x":`` branch tests."""
+    opvars: Set[str] = set()
+    for st in ast.walk(node):
+        if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                and isinstance(st.targets[0], ast.Name)
+                and _reads_op(st.value)):
+            opvars.add(st.targets[0].id)
+    out: List[ast.If] = []
+    for st in ast.walk(node):
+        if isinstance(st, ast.If) and _is_op_test(st.test, opvars):
+            out.append(st)
+    return out
+
+
+def _reads_op(e: ast.AST) -> bool:
+    if (isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute)
+            and e.func.attr == "get" and e.args
+            and isinstance(e.args[0], ast.Constant)
+            and e.args[0].value == "op"):
+        return True
+    if (isinstance(e, ast.Subscript)
+            and isinstance(e.slice, ast.Constant)
+            and e.slice.value == "op"):
+        return True
+    return False
+
+
+def _is_op_test(test: ast.AST, opvars: Set[str]) -> bool:
+    if not (isinstance(test, ast.Compare) and len(test.ops) == 1
+            and isinstance(test.ops[0], (ast.Eq, ast.In))):
+        return False
+    left = test.left
+    if isinstance(left, ast.Name) and left.id in opvars:
+        return True
+    return _reads_op(left)
+
+
+def _check_dispatch(method) -> List[Finding]:
+    findings: List[Finding] = []
+    for branch in _op_branches(method.node):
+        verified = False
+        for st in branch.body:
+            for call in calls_in(st):
+                name = _call_name(call)
+                if name in ("verify", "_verify"):
+                    verified = True
+                elif _is_store_mutation(call) and not verified:
+                    findings.append(Finding(
+                        "SYN-A002", method.file, call.lineno,
+                        method.qualname,
+                        f"store mutation {name}() in op branch "
+                        f"before any _verify()/ticket.verify() call"))
+    return findings
+
+
+# -- SYN-A003: open_sealed without a nonce cache -------------------------
+
+
+def _nonce_cache_required(fn) -> List[Finding]:
+    findings: List[Finding] = []
+    for call in calls_in(fn.node):
+        if _call_name(call) != "open_sealed":
+            continue
+        if any(kw.arg == "nonce_cache" for kw in call.keywords):
+            continue
+        findings.append(Finding(
+            "SYN-A003", fn.file, call.lineno, fn.qualname,
+            "open_sealed() without nonce_cache=: sealed envelope is "
+            "replayable inside its freshness window"))
+    return findings

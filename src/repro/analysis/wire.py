@@ -1,0 +1,278 @@
+"""syndeo-lint pass 3: wire-protocol conformance.
+
+Handlers are functions with ``op = msg.get("op")`` / ``msg["op"]``
+dispatch chains (or inline ``header.get("op") == "put"`` tests); for
+each op branch we record which envelope fields the handler *requires*
+(``msg["field"]``), which it treats as optional (``msg.get(...)``) and
+the literal reply dicts it returns.  Client sites are ``_request`` /
+``_rpc`` calls carrying a dict payload with an ``"op"`` key (either a
+dict literal argument, or a local variable assembled from a dict
+literal plus ``var["k"] = ...`` updates).
+
+SYN-W001  op sent by a client but matched by no handler branch.
+SYN-W002  field a handler requires that no client site for that op
+          ever sends (ops never sent in the analyzed tree are skipped:
+          they belong to out-of-tree callers such as operator tooling).
+SYN-W003  literal reply dict with neither ``ok`` nor ``error``.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.model import CodeModel, Finding
+
+CLIENT_CALL_NAMES = {"_request", "_rpc"}
+
+
+@dataclass
+class HandlerInfo:
+    op: str
+    file: str
+    function: str
+    line: int
+    required: Dict[str, int] = field(default_factory=dict)  # field->line
+    optional: Set[str] = field(default_factory=set)
+    replies: List[Tuple[int, Set[str]]] = field(default_factory=list)
+
+
+@dataclass
+class SendSite:
+    op: str
+    file: str
+    function: str
+    line: int
+    keys: Set[str] = field(default_factory=set)
+
+
+def check_wire(model: CodeModel) -> List[Finding]:
+    handlers: Dict[str, List[HandlerInfo]] = {}
+    sends: List[SendSite] = []
+    for fn in model.functions.values():
+        for h in _extract_handlers(fn):
+            handlers.setdefault(h.op, []).append(h)
+        sends.extend(_extract_sends(fn))
+
+    findings: List[Finding] = []
+    for s in sends:
+        if s.op not in handlers:
+            findings.append(Finding(
+                "SYN-W001", s.file, s.line, s.function,
+                f"op {s.op!r} sent but no handler branch matches"))
+
+    sent_keys: Dict[str, Set[str]] = {}
+    for s in sends:
+        sent_keys.setdefault(s.op, set()).update(s.keys)
+    for op, hs in handlers.items():
+        if op not in sent_keys:
+            continue  # only out-of-tree callers (operator ops)
+        for h in hs:
+            for fld, line in sorted(h.required.items()):
+                if fld not in sent_keys[op]:
+                    findings.append(Finding(
+                        "SYN-W002", h.file, line, h.function,
+                        f"handler for op {op!r} requires field "
+                        f"{fld!r} never sent by any call site"))
+
+    for hs in handlers.values():
+        for h in hs:
+            for line, keys in h.replies:
+                if not keys & {"ok", "error"}:
+                    findings.append(Finding(
+                        "SYN-W003", h.file, line, h.function,
+                        f"reply for op {h.op!r} has neither 'ok' nor "
+                        f"'error' key"))
+    return findings
+
+
+# -- handler extraction ---------------------------------------------------
+
+
+def _const_str(e: ast.AST) -> Optional[str]:
+    if isinstance(e, ast.Constant) and isinstance(e.value, str):
+        return e.value
+    return None
+
+
+def _reads_field(e: ast.AST) -> Optional[Tuple[str, str]]:
+    """(msg var, field) for ``var["field"]`` or ``var.get("field")``."""
+    if (isinstance(e, ast.Subscript)
+            and isinstance(e.value, ast.Name)):
+        fld = _const_str(e.slice)
+        if fld is not None:
+            return e.value.id, fld
+    return None
+
+
+def _op_read_var(e: ast.AST) -> Optional[str]:
+    """msg var name when e is ``var.get("op")`` or ``var["op"]``."""
+    if (isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute)
+            and e.func.attr == "get" and e.args
+            and isinstance(e.func.value, ast.Name)
+            and _const_str(e.args[0]) == "op"):
+        return e.func.value.id
+    rf = _reads_field(e)
+    if rf and rf[1] == "op":
+        return rf[0]
+    return None
+
+
+def _branch_ops(test: ast.AST,
+                opvars: Dict[str, str]) -> Optional[Tuple[str, List[str]]]:
+    """(msg var, [ops]) when `test` compares an op against literals."""
+    if not (isinstance(test, ast.Compare) and len(test.ops) == 1
+            and isinstance(test.ops[0], (ast.Eq, ast.In))):
+        return None
+    left = test.left
+    msgvar = None
+    if isinstance(left, ast.Name) and left.id in opvars:
+        msgvar = opvars[left.id]
+    else:
+        msgvar = _op_read_var(left)
+    if msgvar is None:
+        return None
+    cmp = test.comparators[0]
+    ops: List[str] = []
+    if isinstance(cmp, (ast.Tuple, ast.List, ast.Set)):
+        for el in cmp.elts:
+            v = _const_str(el)
+            if v is not None:
+                ops.append(v)
+    else:
+        v = _const_str(cmp)
+        if v is not None:
+            ops.append(v)
+    return (msgvar, ops) if ops else None
+
+
+def _reply_dicts(value: ast.AST) -> List[ast.Dict]:
+    if isinstance(value, ast.Dict):
+        return [value]
+    if (isinstance(value, ast.Tuple) and value.elts
+            and isinstance(value.elts[0], ast.Dict)):
+        return [value.elts[0]]
+    if isinstance(value, ast.Call):
+        return [a for a in value.args if isinstance(a, ast.Dict)]
+    return []
+
+
+def _dict_keys(d: ast.Dict) -> Optional[Set[str]]:
+    """Constant keys, or None when unknowable (** splat / computed)."""
+    keys: Set[str] = set()
+    for k in d.keys:
+        if k is None:
+            return None
+        v = _const_str(k)
+        if v is None:
+            return None
+        keys.add(v)
+    return keys
+
+
+def _extract_handlers(fn) -> List[HandlerInfo]:
+    node = fn.node
+    opvars: Dict[str, str] = {}  # op var name -> msg var name
+    for st in ast.walk(node):
+        if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                and isinstance(st.targets[0], ast.Name)):
+            mv = _op_read_var(st.value)
+            if mv:
+                opvars[st.targets[0].id] = mv
+    out: List[HandlerInfo] = []
+    for st in ast.walk(node):
+        if not isinstance(st, ast.If):
+            continue
+        hit = _branch_ops(st.test, opvars)
+        if not hit:
+            continue
+        msgvar, ops = hit
+        for op in ops:
+            info = HandlerInfo(op=op, file=fn.file,
+                               function=fn.qualname, line=st.lineno)
+            _collect_branch(info, st.body, msgvar)
+            out.append(info)
+    return out
+
+
+def _collect_branch(info: HandlerInfo, stmts: List[ast.stmt],
+                    msgvar: str) -> None:
+    for st in stmts:
+        for n in ast.walk(st):
+            rf = _reads_field(n)
+            if rf and rf[0] == msgvar and rf[1] != "op":
+                info.required.setdefault(rf[1], n.lineno)
+            if (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "get" and n.args
+                    and isinstance(n.func.value, ast.Name)
+                    and n.func.value.id == msgvar):
+                fld = _const_str(n.args[0])
+                if fld and fld != "op":
+                    info.optional.add(fld)
+            if isinstance(n, ast.Return) and n.value is not None:
+                for d in _reply_dicts(n.value):
+                    keys = _dict_keys(d)
+                    if keys is not None:
+                        info.replies.append((d.lineno, keys))
+
+
+# -- client-site extraction ----------------------------------------------
+
+
+def _extract_sends(fn) -> List[SendSite]:
+    node = fn.node
+    # local dict payloads: var -> constant keys (dict literal + later
+    # ``var["k"] = ...`` updates, order-insensitive on purpose)
+    local_dicts: Dict[str, Dict[str, Optional[str]]] = {}
+    for st in ast.walk(node):
+        if not (isinstance(st, ast.Assign) and len(st.targets) == 1):
+            continue
+        tgt = st.targets[0]
+        if isinstance(tgt, ast.Name) and isinstance(st.value, ast.Dict):
+            keys = _dict_keys(st.value)
+            if keys is None:
+                continue
+            kv: Dict[str, Optional[str]] = {k: None for k in keys}
+            for k, v in zip(st.value.keys, st.value.values):
+                kv[_const_str(k)] = _const_str(v)
+            local_dicts.setdefault(tgt.id, {}).update(kv)
+        elif (isinstance(tgt, ast.Subscript)
+              and isinstance(tgt.value, ast.Name)
+              and tgt.value.id in local_dicts):
+            fld = _const_str(tgt.slice)
+            if fld is not None:
+                local_dicts[tgt.value.id][fld] = _const_str(st.value)
+
+    out: List[SendSite] = []
+    for n in ast.walk(node):
+        if not isinstance(n, ast.Call):
+            continue
+        cname = None
+        if isinstance(n.func, ast.Name):
+            cname = n.func.id
+        elif isinstance(n.func, ast.Attribute):
+            cname = n.func.attr
+        if cname not in CLIENT_CALL_NAMES:
+            continue
+        for a in list(n.args) + [k.value for k in n.keywords]:
+            payload: Optional[Dict[str, Optional[str]]] = None
+            if isinstance(a, ast.Dict):
+                keys = _dict_keys(a)
+                if keys is not None and "op" in keys:
+                    payload = {k: None for k in keys}
+                    for k, v in zip(a.keys, a.values):
+                        payload[_const_str(k)] = _const_str(v)
+            elif (isinstance(a, ast.Name)
+                  and a.id in local_dicts
+                  and "op" in local_dicts[a.id]):
+                payload = local_dicts[a.id]
+            if payload is None:
+                continue
+            op = payload.get("op")
+            if op is None:
+                continue  # dynamic op name: nothing to check
+            out.append(SendSite(op=op, file=fn.file,
+                                function=fn.qualname, line=n.lineno,
+                                keys=set(payload)))
+    return out

@@ -29,9 +29,10 @@ from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
                                      TenantQuota)
 from repro.core.rendezvous import Endpoint, InMemoryRendezvous
 from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
-from repro.core.security import (DEFAULT_TENANT, Capability, SecurityError,
-                                 Tenant, UnprivilegedProfile,
-                                 mint_cluster_token, open_sealed, seal)
+from repro.core.security import (DEFAULT_TENANT, Capability, NonceCache,
+                                 SecurityError, Tenant,
+                                 UnprivilegedProfile, mint_cluster_token,
+                                 open_sealed, seal)
 from repro.core.task_graph import Task, TaskSpec, TaskState
 
 
@@ -66,6 +67,7 @@ class SyndeoCluster:
         self.profile.enforce()
         self.rendezvous = rendezvous or InMemoryRendezvous()
         self.store = GlobalObjectStore()
+        self._nonces = NonceCache()   # replay guard for join handshakes
         self._lock = threading.RLock()
         self._queues: Dict[str, "queue.Queue"] = {}
         self._threads: Dict[str, threading.Thread] = {}
@@ -142,7 +144,9 @@ class SyndeoCluster:
         """Handshake + register (paper phase 3). Threaded local backend."""
         ep = self.rendezvous.wait(self.cluster_id)
         hello = seal(ep.token, {"op": "join", "worker": worker_id or "?"})
-        open_sealed(self.token, hello)  # head verifies the HMAC handshake
+        # head verifies the HMAC handshake; the nonce cache rejects a
+        # replayed hello that would re-register a retired worker id
+        open_sealed(self.token, hello, nonce_cache=self._nonces)
 
         if worker_id is None:
             worker_id = f"w{self._worker_seq}"

@@ -29,7 +29,13 @@ from repro.core.security import NonceCache
 
 DEFAULT_METRICS = ("syndeo_backlog_per_worker", "syndeo_busy_fraction",
                    "syndeo_tenant_dominant_share",
-                   "syndeo_tenant_quota_fraction")
+                   "syndeo_tenant_quota_fraction",
+                   # drain-plane health counters (ROADMAP: previously
+                   # tracked by the store but unreported): dashboards
+                   # alert on aborted moves / relay downgrades, and the
+                   # p2p-vs-relay benchmark reads head_relayed_bytes
+                   "syndeo_moves_aborted", "syndeo_relay_fallbacks",
+                   "syndeo_head_relayed_bytes", "syndeo_replica_gc")
 
 
 class MetricsPoller:

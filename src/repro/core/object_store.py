@@ -127,8 +127,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Set, Tuple
 
 from repro.core.security import (ADMIN_TENANT, DEFAULT_TENANT, Capability,
-                                 SecurityError, TransferTicket, open_sealed,
-                                 seal)
+                                 NonceCache, SecurityError, TransferTicket,
+                                 open_sealed, seal)
 
 #: data-plane framing: 8-byte big-endian length prefix, 64 KiB chunks
 FRAME_CHUNK = 64 * 1024
@@ -355,6 +355,7 @@ class TCPTransport(Transport):
         self.token = token
         self.requester = requester
         self.timeout = timeout
+        self._nonces = NonceCache()  # replay guard for peer replies
 
     def _rpc(self, node_id: str, header: Dict[str, Any],
              blob: Optional[bytes] = None) -> Tuple[Dict[str, Any],
@@ -364,9 +365,25 @@ class TCPTransport(Transport):
             raise KeyError(f"no blob endpoint for node {node_id}")
         with socket.create_connection(tuple(ep), timeout=self.timeout) as s:
             send_frame(s, json.dumps(seal(self.token, header)).encode())
+            send_err: Optional[OSError] = None
             if blob is not None:
-                send_frame(s, blob)
-            reply = open_sealed(self.token, json.loads(recv_frame(s).decode()))
+                try:
+                    send_frame(s, blob)
+                except OSError as e:
+                    # the server may refuse the header and hang up while
+                    # we are still streaming the blob; its refusal reply
+                    # is often already queued -- prefer reading it so the
+                    # caller sees the protocol error (SecurityError, not
+                    # a retryable reset that triggers relay fallback)
+                    send_err = e
+            try:
+                reply = open_sealed(self.token,
+                                    json.loads(recv_frame(s).decode()),
+                                    nonce_cache=self._nonces)
+            except (OSError, ValueError):
+                if send_err is not None:
+                    raise send_err     # genuine transport failure
+                raise
             body = None
             if reply.get("ok") and reply.get("size") is not None:
                 body = recv_frame(s)
@@ -934,21 +951,27 @@ class GlobalObjectStore:
             raise KeyError(f"object {ref.id} has no live copies")
         blob = self.transport.fetch(self._nodes[src], ref, ticket)
         self._nodes[node_id].import_blob(ref, blob)
+        released = False
         with self._lock:
             e = self._dir.get(ref.id)
             if e is None:              # released mid-fetch
-                self._nodes[node_id].delete(ref)
-                return 0
-            # the directory size is authoritative (it may be a modeled
-            # size_hint larger than the physical token blob)
-            size = e.size if e.size else len(blob)
-            e.locations.add(node_id)
-            self.stats["transfers"] += 1
-            self.stats["transfer_bytes"] += size
-            if src == "head":
-                # bytes the head's NIC served to the data plane -- the
-                # p2p-vs-relay benchmarks read exactly this counter
-                self.stats["head_relayed_bytes"] += size
+                released = True
+            else:
+                # the directory size is authoritative (it may be a modeled
+                # size_hint larger than the physical token blob)
+                size = e.size if e.size else len(blob)
+                e.locations.add(node_id)
+                self.stats["transfers"] += 1
+                self.stats["transfer_bytes"] += size
+                if src == "head":
+                    # bytes the head's NIC served to the data plane -- the
+                    # p2p-vs-relay benchmarks read exactly this counter
+                    self.stats["head_relayed_bytes"] += size
+        if released:
+            # drop the stale import outside the lock: the node may be a
+            # remote proxy, making this a TCP round-trip
+            self._nodes[node_id].delete(ref)
+            return 0
         self.note_link_bytes(src, node_id, size)
         return size
 

@@ -224,6 +224,9 @@ class BlobServer:
 
     def shutdown(self):
         self.server.shutdown()
+        # shutdown() only stops serve_forever; the listening socket fd
+        # stays open until server_close()
+        self.server.server_close()
 
     # -- one request ----------------------------------------------------------
 
@@ -242,7 +245,19 @@ class BlobServer:
                 # ticket verified BEFORE the blob frame is read, and the
                 # read is capped at the header's declared size -- a peer
                 # without a valid put ticket cannot make us buffer bytes
-                put_ticket = self._verify(header, "put")
+                try:
+                    put_ticket = self._verify(header, "put")
+                except Exception:
+                    # the client streams the blob right behind the header;
+                    # closing with the frame unread RSTs the connection,
+                    # which can break the client's in-flight send AND
+                    # destroy the queued error reply -- the refusal then
+                    # looks like a retryable transport fault instead of a
+                    # SecurityError. Drain (read and discard, bounded by
+                    # the declared size) so the refusal travels back clean.
+                    self._drain_frame(
+                        sock, int(header.get("size", 0)) + 1024)
+                    raise
                 blob_in = recv_frame(
                     sock, max_bytes=int(header.get("size", 0)) + 1024)
             reply, blob_out = self._dispatch(header, blob_in, put_ticket)
@@ -255,6 +270,14 @@ class BlobServer:
                 send_frame(sock, blob_out)
         except OSError:
             pass                       # peer went away mid-reply
+
+    @staticmethod
+    def _drain_frame(sock: socket.socket, max_bytes: int):
+        """Best-effort read-and-discard of one frame (refused put)."""
+        try:
+            recv_frame(sock, max_bytes=max_bytes)
+        except (OSError, ValueError):
+            pass                       # peer gone or oversized: just close
 
     def _verify(self, header: Dict[str, Any], right: str) -> TransferTicket:
         oid = header.get("object", "")
@@ -883,16 +906,26 @@ class HeadServer:
                 shares = c.scheduler.tenant_shares()
             quota_tenants = set(shares) | c.store.quota_tenants()
             n = max(len(workers), 1)
-            return {"ok": True, "workers": len(workers), "busy": busy,
-                    "backlog": backlog,
-                    "syndeo_backlog_per_worker": backlog / n,
-                    "syndeo_busy_fraction": busy / n,
-                    "backlog_by_tenant": by_tenant,
-                    # per-tenant fairness + quota-pressure signals
-                    "syndeo_tenant_dominant_share": shares,
-                    "syndeo_tenant_quota_fraction": {
-                        t: self.cluster.store.tenant_quota_fraction(t)
-                        for t in sorted(quota_tenants)}}
+            # drain-plane health counters (plain ints off the store's
+            # stats dict, no lock needed): aborted two-phase moves,
+            # direct-push downgrades to head relay, bytes the head's NIC
+            # actually served, and replicas swept after over-replication
+            store_stats = c.store.stats
+            drain_counters = {
+                f"syndeo_{k}": int(store_stats.get(k, 0))
+                for k in ("moves_aborted", "relay_fallbacks",
+                          "head_relayed_bytes", "replica_gc")}
+            return dict({"ok": True, "workers": len(workers),
+                         "busy": busy, "backlog": backlog,
+                         "syndeo_backlog_per_worker": backlog / n,
+                         "syndeo_busy_fraction": busy / n,
+                         "backlog_by_tenant": by_tenant,
+                         # per-tenant fairness + quota-pressure signals
+                         "syndeo_tenant_dominant_share": shares,
+                         "syndeo_tenant_quota_fraction": {
+                             t: self.cluster.store.tenant_quota_fraction(t)
+                             for t in sorted(quota_tenants)}},
+                        **drain_counters)
         return {"ok": False, "error": f"unknown op {op!r}"}
 
     def _at_risk_objects(self, wid: str) -> List[ObjectRef]:
@@ -948,6 +981,7 @@ class HeadServer:
 
     def shutdown(self):
         self.server.shutdown()
+        self.server.server_close()   # release the listening socket fd
         if self._blob_srv is not None:
             self._blob_srv.shutdown()
 

@@ -1,0 +1,22 @@
+"""known-bad: blocking I/O while holding a lock (SYN-L001)."""
+import threading
+import time
+
+
+class Cache:
+    def __init__(self, sock):
+        self._lock = threading.Lock()
+        self.sock = sock
+        self.items = {}
+
+    def refresh(self):
+        with self._lock:
+            data = self.sock.recv(4096)       # direct blocking leaf
+            self.items["latest"] = data
+
+    def tick(self):
+        with self._lock:
+            self._poll()                      # transitive: _poll sleeps
+
+    def _poll(self):
+        time.sleep(0.5)

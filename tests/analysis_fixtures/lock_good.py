@@ -1,0 +1,23 @@
+"""known-good: the same work with I/O hoisted out of the lock."""
+import threading
+import time
+
+
+class Cache:
+    def __init__(self, sock):
+        self._lock = threading.Lock()
+        self.sock = sock
+        self.items = {}
+
+    def refresh(self):
+        data = self.sock.recv(4096)           # I/O outside the lock
+        with self._lock:
+            self.items["latest"] = data
+
+    def tick(self):
+        self._poll()                          # sleep outside the lock
+        with self._lock:
+            self.items.pop("stale", None)
+
+    def _poll(self):
+        time.sleep(0.5)

@@ -1,0 +1,26 @@
+"""known-bad: A->B and B->A lock acquisition order (SYN-L002)."""
+import threading
+
+
+class Ledger:
+    def __init__(self, peer: "Mirror"):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.rows = {}
+
+    def post(self, key, value):
+        with self._lock:
+            with self.peer._lock:             # Ledger -> Mirror
+                self.peer.rows[key] = value
+
+
+class Mirror:
+    def __init__(self, peer: "Ledger"):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.rows = {}
+
+    def sync(self, key):
+        with self._lock:
+            with self.peer._lock:             # Mirror -> Ledger: cycle
+                return self.peer.rows.get(key)

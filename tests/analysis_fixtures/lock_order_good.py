@@ -1,0 +1,26 @@
+"""known-good: both paths take Ledger's lock before Mirror's."""
+import threading
+
+
+class Ledger:
+    def __init__(self, peer: "Mirror"):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.rows = {}
+
+    def post(self, key, value):
+        with self._lock:
+            with self.peer._lock:             # Ledger -> Mirror
+                self.peer.rows[key] = value
+
+
+class Mirror:
+    def __init__(self, peer: "Ledger"):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.rows = {}
+
+    def sync(self, key):
+        with self.peer._lock:                 # Ledger first, same order
+            with self._lock:
+                return self.rows.get(key)

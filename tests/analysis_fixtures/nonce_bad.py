@@ -1,0 +1,6 @@
+"""known-bad: open_sealed without a nonce cache (SYN-A003)."""
+from repro.core.security import open_sealed
+
+
+def read_reply(token, envelope):
+    return open_sealed(token, envelope)

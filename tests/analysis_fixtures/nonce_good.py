@@ -1,0 +1,8 @@
+"""known-good: replayed envelopes are rejected by the nonce cache."""
+from repro.core.security import NonceCache, open_sealed
+
+_NONCES = NonceCache()
+
+
+def read_reply(token, envelope):
+    return open_sealed(token, envelope, nonce_cache=_NONCES)

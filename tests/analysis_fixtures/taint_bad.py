@@ -1,0 +1,11 @@
+"""known-bad: raw socket bytes reach a store mutation (SYN-A001)."""
+import json
+
+
+class BlobIngest:
+    def __init__(self, store):
+        self.store = store
+
+    def handle(self, sock):
+        header = json.loads(sock.recv(4096).decode())
+        self.store.put_blob(header["object"], header["data"])

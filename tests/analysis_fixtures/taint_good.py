@@ -1,0 +1,16 @@
+"""known-good: the envelope is opened (HMAC + nonce) before use."""
+import json
+
+from repro.core.security import open_sealed
+
+
+class BlobIngest:
+    def __init__(self, store, token, nonces):
+        self.store = store
+        self.token = token
+        self.nonces = nonces
+
+    def handle(self, sock):
+        raw = json.loads(sock.recv(4096).decode())
+        header = open_sealed(self.token, raw, nonce_cache=self.nonces)
+        self.store.put_blob(header["object"], header["data"])

@@ -1,0 +1,21 @@
+"""known-bad: op branch mutates the store before _verify (SYN-A002)."""
+
+
+class TicketedServer:
+    def __init__(self, store):
+        self.store = store
+
+    def _verify(self, header, right):
+        raise NotImplementedError
+
+    def dispatch(self, header, blob):
+        op = header.get("op")
+        if op == "put":
+            self.store.import_blob(header["object"], blob)
+            self._verify(header, "put")       # too late: already wrote
+            return {"ok": True}
+        if op == "del":
+            self._verify(header, "del")
+            self.store.delete(header["object"])
+            return {"ok": True}
+        return {"ok": False, "error": f"bad op {op}"}

@@ -1,0 +1,21 @@
+"""known-good: every mutating branch verifies its ticket first."""
+
+
+class TicketedServer:
+    def __init__(self, store):
+        self.store = store
+
+    def _verify(self, header, right):
+        raise NotImplementedError
+
+    def dispatch(self, header, blob):
+        op = header.get("op")
+        if op == "put":
+            self._verify(header, "put")
+            self.store.import_blob(header["object"], blob)
+            return {"ok": True}
+        if op == "del":
+            self._verify(header, "del")
+            self.store.delete(header["object"])
+            return {"ok": True}
+        return {"ok": False, "error": f"bad op {op}"}

@@ -1,0 +1,28 @@
+"""known-bad: op-frame drift between client and handler
+(SYN-W001, SYN-W002, SYN-W003)."""
+
+
+class Server:
+    def __init__(self, store):
+        self.store = store
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "store":
+            value = msg["payload"]            # required, never sent
+            return {"stored": bool(value)}    # reply lacks ok/error
+        if op == "fetch":
+            return {"ok": True, "value": msg.get("key")}
+        return {"ok": False, "error": f"bad op {op}"}
+
+
+def _request(host, port, token, msg):
+    raise NotImplementedError
+
+
+def client_store():
+    return _request("h", 1, "t", {"op": "store", "key": "k"})
+
+
+def client_flush():
+    return _request("h", 1, "t", {"op": "flush"})   # no handler

@@ -1,0 +1,27 @@
+"""known-good: client frames and handler reads agree."""
+
+
+class Server:
+    def __init__(self, store):
+        self.store = store
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "store":
+            value = msg["payload"]
+            return {"ok": True, "stored": bool(value)}
+        if op == "fetch":
+            return {"ok": True, "value": msg.get("key")}
+        return {"ok": False, "error": f"bad op {op}"}
+
+
+def _request(host, port, token, msg):
+    raise NotImplementedError
+
+
+def client_store(value):
+    return _request("h", 1, "t", {"op": "store", "payload": value})
+
+
+def client_fetch(key):
+    return _request("h", 1, "t", {"op": "fetch", "key": key})

@@ -1,0 +1,84 @@
+"""Suite-wide sanitizer: every test must clean up its threads and
+sockets.
+
+The real-socket suites (test_drain_p2p.py, test_dataplane.py) spin up
+head servers, blob servers and worker threads; a test that forgets
+``shutdown()`` strands daemon threads and listening-socket fds that
+silently poison later tests (port exhaustion, cross-test chatter).
+This autouse fixture snapshots live threads and open socket fds before
+each test and fails the test if new ones survive a short grace period.
+
+Grace period: worker loops exit on their poll cadence and daemon
+servers wind down asynchronously, so teardown is given a few seconds
+to converge before the leak is called real.  The check exits as soon
+as everything is clean -- a leak-free test pays ~0ms.
+"""
+import os
+import threading
+import time
+
+import pytest
+
+_GRACE_S = 8.0
+
+# Thread-name prefixes that may legitimately outlive a single test
+# (none today; extend deliberately, with a comment, never to shut the
+# sanitizer up).
+_ALLOWED_THREAD_PREFIXES: tuple = ()
+
+
+def _live_threads():
+    return {t for t in threading.enumerate()
+            if t.is_alive()
+            and not any(t.name.startswith(p)
+                        for p in _ALLOWED_THREAD_PREFIXES)}
+
+
+def _open_socket_fds():
+    """fd -> 'socket:[inode]' via /proc; degrades to empty off-Linux
+    (the thread check still runs there)."""
+    out = {}
+    try:
+        fds = os.listdir("/proc/self/fd")
+    except OSError:
+        return out
+    for fd in fds:
+        try:
+            target = os.readlink(f"/proc/self/fd/{fd}")
+        except OSError:
+            continue  # fd closed between listdir and readlink
+        if target.startswith("socket:"):
+            out[fd] = target
+    return out
+
+
+@pytest.fixture(autouse=True)
+def no_thread_or_socket_leaks(request):
+    before_threads = _live_threads()
+    before_socks = _open_socket_fds()
+    yield
+    deadline = time.monotonic() + _GRACE_S
+    while True:
+        new_threads = {t for t in _live_threads() - before_threads
+                       if t.is_alive()}
+        # an fd number can be recycled for a different socket inode:
+        # compare fd->inode pairs, not just fd presence
+        new_socks = {fd: tgt
+                     for fd, tgt in _open_socket_fds().items()
+                     if before_socks.get(fd) != tgt}
+        if not new_threads and not new_socks:
+            return
+        if time.monotonic() > deadline:
+            break
+        time.sleep(0.05)
+    lines = []
+    if new_threads:
+        lines.append("leaked threads: "
+                     + ", ".join(sorted(t.name for t in new_threads)))
+    if new_socks:
+        lines.append("leaked socket fds: "
+                     + ", ".join(f"{fd}={tgt}"
+                                 for fd, tgt in sorted(new_socks.items())))
+    pytest.fail(f"{request.node.nodeid} leaked resources after "
+                f"{_GRACE_S:.0f}s grace -- " + "; ".join(lines),
+                pytrace=False)

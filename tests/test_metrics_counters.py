@@ -1,0 +1,131 @@
+"""Drain-plane counters exported through the head's `metrics` op and
+the K8s custom-metrics adapter (ROADMAP: the store tracked
+moves_aborted / relay_fallbacks / head_relayed_bytes / replica_gc but
+nothing reported them)."""
+import json
+import socket
+import threading
+import time
+import urllib.request
+
+import pytest
+
+from test_drain_p2p import _Peer, _finish_drain
+from repro.core import SyndeoCluster
+from repro.core.metrics_adapter import (DEFAULT_METRICS, MetricsPoller,
+                                        make_server)
+from repro.core.rendezvous import FileRendezvous
+from repro.core.scheduler import SchedulerConfig
+from repro.core.worker import HeadServer
+
+COUNTERS = ("syndeo_moves_aborted", "syndeo_relay_fallbacks",
+            "syndeo_head_relayed_bytes", "syndeo_replica_gc")
+
+
+@pytest.fixture()
+def proto(tmp_path):
+    cluster = SyndeoCluster(
+        rendezvous=FileRendezvous(str(tmp_path)),
+        scheduler_config=SchedulerConfig(enable_speculation=False,
+                                         migration_timeout_s=0.4))
+    server = HeadServer(cluster)
+    server.attach()
+    peers = {name: _Peer(cluster, server, name)
+             for name in ("tcp-src", "tcp-d1", "tcp-d2")}
+    ref = peers["tcp-src"].add_blob(b"\xab" * 64_000, "obj-fat")
+    yield cluster, server, peers, ref
+    for p in peers.values():
+        p.shutdown()
+    server.shutdown()
+    cluster.shutdown()
+
+
+def _counters(server):
+    reply = server.dispatch({"op": "metrics"})
+    assert reply["ok"]
+    return {k: reply[k] for k in COUNTERS}
+
+
+def test_metrics_op_reports_counters_as_ints(proto):
+    _cluster, server, _peers, _ref = proto
+    vals = _counters(server)
+    assert all(isinstance(v, int) for v in vals.values())
+    assert all(v == 0 for v in vals.values()), vals
+
+
+def test_counters_move_during_chaos_drain(proto):
+    """Partition chaos: the drain's direct push black-holes, the move
+    aborts and degrades to head relay, and afterwards a client-read
+    head replica is swept -- all four counters must move, and must be
+    visible through the same `metrics` op the adapter polls."""
+    cluster, server, peers, ref = proto
+    src = peers["tcp-src"]
+    before = _counters(server)
+
+    assert server.dispatch({"op": "drain", "worker": src.name})["ok"]
+    moves = src.poll().get("migrations", [])
+    assert moves
+    dst = moves[0]["node"]
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        dead = s.getsockname()             # bound, never accepting
+        src.run_directives(moves, endpoint_override=dead)
+    deadline = time.time() + 10
+    while time.time() < deadline:          # relay thread lands the move
+        if dst in cluster.store.locations(ref):
+            break
+        time.sleep(0.02)
+    assert _finish_drain(cluster, server, src.name)
+
+    after_drain = _counters(server)
+    assert after_drain["syndeo_moves_aborted"] \
+        > before["syndeo_moves_aborted"]
+    assert after_drain["syndeo_relay_fallbacks"] \
+        > before["syndeo_relay_fallbacks"]
+    assert after_drain["syndeo_head_relayed_bytes"] \
+        > before["syndeo_head_relayed_bytes"]
+
+    # client read materializes a head replica; the refcount drop sweeps
+    # it (release keeps the owner serving) -- replica_gc must tick
+    cluster.store.add_ref(ref)
+    cluster.store.get("head", ref, capability=None)
+    cluster.store.mark_client_read(ref)
+    cluster.store.release(ref)
+    after_gc = _counters(server)
+    assert after_gc["syndeo_replica_gc"] > before["syndeo_replica_gc"]
+
+
+def test_default_metrics_include_drain_counters():
+    for name in COUNTERS:
+        assert name in DEFAULT_METRICS
+
+
+def test_adapter_serves_drain_counters(tmp_path):
+    """The /metrics face (flat JSON) and the custom.metrics.k8s.io
+    resource path both publish the counters the poller saw."""
+    poller = MetricsPoller(str(tmp_path), "c0")  # never started: inject
+    poller.latest = {"ok": True, "syndeo_moves_aborted": 3,
+                     "syndeo_relay_fallbacks": 1,
+                     "syndeo_head_relayed_bytes": 64018,
+                     "syndeo_replica_gc": 2}
+    server = make_server(poller, DEFAULT_METRICS)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    port = server.server_address[1]
+    try:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=5) as resp:
+            flat = json.load(resp)
+        assert flat["syndeo_moves_aborted"] == 3
+        assert flat["syndeo_head_relayed_bytes"] == 64018
+        url = (f"http://127.0.0.1:{port}/apis/custom.metrics.k8s.io/"
+               f"v1beta1/namespaces/default/pods/*/"
+               f"syndeo_relay_fallbacks")
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            payload = json.load(resp)
+        assert payload["kind"] == "MetricValueList"
+        assert payload["items"][0]["valueFloat"] == 1.0
+    finally:
+        server.shutdown()
+        server.server_close()
+        thread.join(timeout=5)
