@@ -28,17 +28,30 @@ the sim's per-link cost model:
    relay -- scale-down under load is exactly when the head's NIC must
    stay out of the data path.
 
+4. *Head plane* (sharded + batched control plane): decision throughput of
+   the head scheduler under a steady-state arrival stream at large worker
+   counts -- the seed paid a full-graph ready scan plus a per-finish twin
+   scan per event under the one big lock; the sharded ready queues make
+   each event O(backlog) heap work. Plus the wire side: a worker's
+   result ack piggybacks on its poll as one `batch` frame, halving
+   control round trips on the hot path.
+
 Run:  PYTHONPATH=src python benchmarks/dataplane_bench.py [--quick]
       PYTHONPATH=src python benchmarks/dataplane_bench.py --dataplane-smoke
       PYTHONPATH=src python benchmarks/dataplane_bench.py --drain-p2p-smoke
+      PYTHONPATH=src python benchmarks/dataplane_bench.py --headplane-smoke
 """
 from __future__ import annotations
 
 import argparse
+import time
+from collections import deque
 from typing import Dict, List
 
-from repro.core import (ObjectRef, SchedulerConfig, SimCluster, SimCostModel,
-                        TaskSpec)
+from repro.core import (ObjectRef, Scheduler, SchedulerConfig, SimCluster,
+                        SimCostModel, SyndeoCluster, TaskSpec, WorkerInfo)
+from repro.core.object_store import GlobalObjectStore
+from repro.core.worker import HeadServer
 
 MB = 1_000_000
 
@@ -237,6 +250,170 @@ def drain_p2p_smoke() -> int:
     return 0 if ok else 1
 
 
+# ------------------------------------------- head plane: sharded + batched
+
+
+def decision_run(shards: int, n_workers: int, total_tasks: int,
+                 backlog: int = 256, n_tenants: int = 8) -> Dict[str, float]:
+    """Control-plane decision throughput: a steady-state arrival stream
+    (the ready backlog is refilled as tasks finish) drives the REAL
+    Scheduler event loop with `n_workers` registered workers and
+    `n_tenants` tenants on the DRF fair path. No payloads, no data plane:
+    this isolates the head's per-event decision cost. `shards=1` is the
+    seed-equivalent baseline (full ready_tasks() graph scan per event);
+    `shards>1` takes the incremental per-shard ready heaps."""
+    store = GlobalObjectStore(shards=shards)
+    cfg = SchedulerConfig(shards=shards, enable_speculation=False,
+                          heartbeat_timeout=1e9)
+    launched: deque = deque()
+    sched = Scheduler(store, lambda t, w: launched.append(t.id),
+                      lambda t, w: None, cfg)
+    for i in range(n_workers):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    submitted = 0
+
+    def submit_one():
+        nonlocal submitted
+        sched.submit(TaskSpec(fn=_noop, name=f"t{submitted}",
+                              tenant_id=f"tenant{submitted % n_tenants}"))
+        submitted += 1
+
+    t0 = time.perf_counter()
+    while submitted < min(n_workers + backlog, total_tasks):
+        submit_one()
+    finished = 0
+    while finished < total_tasks and launched:
+        tid = launched.popleft()
+        sched.on_task_finished(tid, ObjectRef(f"obj-{tid}"))
+        finished += 1
+        if submitted < total_tasks:
+            submit_one()           # keep the arrival stream steady-state
+    elapsed = max(time.perf_counter() - t0, 1e-9)
+    assert finished == total_tasks, \
+        f"decision loop stalled at {finished}/{total_tasks} (shards={shards})"
+    return {"decisions_per_s": finished / elapsed,
+            "elapsed_s": elapsed,
+            "launched": float(sched.stats["launched"]),
+            "finished": float(sched.stats["finished"])}
+
+
+def wire_run(batched: bool, n_workers: int = 16,
+             n_tasks: int = 400) -> Dict[str, float]:
+    """Control-wire round trips on the hot result/poll path, measured
+    through the in-process HeadServer.dispatch: `batched` folds each
+    worker's result_meta ack into its next poll as ONE `batch` frame
+    (one socket round trip, one cluster-lock acquisition); the baseline
+    sends them as two frames, exactly the seed wire protocol."""
+    cluster = SyndeoCluster(scheduler_config=SchedulerConfig(
+        shards=8 if batched else 1, enable_speculation=False,
+        heartbeat_timeout=1e9))
+    head = HeadServer(cluster)
+    head.attach()
+    try:
+        wids = [head.dispatch({"op": "join", "worker": ""})["worker"]
+                for _ in range(n_workers)]
+        for i in range(n_tasks):
+            cluster.submit(_noop, name=f"t{i}")
+        frames = 0
+        done = 0
+        pending: Dict[str, object] = {w: None for w in wids}
+        t0 = time.perf_counter()
+        for _ in range(50 * (n_tasks // n_workers + 2)):
+            if done >= n_tasks:
+                break
+            for w in wids:
+                prev = pending[w]
+                if batched and prev is not None:
+                    r = head.dispatch({"op": "batch", "worker": w, "ops": [
+                        {"op": "result_meta", "task": prev, "worker": w,
+                         "size": 128},
+                        {"op": "poll", "worker": w}]})
+                    frames += 1
+                    done += 1
+                    got = r["replies"][-1]
+                else:
+                    if prev is not None:
+                        head.dispatch({"op": "result_meta", "task": prev,
+                                       "worker": w, "size": 128})
+                        frames += 1
+                        done += 1
+                    got = head.dispatch({"op": "poll", "worker": w})
+                    frames += 1
+                pending[w] = got.get("task")
+        elapsed = max(time.perf_counter() - t0, 1e-9)
+    finally:
+        head.shutdown()
+        cluster.shutdown()
+    assert done == n_tasks, f"wire loop stalled at {done}/{n_tasks}"
+    return {"frames": float(frames), "results_per_s": done / elapsed,
+            "frames_per_result": frames / max(done, 1)}
+
+
+def bench_headplane(worker_counts: List[int],
+                    shards: int = 8) -> List[Dict]:
+    rows = []
+    for n in worker_counts:
+        total = max(2 * n, 1000)
+        base = decision_run(1, n, total)
+        sharded = decision_run(shards, n, total)
+        rows.append({"workers": n, "total_tasks": total,
+                     "base": base, "sharded": sharded})
+    return rows
+
+
+def print_headplane(rows: List[Dict], wire_single: Dict[str, float],
+                    wire_batched: Dict[str, float]):
+    print("\n== head plane: decisions/sec vs worker count "
+          "(shards=1 baseline vs sharded) ==")
+    print(f"{'workers':>8} {'tasks':>7} {'seed dec/s':>11} "
+          f"{'sharded dec/s':>14} {'speedup':>8}")
+    for r in rows:
+        speed = (r["sharded"]["decisions_per_s"]
+                 / max(r["base"]["decisions_per_s"], 1e-9))
+        print(f"{r['workers']:>8} {r['total_tasks']:>7} "
+              f"{r['base']['decisions_per_s']:>11.0f} "
+              f"{r['sharded']['decisions_per_s']:>14.0f} {speed:>7.1f}x")
+    print("\n== head wire: result ack + poll, singles vs one batch frame ==")
+    print(f"{'mode':>8} {'frames/result':>14} {'results/s':>10}")
+    for name, r in (("singles", wire_single), ("batch", wire_batched)):
+        print(f"{name:>8} {r['frames_per_result']:>14.2f} "
+              f"{r['results_per_s']:>10.0f}")
+
+
+def headplane_smoke() -> int:
+    """CI gate: at 1k simulated workers the sharded control plane must
+    sustain >= 4x the seed's decision throughput (same launched/finished
+    counts -- the shards change the cost, never the outcome), and the
+    batched wire must spend meaningfully fewer frames per result."""
+    rows = bench_headplane([100, 1000])
+    wire_single = wire_run(batched=False)
+    wire_batched = wire_run(batched=True)
+    print_headplane(rows, wire_single, wire_batched)
+    ok = True
+    for r in rows:
+        if (r["base"]["launched"] != r["sharded"]["launched"]
+                or r["base"]["finished"] != r["sharded"]["finished"]):
+            print(f"FAIL: sharded arm diverged at {r['workers']} workers "
+                  f"(launched {r['sharded']['launched']:.0f} vs "
+                  f"{r['base']['launched']:.0f})")
+            ok = False
+    gate = rows[-1]
+    ratio = (gate["sharded"]["decisions_per_s"]
+             / max(gate["base"]["decisions_per_s"], 1e-9))
+    if ratio < 4.0:
+        print(f"FAIL: sharded head only {ratio:.1f}x the seed at "
+              f"{gate['workers']} workers (need >= 4x)")
+        ok = False
+    if (wire_batched["frames_per_result"]
+            > 0.75 * wire_single["frames_per_result"]):
+        print(f"FAIL: batch frames/result "
+              f"{wire_batched['frames_per_result']:.2f} not meaningfully "
+              f"below singles {wire_single['frames_per_result']:.2f}")
+        ok = False
+    print("\nheadplane smoke:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
 # --------------------------------------------------------------------- smoke
 
 
@@ -283,16 +460,22 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--dataplane-smoke", action="store_true")
     ap.add_argument("--drain-p2p-smoke", action="store_true")
+    ap.add_argument("--headplane-smoke", action="store_true")
     args = ap.parse_args()
     if args.dataplane_smoke:
         raise SystemExit(smoke())
     if args.drain_p2p_smoke:
         raise SystemExit(drain_p2p_smoke())
+    if args.headplane_smoke:
+        raise SystemExit(headplane_smoke())
     counts = [2, 4, 8] if args.quick else [2, 4, 8, 16, 32]
     rows = bench_shuffle(counts, obj_bytes=4 * MB)
     print_shuffle(rows)
     print_drain(drain_run())
     print_drain_plane(drain_plane_run("p2p"), drain_plane_run("relay"))
+    head_counts = [64, 256] if args.quick else [64, 256, 1000]
+    print_headplane(bench_headplane(head_counts),
+                    wire_run(batched=False), wire_run(batched=True))
 
 
 if __name__ == "__main__":

@@ -9,6 +9,12 @@ the literal reply dicts it returns.  Client sites are ``_request`` /
 dict literal argument, or a local variable assembled from a dict
 literal plus ``var["k"] = ...`` updates).
 
+Batch sub-ops are wire frames too: a dict literal carrying a constant
+``"op"`` key that is queued for a later ``batch`` frame (via
+``.append(...)``/``.extend(...)``) or written inline in the list under
+an ``"ops"`` key is cross-checked exactly like a top-level client send
+-- a malformed sub-op must fail lint here, not at dispatch time.
+
 SYN-W001  op sent by a client but matched by no handler branch.
 SYN-W002  field a handler requires that no client site for that op
           ever sends (ops never sent in the analyzed tree are skipped:
@@ -24,6 +30,9 @@ from typing import Dict, List, Optional, Set, Tuple
 from repro.analysis.model import CodeModel, Finding
 
 CLIENT_CALL_NAMES = {"_request", "_rpc"}
+
+#: list mutators that queue a sub-op for a later `batch` frame
+BATCH_QUEUE_METHODS = {"append", "extend"}
 
 
 @dataclass
@@ -53,6 +62,7 @@ def check_wire(model: CodeModel) -> List[Finding]:
         for h in _extract_handlers(fn):
             handlers.setdefault(h.op, []).append(h)
         sends.extend(_extract_sends(fn))
+        sends.extend(_extract_batch_subops(fn))
 
     findings: List[Finding] = []
     for s in sends:
@@ -218,6 +228,44 @@ def _collect_branch(info: HandlerInfo, stmts: List[ast.stmt],
 
 
 # -- client-site extraction ----------------------------------------------
+
+
+def _extract_batch_subops(fn) -> List[SendSite]:
+    """Send sites hiding inside `batch` frames: dict literals with a
+    constant ``"op"`` key that are (a) queued through a list's
+    ``.append``/``.extend`` for a later batch (the worker's pending-ack
+    queue pattern) or (b) written inline in the list under an ``"ops"``
+    key. Each becomes an ordinary SendSite so SYN-W001/W002 hold for
+    sub-ops exactly as for top-level frames."""
+    out: List[SendSite] = []
+
+    def emit(d: ast.Dict):
+        keys = _dict_keys(d)
+        if keys is None or "op" not in keys:
+            return
+        op = None
+        for k, v in zip(d.keys, d.values):
+            if _const_str(k) == "op":
+                op = _const_str(v)
+        if op is None:
+            return                 # dynamic sub-op name: nothing to check
+        out.append(SendSite(op=op, file=fn.file, function=fn.qualname,
+                            line=d.lineno, keys=keys))
+
+    for n in ast.walk(fn.node):
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                and n.func.attr in BATCH_QUEUE_METHODS):
+            for a in n.args:
+                for d in ast.walk(a):
+                    if isinstance(d, ast.Dict):
+                        emit(d)
+        elif isinstance(n, ast.Dict):
+            for k, v in zip(n.keys, n.values):
+                if k is not None and _const_str(k) == "ops":
+                    for d in ast.walk(v):
+                        if isinstance(d, ast.Dict):
+                            emit(d)
+    return out
 
 
 def _extract_sends(fn) -> List[SendSite]:

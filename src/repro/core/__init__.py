@@ -15,8 +15,9 @@ from repro.core.object_store import (GlobalObjectStore, InProcessTransport,
 from repro.core.scheduler import (DrainState, RateLimitExceeded, Scheduler,
                                   SchedulerConfig, TenantState, TokenBucket,
                                   WorkerIndex, WorkerInfo)
-from repro.core.security import (Capability, NonceCache, SecurityError,
-                                 Tenant, TransferTicket, UnprivilegedProfile)
+from repro.core.security import (Capability, HybridClock, NonceCache,
+                                 SecurityError, Tenant, TransferTicket,
+                                 UnprivilegedProfile, set_clock, wall_now)
 from repro.core.simulator import (SimCluster, SimCostModel,
                                   lognormal_provision_latency)
 from repro.core.task_graph import Task, TaskSpec, TaskState
@@ -30,8 +31,8 @@ __all__ = [
     "Scheduler", "SchedulerConfig", "TenantState", "TokenBucket",
     "TransferTicket", "WorkerIndex",
     "WorkerInfo",
-    "Capability", "NonceCache", "SecurityError", "Tenant",
-    "UnprivilegedProfile", "SimCluster",
+    "Capability", "HybridClock", "NonceCache", "SecurityError", "Tenant",
+    "UnprivilegedProfile", "set_clock", "wall_now", "SimCluster",
     "SimCostModel", "Task", "TaskSpec", "TaskState",
     "lognormal_provision_latency",
 ]

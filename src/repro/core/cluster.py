@@ -66,7 +66,9 @@ class SyndeoCluster:
         self.profile = profile or UnprivilegedProfile(allow_root=True)
         self.profile.enforce()
         self.rendezvous = rendezvous or InMemoryRendezvous()
-        self.store = GlobalObjectStore()
+        # the directory's shard count rides the scheduler config: one knob
+        # sizes both halves of the control plane (shards=1 == the seed)
+        self.store = GlobalObjectStore(shards=scheduler_config.shards)
         self._nonces = NonceCache()   # replay guard for join handshakes
         self._lock = threading.RLock()
         self._queues: Dict[str, "queue.Queue"] = {}
@@ -292,6 +294,7 @@ class SyndeoCluster:
                             cur.state = TaskState.READY
                             cur.output = None
                             cur.attempts = 0
+                            self.scheduler._enqueue_ready(cur)
                             self.scheduler.schedule()
                     continue
             if ev is not None:

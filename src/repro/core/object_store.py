@@ -122,6 +122,7 @@ import struct
 import threading
 import time
 import uuid
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Set, Tuple
@@ -282,15 +283,18 @@ class NodeStore:
                     return f.read()
         raise KeyError(f"object {ref.id} not on node {self.node_id}")
 
-    def import_blob(self, ref: ObjectRef, blob: bytes):
-        """Accept migrated bytes verbatim (counterpart of export_blob)."""
+    def import_blob(self, ref: ObjectRef, blob: bytes) -> bool:
+        """Accept migrated bytes verbatim (counterpart of export_blob).
+        Returns whether the blob freshly landed -- False when a copy was
+        already held, so a retried push never double-counts a receive."""
         with self._lock:
             if ref.id in self._mem or ref.id in self._spilled:
-                return
+                return False
             self._mem[ref.id] = blob
             self._used += len(blob)
             self.stats["puts"] += 1
             self._maybe_spill()
+        return True
 
     def spill(self, ref: ObjectRef) -> bool:
         """Force one in-memory blob to disk now (tenant-quota spill path).
@@ -489,10 +493,13 @@ class RemoteNodeStore:
         return self._transport.fetch(self.node_id, ref,
                                      self._ticket(ref.id, "get"))
 
-    def import_blob(self, ref: ObjectRef, blob: bytes):
+    def import_blob(self, ref: ObjectRef, blob: bytes) -> bool:
         self.stats["puts"] += 1
         self._transport.push(self.node_id, ref, blob,
                              self._ticket(ref.id, "put"))
+        # freshness is the remote store's call; the push either landed or
+        # deduplicated there -- report "landed" for the caller's purposes
+        return True
 
     def put_blob(self, ref: ObjectRef, blob: bytes) -> int:
         self.import_blob(ref, blob)
@@ -541,6 +548,31 @@ class _Move:
     started: float = field(default_factory=time.monotonic)
 
 
+def shard_key(key: str, shards: int) -> int:
+    """Stable shard index for a directory key. crc32, not ``hash()``:
+    PYTHONHASHSEED must never move an object between shards across runs
+    (tests and operators reason about shard placement by object id)."""
+    if shards <= 1:
+        return 0
+    return zlib.crc32(key.encode("utf-8")) % shards
+
+
+class _Shard:
+    """One partition of the head directory: its own lock plus its slice
+    of the object directory, the in-flight moves, and the client-read GC
+    hints. Everything keyed by object id lives here; cluster-wide state
+    (nodes, quotas, usage, link accounting, stats) stays behind the
+    store's meta lock. Lock order is strictly shard -> meta."""
+
+    __slots__ = ("lock", "dir", "moves", "client_reads")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.dir: Dict[str, _Directory] = {}
+        self.moves: Dict[str, _Move] = {}
+        self.client_reads: Set[str] = set()
+
+
 class GlobalObjectStore:
     """Head-side directory over the per-node stores.
 
@@ -549,19 +581,23 @@ class GlobalObjectStore:
     communication-cost model reads these counters).
     """
 
-    def __init__(self, transport: Optional[Transport] = None):
-        self._dir: Dict[str, _Directory] = {}
+    def __init__(self, transport: Optional[Transport] = None,
+                 shards: int = 1):
+        # the directory is partitioned by shard_key(object_id): every
+        # transaction keyed by one object takes only its shard's lock.
+        # shards=1 (the default) is the seed-equivalent baseline -- one
+        # shard, one lock, identical serialization of every transaction.
+        self.shards = max(1, int(shards))
+        self._shards = [_Shard() for _ in range(self.shards)]
         self._nodes: Dict[str, NodeStore] = {}
+        # meta lock: cluster-wide (non-object-keyed) state -- node table,
+        # quotas, usage, link accounting, stats. Lock order shard -> meta.
         self._lock = threading.Lock()
         self._migration_guard = None   # optional (capability, token) pair
         self._token: Optional[str] = None            # set_access_guard
         self._require_tickets = False                # set_transfer_guard
         self._quotas: Dict[str, TenantQuota] = {}
         self._usage: Dict[str, Dict[str, int]] = {}  # tenant -> bytes/refs
-        self._moves: Dict[str, _Move] = {}           # oid -> in-flight move
-        # GC hints: head copies that exist only to serve a client read --
-        # dropped as soon as the refcount moves (see mark_client_read)
-        self._client_reads: Set[str] = set()
         self.transport = transport or InProcessTransport()
         # data-plane load accounting: cumulative bytes over each node's
         # link and per (src, dst) pair -- source choice and the drain
@@ -577,6 +613,30 @@ class GlobalObjectStore:
                       "moves_started": 0, "moves_committed": 0,
                       "moves_aborted": 0, "relay_fallbacks": 0,
                       "replica_gc": 0}
+
+    def _shard(self, oid: str) -> _Shard:
+        return self._shards[shard_key(oid, self.shards)]
+
+    def directory_snapshot(self) -> Tuple[Dict[str, Tuple[Set[str],
+                                                          Optional[str], int]],
+                                          Dict[str, Any],
+                                          Dict[str, Tuple[str, str]]]:
+        """Point-in-time view for invariant checkers and tooling:
+        ({oid: (locations, owner, refcount)}, {node_id: store},
+        {oid: (move_src, move_dst)}). Each shard is snapshotted under its
+        own lock; cross-shard atomicity is not part of the directory's
+        contract (objects never migrate between shards)."""
+        directory: Dict[str, Tuple[Set[str], Optional[str], int]] = {}
+        moves: Dict[str, Tuple[str, str]] = {}
+        for sh in self._shards:
+            with sh.lock:
+                for oid, e in sh.dir.items():
+                    directory[oid] = (set(e.locations), e.owner, e.refcount)
+                for oid, mv in sh.moves.items():
+                    moves[oid] = (mv.src, mv.dst)
+        with self._lock:
+            nodes = dict(self._nodes)
+        return directory, nodes, moves
 
     # -- multi-tenancy: guard, quota, accounting -------------------------------
 
@@ -618,11 +678,13 @@ class GlobalObjectStore:
         data plane), then the least-trafficked link, then name order
         (determinism). The single policy behind choose_source, the head's
         ticketed poll replies, and any future placement term."""
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
+            locs = set(e.locations) if e else None
+        if locs is None:
+            return []
         with self._lock:
-            e = self._dir.get(ref.id)
-            if e is None:
-                return []
-            srcs = [n for n in e.locations if n != dst and n in self._nodes]
+            srcs = [n for n in locs if n != dst and n in self._nodes]
             return sorted(srcs, key=lambda n: (n == "head",
                                                self._link_bytes.get(n, 0), n))
 
@@ -651,8 +713,8 @@ class GlobalObjectStore:
             raise SecurityError(
                 f"cross-tenant fetch denied: tenant {acting_tenant!r} "
                 f"cannot read an object of tenant {tenant!r}")
-        with self._lock:
-            e = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
             if e is None or dst in e.locations:
                 return None
         src = src if src is not None else self.choose_source(ref, dst)
@@ -679,9 +741,13 @@ class GlobalObjectStore:
         planner's quota-aware destination signal (TenantQuota
         .max_bytes_per_node): a move must not land where the tenant is
         already memory-rich."""
-        with self._lock:
-            return sum(e.size for e in self._dir.values()
-                       if e.tenant == tenant and node_id in e.locations)
+        total = 0
+        for sh in self._shards:
+            with sh.lock:
+                total += sum(e.size for e in sh.dir.values()
+                             if e.tenant == tenant
+                             and node_id in e.locations)
+        return total
 
     def tenant_quota_fraction(self, tenant: str) -> float:
         """Live bytes / byte quota (0.0 when unlimited) -- the pressure
@@ -700,8 +766,8 @@ class GlobalObjectStore:
 
     def tenant_of(self, ref_or_id) -> Optional[str]:
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
-        with self._lock:
-            e = self._dir.get(oid)
+        with self._shard(oid).lock:
+            e = self._shard(oid).dir.get(oid)
             return e.tenant if e else None
 
     def _check_capability(self, capability: Optional[Capability],
@@ -754,21 +820,28 @@ class GlobalObjectStore:
         lost = set()
         with self._lock:
             self._nodes.pop(node_id, None)
-            # abort every in-flight move touching the node: a crashed
-            # source or destination must never strand half a move (a push
-            # that DID land before the source died is recovered when the
-            # destination's late ack arrives -- see confirm_replica)
-            for oid in [o for o, mv in self._moves.items()
-                        if node_id in (mv.src, mv.dst)]:
-                del self._moves[oid]
-                self.stats["moves_aborted"] += 1
-            for oid, entry in self._dir.items():
-                entry.locations.discard(node_id)
-                if entry.owner == node_id:
-                    # owner handoff to any surviving holder
-                    entry.owner = next(iter(entry.locations), None)
-                if not entry.locations:
-                    lost.add(oid)
+        aborted = 0
+        for sh in self._shards:
+            with sh.lock:
+                # abort every in-flight move touching the node: a crashed
+                # source or destination must never strand half a move (a
+                # push that DID land before the source died is recovered
+                # when the destination's late ack arrives -- see
+                # confirm_replica)
+                for oid in [o for o, mv in sh.moves.items()
+                            if node_id in (mv.src, mv.dst)]:
+                    del sh.moves[oid]
+                    aborted += 1
+                for oid, entry in sh.dir.items():
+                    entry.locations.discard(node_id)
+                    if entry.owner == node_id:
+                        # owner handoff to any surviving holder
+                        entry.owner = next(iter(entry.locations), None)
+                    if not entry.locations:
+                        lost.add(oid)
+        if aborted:
+            with self._lock:
+                self.stats["moves_aborted"] += aborted
         return lost
 
     def has_node(self, node_id: str) -> bool:
@@ -814,13 +887,15 @@ class GlobalObjectStore:
             # "spill" admission requires an actual spill dir on the node:
             # without one the blob would silently stay in memory, defeating
             # the quota -- unwind the registration and reject instead
-            with self._lock:
-                e2 = self._dir.get(ref.id)
-                if e2 is not None and e2.locations == {node_id}:
-                    self._usage_add(e2.tenant, -e2.size, -1)
-                    del self._dir[ref.id]
-                self.stats["quota_spills"] -= 1
-                self.stats["quota_rejects"] += 1
+            sh = self._shard(ref.id)
+            with sh.lock:
+                e2 = sh.dir.get(ref.id)
+                with self._lock:
+                    if e2 is not None and e2.locations == {node_id}:
+                        self._usage_add(e2.tenant, -e2.size, -1)
+                        del sh.dir[ref.id]
+                    self.stats["quota_spills"] -= 1
+                    self.stats["quota_rejects"] += 1
             self._nodes[node_id].delete(ref)
             raise QuotaExceededError(
                 f"tenant {tenant!r} over byte quota and node {node_id!r} "
@@ -834,8 +909,9 @@ class GlobalObjectStore:
         concurrent cross-tenant puts of the same id cannot both pass the
         check and overwrite each other's blobs (the loser raises without
         ever writing). Returns True when the quota verdict is "spill"."""
-        with self._lock:
-            e = self._dir.get(ref.id)
+        sh = self._shard(ref.id)
+        with sh.lock:
+            e = sh.dir.get(ref.id)
             if e is not None and e.tenant != tenant:
                 raise SecurityError(
                     f"cross-tenant put denied: object {ref.id} belongs to "
@@ -844,20 +920,22 @@ class GlobalObjectStore:
                 # already-admitted object: only the size delta is accounted
                 # (no re-admission -- rolling back a revival would lose the
                 # blob a waiting task is about to read)
-                self._usage_add(e.tenant, size - e.size, 0)
+                with self._lock:
+                    self._usage_add(e.tenant, size - e.size, 0)
                 e.locations.add(node_id)
                 e.size = size
                 e.producer_task = producer_task or e.producer_task
                 if e.owner is None:
                     e.owner = node_id
                 return False
-            spill = self._quota_verdict(tenant, size,
-                                        new_entry=True) == "spill"
-            self._usage_add(tenant, size, 1)
-            self._dir[ref.id] = _Directory(locations={node_id},
-                                           producer_task=producer_task,
-                                           size=size, owner=node_id,
-                                           tenant=tenant)
+            with self._lock:
+                spill = self._quota_verdict(tenant, size,
+                                            new_entry=True) == "spill"
+                self._usage_add(tenant, size, 1)
+            sh.dir[ref.id] = _Directory(locations={node_id},
+                                        producer_task=producer_task,
+                                        size=size, owner=node_id,
+                                        tenant=tenant)
             return spill
 
     def record(self, node_id: str, size: int,
@@ -889,8 +967,8 @@ class GlobalObjectStore:
         A presented capability is verified against the object's tenant;
         with the transfer guard installed, worker-destined transfers also
         need a `ticket` (see fetch)."""
-        with self._lock:
-            entry = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            entry = self._shard(ref.id).dir.get(ref.id)
             local = node_id in (entry.locations if entry else ())
             tenant = entry.tenant if entry else ref.tenant
         self._check_capability(capability, ref.id, "get", tenant)
@@ -910,8 +988,9 @@ class GlobalObjectStore:
         installed, a worker-destined fetch without a ticket whose MAC binds
         this exact (object, source, destination, tenant) is refused -- the
         head's own store stays trusted, everything else pays the toll."""
-        with self._lock:
-            entry = self._dir.get(ref.id)
+        sh = self._shard(ref.id)
+        with sh.lock:
+            entry = sh.dir.get(ref.id)
             if entry is None:
                 raise KeyError(f"object {ref.id} is not in the directory")
             if node_id in entry.locations:
@@ -951,26 +1030,35 @@ class GlobalObjectStore:
             raise KeyError(f"object {ref.id} has no live copies")
         blob = self.transport.fetch(self._nodes[src], ref, ticket)
         self._nodes[node_id].import_blob(ref, blob)
-        released = False
-        with self._lock:
-            e = self._dir.get(ref.id)
+        released, fresh = False, False
+        with sh.lock:
+            e = sh.dir.get(ref.id)
             if e is None:              # released mid-fetch
                 released = True
             else:
                 # the directory size is authoritative (it may be a modeled
                 # size_hint larger than the physical token blob)
                 size = e.size if e.size else len(blob)
+                # attempt-idempotent accounting: a concurrent/retried
+                # fetch of the same copy commits the location once, so
+                # transfer and link counters never double-charge one blob
+                fresh = node_id not in e.locations
                 e.locations.add(node_id)
-                self.stats["transfers"] += 1
-                self.stats["transfer_bytes"] += size
-                if src == "head":
-                    # bytes the head's NIC served to the data plane -- the
-                    # p2p-vs-relay benchmarks read exactly this counter
-                    self.stats["head_relayed_bytes"] += size
+                if fresh:
+                    with self._lock:
+                        self.stats["transfers"] += 1
+                        self.stats["transfer_bytes"] += size
+                        if src == "head":
+                            # bytes the head's NIC served to the data
+                            # plane -- the p2p-vs-relay benchmarks read
+                            # exactly this counter
+                            self.stats["head_relayed_bytes"] += size
         if released:
             # drop the stale import outside the lock: the node may be a
             # remote proxy, making this a TCP round-trip
             self._nodes[node_id].delete(ref)
+            return 0
+        if not fresh:
             return 0
         self.note_link_bytes(src, node_id, size)
         return size
@@ -981,9 +1069,10 @@ class GlobalObjectStore:
         proxies) before the directory believes it. An unverified claim
         would count as drain cover and could cost the last real copy."""
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
+        with self._shard(oid).lock:
+            known = oid in self._shard(oid).dir
         with self._lock:
             node = self._nodes.get(node_id)
-            known = oid in self._dir
         if node is None or not known:
             return False
         try:
@@ -1000,9 +1089,10 @@ class GlobalObjectStore:
         was released) -- refuses to touch copies of live objects. A
         control-sized `del` for remote stores."""
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
-        with self._lock:
-            if oid in self._dir:
+        with self._shard(oid).lock:
+            if oid in self._shard(oid).dir:
                 return False
+        with self._lock:
             node = self._nodes.get(node_id)
         if node is None:
             return False
@@ -1017,32 +1107,36 @@ class GlobalObjectStore:
         out-of-band data-plane move (e.g. a leaving worker's replication
         pushes) -- directory-only, the bytes already moved peer to peer."""
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
-        with self._lock:
-            e = self._dir.get(oid)
-            if e is not None and node_id in self._nodes:
+        sh = self._shard(oid)
+        with sh.lock:
+            e = sh.dir.get(oid)
+            with self._lock:
+                node_known = node_id in self._nodes
+            if e is not None and node_known:
                 e.locations.add(node_id)
                 if e.owner is None:
                     e.owner = node_id
 
     def locations(self, ref: ObjectRef) -> Set[str]:
-        with self._lock:
-            e = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
             return set(e.locations) if e else set()
 
     def size_of(self, ref: ObjectRef) -> int:
-        with self._lock:
-            e = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
             return e.size if e else ref.size
 
     def lineage(self, ref: ObjectRef) -> Optional[str]:
-        with self._lock:
-            e = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
             return e.producer_task if e else ref.producer_task
 
     def add_ref(self, ref: ObjectRef, n: int = 1):
-        with self._lock:
-            if ref.id in self._dir:
-                self._dir[ref.id].refcount += n
+        with self._shard(ref.id).lock:
+            d = self._shard(ref.id).dir
+            if ref.id in d:
+                d[ref.id].refcount += n
 
     def mark_client_read(self, ref_or_id):
         """GC hint: the head's copy of this object exists only because a
@@ -1051,11 +1145,12 @@ class GlobalObjectStore:
         head store is a staging buffer, not a cache for the cluster
         lifetime (see release)."""
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
-        with self._lock:
-            e = self._dir.get(oid)
+        sh = self._shard(oid)
+        with sh.lock:
+            e = sh.dir.get(oid)
             if (e is not None and "head" in e.locations
                     and e.owner != "head" and len(e.locations) > 1):
-                self._client_reads.add(oid)
+                sh.client_reads.add(oid)
 
     def release(self, ref: ObjectRef):
         """Decrement refcount; free all copies at zero. A refcount drop
@@ -1064,25 +1159,28 @@ class GlobalObjectStore:
         gc_head = None
         freed = False
         mv, locs = None, set()
-        with self._lock:
-            e = self._dir.get(ref.id)
+        sh = self._shard(ref.id)
+        with sh.lock:
+            e = sh.dir.get(ref.id)
             if e is None:
                 return
             e.refcount -= 1
             if e.refcount > 0:
-                if (ref.id in self._client_reads and "head" in e.locations
+                if (ref.id in sh.client_reads and "head" in e.locations
                         and e.owner != "head" and len(e.locations) > 1):
                     e.locations.discard("head")
-                    self._client_reads.discard(ref.id)
-                    self.stats["replica_gc"] += 1
-                    gc_head = self._nodes.get("head")
+                    sh.client_reads.discard(ref.id)
+                    with self._lock:
+                        self.stats["replica_gc"] += 1
+                        gc_head = self._nodes.get("head")
             else:
                 freed = True
                 locs = set(e.locations)
-                mv = self._moves.pop(ref.id, None)
-                self._client_reads.discard(ref.id)
-                self._usage_add(e.tenant, -e.size, -1)
-                del self._dir[ref.id]
+                mv = sh.moves.pop(ref.id, None)
+                sh.client_reads.discard(ref.id)
+                with self._lock:
+                    self._usage_add(e.tenant, -e.size, -1)
+                del sh.dir[ref.id]
         if gc_head is not None:
             gc_head.delete(ref)
         if not freed:     # decided under the lock: a racing final release
@@ -1114,30 +1212,31 @@ class GlobalObjectStore:
         self._migration_guard = (capability, token)
 
     def owner_of(self, ref: ObjectRef) -> Optional[str]:
-        with self._lock:
-            e = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
             return e.owner if e else None
 
     def refcount(self, ref_or_id) -> int:
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
-        with self._lock:
-            e = self._dir.get(oid)
+        with self._shard(oid).lock:
+            e = self._shard(oid).dir.get(oid)
             return e.refcount if e else 0
 
     def objects_on(self, node_id: str) -> Dict[str, "ObjectRef"]:
         """Directory entries with a copy on `node_id`, keyed by object id.
         The migration planner filters these for sole-holder hot objects."""
         out: Dict[str, ObjectRef] = {}
-        with self._lock:
-            for oid, e in self._dir.items():
-                if node_id in e.locations:
-                    out[oid] = ObjectRef(oid, e.size, e.producer_task,
-                                         e.tenant)
+        for sh in self._shards:
+            with sh.lock:
+                for oid, e in sh.dir.items():
+                    if node_id in e.locations:
+                        out[oid] = ObjectRef(oid, e.size, e.producer_task,
+                                             e.tenant)
         return out
 
     def sole_holder(self, ref: ObjectRef, node_id: str) -> bool:
-        with self._lock:
-            e = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
             return bool(e) and e.locations == {node_id}
 
     def _check_migration_guard(self, ref: ObjectRef,
@@ -1170,14 +1269,18 @@ class GlobalObjectStore:
         Returns False when the move is moot (object gone, src copy gone,
         dst unregistered) or the object is already mid-move."""
         self._check_migration_guard(ref, capability)
-        with self._lock:
-            e = self._dir.get(ref.id)
+        sh = self._shard(ref.id)
+        with sh.lock:
+            e = sh.dir.get(ref.id)
+            with self._lock:
+                dst_known = dst in self._nodes
             if (e is None or src not in e.locations
-                    or dst not in self._nodes or ref.id in self._moves):
+                    or not dst_known or ref.id in sh.moves):
                 return False
-            self._moves[ref.id] = _Move(src, dst, e.tenant,
-                                        e.size if e.size else ref.size)
-            self.stats["moves_started"] += 1
+            sh.moves[ref.id] = _Move(src, dst, e.tenant,
+                                     e.size if e.size else ref.size)
+            with self._lock:
+                self.stats["moves_started"] += 1
         return True
 
     def migrate_ticket(self, ref: ObjectRef, src: str, dst: str,
@@ -1195,8 +1298,8 @@ class GlobalObjectStore:
     def move_in_flight(self, ref_or_id) -> Optional[Tuple[str, str]]:
         """(src, dst) of the object's in-flight move, or None."""
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
-        with self._lock:
-            mv = self._moves.get(oid)
+        with self._shard(oid).lock:
+            mv = self._shard(oid).moves.get(oid)
             return (mv.src, mv.dst) if mv else None
 
     def commit_move(self, ref_or_id, src: str, dst: str) -> bool:
@@ -1210,14 +1313,16 @@ class GlobalObjectStore:
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
         ref = ObjectRef(oid)
         cleanup, failed = None, False
-        with self._lock:
-            mv = self._moves.get(oid)
+        sh = self._shard(oid)
+        with sh.lock:
+            mv = sh.moves.get(oid)
             if mv is None or mv.src != src or mv.dst != dst:
                 return False
-            del self._moves[oid]
-            e = self._dir.get(oid)
-            dst_store = self._nodes.get(dst)
-            src_store = self._nodes.get(src)
+            del sh.moves[oid]
+            e = sh.dir.get(oid)
+            with self._lock:
+                dst_store = self._nodes.get(dst)
+                src_store = self._nodes.get(src)
             if e is None or dst_store is None:
                 cleanup, failed = dst_store, True
             else:
@@ -1229,9 +1334,10 @@ class GlobalObjectStore:
                 e.locations.discard(src)
                 if e.owner == src or e.owner is None:
                     e.owner = dst            # owner handoff
-                self.stats["migrations"] += 1
-                self.stats["migrated_bytes"] += size
-                self.stats["moves_committed"] += 1
+                with self._lock:
+                    self.stats["migrations"] += 1
+                    self.stats["migrated_bytes"] += size
+                    self.stats["moves_committed"] += 1
         if failed:         # released, or destination unregistered, mid-move
             if cleanup is not None:
                 try:
@@ -1256,10 +1362,12 @@ class GlobalObjectStore:
         the directory is untouched (src still owns the object), and the
         caller re-plans. Returns whether the move ended up committed."""
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id
-        with self._lock:
-            mv = self._moves.get(oid)
+        sh = self._shard(oid)
+        with sh.lock:
+            mv = sh.moves.get(oid)
             if mv is None:
                 return False
+        with self._lock:
             dst_store = self._nodes.get(mv.dst) if probe else None
         if dst_store is not None:
             held = False
@@ -1269,10 +1377,11 @@ class GlobalObjectStore:
                 held = False
             if held and self.commit_move(oid, mv.src, mv.dst):
                 return True
-        with self._lock:
-            if self._moves.pop(oid, None) is None:
+        with sh.lock:
+            if sh.moves.pop(oid, None) is None:
                 return False               # raced a commit/release
-            self.stats["moves_aborted"] += 1
+            with self._lock:
+                self.stats["moves_aborted"] += 1
         return False
 
     def complete_move(self, ref: ObjectRef, src: str, dst: str) -> bool:
@@ -1281,8 +1390,9 @@ class GlobalObjectStore:
         fallback, where this process can reach both stores). The TCP p2p
         path never calls this: the source worker pushes and the
         destination's ack commits."""
+        with self._shard(ref.id).lock:
+            mv = self._shard(ref.id).moves.get(ref.id)
         with self._lock:
-            mv = self._moves.get(ref.id)
             src_store = self._nodes.get(src)
             dst_store = self._nodes.get(dst)
         if mv is None or mv.src != src or mv.dst != dst:
@@ -1298,8 +1408,8 @@ class GlobalObjectStore:
             return True
         # commit refused (released or aborted mid-copy): drop the copy we
         # just imported unless the directory adopted it meanwhile
-        with self._lock:
-            e = self._dir.get(ref.id)
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
             adopted = e is not None and dst in e.locations
         if not adopted:
             try:
@@ -1319,10 +1429,12 @@ class GlobalObjectStore:
         p2p drain path replaced it with direct pushes; it remains the
         backward-compat path and the transient-transport fallback."""
         self._check_migration_guard(ref, capability)
-        with self._lock:
-            e = self._dir.get(ref.id)
-            src_store = self._nodes.get(src)
-            dst_store = self._nodes.get(dst)
+        sh = self._shard(ref.id)
+        with sh.lock:
+            e = sh.dir.get(ref.id)
+            with self._lock:
+                src_store = self._nodes.get(src)
+                dst_store = self._nodes.get(dst)
             if e is None or src not in e.locations or dst_store is None:
                 return False
             already_there = dst in e.locations

@@ -29,9 +29,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.object_store import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
+                                     shard_key)
 from repro.core.security import SecurityError
 from repro.core.task_graph import Task, TaskGraph, TaskSpec, TaskState
+
+_SIG_UNSET = object()   # "compute the signature yourself" for _try_launch
 
 
 @dataclass
@@ -86,6 +89,12 @@ class SchedulerConfig:
     # acknowledged within this window is aborted (probe-first: a push
     # whose ack was lost is promoted to a commit) and re-planned.
     migration_timeout_s: float = 10.0
+    # control-plane sharding: >1 partitions the ready queues by tenant
+    # hash and switches schedule() to incremental READY tracking (no
+    # full-graph scan per event). 1 = the seed-equivalent baseline; the
+    # cluster backends also size the object store's directory shards
+    # from this value.
+    shards: int = 1
 
 
 @dataclass
@@ -155,6 +164,68 @@ class DrainState:
                 self.assigned_bytes.pop(dst, None)
 
 
+class _ReadyQueue:
+    """One tenant's ready queue inside a shard (cfg.shards > 1).
+
+    Entries are (submitted_at, seq, task_id, sig) kept in sorted order:
+    normal submits arrive already ordered (submitted_at and seq are both
+    monotonic), so a push is a plain append; an out-of-order insert (a
+    retry, preempt, or reconstruction re-queues a task with an old
+    submitted_at) just flips `dirty` and the next pass sorts once.
+
+    `sigs` counts the resource signatures present (None = placement-group
+    task, always examined), so a dispatch pass can prove in O(distinct
+    signatures) that nothing in the queue can place -- every signature it
+    holds already failed this pass -- and skip the scan entirely. A
+    blocked thousand-task backlog then costs ~nothing per scheduling
+    event, which is where the seed's per-event full rescan burned."""
+
+    __slots__ = ("entries", "dirty", "sigs")
+
+    def __init__(self):
+        self.entries: List[Tuple[float, int, str, Any]] = []
+        self.dirty = False
+        self.sigs: Dict[Any, int] = {}
+
+    def enqueue(self, entry: Tuple[float, int, str, Any]):
+        if self.entries and entry < self.entries[-1]:
+            self.dirty = True
+        self.entries.append(entry)
+        sig = entry[3]
+        self.sigs[sig] = self.sigs.get(sig, 0) + 1
+
+    def sorted_entries(self) -> List[Tuple[float, int, str, Any]]:
+        if self.dirty:
+            self.entries.sort()
+            self.dirty = False
+        return self.entries
+
+    def remove_at(self, i: int):
+        sig = self.entries[i][3]
+        del self.entries[i]
+        n = self.sigs.get(sig, 0) - 1
+        if n > 0:
+            self.sigs[sig] = n
+        else:
+            self.sigs.pop(sig, None)
+
+    def rebuild(self, entries: List[Tuple[float, int, str, Any]]):
+        """Replace the contents wholesale (entries must already be sorted)."""
+        self.entries = entries
+        self.dirty = False
+        sigs: Dict[Any, int] = {}
+        for e in entries:
+            sigs[e[3]] = sigs.get(e[3], 0) + 1
+        self.sigs = sigs
+
+    def all_infeasible(self, infeasible: set) -> bool:
+        """True iff every task still queued carries a resource signature
+        that already failed this pass (sound because availability only
+        shrinks within a pass). Placement-group entries (sig None) always
+        force a scan -- their feasibility is per-bundle, not per-sig."""
+        return all(s is not None and s in infeasible for s in self.sigs)
+
+
 class WorkerIndex:
     """Resource-feasibility index: one lazy min-heap per resource key,
     ordered by (load, registration seq), so placement is ~O(log n) in the
@@ -175,6 +246,13 @@ class WorkerIndex:
         self._workers: Dict[str, WorkerInfo] = {}
         self._seq: Dict[str, int] = {}
         self._next_seq = 0
+        # cluster-wide free capacity per resource key, maintained from the
+        # per-worker snapshots below on every touch(): when the sum cannot
+        # cover a request, no single worker can either, so a hopeless
+        # pick() fails in O(1) instead of draining the whole heap proving
+        # it (the dominant head cost on a saturated cluster)
+        self._avail: Dict[str, Dict[str, float]] = {}
+        self._avail_totals: Dict[str, float] = {}
 
     def __len__(self) -> int:
         return len(self._workers)
@@ -195,13 +273,29 @@ class WorkerIndex:
         if w is None:
             return
         self._seq.pop(worker_id, None)
+        for k, v in self._avail.pop(worker_id, {}).items():
+            self._avail_totals[k] = self._avail_totals.get(k, 0.0) - v
         for k in self._keys_of(w):
             self._members.get(k, set()).discard(worker_id)
+
+    def _note_avail(self, w: WorkerInfo):
+        old = self._avail.get(w.id)
+        tot = self._avail_totals
+        if old is None:
+            for k, v in w.available.items():
+                tot[k] = tot.get(k, 0.0) + v
+        else:
+            for k in old.keys() | w.available.keys():
+                delta = w.available.get(k, 0.0) - old.get(k, 0.0)
+                if delta:
+                    tot[k] = tot.get(k, 0.0) + delta
+        self._avail[w.id] = dict(w.available)
 
     def touch(self, w: WorkerInfo):
         """Re-index after a load change (acquire/release)."""
         if w.id not in self._workers:
             return
+        self._note_avail(w)
         entry = (w.load, self._seq[w.id], w.id)
         for k in self._keys_of(w):
             heap = self._heaps.setdefault(k, [])
@@ -231,6 +325,13 @@ class WorkerIndex:
         for k in needed:
             if not self._members.get(k):
                 return None                  # required resource nowhere present
+            if self._avail_totals.get(k, 0.0) + 1e-9 < req[k]:
+                # cluster-wide free capacity cannot cover the request, so
+                # no single worker can: fail without draining the heap.
+                # The totals may overcount (draining workers stay counted
+                # until touched), which only weakens the filter -- a pass
+                # through it still ends in the exact heap scan below.
+                return None
         key = min(needed, key=lambda k: len(self._members[k])) if needed else ""
         heap = self._heaps.get(key, [])
         popped: List[Tuple[float, int, str]] = []
@@ -279,6 +380,23 @@ class Scheduler:
         self._drains: Dict[str, DrainState] = {}
         self.tenants: Dict[str, TenantState] = {}
         self._rate_limits: Dict[str, TokenBucket] = {}
+        # placeable capacity (alive, non-draining) per resource key --
+        # see _totals_add / _cluster_totals
+        self._totals: Dict[str, float] = {}
+        # sharded dispatch state (cfg.shards > 1): per-shard ready queues
+        # keyed by tenant -- persistent sorted lists of (submitted_at,
+        # seq, id, sig) where seq is graph-insertion order, so a scan
+        # walks exactly the seed's stable sorted(ready, key=submitted_at)
+        # order without rebuilding anything per event
+        n_shards = max(1, config.shards)
+        self._ready_shards: List[Dict[str, _ReadyQueue]] = [
+            {} for _ in range(n_shards)]
+        self._queued: List[set] = [set() for _ in range(n_shards)]
+        self._task_seq: Dict[str, int] = {}
+        self._next_task_seq = 0
+        # speculation reverse map (original id -> twin id): makes the
+        # twin-cancel lookup on finish O(1) instead of a full-graph scan
+        self._twin_of: Dict[str, str] = {}
         self.stats = {"launched": 0, "finished": 0, "failed": 0, "retried": 0,
                       "speculative": 0, "reconstructed": 0, "cancelled": 0,
                       "drained": 0, "migrated_objects": 0, "preempted": 0,
@@ -314,14 +432,19 @@ class Scheduler:
         burst = max(1.0, rate_per_s if burst is None else burst)
         self._rate_limits[tenant_id] = TokenBucket(rate_per_s, burst)
 
+    def _totals_add(self, w: WorkerInfo, sgn: float):
+        """Maintain the placeable-capacity cache: called with +1 when a
+        worker becomes placeable (join, drain cancelled) and -1 when it
+        stops being placeable (drain begun, failed, removed)."""
+        for k, v in w.resources.items():
+            self._totals[k] = self._totals.get(k, 0.0) + sgn * v
+
     def _cluster_totals(self) -> Dict[str, float]:
-        totals: Dict[str, float] = {}
-        for w in self.workers.values():
-            if not w.alive or w.draining:
-                continue
-            for k, v in w.resources.items():
-                totals[k] = totals.get(k, 0.0) + v
-        return totals
+        """Total resources across alive, non-draining workers. Kept
+        incrementally (the fair pass reads this per scheduling event --
+        recomputing it was an O(workers) scan on the hot path). Callers
+        treat the returned dict as read-only."""
+        return self._totals
 
     def _dominant_share(self, ts: TenantState,
                         totals: Dict[str, float]) -> float:
@@ -359,7 +482,12 @@ class Scheduler:
 
     def add_worker(self, worker: WorkerInfo):
         worker.last_heartbeat = self.clock()
+        old = self.workers.get(worker.id)
+        if old is not None and old.alive and not old.draining:
+            self._totals_add(old, -1.0)      # re-join replaces, not stacks
         self.workers[worker.id] = worker
+        if worker.alive and not worker.draining:
+            self._totals_add(worker, +1.0)
         self.index.add(worker)
         self._retry_pending_groups()
         self.schedule()
@@ -385,6 +513,8 @@ class Scheduler:
         (finish_drain) paths: unregister the node store, mark objects that
         lost their last copy, and forget the worker."""
         w = self.workers[worker_id]
+        if w.alive and not w.draining:       # drained workers left at
+            self._totals_add(w, -1.0)        # begin_drain already
         w.alive = False
         for oid in self.store.unregister_node(worker_id):
             self.graph.object_lost(oid)
@@ -414,6 +544,7 @@ class Scheduler:
                for binding in self._placement_bindings.values()):
             return False
         w.draining = True            # lazily evicted from the WorkerIndex
+        self._totals_add(w, -1.0)    # no longer placeable capacity
         now = self.clock()
         self._drains[worker_id] = DrainState(
             worker_id, now,
@@ -429,6 +560,7 @@ class Scheduler:
         if w is None or not w.draining:
             return False
         w.draining = False
+        self._totals_add(w, +1.0)    # placeable again
         self._drains.pop(worker_id, None)
         self.index.touch(w)          # re-surface in the placement heaps
         self.schedule()
@@ -694,6 +826,7 @@ class Scheduler:
                 # preemption is the cluster's choice, not the task's fault:
                 # give back the attempt that schedule() will re-charge
                 task.attempts = max(0, task.attempts - 1)
+                self._enqueue_ready(task)
                 self.stats["preempted"] += 1
                 preempted = True
         if preempted:
@@ -773,6 +906,7 @@ class Scheduler:
                 # dep already materialized (e.g. cluster.put artifacts)
                 self.graph.mark_available(d.id)
         self.graph.add(task)
+        self._note_task_added(task)
         if task.state == TaskState.PENDING:
             # a dep may have been dropped before submission (e.g. its node
             # was retired on the drop path): lineage re-executes producers;
@@ -849,17 +983,21 @@ class Scheduler:
                 return best
         return self.index.pick(req)
 
-    def _try_launch(self, task: Task, infeasible: set) -> bool:
+    def _try_launch(self, task: Task, infeasible: set,
+                    sig: Any = _SIG_UNSET) -> bool:
         """Place-and-launch one READY task; shared by the FIFO and fair
         dispatch loops. `infeasible` is the per-pass feasibility memo:
         availability only shrinks within a pass, so a resource signature
         that failed once cannot place later in it (placement-group tasks
-        are exempt -- their binding is per-bundle)."""
-        sig = None
-        if not task.spec.placement_group:
-            sig = tuple(sorted(task.spec.resources.items()))
-            if sig in infeasible:
-                return False
+        are exempt -- their binding is per-bundle). The sharded scan
+        passes the signature it already carries in the queue entry; the
+        seed path computes it here."""
+        if sig is _SIG_UNSET:
+            sig = None
+            if not task.spec.placement_group:
+                sig = tuple(sorted(task.spec.resources.items()))
+        if sig is not None and sig in infeasible:
+            return False
         w = self._pick_worker(task)
         if w is None:
             if sig is not None:
@@ -879,7 +1017,41 @@ class Scheduler:
         self.launch_fn(task, w.id)
         return True
 
+    def _note_task_added(self, task: Task):
+        """Record a task's graph-insertion order -- the FIFO tiebreak the
+        sharded ready heaps need to reproduce the seed's *stable* sort by
+        submitted_at -- and enqueue it if it was born READY."""
+        if task.id not in self._task_seq:
+            self._task_seq[task.id] = self._next_task_seq
+            self._next_task_seq += 1
+        self._enqueue_ready(task)
+
+    def _enqueue_ready(self, task: Task):
+        """Incremental READY tracking for the sharded dispatch path: push
+        a newly-READY task onto its tenant's shard queue. No-op at
+        shards=1 (the seed path rescans the whole graph) and for
+        non-READY tasks; duplicate pushes are absorbed by the per-shard
+        queued set."""
+        if self.cfg.shards <= 1 or task.state != TaskState.READY:
+            return
+        si = shard_key(task.spec.tenant_id, self.cfg.shards)
+        if task.id in self._queued[si]:
+            return
+        self._queued[si].add(task.id)
+        seq = self._task_seq.get(task.id, self._next_task_seq)
+        sig = None
+        if not task.spec.placement_group:
+            sig = tuple(sorted(task.spec.resources.items()))
+        shard = self._ready_shards[si]
+        q = shard.get(task.spec.tenant_id)
+        if q is None:
+            q = shard[task.spec.tenant_id] = _ReadyQueue()
+        q.enqueue((task.submitted_at, seq, task.id, sig))
+
     def schedule(self):
+        if self.cfg.shards > 1:
+            self._schedule_sharded()
+            return
         ready = self.graph.ready_tasks()
         if not ready:
             return
@@ -894,6 +1066,125 @@ class Scheduler:
                 self._try_launch(task, infeasible)
             return
         self._schedule_fair(by_tenant, infeasible)
+
+    def _schedule_sharded(self):
+        """Dispatch pass over the per-shard ready queues. Unlike the seed
+        path (and an earlier drain-and-reenqueue cut of this one, which
+        churned every queued entry per event and gave the asymptotic win
+        right back), the queues are *persistent*: entries stay in place
+        across passes, launched and stale ones are deleted where they sit,
+        and the signature index lets a pass discard a whole blocked
+        backlog in O(distinct sigs). Order and launch set are exactly the
+        seed's: within a tenant the (submitted_at, insertion-seq) sort is
+        the seed's stable sort, and skipping a signature the per-pass memo
+        already condemned is precisely what _try_launch would do anyway."""
+        infeasible: set = set()
+        queues: Dict[str, _ReadyQueue] = {}
+        for shard in self._ready_shards:
+            for tenant_id in list(shard):
+                q = shard[tenant_id]
+                if q.entries:
+                    queues[tenant_id] = q
+                else:
+                    del shard[tenant_id]
+        if not queues:
+            return
+        if len(queues) == 1:
+            # single-tenant: the seed's global arrival-order pass
+            tenant_id, q = next(iter(queues.items()))
+            self._scan_queue(tenant_id, q, infeasible)
+        elif self.cfg.dispatch_policy == "fifo":
+            self._schedule_fifo_merged(queues, infeasible)
+        else:
+            self._schedule_fair_sharded(queues, infeasible)
+
+    def _scan_queue(self, tenant_id: str, q: _ReadyQueue, infeasible: set,
+                    start: int = 0, first_only: bool = False
+                    ) -> Tuple[bool, int]:
+        """Try one tenant's queued tasks in arrival order from `start`.
+        Launched and no-longer-READY entries are deleted in place; entries
+        whose signature already failed this pass are stepped over (the
+        memo makes retrying them pointless until capacity frees). With
+        first_only the scan stops after one placement (the fair picker's
+        one-placement-per-turn contract). Returns (placed, resume index)."""
+        queued = self._queued[shard_key(tenant_id, self.cfg.shards)]
+        entries = q.sorted_entries()
+        i = start
+        placed = False
+        while i < len(entries):
+            _, _, task_id, sig = entries[i]
+            task = self.graph.tasks.get(task_id)
+            if task is None or task.state != TaskState.READY:
+                q.remove_at(i)
+                queued.discard(task_id)
+                continue
+            if sig is not None and sig in infeasible:
+                i += 1
+                continue
+            if self._try_launch(task, infeasible, sig=sig):
+                q.remove_at(i)
+                queued.discard(task_id)
+                placed = True
+                if first_only:
+                    break
+            else:
+                i += 1
+                # a fresh signature just joined the memo: if the queue now
+                # holds nothing else, stop instead of stepping the tail
+                if q.all_infeasible(infeasible):
+                    break
+        return placed, i
+
+    def _schedule_fair_sharded(self, queues: Dict[str, _ReadyQueue],
+                               infeasible: set):
+        """Sharded twin of _schedule_fair: identical DRF arbitration and
+        within-tenant ordering, but over the persistent queues -- and a
+        tenant whose queue holds only signatures that already failed this
+        pass is discarded in O(sigs) without touching its backlog."""
+        totals = self._cluster_totals()
+        cursor = {tid: 0 for tid in queues}
+        active = set(queues)
+        while active:
+            tid = min(active,
+                      key=lambda t: (self._dominant_share(
+                          self._tenant_state(t), totals), t))
+            q = queues[tid]
+            if q.all_infeasible(infeasible):
+                active.discard(tid)
+                continue
+            placed, i = self._scan_queue(tid, q, infeasible,
+                                         start=cursor[tid], first_only=True)
+            cursor[tid] = i
+            if not placed or i >= len(q.entries):
+                active.discard(tid)
+
+    def _schedule_fifo_merged(self, queues: Dict[str, _ReadyQueue],
+                              infeasible: set):
+        """Multi-tenant FIFO baseline (non-default policy): merge every
+        queue back to global arrival order and try each task once, exactly
+        the seed pass. This path keeps the simple rebuild-after-the-pass
+        shape -- it exists for A/B comparison, not for the hot path."""
+        merged = []
+        for tenant_id, q in queues.items():
+            merged.extend((key, tenant_id) for key in q.sorted_entries())
+        merged.sort()
+        done: set = set()
+        for key, tenant_id in merged:
+            task_id = key[2]
+            task = self.graph.tasks.get(task_id)
+            if task is None or task.state != TaskState.READY:
+                done.add(task_id)
+            elif self._try_launch(task, infeasible):
+                done.add(task_id)
+        if not done:
+            return
+        for tenant_id, q in queues.items():
+            queued = self._queued[shard_key(tenant_id, self.cfg.shards)]
+            kept = [k for k in q.entries if k[2] not in done]
+            if len(kept) != len(q.entries):
+                queued.difference_update(
+                    k[2] for k in q.entries if k[2] in done)
+                q.rebuild(kept)
 
     def _schedule_fair(self, by_tenant: Dict[str, List[Task]],
                        infeasible: set):
@@ -946,10 +1237,14 @@ class Scheduler:
         rt = task.runtime
         if rt is not None:
             self._group_runtimes.setdefault(task.spec.group, []).append(rt)
-        # cancel the twin (speculation): first finisher wins
-        twin_id = task.speculative_of
-        twins = [t for t in self.graph.tasks.values()
-                 if t.speculative_of == task.id or (twin_id and t.id == twin_id)]
+        # cancel the twin (speculation): first finisher wins. The reverse
+        # map makes both directions O(1); the seed scanned every task
+        # here, which dominated head CPU at high completion rates.
+        twins = []
+        for tid2 in (task.speculative_of, self._twin_of.get(task.id)):
+            t2 = self.graph.tasks.get(tid2) if tid2 else None
+            if t2 is not None:
+                twins.append(t2)
         for t in twins:
             if t.state == TaskState.RUNNING:
                 t.state = TaskState.CANCELLED
@@ -957,7 +1252,7 @@ class Scheduler:
                 self.stats["cancelled"] += 1
                 self.cancel_fn(t, t.worker)
         for ready in self.graph.object_available(output):
-            pass
+            self._enqueue_ready(ready)
         self.schedule()
 
     def on_task_failed(self, task_id: str, error: str,
@@ -974,6 +1269,7 @@ class Scheduler:
             if task.state == TaskState.PENDING:
                 self.graph.rewait(task)
             task.error = error
+            self._enqueue_ready(task)
             self.stats["retried"] += 1
             self._reconstruct_missing(task)
         else:
@@ -995,6 +1291,8 @@ class Scheduler:
         w = self.workers.get(worker_id)
         if w is None:
             return
+        if w.alive and not w.draining:       # a dying drain was already
+            self._totals_add(w, -1.0)        # subtracted at begin_drain
         w.alive = False
         lost_objects = self.store.unregister_node(worker_id)
         for oid in lost_objects:
@@ -1007,6 +1305,7 @@ class Scheduler:
                 task.state = TaskState.READY if self._deps_live(task) else TaskState.PENDING
                 if task.state == TaskState.PENDING:
                     self.graph.rewait(task)
+                self._enqueue_ready(task)
                 self.stats["retried"] += 1
                 self._reconstruct_missing(task)
             else:
@@ -1048,6 +1347,7 @@ class Scheduler:
                     self.graph.rewait(producer)
                 producer.attempts = 0
                 producer.output = None
+                self._enqueue_ready(producer)
                 self.store.note_reconstruction()
                 self.stats["reconstructed"] += 1
                 self._reconstruct_missing(producer)  # recursive lineage
@@ -1071,6 +1371,8 @@ class Scheduler:
                             speculative_of=task.id)
                 task.speculated = True
                 self.graph.add(twin)
+                self._note_task_added(twin)
+                self._twin_of[task.id] = twin.id
                 self.stats["speculative"] += 1
         self.schedule()
 

@@ -91,6 +91,46 @@ class UnprivilegedProfile:
         return path
 
 
+class HybridClock:
+    """Wall-anchored monotonic clock for expiry math.
+
+    Envelope timestamps and ticket expiries must be *comparable across
+    hosts* (so they are expressed as unix time), but the local math that
+    decides "has this expired?" must not move when NTP steps the wall
+    clock -- the store's move records and the scheduler's drain deadlines
+    already use time.monotonic(), and a wall step that expires every
+    in-flight ticket mid-transfer turns a clock adjustment into a storm
+    of relay fallbacks. The hybrid clock anchors the wall time once at
+    construction and advances it by the monotonic delta: the value stays
+    unix-comparable on the wire while local progression is step-immune.
+    """
+
+    def __init__(self):
+        self._wall0 = time.time()
+        self._mono0 = time.monotonic()
+
+    def now(self) -> float:
+        return self._wall0 + (time.monotonic() - self._mono0)
+
+
+#: process-wide clock used for seal timestamps, envelope freshness, and
+#: ticket mint/verify defaults; swap with set_clock() in tests.
+_clock = HybridClock()
+
+
+def wall_now() -> float:
+    """Current wall-anchored, monotonic-advancing unix time."""
+    return _clock.now()
+
+
+def set_clock(clock) -> Any:
+    """Inject a clock (anything with .now() -> float); returns the old one."""
+    global _clock
+    prev = _clock
+    _clock = clock
+    return prev
+
+
 def sign(token: str, payload: bytes) -> str:
     return hmac.new(token.encode(), payload, hashlib.sha256).hexdigest()
 
@@ -146,7 +186,7 @@ def _envelope_bytes(msg: Dict[str, Any], ts: float, nonce: str) -> bytes:
 
 def seal(token: str, msg: Dict[str, Any]) -> Dict[str, Any]:
     """Wrap a message in a signed envelope (MAC covers body + ts + nonce)."""
-    ts = time.time()
+    ts = wall_now()
     nonce = secrets.token_hex(16)
     return {"body": msg, "ts": ts, "nonce": nonce,
             "mac": sign(token, _envelope_bytes(msg, ts, nonce))}
@@ -161,7 +201,7 @@ def open_sealed(token: str, envelope: Dict[str, Any],
     want = sign(token, _envelope_bytes(envelope.get("body", {}), ts, nonce))
     if not hmac.compare_digest(mac, want):
         raise SecurityError("HMAC verification failed: message rejected")
-    if time.time() - ts > max_age_s:
+    if wall_now() - ts > max_age_s:
         raise SecurityError("stale message rejected (replay window)")
     if nonce_cache is not None:
         # inside the freshness window, duplicates are replays: the nonce is
@@ -253,7 +293,7 @@ class TransferTicket:
               tenant_id: str = DEFAULT_TENANT, right: str = "get",
               ttl_s: float = 30.0,
               now: Optional[float] = None) -> "TransferTicket":
-        now = time.time() if now is None else now
+        now = wall_now() if now is None else now
         exp = now + ttl_s
         return TransferTicket(
             object_id, src, worker_id, tenant_id, right, exp,
@@ -290,7 +330,7 @@ class TransferTicket:
             raise SecurityError(
                 f"transfer ticket rejected for {right}:{object_id} "
                 f"({self.worker_id} <- {src})")
-        now = time.time() if now is None else now
+        now = wall_now() if now is None else now
         if now > self.expires_at:
             raise SecurityError(
                 f"transfer ticket expired for {object_id} "

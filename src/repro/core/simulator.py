@@ -85,7 +85,8 @@ class SimCluster:
         self._seq = 0
         self._events: List[Tuple[float, int, Callable[[], None]]] = []
         self.rng = random.Random(seed)
-        self.store = GlobalObjectStore()
+        # one knob sizes both halves of the control plane (shards=1 == seed)
+        self.store = GlobalObjectStore(shards=scheduler_config.shards)
         self.scheduler = Scheduler(self.store, self._launch, lambda t, w: None,
                                    scheduler_config, clock=lambda: self.now)
         # drains execute migrations with modeled transfer latency
@@ -250,7 +251,6 @@ class SimCluster:
                       + ref.size / self.cost.head_bandwidth_Bps)
             t1 = max(self._head_link_free, self.now) + dt
             self._head_link_free = t1
-            self.store.stats["head_relayed_bytes"] += ref.size
             delay = t1 - self.now
         else:
             delay = (self.cost.migration_overhead_s
@@ -258,6 +258,11 @@ class SimCluster:
 
         def land():
             if self.store.complete_move(ref, worker_id, dst):
+                if self.cost.data_plane == "relay":
+                    # attempt-idempotent accounting: bill the head NIC
+                    # only for a move that actually landed -- a re-planned
+                    # failed move used to charge its bytes once per try
+                    self.store.stats["head_relayed_bytes"] += ref.size
                 self.scheduler.note_migrated(worker_id, ref)
             else:
                 # destination died or object already settled: re-plan
@@ -308,6 +313,7 @@ class SimCluster:
             if worker_id in locs or not locs:
                 continue
             size = self.store.size_of(d)
+            relayed = 0
             if self.cost.data_plane == "p2p":
                 src = self.store.choose_source(d, worker_id)
                 if src is None:
@@ -332,11 +338,15 @@ class SimCluster:
                 if src != "head":
                     # worker-resident blob relayed through the head: the
                     # store only counts head-sourced bytes by itself
-                    self.store.stats["head_relayed_bytes"] += size
+                    relayed = size
             try:
                 self.store.fetch(worker_id, d, src=src)
             except KeyError:
                 continue               # copy vanished mid-model: dep is lost
+            if relayed:
+                # charged only after the fetch lands: a copy that vanished
+                # mid-model must not bill phantom bytes to the head NIC
+                self.store.stats["head_relayed_bytes"] += relayed
             done = max(done, t1)
         return done
 

@@ -62,6 +62,27 @@ replay protection, head TCP port):
                                fresh ticketed sources for one dep whose
                                poll-time tickets expired while earlier
                                fat deps streamed
+  tickets      worker -> head  worker, task, objects=[ids] -- the batched
+                               form of `ticket`: ONE round trip re-mints
+                               every dep that still needs it; the reply's
+                               deps=[{ok, dep | error}] aligns 1:1 with
+                               `objects`, so one expired or denied dep
+                               carries its own verdict instead of
+                               re-minting (or failing) the whole batch
+  batch        worker -> head  worker, ops=[sub-ops] -- one wire frame and
+                               one cluster-lock acquisition for a worker's
+                               queued lock-bound acks (result_meta, error,
+                               own-cache pushed, metric_deltas), with its
+                               poll riding last; sub-ops the head must
+                               serve outside the lock (poll, tickets) are
+                               deferred past it. Reply replies=[...]
+                               aligns 1:1 with ops; a failing sub-op
+                               yields its own {ok: False} without
+                               poisoning the rest of the frame
+  metric_deltas worker-> head  worker, deltas={counter: +n} -- data-plane
+                               counter deltas (blob serves / receives /
+                               served bytes) folded into per-worker head
+                               aggregates surfaced by `metrics`
   pushed       worker -> head  worker, object, node -- one replicate
                                assignment landed (or a dep cache was
                                registered); the directory adds the copy
@@ -321,8 +342,12 @@ class BlobServer:
                     or hashlib.sha256(blob_in).hexdigest()
                     != header.get("sha256")):
                 raise SecurityError(f"blob integrity check failed for {oid}")
-            self.store.import_blob(ref, blob_in)
-            self.stats["receives"] += 1
+            fresh = self.store.import_blob(ref, blob_in)
+            if fresh:
+                # attempt-idempotent accounting: a retried push whose
+                # first attempt actually landed (the reply was lost, not
+                # the blob) must not count the same bytes twice
+                self.stats["receives"] += 1
             if (put_ticket is not None and put_ticket.right == "migrate"
                     and self.on_migrate is not None):
                 # destination-side metadata ack: the head COMMITs the
@@ -372,6 +397,9 @@ class HeadServer:
         self.migrate_ttl_s = max(ticket_ttl_s, 60.0)
         self._outbox: Dict[str, list] = {}
         self._blob_eps: Dict[str, Tuple[str, int]] = {}
+        # per-worker data-plane counter aggregates fed by the piggybacked
+        # metric_deltas sub-op (mutated under the cluster lock)
+        self._worker_metrics: Dict[str, Dict[str, int]] = {}
         # PREPAREd drain-move directives awaiting each source worker's
         # next poll ({ref, size, node, host, port, ticket} dicts)
         self._pending_migrations: Dict[str, List[Dict[str, Any]]] = {}
@@ -562,6 +590,55 @@ class HeadServer:
         if ev:
             ev.set()
 
+    # lock-bound sub-handlers -------------------------------------------------
+    # These serve both their top-level op and the `batch` frame's inlined
+    # path: everything in them is metadata work (directory + scheduler
+    # bookkeeping, no data-plane I/O), so a batch may run them all under
+    # ONE cluster-lock acquisition (the lock is reentrant).
+
+    def _handle_result_meta(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """p2p result registration: the blob already lives in the worker's
+        local store; the head records (ref, size, location) -- same tenant
+        + quota admission as a relayed put, zero payload bytes here."""
+        c = self.cluster
+        tid, wid = msg["task"], msg["worker"]
+        size = int(msg["size"])
+        with c._lock:
+            task = c.scheduler.graph.tasks.get(tid)
+            tenant = task.spec.tenant_id if task else "default"
+        try:
+            ref, spill = c.store.record(
+                wid, size, producer_task=tid, ref_id=f"obj-{tid}",
+                tenant=tenant,
+                capability=Capability.grant_for_tenant(
+                    c.token, tenant, f"obj-{tid}", "put"))
+        except Exception as e:  # noqa: BLE001 -- quota reject etc.: the
+            # task must *fail visibly*, not sit RUNNING forever
+            self._fail_task(tid, wid, f"{type(e).__name__}: {e}")
+            return {"ok": True, "stored": False}
+        with c._lock:
+            c.scheduler.on_task_finished(tid, ref, worker_id=wid)
+        ev = c._futures.get(tid)
+        if ev:
+            ev.set()
+        return {"ok": True, "stored": True, "spill": spill}
+
+    def _handle_error(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        c = self.cluster
+        with c._lock:
+            c.scheduler.on_task_failed(msg["task"], msg["err"],
+                                       worker_id=msg.get("worker"))
+        return {"ok": True}
+
+    def _handle_metric_deltas(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Fold a worker's data-plane counter deltas into the head's
+        per-worker aggregates (dict arithmetic only; the caller holds --
+        or this runs fine under -- the cluster lock)."""
+        agg = self._worker_metrics.setdefault(str(msg.get("worker", "")), {})
+        for k, v in (msg.get("deltas") or {}).items():
+            agg[k] = agg.get(k, 0) + int(v)
+        return {"ok": True}
+
     def dispatch(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         op = msg.get("op")
         c = self.cluster
@@ -681,30 +758,7 @@ class HeadServer:
             return {"ok": True, "task": tid, "payload": payload,
                     "tenant": tenant, "draining": draining}
         if op == "result_meta":
-            # p2p result: the blob already lives in the worker's local
-            # store; the head records (ref, size, location) -- same tenant
-            # + quota admission as a relayed put, zero payload bytes here
-            tid, wid = msg["task"], msg["worker"]
-            size = int(msg["size"])
-            with c._lock:
-                task = c.scheduler.graph.tasks.get(tid)
-                tenant = task.spec.tenant_id if task else "default"
-            try:
-                ref, spill = c.store.record(
-                    wid, size, producer_task=tid, ref_id=f"obj-{tid}",
-                    tenant=tenant,
-                    capability=Capability.grant_for_tenant(
-                        c.token, tenant, f"obj-{tid}", "put"))
-            except Exception as e:  # noqa: BLE001 -- quota reject etc.: the
-                # task must *fail visibly*, not sit RUNNING forever
-                self._fail_task(tid, wid, f"{type(e).__name__}: {e}")
-                return {"ok": True, "stored": False}
-            with c._lock:
-                c.scheduler.on_task_finished(tid, ref, worker_id=wid)
-            ev = c._futures.get(tid)
-            if ev:
-                ev.set()
-            return {"ok": True, "stored": True, "spill": spill}
+            return self._handle_result_meta(msg)
         if op == "result":
             tid, wid = msg["task"], msg["worker"]
             value = _dec(msg["payload"])
@@ -728,10 +782,10 @@ class HeadServer:
                 ev.set()
             return {"ok": True}
         if op == "error":
+            return self._handle_error(msg)
+        if op == "metric_deltas":
             with c._lock:
-                c.scheduler.on_task_failed(msg["task"], msg["err"],
-                                           worker_id=msg.get("worker"))
-            return {"ok": True}
+                return self._handle_metric_deltas(msg)
         if op == "leave":
             # idle-exit handshake: a worker may only walk away once no hot
             # object's last copy lives on it. The head hands back p2p push
@@ -789,6 +843,29 @@ class HeadServer:
                 return {"ok": True, "dep": self._dep_meta(ref, wid, tenant)}
             except SecurityError as e:
                 return {"ok": False, "error": str(e)}
+        if op == "tickets":
+            # batched mid-fetch re-mint: one round trip refreshes every
+            # dep the worker still needs. Each dep gets its OWN verdict
+            # (aligned 1:1 with `objects`): one expired or denied dep
+            # must not re-mint deps that already landed, nor fail the
+            # whole batch. May stage head copies (`_dep_meta` fallback),
+            # so this handler never runs under the cluster lock.
+            wid, tid = msg["worker"], msg.get("task", "")
+            with c._lock:
+                task = c.scheduler.graph.tasks.get(tid)
+                tenant = task.spec.tenant_id if task else None
+            if tenant is None:
+                return {"ok": False, "error": f"unknown task {tid!r}"}
+            deps: List[Dict[str, Any]] = []
+            for oid in msg.get("objects", []):
+                try:
+                    deps.append({"ok": True,
+                                 "dep": self._dep_meta(
+                                     ObjectRef(str(oid)), wid, tenant)})
+                except Exception as e:  # noqa: BLE001 -- per-dep verdict
+                    deps.append({"ok": False,
+                                 "error": f"{type(e).__name__}: {e}"})
+            return {"ok": True, "deps": deps}
         if op == "pushed":
             # a worker registering its OWN cache is trusted at the same
             # level as its result_meta size claims (sealed envelope, its
@@ -816,7 +893,9 @@ class HeadServer:
                 # apparent loss parked
                 if c.store.confirm_replica(oid, wid):
                     with c._lock:
-                        c.scheduler.graph.object_available(ObjectRef(oid))
+                        for t in c.scheduler.graph.object_available(
+                                ObjectRef(oid)):
+                            c.scheduler._enqueue_ready(t)
                         c.scheduler.schedule()
                     return {"ok": True, "committed": False,
                             "recovered": True}
@@ -893,6 +972,51 @@ class HeadServer:
             with c._lock:
                 return {"ok": True, "stats": dict(c.scheduler.stats),
                         "tenants": c.scheduler.tenant_shares()}
+        if op == "batch":
+            # one wire frame, ONE cluster-lock acquisition for the
+            # lock-bound sub-ops a worker queued between polls
+            # (result_meta / error / own-cache pushed / metric_deltas).
+            # Sub-ops that may do data-plane staging I/O (the poll riding
+            # last, ticket re-mints) are deferred OUTSIDE the lock and
+            # served by their normal handlers. Replies align 1:1 with
+            # ops; each sub-op carries its own verdict.
+            subs = msg.get("ops") or []
+            replies: List[Optional[Dict[str, Any]]] = [None] * len(subs)
+            deferred: List[int] = []
+            with c._lock:
+                for i, sub in enumerate(subs):
+                    sop = sub.get("op") if isinstance(sub, dict) else None
+                    try:
+                        if sop == "result_meta":
+                            replies[i] = self._handle_result_meta(sub)
+                        elif sop == "error":
+                            replies[i] = self._handle_error(sub)
+                        elif sop == "metric_deltas":
+                            replies[i] = self._handle_metric_deltas(sub)
+                        elif (sop == "pushed"
+                              and sub.get("worker") == sub.get("node")):
+                            # own-cache claim: trusted without a probe
+                            # (same rule as the top-level handler) --
+                            # pure directory work, safe under the lock
+                            c.store.note_replica(str(sub["object"]),
+                                                 str(sub["node"]))
+                            replies[i] = {"ok": True}
+                        elif sop == "batch":
+                            replies[i] = {"ok": False,
+                                          "error": "nested batch refused"}
+                        else:
+                            deferred.append(i)
+                    except Exception as e:  # noqa: BLE001 -- per-sub
+                        # verdict: one bad ack must not poison the frame
+                        replies[i] = {"ok": False,
+                                      "error": f"{type(e).__name__}: {e}"}
+            for i in deferred:
+                try:
+                    replies[i] = self.dispatch(subs[i])
+                except Exception as e:  # noqa: BLE001
+                    replies[i] = {"ok": False,
+                                  "error": f"{type(e).__name__}: {e}"}
+            return {"ok": True, "replies": replies}
         if op == "metrics":
             # the scaling signals the K8s custom-metrics adapter republishes
             # for the HorizontalPodAutoscaler (backends/kubernetes.py)
@@ -904,6 +1028,7 @@ class HeadServer:
                     if t.state in (TaskState.READY, TaskState.PENDING))
                 by_tenant = c.scheduler.backlog_by_tenant()
                 shares = c.scheduler.tenant_shares()
+                wm = [dict(m) for m in self._worker_metrics.values()]
             quota_tenants = set(shares) | c.store.quota_tenants()
             n = max(len(workers), 1)
             # drain-plane health counters (plain ints off the store's
@@ -915,6 +1040,14 @@ class HeadServer:
                 f"syndeo_{k}": int(store_stats.get(k, 0))
                 for k in ("moves_aborted", "relay_fallbacks",
                           "head_relayed_bytes", "replica_gc")}
+            # aggregate worker data-plane health (piggybacked deltas):
+            # bytes the worker NICs served that never touched the head
+            drain_counters["syndeo_worker_blob_serves"] = sum(
+                m.get("serves", 0) for m in wm)
+            drain_counters["syndeo_worker_blob_receives"] = sum(
+                m.get("receives", 0) for m in wm)
+            drain_counters["syndeo_worker_served_bytes"] = sum(
+                m.get("served_bytes", 0) for m in wm)
             return dict({"ok": True, "workers": len(workers),
                          "busy": busy, "backlog": backlog,
                          "syndeo_backlog_per_worker": backlog / n,
@@ -1007,6 +1140,18 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     token = ep.token
     nonces = NonceCache()        # head replies are replay-protected too
     tenants: Dict[str, str] = {}   # object id -> tenant (blobs held here)
+    # lock-bound acks queued between polls -- each entry is (op dict,
+    # apply(reply) callback or None). They ride the next poll as ONE
+    # `batch` frame: a result or error report no longer costs its own
+    # round trip, and a transient send failure keeps them queued (the
+    # head's record/stale-report guards make a replayed ack idempotent)
+    pending_ops: List[Tuple[Dict[str, Any],
+                            Optional[Callable[[Optional[Dict[str, Any]]],
+                                              None]]]] = []
+    # last blob-server counters already reported to the head: the next
+    # batch carries only the deltas, advanced after a confirmed send
+    metric_base: Dict[str, int] = {"serves": 0, "receives": 0,
+                                   "served_bytes": 0}
     blob_srv: Optional[BlobServer] = None
     own_spill: Optional[str] = None
     join_msg: Dict[str, Any] = {"op": "join", "worker": worker_id,
@@ -1079,100 +1224,148 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                 except Exception:  # noqa: BLE001 -- the head's timeout
                     pass           # sweep aborts + re-plans anyway
 
-    def resolve_dep(meta: Dict[str, Any], tid: str) -> Any:
+    def fetch_dep(meta: Dict[str, Any]) -> Tuple[bool, Any]:
+        """One pass over a dep's ticketed sources: (True, value) when a
+        fetch lands, (False, last error) when every source refused."""
         oid = meta["ref"]
         ref = ObjectRef(oid, int(meta.get("size", 0)))
         if local.has(ref):
-            return pickle.loads(local.export_blob(ref))
+            return True, pickle.loads(local.export_blob(ref))
         last_err: Optional[Exception] = None
-        for attempt in range(2):
-            for src in meta.get("sources", []):
+        for src in meta.get("sources", []):
+            try:
+                ticket = (TransferTicket.from_wire(src["ticket"])
+                          if src.get("ticket") else None)
+                transport = TCPTransport(
+                    lambda _n, _ep=(src["host"], int(src["port"])): _ep,
+                    token, wid)
+                blob = transport.fetch(src["node"], ref, ticket)
+                local.put_blob(ref, blob)  # cache: later tasks hit local
+                tenants[oid] = meta.get("tenant", "default")
                 try:
-                    ticket = (TransferTicket.from_wire(src["ticket"])
-                              if src.get("ticket") else None)
-                    transport = TCPTransport(
-                        lambda _n, _ep=(src["host"], int(src["port"])): _ep,
-                        token, wid)
-                    blob = transport.fetch(src["node"], ref, ticket)
-                    local.put_blob(ref, blob)  # cache: later tasks hit local
-                    tenants[oid] = meta.get("tenant", "default")
-                    try:
-                        # register the cached replica: the directory can
-                        # now offer this node as a source, count it as
-                        # drain cover, and -- critically -- delete it on
-                        # release() (an unregistered cache would outlive
-                        # its object)
-                        _request(ep.host, ep.port, token,
-                                 {"op": "pushed", "worker": wid,
-                                  "object": oid, "node": wid},
-                                 nonce_cache=nonces)
-                    except OSError:
-                        pass           # head unreachable: cache stays local
-                    return pickle.loads(blob)
-                except Exception as e:  # noqa: BLE001 -- try the next source
-                    last_err = e
-            if attempt == 0:
-                # the batch of tickets minted at poll time may have expired
-                # while earlier fat deps streamed (or the sources moved):
-                # ask the head for a fresh descriptor and retry once
-                try:
-                    fresh = _request(ep.host, ep.port, token,
-                                     {"op": "ticket", "worker": wid,
-                                      "task": tid, "object": oid},
-                                     nonce_cache=nonces)
+                    # register the cached replica: the directory can
+                    # now offer this node as a source, count it as
+                    # drain cover, and -- critically -- delete it on
+                    # release() (an unregistered cache would outlive
+                    # its object)
+                    _request(ep.host, ep.port, token,
+                             {"op": "pushed", "worker": wid,
+                              "object": oid, "node": wid},
+                             nonce_cache=nonces)
                 except OSError:
-                    break
-                if not fresh.get("ok"):
-                    break
-                meta = fresh["dep"]
-        raise last_err or KeyError(f"dependency {oid} has no reachable source")
+                    pass               # head unreachable: cache stays local
+                return True, pickle.loads(blob)
+            except Exception as e:  # noqa: BLE001 -- try the next source
+                last_err = e
+        return False, last_err
+
+    def resolve_deps(metas: List[Dict[str, Any]], tid: str) -> List[Any]:
+        """Fetch every dep once over its poll-time tickets, then re-mint
+        ONLY the failed subset in a single batched `tickets` round trip
+        and retry those. A long chain of fat deps used to cost one
+        `ticket` call per expired dep; now the whole tail refreshes in
+        one frame, and a dep that already landed is never re-minted."""
+        values: List[Any] = [None] * len(metas)
+        errors: Dict[int, Any] = {}
+        for i, meta in enumerate(metas):
+            ok, out = fetch_dep(meta)
+            if ok:
+                values[i] = out
+            else:
+                errors[i] = out
+        if errors:
+            failed = sorted(errors)
+            try:
+                fresh = _request(ep.host, ep.port, token,
+                                 {"op": "tickets", "worker": wid,
+                                  "task": tid,
+                                  "objects": [metas[i]["ref"]
+                                              for i in failed]},
+                                 nonce_cache=nonces)
+            except OSError:
+                fresh = {}
+            verdicts = fresh.get("deps") or []
+            if fresh.get("ok") and len(verdicts) == len(failed):
+                for i, verdict in zip(failed, verdicts):
+                    if not verdict.get("ok"):
+                        # per-dep refusal (cross-tenant, no live copy):
+                        # final for THIS dep, the others keep their wins
+                        errors[i] = KeyError(str(verdict.get("error")))
+                        continue
+                    ok, out = fetch_dep(verdict["dep"])
+                    if ok:
+                        values[i] = out
+                        del errors[i]
+                    else:
+                        errors[i] = out
+        if errors:
+            i = min(errors)
+            err = errors[i]
+            if isinstance(err, Exception):
+                raise err
+            raise KeyError(
+                f"dependency {metas[i]['ref']} has no reachable source")
+        return values
+
+    def result_meta_cb(tid: str, ref: ObjectRef):
+        """Apply the head's verdict on a piggybacked result_meta ack:
+        admission refusal deletes the local blob, over-quota spills it,
+        and a handler-level refusal degrades to a queued error report
+        (the same way a lost relay reply would have)."""
+        def apply(reply: Optional[Dict[str, Any]]):
+            if not isinstance(reply, dict) or not reply.get("ok", False):
+                err = (reply or {}).get("error", "no reply")
+                pending_ops.append((
+                    {"op": "error", "task": tid, "worker": wid,
+                     "err": f"result delivery failed: {err}"}, None))
+                return
+            if not reply.get("stored", False):
+                local.delete(ref)      # admission failed head-side
+                tenants.pop(ref.id, None)
+            elif reply.get("spill"):
+                local.spill(ref)   # over byte quota: degrade self to disk
+        return apply
 
     def run_task(tid: str, got: Dict[str, Any]):
         try:
             if "deps" in got:          # p2p: control payload + dep metadata
                 fn, args, kwargs = _dec(got["payload"])
-                deps = [resolve_dep(m, tid) for m in got["deps"]]
+                deps = resolve_deps(got["deps"], tid)
             else:                      # relay: dep values ride the payload
                 fn, args, kwargs, deps = _dec(got["payload"])
             out = fn(*args, *deps, **kwargs)
-        except Exception as e:  # noqa: BLE001
-            _request(ep.host, ep.port, token,
-                     {"op": "error", "task": tid, "worker": wid,
-                      "err": f"{type(e).__name__}: {e}"}, nonce_cache=nonces)
+        except Exception as e:  # noqa: BLE001 -- queued, not sent: the
+            # report rides the next poll's batch frame, and an unreachable
+            # head can no longer kill the worker mid-report
+            pending_ops.append((
+                {"op": "error", "task": tid, "worker": wid,
+                 "err": f"{type(e).__name__}: {e}"}, None))
+            return
+        if "deps" in got and blob_srv is not None:
+            # result stays local: the head records metadata only, and the
+            # registration itself is QUEUED -- it piggybacks on the next
+            # poll as a batch sub-op instead of costing a round trip
+            ref = ObjectRef(f"obj-{tid}")
+            blob = pickle.dumps(out, protocol=pickle.HIGHEST_PROTOCOL)
+            local.put_blob(ref, blob)
+            tenants[ref.id] = got.get("tenant", "default")
+            pending_ops.append((
+                {"op": "result_meta", "task": tid, "worker": wid,
+                 "size": len(blob)}, result_meta_cb(tid, ref)))
             return
         try:
-            if "deps" in got and blob_srv is not None:
-                # result stays local: the head records metadata only
-                ref = ObjectRef(f"obj-{tid}")
-                blob = pickle.dumps(out, protocol=pickle.HIGHEST_PROTOCOL)
-                local.put_blob(ref, blob)
-                tenants[ref.id] = got.get("tenant", "default")
-                reply = _request(ep.host, ep.port, token,
-                                 {"op": "result_meta", "task": tid,
-                                  "worker": wid, "size": len(blob)},
-                                 nonce_cache=nonces)
-                if not reply.get("stored", False):
-                    local.delete(ref)      # admission failed head-side
-                    tenants.pop(ref.id, None)
-                elif reply.get("spill"):
-                    local.spill(ref)   # over byte quota: degrade self to disk
-            else:
-                _request(ep.host, ep.port, token,
-                         {"op": "result", "task": tid, "worker": wid,
-                          "payload": _enc(out)}, nonce_cache=nonces)
+            _request(ep.host, ep.port, token,
+                     {"op": "result", "task": tid, "worker": wid,
+                      "payload": _enc(out)}, nonce_cache=nonces)
         except Exception as e:  # noqa: BLE001 -- reporting must never kill
             # the worker: a truncated reply (JSONDecodeError), a stale
             # envelope (SecurityError) or an unreachable head all degrade
-            # to a best-effort error report + requeue-via-heartbeat, and
-            # our local blobs survive for the leave/drain handshake
-            try:
-                _request(ep.host, ep.port, token,
-                         {"op": "error", "task": tid, "worker": wid,
-                          "err": f"result delivery failed: "
-                                 f"{type(e).__name__}: {e}"},
-                         nonce_cache=nonces)
-            except Exception:  # noqa: BLE001
-                pass
+            # to a queued error report + requeue-via-heartbeat, and our
+            # local blobs survive for the leave/drain handshake
+            pending_ops.append((
+                {"op": "error", "task": tid, "worker": wid,
+                 "err": f"result delivery failed: "
+                        f"{type(e).__name__}: {e}"}, None))
             return
 
     def safe_to_leave() -> bool:
@@ -1225,21 +1418,49 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                 if safe_to_leave():
                     return
                 idle_since = time.monotonic()   # still needed: keep serving
+            deltas: Dict[str, int] = {}
+            if blob_srv is not None:
+                deltas = {k: int(blob_srv.stats.get(k, 0)) - metric_base[k]
+                          for k in metric_base
+                          if int(blob_srv.stats.get(k, 0)) != metric_base[k]}
+            sent = list(pending_ops)
+            if sent or deltas:
+                # piggyback everything queued since the last poll on ONE
+                # batch frame, the poll itself riding last
+                ops = [o for o, _ in sent]
+                if deltas:
+                    ops.append({"op": "metric_deltas", "worker": wid,
+                                "deltas": deltas})
+                ops.append({"op": "poll", "worker": wid})
+                req: Dict[str, Any] = {"op": "batch", "worker": wid,
+                                       "ops": ops}
+            else:
+                req = {"op": "poll", "worker": wid}
             try:
-                got = _request(ep.host, ep.port, token,
-                               {"op": "poll", "worker": wid},
+                got = _request(ep.host, ep.port, token, req,
                                nonce_cache=nonces)
             except OSError:
                 # same tolerance as the leave handshake: one refused
                 # connect (listen-backlog burst, transient timeout) must
                 # not kill a worker that may hold sole copies -- only a
-                # persistently unreachable head means the cluster is over
+                # persistently unreachable head means the cluster is over.
+                # Queued acks stay queued (and deltas un-advanced): they
+                # replay on the next attempt.
                 poll_failures += 1
                 if poll_failures >= 5:
                     return
                 time.sleep(0.2)
                 continue
             poll_failures = 0
+            if sent or deltas:
+                replies = got.get("replies") or []
+                del pending_ops[:len(sent)]
+                for k in metric_base:
+                    metric_base[k] += deltas.get(k, 0)
+                for (_op, cb), reply in zip(sent, replies[:len(sent)]):
+                    if cb is not None:
+                        cb(reply)      # may queue follow-up error reports
+                got = replies[-1] if replies else {}
             if got.get("migrations"):
                 # drain-move directives ride the poll reply: push the
                 # blobs peer to peer before anything else -- the drain

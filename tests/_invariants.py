@@ -18,8 +18,10 @@ in a state where ALL of the following hold (see tests/README.md):
   5. zero hot-producer re-execution (opt-in): drains migrate, they never
      recompute.
 
-Call it after the dust settles (it snapshots under the store lock but
-probes node stores outside it, so a racing mutation could false-positive).
+Call it after the dust settles (it snapshots under the shard locks but
+probes node stores outside them, so a racing mutation could
+false-positive). The invariants hold per object regardless of the
+store's shard count -- `directory_snapshot` collates all shards.
 """
 from repro.core import ObjectRef
 
@@ -28,11 +30,7 @@ def check_invariants(store, expect_fetchable=None, scheduler=None,
                      expect_zero_reconstructions=False):
     """Assert the global storage invariants; returns the directory
     snapshot ({oid: (locations, owner, refcount)}) for extra checks."""
-    with store._lock:
-        snapshot = {oid: (set(e.locations), e.owner, e.refcount)
-                    for oid, e in store._dir.items()}
-        nodes = dict(store._nodes)
-        moves = {oid: (mv.src, mv.dst) for oid, mv in store._moves.items()}
+    snapshot, nodes, moves = store.directory_snapshot()
 
     for oid, (locs, owner, _rc) in snapshot.items():
         ref = ObjectRef(oid)

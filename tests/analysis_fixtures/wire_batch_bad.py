@@ -1,0 +1,29 @@
+"""known-bad: batch sub-ops drift from the handler set (SYN-W001 on a
+queued sub-op with no handler, SYN-W002 when the only send of an op is
+a sub-op missing a required field)."""
+
+
+class Server:
+    def __init__(self):
+        self.acks = []
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "ack":
+            self.acks.append(msg["task"])
+            return {"ok": True}
+        if op == "batch":
+            return {"ok": True,
+                    "replies": [self.dispatch(s)
+                                for s in msg.get("ops") or []]}
+        return {"ok": False, "error": f"bad op {op}"}
+
+
+def _request(host, port, token, msg):
+    raise NotImplementedError
+
+
+def client_poll(pending):
+    pending.append({"op": "ack", "worker": "w"})    # missing "task"
+    pending.append({"op": "flysh", "worker": "w"})  # typo: no handler
+    return _request("h", 1, "t", {"op": "batch", "ops": pending})

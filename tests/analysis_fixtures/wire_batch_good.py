@@ -1,0 +1,30 @@
+"""known-good: batch sub-ops (queued AND inline) line up with the
+handler set -- the repaired twin of wire_batch_bad.py."""
+
+
+class Server:
+    def __init__(self):
+        self.acks = []
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "ack":
+            self.acks.append(msg["task"])
+            return {"ok": True}
+        if op == "poll":
+            return {"ok": True, "task": None}
+        if op == "batch":
+            return {"ok": True,
+                    "replies": [self.dispatch(s)
+                                for s in msg.get("ops") or []]}
+        return {"ok": False, "error": f"bad op {op}"}
+
+
+def _request(host, port, token, msg):
+    raise NotImplementedError
+
+
+def client_poll(pending):
+    pending.append({"op": "ack", "task": "t1", "worker": "w"})
+    return _request("h", 1, "t",
+                    {"op": "batch", "ops": pending + [{"op": "poll"}]})

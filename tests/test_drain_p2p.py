@@ -361,7 +361,7 @@ def test_cluster_get_marks_client_reads():
         t = cluster.submit(produce)
         assert cluster.get(t, timeout=30) is not None
         ref = cluster.scheduler.graph.tasks[t.id].output
-        assert ref.id in cluster.store._client_reads
+        assert ref.id in cluster.store._shard(ref.id).client_reads
 
 
 # ------------------------------------------------- sim: drain plane modeling

@@ -1,0 +1,468 @@
+"""Sharded + batched head control plane: equivalence, clock, accounting.
+
+Four families of checks back the sharded-head PR (tests/README.md,
+"Sharded head protocol"):
+
+  1. clock skew: the HybridClock anchors wall time once and advances it
+     monotonically, so an NTP step mid-transfer can neither expire every
+     in-flight ticket (a relay-fallback storm) nor reject fresh sealed
+     envelopes as stale,
+  2. retry accounting: transfer/link counters are attempt-idempotent --
+     a flaky transport's retry charges one blob's bytes exactly once,
+  3. equivalence: property tests drive the SAME random op interleavings
+     through shards=1 (the seed-exact baseline) and shards=N twins and
+     require identical directories, decisions, and stats -- plus a chaos
+     case (one ready shard hot while a worker drains) holding the global
+     storage invariants of tests/_invariants.py,
+  4. wire batching: the `batch` frame's replies align 1:1 with its
+     sub-ops, nested batches are refused, metric deltas fold into the
+     head's aggregate, and a batched `tickets` re-mint returns per-dep
+     verdicts so one expired dep cannot poison the rest.
+
+Runs under real `hypothesis` when installed, else the deterministic
+fallback shim (tests/_hypothesis_fallback.py).
+"""
+import time
+from collections import deque
+
+import pytest
+
+from repro.core import (ObjectRef, Scheduler, SchedulerConfig, SimCluster,
+                        SimCostModel, SyndeoCluster, TaskSpec, WorkerInfo)
+from repro.core.object_store import (GlobalObjectStore, InProcessTransport,
+                                     NodeStore)
+from repro.core.security import (HybridClock, SecurityError, TransferTicket,
+                                 open_sealed, seal, set_clock)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from _invariants import check_invariants
+
+
+def _noop():
+    return None
+
+
+# ------------------------------------------------------------ clock skew
+
+
+class _FakeClock:
+    def __init__(self, t: float):
+        self.t = t
+
+    def now(self) -> float:
+        return self.t
+
+
+def test_hybrid_clock_is_immune_to_wall_steps(monkeypatch):
+    """A wall-clock step after construction does not move an existing
+    HybridClock; a clock constructed after the step anchors at the new
+    wall time (wire timestamps stay unix-comparable across hosts)."""
+    base = time.time()
+    clk = HybridClock()
+    before = clk.now()
+    monkeypatch.setattr(time, "time", lambda: base + 60.0)
+    after = clk.now()
+    assert abs(after - before) < 1.0, \
+        f"wall step leaked into HybridClock: {after - before:+.1f}s"
+    stepped = HybridClock()
+    assert stepped.now() - after > 55.0, \
+        "a freshly anchored clock must see the stepped wall time"
+
+
+def test_ticket_survives_wall_step_but_still_expires(monkeypatch):
+    """±60s NTP steps mid-window leave a 30s ticket valid; step-immune
+    time still enforces the real expiry."""
+    token = "tok"
+    t = TransferTicket.grant(token, "o1", "a", "b", ttl_s=30.0)
+    base = time.time()
+    for step in (+60.0, -60.0):
+        monkeypatch.setattr(time, "time", lambda s=step: base + s)
+        t.verify(token, "o1", "a", "b")        # must not raise
+    monkeypatch.undo()
+    with pytest.raises(SecurityError, match="expired"):
+        t.verify(token, "o1", "a", "b", now=t.expires_at + 1.0)
+
+
+def test_sealed_envelope_freshness_survives_wall_step(monkeypatch):
+    """A +60s step would instantly stale every envelope under a 5s replay
+    window if freshness math read the wall clock; the hybrid clock keeps
+    the envelope fresh through steps in both directions."""
+    env = seal("tok", {"x": 1})
+    base = time.time()
+    for step in (+60.0, -60.0):
+        monkeypatch.setattr(time, "time", lambda s=step: base + s)
+        assert open_sealed("tok", env, max_age_s=5.0) == {"x": 1}
+
+
+def test_injected_clock_drives_mint_and_expiry():
+    """set_clock() threads a test clock through mint AND verify: expiry
+    is decided by the injected time base, not the host's."""
+    prev = set_clock(_FakeClock(1000.0))
+    try:
+        t = TransferTicket.grant("tok", "o", "a", "b", ttl_s=30.0)
+        assert t.expires_at == pytest.approx(1030.0)
+        t.verify("tok", "o", "a", "b")
+        set_clock(_FakeClock(1030.5))
+        with pytest.raises(SecurityError, match="expired"):
+            t.verify("tok", "o", "a", "b")
+    finally:
+        set_clock(prev)
+
+
+def test_wall_step_mid_transfer_no_ticket_reject_no_fallback(monkeypatch):
+    """Regression for the clock-skew bug: jump the wall clock BETWEEN
+    ticket mint and the guarded fetch. The fetch must complete on the
+    first attempt -- zero ticket_rejects, zero relay_fallbacks."""
+    store = GlobalObjectStore()
+    for n in ("a", "b"):
+        store.register_node(NodeStore(n))
+    store.set_access_guard("cluster-token")
+    store.set_transfer_guard()
+    ref = store.put("a", b"payload" * 100)
+    for step in (+60.0, -60.0):
+        ticket = store.grant_fetch(ref, "b", "default", ttl_s=30.0)
+        assert ticket is not None
+        base = time.time()
+        monkeypatch.setattr(time, "time", lambda s=step: base + s)
+        moved = store.fetch("b", ref, ticket=ticket)
+        monkeypatch.undo()
+        assert moved > 0 or store.locations(ref) >= {"a", "b"}
+        assert store.stats["ticket_rejects"] == 0
+        assert store.stats["relay_fallbacks"] == 0
+        # reset for the second direction
+        store.release(ref)
+        ref = store.put("a", b"payload" * 100)
+
+
+# ------------------------------------------------------ retry accounting
+
+
+class _FlakyTransport(InProcessTransport):
+    """Drops the first fetch attempt on the floor (connection reset)."""
+
+    def __init__(self, fail_first: int = 1):
+        self.calls = 0
+        self.fail_first = fail_first
+
+    def fetch(self, src_store, ref, ticket=None):
+        self.calls += 1
+        if self.calls <= self.fail_first:
+            raise OSError("simulated transport reset")
+        return super().fetch(src_store, ref, ticket)
+
+
+def test_retried_fetch_charges_link_accounting_once():
+    """Regression for the retry-accounting bug: a failed attempt charges
+    nothing, the successful retry charges exactly one blob, and a
+    duplicate retry after landing is a free no-op."""
+    store = GlobalObjectStore(transport=_FlakyTransport())
+    for n in ("a", "b"):
+        store.register_node(NodeStore(n))
+    ref = store.put("a", b"x" * 1000)
+    with pytest.raises(OSError):
+        store.fetch("b", ref)
+    assert store.stats["transfers"] == 0
+    assert store.stats["transfer_bytes"] == 0
+    assert store.link_load("a") == 0 and store.link_load("b") == 0
+
+    moved = store.fetch("b", ref)              # the worker's retry
+    assert moved == ref.size
+    assert store.stats["transfers"] == 1
+    assert store.stats["transfer_bytes"] == ref.size
+    assert store.link_load("a") == ref.size
+    assert store.link_load("b") == ref.size
+
+    assert store.fetch("b", ref) == 0          # over-eager duplicate retry
+    assert store.stats["transfers"] == 1
+    assert store.stats["transfer_bytes"] == ref.size
+    assert store.link_load("a") == ref.size
+
+
+def test_import_blob_reports_duplicate_copy():
+    """The landing side of the same bug: a node already holding the blob
+    reports the import as a duplicate so receive counters stay exact."""
+    ns = NodeStore("n")
+    ref = ObjectRef("dup-1", 4)
+    assert ns.import_blob(ref, b"abcd") is True
+    assert ns.import_blob(ref, b"abcd") is False
+
+
+# ------------------------------------------- sharded == single-shard
+
+
+def _mirrored_stores():
+    stores = []
+    for shards in (1, 8):
+        s = GlobalObjectStore(shards=shards)
+        for n in ("a", "b", "c"):
+            s.register_node(NodeStore(n))
+        stores.append(s)
+    return stores
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(min_value=0, max_value=9999),
+                min_size=1, max_size=60))
+def test_sharded_directory_equals_single_shard(codes):
+    """Property: the SAME random put/fetch/add_ref/release interleaving
+    through shards=1 and shards=8 yields identical outcomes (including
+    exceptions), directories, and transfer stats."""
+    stores = _mirrored_stores()
+    nodes = ("a", "b", "c")
+    live = []
+    for k, code in enumerate(codes):
+        action = code % 4
+        outcomes = []
+        for s in stores:
+            try:
+                if action == 0:
+                    s.put(nodes[code % 3], b"v" * (1 + code % 7),
+                          ref_id=f"o{k}")
+                    outcome = ("put", f"o{k}")
+                elif action == 1 and live:
+                    oid = live[code % len(live)]
+                    moved = s.fetch(nodes[(code // 4) % 3], ObjectRef(oid))
+                    outcome = ("fetch", oid, moved)
+                elif action == 2 and live:
+                    oid = live[code % len(live)]
+                    s.add_ref(ObjectRef(oid))
+                    outcome = ("add_ref", oid)
+                elif action == 3 and live:
+                    oid = live[code % len(live)]
+                    s.release(ObjectRef(oid))
+                    outcome = ("release", oid)
+                else:
+                    outcome = ("noop",)
+            except Exception as e:  # noqa: BLE001 -- mirrored verdicts
+                outcome = ("raise", type(e).__name__)
+            outcomes.append(outcome)
+        assert outcomes[0] == outcomes[1], \
+            f"op {k} diverged: {outcomes[0]} vs {outcomes[1]}"
+        if action == 0:
+            live.append(f"o{k}")
+    dirs = [s.directory_snapshot()[0] for s in stores]
+    assert dirs[0] == dirs[1]
+    for key in ("transfers", "transfer_bytes", "records"):
+        assert stores[0].stats[key] == stores[1].stats[key], key
+
+
+def _twin_scheduler(shards):
+    log = []
+    store = GlobalObjectStore(shards=shards)
+    cfg = SchedulerConfig(shards=shards, enable_speculation=False,
+                          heartbeat_timeout=1e9)
+    sched = Scheduler(store, lambda t, w: log.append((t.id, t.spec.name)),
+                      lambda t, w: None, cfg)
+    for i in range(4):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    return sched, log
+
+
+@settings(max_examples=15)
+@given(st.lists(st.integers(min_value=0, max_value=9999),
+                min_size=1, max_size=80))
+def test_sharded_scheduler_matches_single_shard_decisions(codes):
+    """Property: random submit/finish/fail interleavings across tenants
+    produce the SAME launch sequence (by task name) and the same
+    launched/finished/failed/retried counters on shards=1 and shards=8."""
+    twins = [_twin_scheduler(1), _twin_scheduler(8)]
+    cursor = [0, 0]                 # next launched-but-unsettled task
+    n_submitted = 0
+
+    def names(j):
+        return [name for _, name in twins[j][1]]
+
+    for code in codes:
+        act = code % 3
+        if act == 0:
+            for sched, _ in twins:
+                sched.submit(TaskSpec(fn=_noop, name=f"t{n_submitted}",
+                                      tenant_id=f"ten{code % 3}"))
+            n_submitted += 1
+        elif cursor[0] < len(twins[0][1]):
+            for j, (sched, log) in enumerate(twins):
+                tid, _ = log[cursor[j]]
+                if act == 1:
+                    sched.on_task_finished(tid, ObjectRef(f"obj-{tid}"))
+                else:
+                    sched.on_task_failed(tid, "chaos: injected failure")
+                cursor[j] += 1
+        assert names(0) == names(1), "launch decisions diverged mid-stream"
+    while cursor[0] < len(twins[0][1]):     # settle the backlog
+        for j, (sched, log) in enumerate(twins):
+            tid, _ = log[cursor[j]]
+            sched.on_task_finished(tid, ObjectRef(f"obj-{tid}"))
+            cursor[j] += 1
+    assert names(0) == names(1)
+    for key in ("launched", "finished", "failed", "retried"):
+        assert twins[0][0].stats[key] == twins[1][0].stats[key], key
+
+
+def test_chaos_hot_shard_while_another_drains():
+    """Chaos case from the issue: one tenant floods its ready shard while
+    a worker holding live results drains. Every task must still finish,
+    the drained node must leave the cluster, and the global storage
+    invariants (tests/_invariants.py) must hold on the sharded store."""
+    cost = SimCostModel(task_time_s=lambda s: 0.05,
+                        result_bytes=lambda s: 4096.0, jitter=0.0,
+                        result_location="worker", data_plane="p2p")
+    sim = SimCluster(cost, SchedulerConfig(shards=4,
+                                           enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    ids = sim.add_workers(6)
+    tasks = [sim.submit(TaskSpec(fn=_noop, name=f"hot{i}", tenant_id="hot"))
+             for i in range(48)]
+    tasks += [sim.submit(TaskSpec(fn=_noop, name=f"cold{i}",
+                                  tenant_id=f"cold{i % 2}"))
+              for i in range(6)]
+    victim = ids[0]
+    sim.drain_worker_at(victim, 0.2)
+    sim.run()
+    for t in tasks:
+        cur = sim.scheduler.graph.tasks[t.id]
+        assert cur.output is not None, f"{cur.spec.name} never finished"
+    assert victim not in sim.scheduler.workers, "drained worker lingered"
+    snapshot = check_invariants(sim.store, scheduler=sim.scheduler)
+    for oid, (locs, _, _) in snapshot.items():
+        assert victim not in locs, f"{oid} still lists the drained node"
+
+
+# ------------------------------------------------------- wire batching
+
+
+def test_batch_frame_replies_align_and_refuse_nesting():
+    """One `batch` frame: replies align 1:1 with sub-ops, the piggybacked
+    result_meta lands the result, metric deltas fold into the `metrics`
+    aggregate, and a nested batch gets a per-sub refusal -- all without
+    failing the frame."""
+    from repro.core.worker import HeadServer
+
+    cluster = SyndeoCluster(scheduler_config=SchedulerConfig(
+        shards=4, enable_speculation=False, heartbeat_timeout=1e9))
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        server.dispatch({"op": "join", "worker": "tcp-b",
+                         "resources": {"cpu": 1.0}})
+        task = cluster.submit(pow, 2, 10, tenant_id="alice")
+        got = server.dispatch({"op": "poll", "worker": "tcp-b"})
+        assert got["task"] == task.id
+        reply = server.dispatch({"op": "batch", "worker": "tcp-b", "ops": [
+            {"op": "result_meta", "task": task.id, "worker": "tcp-b",
+             "size": 64},
+            {"op": "metric_deltas", "worker": "tcp-b",
+             "deltas": {"serves": 3, "served_bytes": 4096}},
+            {"op": "batch", "worker": "tcp-b", "ops": []},
+            {"op": "poll", "worker": "tcp-b"},
+        ]})
+        assert reply["ok"] and len(reply["replies"]) == 4
+        meta_r, metric_r, nested_r, poll_r = reply["replies"]
+        assert meta_r["ok"] and meta_r["stored"]
+        assert metric_r["ok"]
+        assert not nested_r["ok"] and "nested" in nested_r["error"]
+        assert poll_r["ok"] and poll_r["task"] is None   # queue is empty
+        cur = cluster.scheduler.graph.tasks[task.id]
+        assert cur.output is not None, "batched result_meta must finish it"
+        metrics = server.dispatch({"op": "metrics"})
+        assert metrics["syndeo_worker_blob_serves"] == 3
+        assert metrics["syndeo_worker_served_bytes"] == 4096
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+def test_batch_bad_sub_op_gets_verdict_not_frame_failure():
+    """A malformed sub-op yields {"ok": False, "error": ...} in ITS slot;
+    the neighbors still execute."""
+    from repro.core.worker import HeadServer
+
+    cluster = SyndeoCluster(scheduler_config=SchedulerConfig(
+        shards=2, enable_speculation=False, heartbeat_timeout=1e9))
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        server.dispatch({"op": "join", "worker": "tcp-c",
+                         "resources": {"cpu": 1.0}})
+        reply = server.dispatch({"op": "batch", "worker": "tcp-c", "ops": [
+            {"op": "error", "worker": "tcp-c"},          # missing "task"
+            {"op": "poll", "worker": "tcp-c"},
+        ]})
+        assert reply["ok"] and len(reply["replies"]) == 2
+        bad, good = reply["replies"]
+        assert not bad["ok"] and "KeyError" in bad["error"]
+        assert good["ok"]
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+def test_batched_tickets_partial_denial_per_dep_verdicts():
+    """The batched `tickets` re-mint: a denied dep (cross-tenant) gets
+    its own {"ok": False} verdict while the valid dep in the same frame
+    is re-minted -- one bad dep never fails the whole batch. A dep with
+    no live copies stays ok=True with empty sources (the worker reports
+    the miss; a ticket complaint would mask it)."""
+    from repro.core.worker import HeadServer
+
+    cluster = SyndeoCluster(scheduler_config=SchedulerConfig(
+        shards=2, enable_speculation=False, heartbeat_timeout=1e9))
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        server.dispatch({"op": "join", "worker": "tcp-d",
+                         "resources": {"cpu": 1.0}})
+        dep = cluster.put({"d": 1}, tenant_id="alice")
+        secret = cluster.put({"s": 1}, tenant_id="bob")
+        task = cluster.submit(lambda x: x, deps=[dep], tenant_id="alice")
+        reply = server.dispatch({"op": "tickets", "worker": "tcp-d",
+                                 "task": task.id,
+                                 "objects": [dep.id, secret.id,
+                                             "obj-never-existed"]})
+        assert reply["ok"] and len(reply["deps"]) == 3
+        good, denied, missing = reply["deps"]
+        assert good["ok"] and good["dep"]["ref"] == dep.id
+        assert not denied["ok"] and "SecurityError" in denied["error"]
+        assert missing["ok"] and missing["dep"]["sources"] == []
+        unknown = server.dispatch({"op": "tickets", "worker": "tcp-d",
+                                   "task": "no-such-task",
+                                   "objects": [dep.id]})
+        assert not unknown["ok"]
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+def test_headplane_decision_stream_smoke():
+    """Miniature of the benchmark gate: a steady-state arrival stream on
+    shards=8 launches and finishes every task (the CI perf gate itself
+    lives in benchmarks/dataplane_bench.py --headplane-smoke)."""
+    store = GlobalObjectStore(shards=8)
+    cfg = SchedulerConfig(shards=8, enable_speculation=False,
+                          heartbeat_timeout=1e9)
+    launched = deque()
+    sched = Scheduler(store, lambda t, w: launched.append(t.id),
+                      lambda t, w: None, cfg)
+    for i in range(16):
+        sched.add_worker(WorkerInfo(f"w{i}", {"cpu": 1.0}))
+    total, submitted, finished = 200, 0, 0
+    while submitted < 32:
+        sched.submit(TaskSpec(fn=_noop, name=f"t{submitted}",
+                              tenant_id=f"ten{submitted % 4}"))
+        submitted += 1
+    while finished < total and launched:
+        tid = launched.popleft()
+        sched.on_task_finished(tid, ObjectRef(f"obj-{tid}"))
+        finished += 1
+        if submitted < total:
+            sched.submit(TaskSpec(fn=_noop, name=f"t{submitted}",
+                                  tenant_id=f"ten{submitted % 4}"))
+            submitted += 1
+    assert finished == total
+    assert sched.stats["launched"] == total
+    assert sched.stats["finished"] == total
