@@ -15,6 +15,15 @@ Batch sub-ops are wire frames too: a dict literal carrying a constant
 an ``"ops"`` key is cross-checked exactly like a top-level client send
 -- a malformed sub-op must fail lint here, not at dispatch time.
 
+Multi-blob push frames get the same treatment on the blob plane: a
+frame with a constant ``"op"`` and a ``"blobs"`` key carries per-blob
+declaration dicts, each cross-checked under the pseudo-op
+``"<op>#blob"``. The matching handler is the ``for``-loop over the
+frame's ``"blobs"`` list -- inline in the op branch, or in a helper
+the branch calls (one level deep, the BlobServer delegation shape).
+A declared blob no handler loop ever reads is SYN-W001; a per-blob
+field the loop requires that no declaration carries is SYN-W002.
+
 SYN-W001  op sent by a client but matched by no handler branch.
 SYN-W002  field a handler requires that no client site for that op
           ever sends (ops never sent in the analyzed tree are skipped:
@@ -58,11 +67,22 @@ class SendSite:
 def check_wire(model: CodeModel) -> List[Finding]:
     handlers: Dict[str, List[HandlerInfo]] = {}
     sends: List[SendSite] = []
+    # helpers that iterate a frame's "blobs" declarations, keyed by
+    # bare name: an op branch that calls one adopts its per-blob reads
+    blob_loop_fns: Dict[str, Tuple[object, Tuple[Dict[str, int],
+                                                 Set[str], int]]] = {}
+    for fn in model.functions.values():
+        bf = _blob_entry_fields(fn.node.body)
+        if bf is not None:
+            blob_loop_fns[fn.qualname.split(".")[-1]] = (fn, bf)
     for fn in model.functions.values():
         for h in _extract_handlers(fn):
             handlers.setdefault(h.op, []).append(h)
+        for h in _extract_blob_handlers(fn, blob_loop_fns):
+            handlers.setdefault(h.op, []).append(h)
         sends.extend(_extract_sends(fn))
         sends.extend(_extract_batch_subops(fn))
+        sends.extend(_extract_blob_subops(fn))
 
     findings: List[Finding] = []
     for s in sends:
@@ -225,6 +245,171 @@ def _collect_branch(info: HandlerInfo, stmts: List[ast.stmt],
                     keys = _dict_keys(d)
                     if keys is not None:
                         info.replies.append((d.lineno, keys))
+
+
+# -- multi-blob frame extraction ------------------------------------------
+
+
+def _is_blobs_read(e: ast.AST) -> bool:
+    """``var.get("blobs")`` or ``var["blobs"]``."""
+    if (isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute)
+            and e.func.attr == "get" and e.args
+            and _const_str(e.args[0]) == "blobs"):
+        return True
+    rf = _reads_field(e)
+    return rf is not None and rf[1] == "blobs"
+
+
+def _strip_or(e: ast.AST) -> ast.AST:
+    """Unwrap the ``x or []`` default idiom to the real source."""
+    if isinstance(e, ast.BoolOp) and isinstance(e.op, ast.Or) and e.values:
+        return e.values[0]
+    return e
+
+
+def _blob_entry_fields(stmts: List[ast.stmt]
+                       ) -> Optional[Tuple[Dict[str, int], Set[str], int]]:
+    """(required, optional, line) of per-blob field reads when `stmts`
+    loop over a frame's ``"blobs"`` list -- directly, via a local alias,
+    or as the first argument of a ``zip(...)``; None when they don't."""
+    blob_vars: Set[str] = set()
+    for st in stmts:
+        for n in ast.walk(st):
+            if (isinstance(n, ast.Assign) and len(n.targets) == 1
+                    and isinstance(n.targets[0], ast.Name)
+                    and _is_blobs_read(_strip_or(n.value))):
+                blob_vars.add(n.targets[0].id)
+    required: Dict[str, int] = {}
+    optional: Set[str] = set()
+    line: Optional[int] = None
+    for st in stmts:
+        for n in ast.walk(st):
+            if not isinstance(n, ast.For):
+                continue
+            it, tgt = n.iter, n.target
+            if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                    and it.func.id == "zip" and it.args):
+                it = it.args[0]
+                if isinstance(tgt, ast.Tuple) and tgt.elts:
+                    tgt = tgt.elts[0]
+            it = _strip_or(it)
+            if not (_is_blobs_read(it)
+                    or (isinstance(it, ast.Name) and it.id in blob_vars)):
+                continue
+            if not isinstance(tgt, ast.Name):
+                continue
+            entry = tgt.id
+            if line is None:
+                line = n.lineno
+            for m in ast.walk(n):
+                rf = _reads_field(m)
+                if rf and rf[0] == entry:
+                    required.setdefault(rf[1], m.lineno)
+                if (isinstance(m, ast.Call)
+                        and isinstance(m.func, ast.Attribute)
+                        and m.func.attr == "get" and m.args
+                        and isinstance(m.func.value, ast.Name)
+                        and m.func.value.id == entry):
+                    fld = _const_str(m.args[0])
+                    if fld:
+                        optional.add(fld)
+    if line is None:
+        return None
+    return required, optional, line
+
+
+def _extract_blob_handlers(fn, blob_loop_fns) -> List[HandlerInfo]:
+    """Pseudo-op ``"<op>#blob"`` handlers: op branches that loop over the
+    frame's ``"blobs"`` declarations inline, or call a helper that does
+    (one level deep -- the BlobServer shape, where the branch delegates
+    to ``_verify_batch``/``_put_batch``)."""
+    node = fn.node
+    opvars: Dict[str, str] = {}
+    for st in ast.walk(node):
+        if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                and isinstance(st.targets[0], ast.Name)):
+            mv = _op_read_var(st.value)
+            if mv:
+                opvars[st.targets[0].id] = mv
+    out: List[HandlerInfo] = []
+    for st in ast.walk(node):
+        if not isinstance(st, ast.If):
+            continue
+        hit = _branch_ops(st.test, opvars)
+        if not hit:
+            continue
+        _msgvar, ops = hit
+        hits: List[Tuple[object, Tuple[Dict[str, int], Set[str], int]]] = []
+        inline = _blob_entry_fields(st.body)
+        if inline is not None:
+            hits.append((fn, inline))
+        seen = {id(fn)} if inline is not None else set()
+        for b in st.body:
+            for n in ast.walk(b):
+                if not isinstance(n, ast.Call):
+                    continue
+                cname = None
+                if isinstance(n.func, ast.Name):
+                    cname = n.func.id
+                elif isinstance(n.func, ast.Attribute):
+                    cname = n.func.attr
+                tgt = blob_loop_fns.get(cname)
+                if tgt is not None and id(tgt[0]) not in seen:
+                    seen.add(id(tgt[0]))
+                    hits.append(tgt)
+        for op in ops:
+            for hfn, (req, opt, line) in hits:
+                out.append(HandlerInfo(
+                    op=f"{op}#blob", file=hfn.file,
+                    function=hfn.qualname, line=line,
+                    required=dict(req), optional=set(opt)))
+    return out
+
+
+def _extract_blob_subops(fn) -> List[SendSite]:
+    """Send sites hiding inside multi-blob push frames: a dict literal
+    with a constant ``"op"`` and a ``"blobs"`` key is a blob-plane
+    frame, and each per-blob declaration dict under ``"blobs"`` (inline,
+    or via a local list variable such as a comprehension) is
+    cross-checked as pseudo-op ``"<op>#blob"``."""
+    node = fn.node
+    # local list-of-declaration variables (e.g. a list comprehension of
+    # per-blob dicts): var -> the dict literals it was built from
+    local_lists: Dict[str, List[ast.Dict]] = {}
+    for st in ast.walk(node):
+        if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                and isinstance(st.targets[0], ast.Name)
+                and not isinstance(st.value, ast.Dict)):
+            dicts = [d for d in ast.walk(st.value)
+                     if isinstance(d, ast.Dict)]
+            if dicts:
+                local_lists[st.targets[0].id] = dicts
+    out: List[SendSite] = []
+    for n in ast.walk(node):
+        if not isinstance(n, ast.Dict):
+            continue
+        op: Optional[str] = None
+        blobs_val: Optional[ast.AST] = None
+        for k, v in zip(n.keys, n.values):
+            ks = _const_str(k) if k is not None else None
+            if ks == "op":
+                op = _const_str(v)
+            elif ks == "blobs":
+                blobs_val = v
+        if op is None or blobs_val is None:
+            continue
+        if isinstance(blobs_val, ast.Name):
+            decls = local_lists.get(blobs_val.id, [])
+        else:
+            decls = [d for d in ast.walk(blobs_val)
+                     if isinstance(d, ast.Dict)]
+        for bd in decls:
+            keys = _dict_keys(bd)
+            if keys is not None:
+                out.append(SendSite(op=f"{op}#blob", file=fn.file,
+                                    function=fn.qualname, line=bd.lineno,
+                                    keys=keys))
+    return out
 
 
 # -- client-site extraction ----------------------------------------------

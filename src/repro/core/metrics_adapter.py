@@ -35,7 +35,15 @@ DEFAULT_METRICS = ("syndeo_backlog_per_worker", "syndeo_busy_fraction",
                    # alert on aborted moves / relay downgrades, and the
                    # p2p-vs-relay benchmark reads head_relayed_bytes
                    "syndeo_moves_aborted", "syndeo_relay_fallbacks",
-                   "syndeo_head_relayed_bytes", "syndeo_replica_gc")
+                   "syndeo_head_relayed_bytes", "syndeo_replica_gc",
+                   # data-plane throughput layer: broadcast-tree fan-out,
+                   # multi-blob move frames, spill-tier efficiency --
+                   # dashboards watch bytes saved / promotions to size
+                   # spill dirs, and tree_edges/rounds to spot fan-out
+                   # regressions before the serving plane multiplies them
+                   "syndeo_broadcast_rounds", "syndeo_tree_edges",
+                   "syndeo_batched_moves", "syndeo_delta_spill_bytes_saved",
+                   "syndeo_promotions")
 
 
 class MetricsPoller:

@@ -125,7 +125,7 @@ import uuid
 import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.security import (ADMIN_TENANT, DEFAULT_TENANT, Capability,
                                  NonceCache, SecurityError, TransferTicket,
@@ -202,19 +202,64 @@ class ObjectRef:
                          producer_task=producer_task, tenant=tenant)
 
 
+#: delta-spill chunking: boundaries are content-defined at 1 KiB block
+#: granularity (a block whose crc32 matches the mask closes the chunk),
+#: bounded to [4 KiB, 64 KiB] so pathological content cannot degenerate
+#: into one-chunk or per-byte manifests. Byte-identical regions chunk
+#: identically across generations, which is what lets a re-spill skip
+#: chunks the prior generation already wrote.
+_SPILL_STEP = 1024
+_SPILL_MASK = 0x7                       # 1-in-8 blocks: ~12 KiB avg chunk
+SPILL_CHUNK_MIN = 4 * 1024
+SPILL_CHUNK_MAX = 64 * 1024
+
+
+def spill_chunk_spans(blob: bytes) -> List[Tuple[int, int]]:
+    """Content-defined (start, end) chunk spans covering `blob`."""
+    spans: List[Tuple[int, int]] = []
+    n = len(blob)
+    start = pos = 0
+    while pos < n:
+        pos = min(n, pos + _SPILL_STEP)
+        size = pos - start
+        if (pos >= n or size >= SPILL_CHUNK_MAX
+                or (size >= SPILL_CHUNK_MIN
+                    and (zlib.crc32(blob[pos - _SPILL_STEP:pos])
+                         & _SPILL_MASK) == _SPILL_MASK)):
+            spans.append((start, pos))
+            start = pos
+    return spans
+
+
 class NodeStore:
-    """Per-node object store with LRU spill to a scratch directory."""
+    """Per-node object store with LRU spill to a scratch directory.
+
+    The spill tier is **delta-encoded**: a spilled blob is stored as a
+    manifest (`{spill_dir}/{node}_{oid}.obj`, JSON) naming an ordered
+    list of content-chunks that live in `{spill_dir}/{node}_{oid}.chunks/`
+    keyed by sha256. Re-spilling a mutated blob writes only the chunks
+    the prior generation did not already hold (bytes skipped are counted
+    in stats["delta_spill_bytes_saved"]) and prunes chunks the new
+    generation dropped. `promote_after` adds disk tiering: a spilled
+    blob is promoted back to memory only after that many accesses
+    (default 1 = seed semantics, every access restores); colder reads
+    are served straight from the chunk store without evicting the
+    in-memory working set."""
 
     def __init__(self, node_id: str, capacity_bytes: int = 1 << 30,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None, promote_after: int = 1):
         self.node_id = node_id
         self.capacity = capacity_bytes
         self.spill_dir = spill_dir
+        self.promote_after = max(1, int(promote_after))
         self._mem: "OrderedDict[str, bytes]" = OrderedDict()
-        self._spilled: Dict[str, str] = {}
+        self._spilled: Dict[str, str] = {}           # oid -> manifest path
+        self._spill_chunks: Dict[str, List[Tuple[str, int]]] = {}
+        self._disk_hits: Dict[str, int] = {}         # accesses since spill
         self._used = 0
         self._lock = threading.Lock()
-        self.stats = {"puts": 0, "gets": 0, "spills": 0, "restores": 0}
+        self.stats = {"puts": 0, "gets": 0, "spills": 0, "restores": 0,
+                      "delta_spill_bytes_saved": 0, "promotions": 0}
 
     @property
     def used_bytes(self) -> int:
@@ -250,13 +295,19 @@ class NodeStore:
                 self._mem.move_to_end(ref.id)
                 return pickle.loads(self._mem[ref.id])
             if ref.id in self._spilled:
-                path = self._spilled[ref.id]
-                with open(path, "rb") as f:
-                    blob = f.read()
-                self.stats["restores"] += 1
-                self._mem[ref.id] = blob
-                self._used += len(blob)
-                self._maybe_spill()
+                blob = self._read_spill(ref.id)
+                hits = self._disk_hits.get(ref.id, 0) + 1
+                if hits >= self.promote_after:
+                    # hot enough: promote back into the memory tier
+                    # (promote_after=1 is the seed's restore-on-access)
+                    self._disk_hits.pop(ref.id, None)
+                    self.stats["restores"] += 1
+                    self.stats["promotions"] += 1
+                    self._mem[ref.id] = blob
+                    self._used += len(blob)
+                    self._maybe_spill()
+                else:
+                    self._disk_hits[ref.id] = hits
                 return pickle.loads(blob)
         raise KeyError(f"object {ref.id} not on node {self.node_id}")
 
@@ -270,8 +321,21 @@ class NodeStore:
             if blob is not None:
                 self._used -= len(blob)
             path = self._spilled.pop(ref.id, None)
+            self._spill_chunks.pop(ref.id, None)
+            self._disk_hits.pop(ref.id, None)
             if path and os.path.exists(path):
                 os.unlink(path)
+            cdir = self._chunk_dir(ref.id)
+            if cdir and os.path.isdir(cdir):
+                for fname in os.listdir(cdir):
+                    try:
+                        os.unlink(os.path.join(cdir, fname))
+                    except OSError:
+                        pass
+                try:
+                    os.rmdir(cdir)
+                except OSError:
+                    pass
 
     def export_blob(self, ref: ObjectRef) -> bytes:
         """Raw serialized bytes for migration (no pickle round-trip)."""
@@ -279,8 +343,7 @@ class NodeStore:
             if ref.id in self._mem:
                 return self._mem[ref.id]
             if ref.id in self._spilled:
-                with open(self._spilled[ref.id], "rb") as f:
-                    return f.read()
+                return self._read_spill(ref.id)
         raise KeyError(f"object {ref.id} not on node {self.node_id}")
 
     def import_blob(self, ref: ObjectRef, blob: bytes) -> bool:
@@ -316,13 +379,58 @@ class NodeStore:
             self._used -= len(blob)
             self._write_spill(oid, blob)
 
+    def _chunk_dir(self, oid: str) -> Optional[str]:
+        if self.spill_dir is None:
+            return None
+        return os.path.join(self.spill_dir, f"{self.node_id}_{oid}.chunks")
+
     def _write_spill(self, oid: str, blob: bytes):
-        os.makedirs(self.spill_dir, exist_ok=True)
+        """Spill one generation as a content-chunked delta (lock held):
+        chunks already on disk from the prior generation are not
+        rewritten, dropped ones are pruned, and the manifest atomically
+        names the new generation's ordered chunk list."""
+        cdir = self._chunk_dir(oid)
+        os.makedirs(cdir, exist_ok=True)
+        have = set(os.listdir(cdir))
+        manifest: List[Tuple[str, int]] = []
+        written = 0
+        for start, end in spill_chunk_spans(blob):
+            chunk = blob[start:end]
+            fname = hashlib.sha256(chunk).hexdigest() + ".chunk"
+            manifest.append((fname[:-6], end - start))
+            if fname not in have:
+                with open(os.path.join(cdir, fname), "wb") as f:
+                    f.write(chunk)
+                have.add(fname)
+                written += end - start
+        keep = {h + ".chunk" for h, _ in manifest}
+        for fname in have - keep:
+            try:
+                os.unlink(os.path.join(cdir, fname))
+            except OSError:
+                pass
         path = os.path.join(self.spill_dir, f"{self.node_id}_{oid}.obj")
-        with open(path, "wb") as f:
-            f.write(blob)
+        with open(path, "w") as f:
+            json.dump({"chunks": [[h, ln] for h, ln in manifest]}, f)
         self._spilled[oid] = path
+        self._spill_chunks[oid] = manifest
+        self._disk_hits.pop(oid, None)   # a fresh generation re-earns heat
         self.stats["spills"] += 1
+        self.stats["delta_spill_bytes_saved"] += len(blob) - written
+
+    def _read_spill(self, oid: str) -> bytes:
+        """Reassemble a spilled blob from its chunk store (lock held)."""
+        chunks = self._spill_chunks.get(oid)
+        if chunks is None:
+            with open(self._spilled[oid]) as f:
+                chunks = [(h, ln) for h, ln in json.load(f)["chunks"]]
+            self._spill_chunks[oid] = chunks
+        cdir = self._chunk_dir(oid)
+        parts = []
+        for h, _ln in chunks:
+            with open(os.path.join(cdir, h + ".chunk"), "rb") as f:
+                parts.append(f.read())
+        return b"".join(parts)
 
 
 # -- data plane: transports ---------------------------------------------------
@@ -422,6 +530,32 @@ class TCPTransport(Transport):
                   "size": len(blob),
                   "sha256": hashlib.sha256(blob).hexdigest()}
         self._rpc(node_id, header, blob=blob)
+
+    def push_batch(self, node_id: str,
+                   items: List[Tuple[ObjectRef, bytes,
+                                     Optional[TransferTicket]]]
+                   ) -> List[Dict[str, Any]]:
+        """Push many blobs to one peer over ONE connection: a single
+        sealed header frame declaring every blob (id, size, sha256,
+        ticket) followed by ONE multi-blob raw frame -- the blobs
+        concatenated in header order. The server verifies every ticket
+        before the payload frame is read and replies with per-blob
+        verdicts aligned 1:1 with the declarations, so one refused blob
+        never poisons the rest. This is what lets a drain plan's many
+        small moves amortize the connect/ticket/ack cost of the per-move
+        path (see worker.BlobServer `put_batch`)."""
+        blobs = [{"object": ref.id, "size": len(blob),
+                  "sha256": hashlib.sha256(blob).hexdigest(),
+                  "ticket": ticket.to_wire() if ticket else None}
+                 for ref, blob, ticket in items]
+        header = {"op": "put_batch", "requester": self.requester,
+                  "blobs": blobs}
+        payload = b"".join(blob for _, blob, _ in items)
+        reply, _ = self._rpc(node_id, header, blob=payload)
+        results = reply.get("results")
+        if not isinstance(results, list) or len(results) != len(items):
+            raise KeyError("put_batch reply verdicts misaligned")
+        return results
 
     def has(self, node_id: str, object_id: str,
             ticket: Optional[TransferTicket] = None) -> bool:
@@ -612,7 +746,9 @@ class GlobalObjectStore:
                       "ticket_rejects": 0,
                       "moves_started": 0, "moves_committed": 0,
                       "moves_aborted": 0, "relay_fallbacks": 0,
-                      "replica_gc": 0}
+                      "replica_gc": 0,
+                      "broadcast_rounds": 0, "tree_edges": 0,
+                      "batched_moves": 0}
 
     def _shard(self, oid: str) -> _Shard:
         return self._shards[shard_key(oid, self.shards)]
@@ -675,18 +811,28 @@ class GlobalObjectStore:
     def rank_sources(self, ref: ObjectRef, dst: str) -> list:
         """All live serving peers for a fetch onto `dst`, best first:
         prefer worker peers over the head (keep the head's NIC out of the
-        data plane), then the least-trafficked link, then name order
-        (determinism). The single policy behind choose_source, the head's
-        ticketed poll replies, and any future placement term."""
-        with self._shard(ref.id).lock:
-            e = self._shard(ref.id).dir.get(ref.id)
+        data plane), then *fresh* replicas over a copy that is mid-move
+        away (the moving source is about to delete its blob under the
+        reader), then the least-trafficked link. Candidates are
+        pre-sorted by node id and the load comparison is a stable sort,
+        so equal-load ties always break in name order regardless of
+        set/dict iteration order -- the sharded==single-shard property
+        tests rely on this determinism. The single policy behind
+        choose_source, the head's ticketed poll replies, and
+        broadcast-tree planning."""
+        sh = self._shard(ref.id)
+        with sh.lock:
+            e = sh.dir.get(ref.id)
             locs = set(e.locations) if e else None
+            mv = sh.moves.get(ref.id)
+            moving_src = mv.src if mv else None
         if locs is None:
             return []
         with self._lock:
-            srcs = [n for n in locs if n != dst and n in self._nodes]
+            srcs = sorted(n for n in locs if n != dst and n in self._nodes)
             return sorted(srcs, key=lambda n: (n == "head",
-                                               self._link_bytes.get(n, 0), n))
+                                               n == moving_src,
+                                               self._link_bytes.get(n, 0)))
 
     def choose_source(self, ref: ObjectRef, dst: str) -> Optional[str]:
         """Best serving peer for a fetch onto `dst` (see rank_sources)."""
@@ -722,6 +868,125 @@ class GlobalObjectStore:
             return None
         return TransferTicket.grant(self._token, ref.id, src, dst,
                                     acting_tenant, "get", ttl_s=ttl_s)
+
+    def grant_edge(self, ref: ObjectRef, src: str, dst: str,
+                   acting_tenant: str,
+                   ttl_s: float = 30.0) -> Optional[TransferTicket]:
+        """Mint the ticket for one broadcast-tree edge: authorizes `dst`
+        to pull this one object from exactly `src` -- a consumer that
+        landed a copy one round ago becomes a legitimate server for the
+        next round without ever gaining a wider grant (see
+        TransferTicket.grant_edge for the scoping). Same tenant rules as
+        grant_fetch; returns None when the edge is moot."""
+        if self._token is None:
+            raise SecurityError(
+                "cannot mint transfer tickets before set_access_guard")
+        tenant = self.tenant_of(ref.id)
+        if tenant is None:
+            return None
+        if acting_tenant != ADMIN_TENANT and acting_tenant != tenant:
+            self.stats["ticket_rejects"] += 1
+            raise SecurityError(
+                f"cross-tenant broadcast denied: tenant {acting_tenant!r} "
+                f"cannot fan out an object of tenant {tenant!r}")
+        with self._shard(ref.id).lock:
+            e = self._shard(ref.id).dir.get(ref.id)
+            if e is None or dst in e.locations or src not in e.locations:
+                return None
+        return TransferTicket.grant_edge(self._token, ref.id, src, dst,
+                                         acting_tenant, ttl_s=ttl_s)
+
+    def plan_broadcast(self, ref: ObjectRef,
+                       consumers: List[str]) -> List[List[Tuple[str, str]]]:
+        """Binomial broadcast tree for delivering `ref` to `consumers`:
+        a list of rounds, each a list of parallel (src, dst) edges. Every
+        consumer that lands a copy in round k serves an edge in round
+        k+1, so the holder set doubles per round and N consumers cost
+        ~log2(N) rounds of parallel links instead of N serialized pushes
+        from the producer's NIC. Deterministic: holders and consumers
+        are processed in sorted order, with the head ranked last among
+        holders so worker NICs carry the tree whenever they can."""
+        held = self.locations(ref)
+        with self._lock:
+            live = set(self._nodes)
+        holders = sorted((n for n in held if n in live),
+                         key=lambda n: (n == "head", n))
+        pending = [c for c in sorted(set(consumers))
+                   if c not in held and c in live]
+        rounds: List[List[Tuple[str, str]]] = []
+        while pending and holders:
+            edges = []
+            landed = []
+            for src in holders:
+                if not pending:
+                    break
+                dst = pending.pop(0)
+                edges.append((src, dst))
+                landed.append(dst)
+            holders.extend(landed)
+            rounds.append(edges)
+        return rounds
+
+    def broadcast(self, ref: ObjectRef, consumers: List[str],
+                  acting_tenant: str = ADMIN_TENANT,
+                  on_round: Optional[Callable[[int], None]] = None) -> int:
+        """Deliver `ref` to every consumer through a binomial tree,
+        re-planned each round against the live directory: the sources of
+        round k+1 are whatever replicas actually landed by the end of
+        round k, so a source that dies mid-broadcast (the producer
+        included) simply drops out of the next plan and any surviving
+        replica serves the rest -- relay, never lineage reconstruction.
+        Each edge is authorized by its own per-edge ticket when the
+        transfer guard is installed; a refused or failed edge falls back
+        to a fresh choose_source fetch in the same round. Returns total
+        bytes moved; `on_round(k)` fires after round k (the chaos tests
+        kill sources between rounds through it)."""
+        delivered = 0
+        k = 0
+        while True:
+            plan = self.plan_broadcast(ref, consumers)
+            if not plan or not plan[0]:
+                break
+            progressed = False
+            for src, dst in plan[0]:
+                moved = self._broadcast_edge(ref, src, dst, acting_tenant)
+                if moved is not None:
+                    delivered += moved
+                    progressed = True
+                with self._lock:
+                    self.stats["tree_edges"] += 1
+            k += 1
+            with self._lock:
+                self.stats["broadcast_rounds"] += 1
+            if on_round is not None:
+                on_round(k)
+            if not progressed:
+                break      # every edge failed: re-planning cannot help
+        return delivered
+
+    def _broadcast_edge(self, ref: ObjectRef, src: str, dst: str,
+                        acting_tenant: str) -> Optional[int]:
+        """Execute one tree edge; on failure retry via any fresh replica
+        (relay-not-lineage). Returns bytes moved, or None when the
+        consumer could not be served at all this round."""
+        try:
+            ticket = None
+            if self._require_tickets and dst != "head":
+                ticket = self.grant_edge(ref, src, dst, acting_tenant)
+                if ticket is None:       # edge went moot (landed/died)
+                    return 0 if dst in self.locations(ref) else None
+            return self.fetch(dst, ref, ticket=ticket, src=src)
+        except (KeyError, SecurityError):
+            pass
+        try:
+            ticket = None
+            if self._require_tickets and dst != "head":
+                ticket = self.grant_fetch(ref, dst, acting_tenant)
+                if ticket is None:
+                    return 0 if dst in self.locations(ref) else None
+            return self.fetch(dst, ref, ticket=ticket)
+        except (KeyError, SecurityError):
+            return None
 
     def set_quota(self, tenant: str, quota: TenantQuota):
         with self._lock:
@@ -763,6 +1028,22 @@ class GlobalObjectStore:
         """Tenants with a quota or live usage (metrics enumeration)."""
         with self._lock:
             return set(self._quotas) | set(self._usage)
+
+    def spill_tier_stats(self) -> Dict[str, int]:
+        """Sum the delta-spill / disk-tier counters over every node
+        store registered in this process. Remote proxies don't carry a
+        stats dict (their numbers ride the owning worker's metric
+        deltas), so they're skipped via getattr."""
+        agg = {"delta_spill_bytes_saved": 0, "promotions": 0}
+        with self._lock:
+            nodes = list(self._nodes.values())
+        for node in nodes:
+            stats = getattr(node, "stats", None)
+            if not isinstance(stats, dict):
+                continue
+            for k in agg:
+                agg[k] += int(stats.get(k, 0))
+        return agg
 
     def tenant_of(self, ref_or_id) -> Optional[str]:
         oid = ref_or_id.id if isinstance(ref_or_id, ObjectRef) else ref_or_id

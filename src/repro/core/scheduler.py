@@ -569,6 +569,18 @@ class Scheduler:
     def drain_status(self, worker_id: str) -> Optional[DrainState]:
         return self._drains.get(worker_id)
 
+    def drain_deadline_s(self, worker_id: str) -> Optional[float]:
+        """Seconds of drain budget left for `worker_id` (None = not
+        draining, or draining without a deadline). Attached to each
+        migrate directive so the source worker can serve its batched
+        pushes deadline-soonest-first -- a preemption-notice drain races
+        its eviction window. Never negative: a blown deadline reads as
+        0.0 budget, the preemption sweep handles the rest."""
+        st = self._drains.get(worker_id)
+        if st is None or st.deadline_at is None:
+            return None
+        return max(0.0, st.deadline_at - self.clock())
+
     def draining_workers(self) -> List[str]:
         return list(self._drains)
 

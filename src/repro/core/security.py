@@ -315,6 +315,21 @@ class TransferTicket:
                                     tenant_id, "migrate", ttl_s=ttl_s,
                                     now=now)
 
+    @staticmethod
+    def grant_edge(token: str, object_id: str, src: str, dst: str,
+                   tenant_id: str = DEFAULT_TENANT,
+                   ttl_s: float = 30.0,
+                   now: Optional[float] = None) -> "TransferTicket":
+        """Broadcast-tree edge grant: authorizes `dst` to pull this one
+        object from exactly `src` under the ordinary "get" right. The
+        scoping is the point -- a consumer that landed a copy in round k
+        of a broadcast serves round k+1's edges only through tickets the
+        head minted for those exact (src, dst) pairs; relaying a copy
+        never confers the right to serve arbitrary peers, and the ticket
+        expires with the round's fetch window."""
+        return TransferTicket.grant(token, object_id, src, dst,
+                                    tenant_id, "get", ttl_s=ttl_s, now=now)
+
     def verify(self, token: str, object_id: str, src: str, worker_id: str,
                right: str = "get", object_tenant: str = DEFAULT_TENANT,
                now: Optional[float] = None):

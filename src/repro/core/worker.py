@@ -193,6 +193,33 @@ def push_with_retry(transport, node_id: str, ref: ObjectRef, blob: bytes,
     return last, True
 
 
+def push_batch_with_retry(transport, node_id: str,
+                          items: List[Tuple[ObjectRef, bytes,
+                                            Optional[TransferTicket]]],
+                          retries: int = 1
+                          ) -> Tuple[Optional[List[Dict[str, Any]]],
+                                     Optional[Exception], bool]:
+    """One multi-blob push (see TCPTransport.push_batch) with the same
+    bounded-retry policy as push_with_retry. Returns (verdicts, error,
+    retryable): on success the per-blob verdicts aligned 1:1 with
+    `items` (individual blobs may still carry ok=False -- e.g. one
+    expired ticket -- without failing the frame); on a whole-frame
+    failure verdicts is None and (error, retryable) classify it exactly
+    like the single-push path. Retrying a frame whose first attempt
+    landed is safe: the receiving store's import is idempotent."""
+    last: Optional[Exception] = None
+    for _ in range(retries + 1):
+        try:
+            return transport.push_batch(node_id, items), None, False
+        except (SecurityError, KeyError) as e:
+            return None, e, False
+        except OSError as e:
+            last = e
+        except Exception as e:  # noqa: BLE001 -- malformed reply etc.
+            return None, e, False
+    return None, last, True
+
+
 class BlobServer:
     """Per-node data-plane server: serves one NodeStore's blobs to peers.
 
@@ -211,7 +238,9 @@ class BlobServer:
                  host: str = "127.0.0.1", port: int = 0,
                  tenant_of: Optional[Callable[[str], Optional[str]]] = None,
                  on_delete: Optional[Callable[[str], None]] = None,
-                 on_migrate: Optional[Callable[[str, str], None]] = None):
+                 on_migrate: Optional[Callable[[str, str], None]] = None,
+                 on_migrate_many: Optional[
+                     Callable[[List[Tuple[str, str]]], None]] = None):
         self.store = store
         self.token = token
         self.tenant_of = tenant_of or (lambda oid: None)
@@ -220,9 +249,15 @@ class BlobServer:
         # under a "migrate"-right ticket lands: the destination's hook to
         # send the head the metadata ack that COMMITs the move
         self.on_migrate = on_migrate
+        # batched twin: on_migrate_many([(object_id, tenant_id), ...])
+        # fires ONCE for all migrate-right blobs of a put_batch frame so
+        # the destination can ack N moves in one control round trip;
+        # when unset, on_migrate fires per blob as before
+        self.on_migrate_many = on_migrate_many
         self._nonces = NonceCache()
         self.stats = {"serves": 0, "served_bytes": 0,
-                      "receives": 0, "rejects": 0}
+                      "receives": 0, "rejects": 0,
+                      "batched_moves": 0}
         blob_srv = self
 
         class Handler(socketserver.BaseRequestHandler):
@@ -262,6 +297,7 @@ class BlobServer:
                                  nonce_cache=self._nonces)
             blob_in = None
             put_ticket = None
+            batch_tickets = None
             if header.get("op") == "put":
                 # ticket verified BEFORE the blob frame is read, and the
                 # read is capped at the header's declared size -- a peer
@@ -281,7 +317,19 @@ class BlobServer:
                     raise
                 blob_in = recv_frame(
                     sock, max_bytes=int(header.get("size", 0)) + 1024)
-            reply, blob_out = self._dispatch(header, blob_in, put_ticket)
+            elif header.get("op") == "put_batch":
+                # same discipline as put, per blob: EVERY declared blob's
+                # ticket is verified before the multi-blob frame is read;
+                # a frame where no declaration verified is drained and
+                # refused wholesale -- an unauthorized peer still cannot
+                # make us buffer payload bytes
+                batch_tickets, total = self._verify_batch(header)
+                if any(t is not None for t, _err in batch_tickets):
+                    blob_in = recv_frame(sock, max_bytes=total + 1024)
+                else:
+                    self._drain_frame(sock, total + 1024)
+            reply, blob_out = self._dispatch(header, blob_in, put_ticket,
+                                             batch_tickets)
         except Exception as e:  # noqa: BLE001 -- reply, never crash the server
             self.stats["rejects"] += 1
             reply = {"ok": False, "error": f"{type(e).__name__}: {e}"}
@@ -301,8 +349,15 @@ class BlobServer:
             pass                       # peer gone or oversized: just close
 
     def _verify(self, header: Dict[str, Any], right: str) -> TransferTicket:
-        oid = header.get("object", "")
-        ticket_wire = header.get("ticket")
+        return self._verify_entry(header, str(header.get("requester", "")),
+                                  right)
+
+    def _verify_entry(self, entry: Dict[str, Any], requester: str,
+                      right: str) -> TransferTicket:
+        """Ticket check for one blob declaration -- a top-level header or
+        one element of a put_batch frame's "blobs" list."""
+        oid = entry.get("object", "")
+        ticket_wire = entry.get("ticket")
         if not ticket_wire:
             raise SecurityError(f"blob {right} without transfer ticket")
         ticket = TransferTicket.from_wire(ticket_wire)
@@ -313,17 +368,45 @@ class BlobServer:
             right = "migrate"
         tenant = self.tenant_of(oid)
         ticket.verify(self.token, oid, self.store.node_id,
-                      str(header.get("requester", "")), right,
+                      requester, right,
                       object_tenant=tenant if tenant is not None
                       else ticket.tenant_id)
         return ticket
 
+    def _verify_batch(self, header: Dict[str, Any]
+                      ) -> Tuple[List[Tuple[Optional[TransferTicket],
+                                            Optional[str]]], int]:
+        """Pre-payload ticket pass over a put_batch frame's declarations:
+        per-blob (ticket, None) or (None, error) verdict seeds, plus the
+        total declared payload size bounding the frame read."""
+        blobs = header.get("blobs")
+        if not isinstance(blobs, list) or not blobs:
+            raise ValueError("put_batch without blob declarations")
+        requester = str(header.get("requester", ""))
+        state: List[Tuple[Optional[TransferTicket], Optional[str]]] = []
+        total = 0
+        for b in blobs:
+            total += max(0, int(b.get("size", 0)))
+            try:
+                state.append((self._verify_entry(b, requester, "put"), None))
+            except Exception as e:  # noqa: BLE001 -- per-blob verdict
+                state.append((None, f"{type(e).__name__}: {e}"))
+        return state, total
+
     def _dispatch(self, header: Dict[str, Any],
                   blob_in: Optional[bytes],
-                  put_ticket: Optional[TransferTicket] = None
+                  put_ticket: Optional[TransferTicket] = None,
+                  batch_tickets: Optional[
+                      List[Tuple[Optional[TransferTicket],
+                                 Optional[str]]]] = None
                   ) -> Tuple[Dict[str, Any], Optional[bytes]]:
         import hashlib
         op = header.get("op")
+        if op == "put_batch":
+            # tickets already verified by _handle BEFORE the multi-blob
+            # frame was read (same discipline as put); slice the payload
+            # by the declared sizes and give every blob its own verdict
+            return self._put_batch(header, blob_in, batch_tickets), None
         oid = str(header.get("object", ""))
         ref = ObjectRef(oid)
         if op == "get":
@@ -366,6 +449,53 @@ class BlobServer:
                 self.on_delete(oid)    # e.g. prune the owner's tenant map
             return ({"ok": True}, None)
         raise ValueError(f"unknown blob op {op!r}")
+
+    def _put_batch(self, header: Dict[str, Any],
+                   blob_in: Optional[bytes],
+                   batch_tickets: List[Tuple[Optional[TransferTicket],
+                                             Optional[str]]]
+                   ) -> Dict[str, Any]:
+        """Land a multi-blob push frame: the payload is the declared
+        blobs concatenated in header order, each integrity-checked
+        against its own (size, sha256) and imported independently --
+        verdicts align 1:1 with the declarations, so one refused ticket
+        or corrupt slice never poisons its neighbors. Migrate-right
+        blobs are acked through ONE on_migrate_many call (the batched
+        `migrated` control frame) instead of one round trip each."""
+        import hashlib
+        blobs = header.get("blobs") or []
+        results: List[Dict[str, Any]] = []
+        landed_moves: List[Tuple[str, str]] = []
+        off = 0
+        for decl, (ticket, err) in zip(blobs, batch_tickets):
+            oid = str(decl.get("object", ""))
+            size = max(0, int(decl.get("size", 0)))
+            chunk = (blob_in[off:off + size]
+                     if blob_in is not None else b"")
+            off += size
+            if err is not None:
+                results.append({"ok": False, "object": oid, "error": err})
+                continue
+            if (len(chunk) != size or hashlib.sha256(chunk).hexdigest()
+                    != decl.get("sha256")):
+                results.append({"ok": False, "object": oid,
+                                "error": "SecurityError: blob integrity "
+                                         f"check failed for {oid}"})
+                continue
+            fresh = self.store.import_blob(ObjectRef(oid), chunk)
+            if fresh:
+                self.stats["receives"] += 1
+                self.stats["batched_moves"] += 1
+            if ticket.right == "migrate":
+                landed_moves.append((oid, ticket.tenant_id))
+            results.append({"ok": True, "object": oid})
+        if landed_moves:
+            if self.on_migrate_many is not None:
+                self.on_migrate_many(landed_moves)
+            elif self.on_migrate is not None:
+                for oid, tenant in landed_moves:
+                    self.on_migrate(oid, tenant)
+        return {"ok": True, "results": results}
 
 
 class HeadServer:
@@ -480,7 +610,11 @@ class HeadServer:
         self._pending_migrations.setdefault(worker_id, []).append({
             "ref": ref.id, "size": ref.size, "node": dst,
             "host": dst_ep[0], "port": dst_ep[1],
-            "ticket": ticket.to_wire()})
+            "ticket": ticket.to_wire(),
+            # remaining drain budget (None = no deadline): preemption
+            # notices race the notice window, so the source worker
+            # batches and orders its pushes deadline-soonest-first
+            "deadline_s": c.scheduler.drain_deadline_s(worker_id)})
 
     def _migrate_relay(self, worker_id: str, ref: ObjectRef, dst: str):
         """Head-relayed move on a background thread (the blocking
@@ -1048,6 +1182,19 @@ class HeadServer:
                 m.get("receives", 0) for m in wm)
             drain_counters["syndeo_worker_served_bytes"] = sum(
                 m.get("served_bytes", 0) for m in wm)
+            # data-plane throughput layer: broadcast-tree fan-out,
+            # multi-blob move frames, and spill-tier efficiency. The
+            # tree/batch counters accrue on the head's directory stats;
+            # the spill counters live on node stores (in-process ones
+            # summed here, worker-local ones via the piggybacked deltas)
+            spill = c.store.spill_tier_stats()
+            for k in ("broadcast_rounds", "tree_edges", "batched_moves"):
+                drain_counters[f"syndeo_{k}"] = int(store_stats.get(k, 0))
+            drain_counters["syndeo_batched_moves"] += sum(
+                m.get("batched_moves", 0) for m in wm)
+            for k in ("delta_spill_bytes_saved", "promotions"):
+                drain_counters[f"syndeo_{k}"] = spill[k] + sum(
+                    m.get(k, 0) for m in wm)
             return dict({"ok": True, "workers": len(workers),
                          "busy": busy, "backlog": backlog,
                          "syndeo_backlog_per_worker": backlog / n,
@@ -1151,7 +1298,9 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     # last blob-server counters already reported to the head: the next
     # batch carries only the deltas, advanced after a confirmed send
     metric_base: Dict[str, int] = {"serves": 0, "receives": 0,
-                                   "served_bytes": 0}
+                                   "served_bytes": 0, "batched_moves": 0,
+                                   "delta_spill_bytes_saved": 0,
+                                   "promotions": 0}
     blob_srv: Optional[BlobServer] = None
     own_spill: Optional[str] = None
     join_msg: Dict[str, Any] = {"op": "join", "worker": worker_id,
@@ -1185,44 +1334,113 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
         except Exception:  # noqa: BLE001 -- head sweep probes + commits
             pass
 
+    def ack_migrations(landed: List[Tuple[str, str]]):
+        """Batched destination-side ack: every blob of one multi-blob
+        push frame that landed under a migrate-right ticket commits
+        through ONE `batch` control frame of `migrated` sub-ops instead
+        of one round trip each. A lost frame is recovered move-by-move
+        by the head's probe-on-timeout sweep."""
+        for oid, tenant in landed:
+            tenants[oid] = tenant
+        if len(landed) == 1:
+            ack_migration(*landed[0])
+            return
+        ops = [{"op": "migrated", "worker": wid, "object": oid}
+               for oid, _tenant in landed]
+        try:
+            _request(ep.host, ep.port, token,
+                     {"op": "batch", "worker": wid, "ops": ops},
+                     nonce_cache=nonces)
+        except Exception:  # noqa: BLE001 -- head sweep probes + commits
+            pass
+
     if blob_srv is not None:
         blob_srv.on_migrate = ack_migration
+        blob_srv.on_migrate_many = ack_migrations
+
+    def report_move_failures(failures: List[Tuple[str, bool, str]]):
+        """Tell the head which moves failed -- ONE frame even for a
+        whole failed batch (retryable -> relay fallback, else ABORT +
+        re-plan). Losing it is safe: the timeout sweep aborts anyway."""
+        if not failures:
+            return
+        ops = [{"op": "migrate_failed", "worker": wid, "object": oid,
+                "retryable": retryable, "err": err}
+               for oid, retryable, err in failures]
+        req = (ops[0] if len(ops) == 1
+               else {"op": "batch", "worker": wid, "ops": ops})
+        try:
+            _request(ep.host, ep.port, token, req, nonce_cache=nonces)
+        except Exception:  # noqa: BLE001 -- the head's timeout
+            pass           # sweep aborts + re-plans anyway
 
     def run_migrations(moves: List[Dict[str, Any]]):
         """Source-side executor for the head's direct-push drain
-        directives: export the local blob and push it straight to the
-        destination peer under the migrate-right ticket (one bounded
-        retry on transient TCP errors). Success is acked by the
-        *destination*; failures are reported so the head can fall back
-        to the relay path (retryable) or ABORT + re-plan. The local copy
-        is kept -- the head deletes it after COMMIT."""
+        directives. Moves sharing a destination coalesce into ONE
+        connection carrying ONE multi-blob push frame with per-blob
+        verdicts (the control plane's `batch` idiom applied to the blob
+        plane): a drain plan of many small objects pays one connect +
+        one ack round trip per destination instead of per object.
+        Destinations are served deadline-soonest-first so a
+        preemption-driven drain races its eviction notice. Success is
+        acked by the *destination*; failures are reported (batched) so
+        the head can fall back to the relay path (retryable) or ABORT +
+        re-plan. The local copy is kept -- the head deletes it after
+        COMMIT."""
+        groups: Dict[Tuple[str, int, str], List[Dict[str, Any]]] = {}
         for mv in moves:
-            ref = ObjectRef(str(mv["ref"]), int(mv.get("size", 0)))
-            err: Optional[Exception] = None
-            retryable = False
-            try:
-                blob = local.export_blob(ref)
-            except Exception as e:  # noqa: BLE001 -- KeyError (gone) but
-                # also e.g. an unreadable spill file: a failed export must
-                # degrade to a migrate_failed report, never kill a worker
-                # that still holds sole copies of the other drain objects
-                err = e
-            if err is None:
-                transport = TCPTransport(
-                    lambda _n, _ep=(mv["host"], int(mv["port"])): _ep,
-                    token, wid)
-                err, retryable = push_with_retry(
-                    transport, mv["node"], ref, blob,
-                    TransferTicket.from_wire(mv["ticket"]))
-            if err is not None:
+            groups.setdefault(
+                (str(mv["host"]), int(mv["port"]), str(mv["node"])),
+                []).append(mv)
+
+        def urgency(grp: List[Dict[str, Any]]) -> float:
+            ds = [float(mv["deadline_s"]) for mv in grp
+                  if mv.get("deadline_s") is not None]
+            return min(ds) if ds else float("inf")
+
+        failures: List[Tuple[str, bool, str]] = []
+        for (host, port, node), grp in sorted(
+                groups.items(), key=lambda kv: urgency(kv[1])):
+            transport = TCPTransport(
+                lambda _n, _ep=(host, port): _ep, token, wid)
+            items: List[Tuple[ObjectRef, bytes,
+                              Optional[TransferTicket]]] = []
+            for mv in grp:
+                ref = ObjectRef(str(mv["ref"]), int(mv.get("size", 0)))
                 try:
-                    _request(ep.host, ep.port, token,
-                             {"op": "migrate_failed", "worker": wid,
-                              "object": ref.id, "retryable": retryable,
-                              "err": f"{type(err).__name__}: {err}"},
-                             nonce_cache=nonces)
-                except Exception:  # noqa: BLE001 -- the head's timeout
-                    pass           # sweep aborts + re-plans anyway
+                    blob = local.export_blob(ref)
+                except Exception as e:  # noqa: BLE001 -- KeyError (gone)
+                    # but also e.g. an unreadable spill file: a failed
+                    # export must degrade to a migrate_failed report,
+                    # never kill a worker that still holds sole copies
+                    # of the other drain objects
+                    failures.append((ref.id, False,
+                                     f"{type(e).__name__}: {e}"))
+                    continue
+                items.append((ref, blob,
+                              TransferTicket.from_wire(mv["ticket"])))
+            if not items:
+                continue
+            if len(items) == 1:
+                ref, blob, ticket = items[0]
+                err, retryable = push_with_retry(transport, node, ref,
+                                                 blob, ticket)
+                if err is not None:
+                    failures.append((ref.id, retryable,
+                                     f"{type(err).__name__}: {err}"))
+                continue
+            verdicts, err, retryable = push_batch_with_retry(
+                transport, node, items)
+            if err is not None:
+                failures.extend(
+                    (ref.id, retryable, f"{type(err).__name__}: {err}")
+                    for ref, _blob, _t in items)
+                continue
+            for (ref, _blob, _t), v in zip(items, verdicts):
+                if not v.get("ok"):
+                    failures.append(
+                        (ref.id, False, str(v.get("error", "refused"))))
+        report_move_failures(failures)
 
     def fetch_dep(meta: Dict[str, Any]) -> Tuple[bool, Any]:
         """One pass over a dep's ticketed sources: (True, value) when a
@@ -1420,9 +1638,16 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                 idle_since = time.monotonic()   # still needed: keep serving
             deltas: Dict[str, int] = {}
             if blob_srv is not None:
-                deltas = {k: int(blob_srv.stats.get(k, 0)) - metric_base[k]
+                # spill-tier counters accrue on the node store, the rest
+                # on the blob server; both ride the same delta frame
+                def live(k: str, _bs=blob_srv) -> int:
+                    src = (local.stats
+                           if k in ("delta_spill_bytes_saved", "promotions")
+                           else _bs.stats)
+                    return int(src.get(k, 0))
+                deltas = {k: live(k) - metric_base[k]
                           for k in metric_base
-                          if int(blob_srv.stats.get(k, 0)) != metric_base[k]}
+                          if live(k) != metric_base[k]}
             sent = list(pending_ops)
             if sent or deltas:
                 # piggyback everything queued since the last poll on ONE

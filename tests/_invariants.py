@@ -13,9 +13,12 @@ in a state where ALL of the following hold (see tests/README.md):
      owner pointing at a node that dropped its copy),
   3. in-flight moves are anchored: a PREPAREd move's source still holds
      the object (an aborted/committed move must not linger),
-  4. fetchable-set preservation (opt-in): everything fetchable before a
+  4. replica coherence: every location of a ref holds byte-identical
+     blob content (a broadcast tree relays copies through consumers, so
+     a corrupted relay must be caught here, not at first deserialize),
+  5. fetchable-set preservation (opt-in): everything fetchable before a
      *graceful* operation is fetchable after it,
-  5. zero hot-producer re-execution (opt-in): drains migrate, they never
+  6. zero hot-producer re-execution (opt-in): drains migrate, they never
      recompute.
 
 Call it after the dust settles (it snapshots under the shard locks but
@@ -43,6 +46,21 @@ def check_invariants(store, expect_fetchable=None, scheduler=None,
         if locs:
             assert owner is not None and owner in locs, \
                 f"{oid}: owner {owner!r} is not among locations {locs}"
+        # replica coherence: every copy a broadcast/migration landed is
+        # byte-identical (spilled copies included -- export_blob restores
+        # through the delta-chunk manifest). Stores that cannot export
+        # (e.g. a remote proxy without the blob plane) are skipped.
+        blobs = []
+        for n in locs:
+            try:
+                blobs.append((n, nodes[n].export_blob(ref)))
+            except (KeyError, OSError, AttributeError):
+                continue
+        if len(blobs) > 1:
+            n0, b0 = blobs[0]
+            for n, b in blobs[1:]:
+                assert b == b0, \
+                    f"{oid}: replica on {n} diverges from copy on {n0}"
 
     for oid, (src, _dst) in moves.items():
         assert oid in snapshot, f"in-flight move for released object {oid}"

@@ -1,0 +1,36 @@
+"""Fixture: multi-blob push frames with wire-protocol defects.
+
+Two blob-plane bugs the batch-frame pass must catch:
+* ``drop_many`` declares blobs the handler never iterates -- every
+  per-blob declaration the client ships is dead weight on the wire
+  (SYN-W001 on the pseudo-op ``drop_many#blob``).
+* ``push_many``'s blob loop requires a per-blob ``priority`` field no
+  client declaration carries (SYN-W002).
+"""
+
+
+class Server:
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "push_many":
+            total = 0
+            for b in msg["blobs"]:
+                total += b["priority"]
+            return {"ok": True, "total": total}
+        if op == "drop_many":
+            # counts the declarations but never loops over them: the
+            # per-blob frames the client assembles have no handler
+            return {"ok": True, "count": len(msg.get("blobs") or [])}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+def push_all(_request, host, port, token, items):
+    frame = {"op": "push_many",
+             "blobs": [{"object": o, "size": n} for o, n in items]}
+    return _request(host, port, token, frame)
+
+
+def drop_all(_request, host, port, token, items):
+    frame = {"op": "drop_many",
+             "blobs": [{"object": o, "size": n} for o, n in items]}
+    return _request(host, port, token, frame)

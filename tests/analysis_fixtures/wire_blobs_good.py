@@ -1,0 +1,37 @@
+"""Fixture: the repaired twin of wire_blobs_bad.py.
+
+``push_many`` clients now declare the ``priority`` field the handler's
+blob loop requires, and ``drop_many`` actually iterates its
+declarations -- both pseudo-ops (``push_many#blob``, ``drop_many#blob``)
+line up client-to-handler, so the file must lint clean.
+"""
+
+
+class Server:
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "push_many":
+            total = 0
+            for b in msg["blobs"]:
+                total += b["priority"]
+            return {"ok": True, "total": total}
+        if op == "drop_many":
+            count = 0
+            for b in msg.get("blobs") or []:
+                if b.get("object"):
+                    count += 1
+            return {"ok": True, "count": count}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+def push_all(_request, host, port, token, items):
+    frame = {"op": "push_many",
+             "blobs": [{"object": o, "size": n, "priority": 0}
+                       for o, n in items]}
+    return _request(host, port, token, frame)
+
+
+def drop_all(_request, host, port, token, items):
+    frame = {"op": "drop_many",
+             "blobs": [{"object": o, "size": n} for o, n in items]}
+    return _request(host, port, token, frame)

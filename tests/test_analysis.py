@@ -32,11 +32,12 @@ KNOWN_BAD = {
     "wire_bad.py": [("SYN-W001", 28), ("SYN-W002", 12),
                     ("SYN-W003", 13)],
     "wire_batch_bad.py": [("SYN-W001", 28), ("SYN-W002", 13)],
+    "wire_blobs_bad.py": [("SYN-W001", 35), ("SYN-W002", 18)],
 }
 
 KNOWN_GOOD = ["lock_good.py", "lock_order_good.py", "taint_good.py",
               "verify_good.py", "nonce_good.py", "wire_good.py",
-              "wire_batch_good.py"]
+              "wire_batch_good.py", "wire_blobs_good.py"]
 
 
 @pytest.mark.parametrize("name,expected", sorted(KNOWN_BAD.items()))

@@ -1,0 +1,195 @@
+"""Broadcast-tree delivery equivalence and the delta-encoded spill tier.
+
+The property test drives random object graphs through BOTH delivery
+shapes -- a binomial broadcast tree and N independent direct fetches --
+and asserts every consumer lands byte-identical blobs, with spilled
+sources restored through the delta-chunk manifest and a producer killed
+mid-broadcast served by surviving replicas (relay, never lineage).
+Every run ends in tests/_invariants.py's global storage check, which now
+also asserts replica coherence across all landed copies."""
+import pickle
+import random
+import tempfile
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover -- bare container
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import GlobalObjectStore, NodeStore, ObjectRef
+from repro.core.object_store import (SPILL_CHUNK_MAX, SPILL_CHUNK_MIN,
+                                     spill_chunk_spans)
+from repro.core.security import mint_cluster_token
+
+from _invariants import check_invariants
+
+TOKEN = mint_cluster_token()
+
+
+def _build(n_nodes, tmp, guard):
+    g = GlobalObjectStore(shards=4)
+    g.set_access_guard(TOKEN)
+    g.register_node(NodeStore("head", capacity_bytes=1 << 30))
+    for i in range(n_nodes):
+        g.register_node(NodeStore(f"w{i}", capacity_bytes=1 << 30,
+                                  spill_dir=tmp))
+    if guard:
+        g.set_transfer_guard(True)
+    return g
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 12), st.integers(1, 4),
+       st.booleans(), st.booleans(), st.booleans())
+def test_broadcast_tree_matches_direct_fetches(seed, n_nodes, n_objects,
+                                               spill_source, kill_producer,
+                                               guard):
+    """Property: tree delivery == N direct fetches, byte for byte, for
+    random object graphs -- sources spilled to the delta tier before the
+    broadcast, producers dying between rounds, ticket guard on or off."""
+    rng = random.Random(seed)
+    with tempfile.TemporaryDirectory() as tmp_a, \
+            tempfile.TemporaryDirectory() as tmp_b:
+        tree = _build(n_nodes, tmp_a, guard)
+        direct = _build(n_nodes, tmp_b, guard)
+        expected = {}
+        refs = []
+        for i in range(n_objects):
+            producer = f"w{rng.randrange(n_nodes)}"
+            value = rng.randbytes(rng.randint(100, 50_000))
+            tenant = rng.choice(["alice", "bob"])
+            ref = tree.put(producer, value, ref_id=f"o{i}", tenant=tenant)
+            direct.put(producer, value, ref_id=f"o{i}", tenant=tenant)
+            expected[ref.id] = pickle.dumps(
+                value, protocol=pickle.HIGHEST_PROTOCOL)
+            if spill_source:
+                # the broadcast's root replica serves from the delta-
+                # encoded disk tier, not memory
+                assert tree._nodes[producer].spill(ref)
+            refs.append((ref, producer, tenant))
+        consumers = [f"w{i}" for i in range(n_nodes)]
+        for ref, producer, tenant in refs:
+            survivors = [c for c in consumers if c != producer]
+
+            def on_round(k, _ref=ref, _producer=producer):
+                # a producer dying between rounds must be absorbed by
+                # re-planning: consumers that landed copies in earlier
+                # rounds serve the rest (relay, never lineage)
+                if kill_producer and k == 1 and len(survivors) >= 2:
+                    tree.unregister_node(_producer)
+
+            tree.broadcast(ref, survivors, on_round=on_round)
+            for c in survivors:
+                if c not in tree.locations(ref):
+                    # permissible only if delivery was genuinely
+                    # impossible (single holder died before relaying)
+                    assert kill_producer
+                    continue
+                got = tree._nodes[c].export_blob(ref)
+                assert got == expected[ref.id], \
+                    f"{ref.id} diverged at consumer {c}"
+            for c in survivors:
+                ticket = (direct.grant_fetch(ref, c, tenant)
+                          if guard else None)
+                direct.fetch(c, ref, ticket=ticket)
+                assert direct._nodes[c].export_blob(ref) \
+                    == expected[ref.id]
+        assert tree.stats["head_relayed_bytes"] == 0
+        check_invariants(tree, expect_zero_reconstructions=True)
+        check_invariants(direct, expect_zero_reconstructions=True)
+
+
+def test_broadcast_rounds_grow_logarithmically():
+    """32 consumers from one producer land in ~log2 rounds, every edge
+    ticketed, and the head serves zero payload bytes."""
+    with tempfile.TemporaryDirectory() as tmp:
+        g = _build(33, tmp, guard=True)
+        ref = g.put("w0", b"x" * 100_000, ref_id="fat")
+        consumers = [f"w{i}" for i in range(1, 33)]
+        delivered = g.broadcast(ref, consumers)
+        assert delivered > 0
+        assert all(c in g.locations(ref) for c in consumers)
+        assert g.stats["broadcast_rounds"] <= 7      # ceil(log2(32)) + tail
+        assert g.stats["tree_edges"] == 32
+        assert g.stats["head_relayed_bytes"] == 0
+        check_invariants(g, expect_fetchable=["fat"])
+
+
+def test_choose_source_deterministic_under_equal_load():
+    """Tie-breaking is by sorted node id before link load: equal-load
+    replicas must rank identically regardless of registration order."""
+    ranks = []
+    for order in (range(4), reversed(range(4))):
+        g = GlobalObjectStore(shards=1)
+        g.register_node(NodeStore("head", capacity_bytes=1 << 30))
+        for i in order:
+            g.register_node(NodeStore(f"w{i}", capacity_bytes=1 << 30))
+        ref = g.put("w2", b"y" * 64, ref_id="o")
+        for n in ("w0", "w1", "w3"):
+            g.fetch(n, ref)
+        rank = g.rank_sources(ref, "head")
+        loads = [g.link_load(n) for n in rank]
+        # within an equal-load tie, node ids ascend -- never dict order
+        for (a, la), (b, lb) in zip(zip(rank, loads),
+                                    zip(rank[1:], loads[1:])):
+            if la == lb:
+                assert a < b, f"tie ({a}, {b}) not id-ordered in {rank}"
+        ranks.append(rank)
+    assert ranks[0] == ranks[1], "rank_sources depends on insertion order"
+
+
+def test_delta_spill_rewrites_only_changed_chunks(tmp_path):
+    """A respilled generation shares unchanged content chunks with its
+    predecessor: bytes written shrink and the restore is byte-exact."""
+    store = NodeStore("w0", capacity_bytes=1 << 30,
+                      spill_dir=str(tmp_path))
+    payload = bytearray(random.Random(7).randbytes(300_000))
+    blob = pickle.dumps(bytes(payload))
+    ref = ObjectRef("churn", len(blob))
+    store.put_blob(ref, blob)
+    assert store.spill(ref)
+    assert store.stats["delta_spill_bytes_saved"] == 0  # first generation
+    assert store.export_blob(ref) == blob
+
+    # restore-on-access promoted it back to memory; mutate a slice and
+    # spill the new generation -- only touched chunks rewrite
+    assert store.get(ref) == bytes(payload)
+    payload[1000:1100] = b"\x00" * 100
+    blob2 = pickle.dumps(bytes(payload))
+    ref2 = ObjectRef("churn", len(blob2))
+    store.put_blob(ref2, blob2)
+    assert store.spill(ref2)
+    assert store.export_blob(ref2) == blob2
+    # most content chunks were shared with generation 1: the churn paid
+    # far less than a whole-blob rewrite
+    assert store.stats["delta_spill_bytes_saved"] > len(blob2) // 2
+    assert store.stats["spills"] == 2
+
+
+def test_spill_chunk_spans_cover_and_bound():
+    """Content-defined chunking: spans tile the blob exactly and every
+    non-final chunk respects the min/max bounds."""
+    rng = random.Random(11)
+    for size in (0, 1, 5000, 123_457, 400_000):
+        blob = rng.randbytes(size)
+        spans = spill_chunk_spans(blob)
+        assert b"".join(blob[a:b] for a, b in spans) == blob
+        for a, b in spans[:-1]:
+            assert SPILL_CHUNK_MIN <= b - a <= SPILL_CHUNK_MAX
+
+
+def test_disk_tier_promotes_on_access_frequency(tmp_path):
+    """promote_after > 1 serves cold reads from disk and promotes the
+    blob to memory only once it proves hot."""
+    store = NodeStore("w0", capacity_bytes=1 << 30,
+                      spill_dir=str(tmp_path), promote_after=3)
+    blob = pickle.dumps(b"z" * 50_000)
+    ref = ObjectRef("cold", len(blob))
+    store.put_blob(ref, blob)
+    assert store.spill(ref)
+    store.get(ref)
+    store.get(ref)
+    assert store.stats["promotions"] == 0       # still disk-resident
+    store.get(ref)
+    assert store.stats["promotions"] == 1       # third access = hot
+    assert store.stats["restores"] == 1
