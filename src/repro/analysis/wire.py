@@ -419,9 +419,11 @@ def _extract_batch_subops(fn) -> List[SendSite]:
     """Send sites hiding inside `batch` frames: dict literals with a
     constant ``"op"`` key that are (a) queued through a list's
     ``.append``/``.extend`` for a later batch (the worker's pending-ack
-    queue pattern) or (b) written inline in the list under an ``"ops"``
-    key. Each becomes an ordinary SendSite so SYN-W001/W002 hold for
-    sub-ops exactly as for top-level frames."""
+    queue pattern, and the head's actor-directive outbox) or (b) written
+    inline in the list under an ``"ops"`` or ``"actor_ops"`` key (the
+    poll reply's piggybacked actor directives). Each becomes an ordinary
+    SendSite so SYN-W001/W002 hold for sub-ops exactly as for top-level
+    frames."""
     out: List[SendSite] = []
 
     def emit(d: ast.Dict):
@@ -446,7 +448,7 @@ def _extract_batch_subops(fn) -> List[SendSite]:
                         emit(d)
         elif isinstance(n, ast.Dict):
             for k, v in zip(n.keys, n.values):
-                if k is not None and _const_str(k) == "ops":
+                if k is not None and _const_str(k) in ("ops", "actor_ops"):
                     for d in ast.walk(v):
                         if isinstance(d, ast.Dict):
                             emit(d)

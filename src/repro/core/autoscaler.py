@@ -274,7 +274,9 @@ class Autoscaler:
                 self._draining.discard(wid)
                 released.append(wid)
 
-        # refresh idle tracking
+        # refresh idle tracking. WorkerInfo.idle is already False for
+        # actor hosts (a long-running replica is load, not idleness), so a
+        # worker hosting service actors never accrues idle time here.
         for wid, w in workers.items():
             if w.idle:
                 self._idle_since.setdefault(wid, now)
@@ -292,10 +294,14 @@ class Autoscaler:
             headroom = (n_live - len(self._draining) - len(released)
                         - self.effective_min_workers())
             if headroom > 0:
+                # actors_on re-checked at selection time: an actor placed
+                # *after* the idle clock started must veto the candidacy
+                # even before the next idle refresh sees w.idle flip
                 ripe = [wid for wid, since in self._idle_since.items()
                         if now - since >= self.cfg.idle_timeout_s
                         and wid not in self._draining
-                        and wid not in released]
+                        and wid not in released
+                        and not self.scheduler.actors_on(wid)]
                 if self.cfg.release_order == "reverse_join":
                     ripe.sort(key=lambda wid:
                               -self.scheduler.worker_seq(wid))
@@ -325,3 +331,91 @@ class Autoscaler:
                           n_before)
         self.events.append(ev)
         return ev
+
+
+@dataclass
+class ReplicaScalingConfig:
+    """SLO targets for the serving-plane replica autoscaler."""
+    min_replicas: int = 1
+    max_replicas: int = 8
+    p99_target_ms: float = 500.0         # grow when p99 exceeds this
+    queue_depth_target: float = 4.0      # grow when mean backlog exceeds this
+    low_water_fraction: float = 0.4      # shrink when BOTH signals are under
+                                         # fraction * target
+    scale_up_cooldown_s: float = 1.0
+    scale_down_cooldown_s: float = 10.0
+    max_step: int = 2                    # replicas added/removed per decision
+
+
+class ReplicaAutoscaler:
+    """SLO-driven replica-set autoscaler for the serving plane.
+
+    Where `Autoscaler` sizes the *worker pool* on task backlog, this
+    sizes a *replica set* on serving SLOs: it grows when the router's p99
+    latency or mean queue depth exceeds the target, and shrinks -- via
+    the drain plane, so an evicted replica finishes its in-flight
+    decodes -- only when BOTH signals sit below the low-water fraction
+    of their targets.
+
+    `grow_fn(count) -> int` spawns up to `count` replicas and returns how
+    many it actually created (e.g. `SimCluster.add_replica` + router
+    registration, or actor_create over the wire). `shrink_fn(count) ->
+    int` retires up to `count` replicas gracefully (it should route
+    through `Router.retire_replica` / the actor-exit drain handshake) and
+    returns how many it actually removed. Both may under-deliver; the
+    autoscaler only trusts the returned counts."""
+
+    def __init__(self, router, grow_fn: Callable[[int], int],
+                 shrink_fn: Callable[[int], int],
+                 config: Optional[ReplicaScalingConfig] = None,
+                 clock: Callable[[], float] = None):
+        self.router = router
+        self.grow_fn = grow_fn
+        self.shrink_fn = shrink_fn
+        self.cfg = config or ReplicaScalingConfig()
+        self.clock = clock or router.clock
+        self._last_up = -math.inf
+        self._last_down = -math.inf
+        self.events: List[ScalingEvent] = []
+
+    def _emit(self, now: float, action: str, count: int, reason: str,
+              before: int) -> ScalingEvent:
+        ev = ScalingEvent(now, action, count, reason, before)
+        self.events.append(ev)
+        return ev
+
+    def tick(self, now: Optional[float] = None) -> Optional[ScalingEvent]:
+        now = self.clock() if now is None else now
+        n = len(self.router.replicas)
+        p99 = self.router.p99_ms()
+        depth = self.router.queue_depth()
+        cfg = self.cfg
+
+        over_p99 = p99 > cfg.p99_target_ms
+        over_depth = depth > cfg.queue_depth_target
+        if (over_p99 or over_depth) and n < cfg.max_replicas \
+                and now - self._last_up >= cfg.scale_up_cooldown_s:
+            want = min(cfg.max_step, cfg.max_replicas - n)
+            got = self.grow_fn(want)
+            if got > 0:
+                self._last_up = now
+                sig = (f"p99 {p99:.0f}ms > {cfg.p99_target_ms:.0f}ms"
+                       if over_p99 else
+                       f"queue depth {depth:.1f} > "
+                       f"{cfg.queue_depth_target:.1f}")
+                return self._emit(now, "scale_up", got, sig, n)
+            return None
+
+        under = (p99 <= cfg.p99_target_ms * cfg.low_water_fraction
+                 and depth <= cfg.queue_depth_target * cfg.low_water_fraction)
+        if under and n > cfg.min_replicas \
+                and now - self._last_down >= cfg.scale_down_cooldown_s:
+            want = min(cfg.max_step, n - cfg.min_replicas)
+            got = self.shrink_fn(want)
+            if got > 0:
+                self._last_down = now
+                return self._emit(
+                    now, "scale_down", got,
+                    f"p99 {p99:.0f}ms and depth {depth:.1f} under "
+                    f"{cfg.low_water_fraction:.0%} of target", n)
+        return None

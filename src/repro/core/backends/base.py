@@ -63,3 +63,17 @@ class Backend(abc.ABC):
         is the grace the rendered artifact gives any process still wrapping
         up on the node before force-releasing it (0 = immediate)."""
         raise NotImplementedError(f"{self.name} backend is not elastic")
+
+    def preempt_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str],
+                        notice_s: float = 30.0) -> Dict[str, str]:
+        """Preemption notice: the resource manager WILL revoke these nodes
+        `notice_s` from now (spot reclaim, queued-resource revocation),
+        ready or not. Unlike `release_workers` -- where the drain already
+        finished -- this *starts* the drain under a hard wall-clock
+        deadline: in-flight work and hosted replicas hand off inside the
+        notice window, and whatever has not drained when it closes goes
+        through the failure path. In-process backends execute the
+        deadline; render-only backends return the artifacts that schedule
+        the revocation."""
+        raise NotImplementedError(f"{self.name} backend is not elastic")

@@ -51,6 +51,18 @@ class LocalBackend(Backend):
                 self.cluster.remove_worker(wid)
         return {}
 
+    def preempt_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str],
+                        notice_s: float = 30.0) -> Dict[str, str]:
+        # the notice window IS the drain budget: a worker that drains in
+        # time exits cleanly; one that cannot goes through the failure
+        # path when the window closes (the RM revokes the node anyway)
+        for wid in worker_ids:
+            if not self.cluster.drain_worker(wid, deadline_s=notice_s,
+                                             timeout=notice_s):
+                self.cluster.remove_worker(wid)
+        return {}
+
 
 class SimBackend(Backend):
     """Discrete-event workers joining after a provisioning delay."""
@@ -88,4 +100,14 @@ class SimBackend(Backend):
                                          deadline_s=drain_deadline_s or None)
             else:
                 self.sim.release_workers([wid])
+        return {}
+
+    def preempt_workers(self, req: AllocationRequest, cluster_id: str,
+                        worker_ids: List[str],
+                        notice_s: float = 30.0) -> Dict[str, str]:
+        # virtual-time preemption: begin_drain now, hard revoke at
+        # now + notice_s if the drain plane has not finished by then
+        for wid in worker_ids:
+            if wid in self.sim.scheduler.workers:
+                self.sim.preempt_worker_at(wid, self.sim.now, notice_s)
         return {}

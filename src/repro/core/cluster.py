@@ -95,6 +95,7 @@ class SyndeoCluster:
         self.store.set_transfer_guard(True)
         self._tenants: Dict[str, Tenant] = {}
         self._tenant_min: Dict[str, int] = {}
+        self._actors: Dict[str, Any] = {}   # actor_id -> live instance
         self.rendezvous.publish(Endpoint("127.0.0.1", 6379, self.cluster_id,
                                          self.token))
 
@@ -310,6 +311,47 @@ class SyndeoCluster:
     def create_placement_group(self, name: str, bundles, strategy="SPREAD"):
         with self._lock:
             return self.scheduler.create_placement_group(name, bundles, strategy)
+
+    # -- service actors (threaded twin of the wire protocol's actor ops) --------
+
+    def create_actor(self, actor_id: str, factory: Callable[[], Any],
+                     resources: Optional[Dict[str, float]] = None,
+                     tenant_id: str = DEFAULT_TENANT,
+                     placement_group: Optional[str] = None,
+                     bundle_index: Optional[int] = None) -> Optional[str]:
+        """Place a long-running service actor (lifetime resource hold via
+        `place_actor`) and instantiate it in-process. Returns the hosting
+        worker id, or None when nothing fits. The instance must expose
+        `handle(payload) -> value`; a `drain()` method, if present, runs
+        before a graceful exit (replica finishes in-flight decodes)."""
+        with self._lock:
+            wid = self.scheduler.place_actor(
+                actor_id, resources or {"cpu": 1.0}, tenant_id=tenant_id,
+                placement_group=placement_group, bundle_index=bundle_index)
+            if wid is None:
+                return None
+            try:
+                self._actors[actor_id] = factory()
+            except Exception:
+                self.scheduler.remove_actor(actor_id)
+                raise
+        return wid
+
+    def call_actor(self, actor_id: str, payload: Any) -> Any:
+        """Synchronous actor call on the caller's thread (threads are
+        cooperative here, like task execution). Raises KeyError for an
+        unknown or already-exited actor."""
+        inst = self._actors[actor_id]
+        return inst.handle(payload)
+
+    def destroy_actor(self, actor_id: str) -> bool:
+        """Graceful actor exit: drain in-flight work (if the instance
+        supports it), then release the lifetime resource hold."""
+        inst = self._actors.pop(actor_id, None)
+        if inst is not None and hasattr(inst, "drain"):
+            inst.drain()
+        with self._lock:
+            return self.scheduler.remove_actor(actor_id)
 
     # -- backend plumbing (threaded local workers) -----------------------------------
 

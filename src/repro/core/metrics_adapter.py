@@ -43,7 +43,13 @@ DEFAULT_METRICS = ("syndeo_backlog_per_worker", "syndeo_busy_fraction",
                    # regressions before the serving plane multiplies them
                    "syndeo_broadcast_rounds", "syndeo_tree_edges",
                    "syndeo_batched_moves", "syndeo_delta_spill_bytes_saved",
-                   "syndeo_promotions")
+                   "syndeo_promotions",
+                   # serving plane: router-fed admission counters + tail
+                   # latency and the live replica count -- the signals an
+                   # SLO-driven replica HPA scales on (paper Sec. IV's
+                   # K8s priority/elasticity story applied to serving)
+                   "syndeo_serve_requests", "syndeo_serve_shed",
+                   "syndeo_serve_p99_ms", "syndeo_replica_count")
 
 
 class MetricsPoller:

@@ -839,6 +839,36 @@ class GlobalObjectStore:
         ranked = self.rank_sources(ref, dst)
         return ranked[0] if ranked else None
 
+    def replicate_to(self, node_id: str, ref: ObjectRef,
+                     acting_tenant: str = ADMIN_TENANT,
+                     capability: Optional["Capability"] = None) -> int:
+        """Nearest-fresh replication: land a copy of `ref` on `node_id`
+        from the best-ranked serving peer (worker peers before the head,
+        fresh replicas before mid-move sources, least link load). This is
+        how a replica joining an already-broadcast model version gets its
+        weights on scale-up -- it pulls from the closest fresh replica
+        instead of re-running the broadcast or touching the head link.
+        Falls through rank order on per-source failure (a peer dying
+        mid-pull); returns bytes moved (0 when already local), raising
+        KeyError only when no ranked source could serve."""
+        if node_id in self.locations(ref):
+            return 0
+        last_err: Optional[Exception] = None
+        for src in self.rank_sources(ref, node_id):
+            ticket = None
+            if self._require_tickets and node_id != "head":
+                ticket = self.grant_fetch(ref, node_id, acting_tenant,
+                                          src=src)
+                if ticket is None:
+                    continue
+            try:
+                return self.fetch(node_id, ref, ticket=ticket,
+                                  capability=capability, src=src)
+            except KeyError as e:       # source lost its copy under us
+                last_err = e
+        raise last_err or KeyError(
+            f"no live source can replicate {ref.id} to {node_id}")
+
     def grant_fetch(self, ref: ObjectRef, dst: str, acting_tenant: str,
                     ttl_s: float = 30.0,
                     src: Optional[str] = None) -> Optional[TransferTicket]:

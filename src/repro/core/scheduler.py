@@ -46,6 +46,7 @@ class WorkerInfo:
     last_heartbeat: float = 0.0
     running: set = field(default_factory=set)
     draining: bool = False       # retiring: no new placements, tasks drain
+    actors: set = field(default_factory=set)  # live service-actor ids hosted
 
     def __post_init__(self):
         if not self.available:
@@ -57,7 +58,10 @@ class WorkerInfo:
 
     @property
     def idle(self) -> bool:
-        return not self.running and all(
+        # a replica actor between request bursts holds its resources but
+        # runs no task: the worker is NOT idle -- idle-exit and idle
+        # scale-down must never reap a serving replica (see ISSUE 9)
+        return not self.running and not self.actors and all(
             self.available.get(k, 0.0) >= v for k, v in self.resources.items())
 
     def fits(self, req: Dict[str, float]) -> bool:
@@ -162,6 +166,22 @@ class DrainState:
                 self.assigned_bytes[dst] = left
             else:
                 self.assigned_bytes.pop(dst, None)
+
+
+@dataclass
+class ActorInfo:
+    """One live service actor (a long-running replica hosted by a worker).
+
+    Unlike a task, an actor holds its resources for its whole lifetime and
+    is never rescheduled by the task graph: death is surfaced to the
+    serving layer (router / autoscaler), which decides whether to respawn.
+    """
+    actor_id: str
+    worker_id: str
+    resources: Dict[str, float]
+    tenant_id: str = "default"
+    placement_group: Optional[str] = None
+    created_at: float = 0.0
 
 
 class _ReadyQueue:
@@ -397,10 +417,14 @@ class Scheduler:
         # speculation reverse map (original id -> twin id): makes the
         # twin-cancel lookup on finish O(1) instead of a full-graph scan
         self._twin_of: Dict[str, str] = {}
+        # service-actor registry (the serving plane): actor id -> ActorInfo
+        self.actors: Dict[str, ActorInfo] = {}
         self.stats = {"launched": 0, "finished": 0, "failed": 0, "retried": 0,
                       "speculative": 0, "reconstructed": 0, "cancelled": 0,
                       "drained": 0, "migrated_objects": 0, "preempted": 0,
-                      "migration_denied": 0, "rate_limited": 0}
+                      "migration_denied": 0, "rate_limited": 0,
+                      "actors_created": 0, "actors_exited": 0,
+                      "actors_lost": 0}
 
     # -- tenancy ---------------------------------------------------------------
 
@@ -498,15 +522,83 @@ class Scheduler:
     def retire_worker(self, worker_id: str) -> bool:
         """Graceful scale-down: remove an *idle* worker without the failure
         path (no task requeue, no lineage churn for running work). Returns
-        False if the worker is busy or bound to a placement group."""
+        False if the worker is busy, hosts a live service actor, or is
+        bound to a placement group."""
         w = self.workers.get(worker_id)
-        if w is None or w.running:
+        if w is None or w.running or w.actors:
             return False
         if any(worker_id in binding.values()
                for binding in self._placement_bindings.values()):
             return False
         self._remove_node(worker_id)
         return True
+
+    # -- service actors ------------------------------------------------------
+    #
+    # place_actor(a)   : pick a worker, acquire resources for the actor's
+    #                    LIFETIME (not one task), register it
+    # remove_actor(a)  : graceful exit -- release resources, forget
+    # Actor-hosting workers refuse retire_worker and the idle-exit `leave`
+    # handshake, and a drain of their node is only complete once every
+    # hosted replica has exited (handoff before release).
+
+    def place_actor(self, actor_id: str, resources: Dict[str, float],
+                    tenant_id: str = "default",
+                    placement_group: Optional[str] = None,
+                    bundle_index: Optional[int] = None) -> Optional[str]:
+        """Place a long-running service actor; returns the hosting worker
+        id or None when nothing fits. Placement-group bundles pin the
+        actor to the bundle's bound worker (gang-placed replicas); free
+        placement packs by least load with deterministic id tiebreak."""
+        if actor_id in self.actors:
+            raise ValueError(f"actor {actor_id!r} already placed")
+        w: Optional[WorkerInfo] = None
+        if placement_group is not None:
+            binding = self._placement_bindings.get(placement_group)
+            if binding is None:
+                return None
+            bound = binding.get(bundle_index if bundle_index is not None
+                                else 0)
+            cand = self.workers.get(bound or "")
+            if (cand is not None and cand.alive and not cand.draining
+                    and cand.fits(resources)):
+                w = cand
+        else:
+            fits = [c for c in self.workers.values()
+                    if c.alive and not c.draining and c.fits(resources)]
+            if fits:
+                w = min(fits, key=lambda c: (c.load, c.id))
+        if w is None:
+            return None
+        w.acquire(resources)
+        w.actors.add(actor_id)
+        self._usage_add(tenant_id, resources, +1.0)
+        self.actors[actor_id] = ActorInfo(
+            actor_id, w.id, dict(resources), tenant_id,
+            placement_group, created_at=self.clock())
+        self.index.touch(w)
+        self.stats["actors_created"] += 1
+        return w.id
+
+    def remove_actor(self, actor_id: str) -> bool:
+        """Graceful actor exit (drained replica, scale-down): release the
+        lifetime resource hold and forget the actor."""
+        info = self.actors.pop(actor_id, None)
+        if info is None:
+            return False
+        w = self.workers.get(info.worker_id)
+        if w is not None:
+            w.actors.discard(actor_id)
+            w.release(info.resources)
+            self.index.touch(w)
+        self._usage_add(info.tenant_id, info.resources, -1.0)
+        self.stats["actors_exited"] += 1
+        self.schedule()
+        return True
+
+    def actors_on(self, worker_id: str) -> List[str]:
+        w = self.workers.get(worker_id)
+        return sorted(w.actors) if w is not None else []
 
     def _remove_node(self, worker_id: str):
         """Shared teardown for the drop (retire_worker) and drain
@@ -520,6 +612,11 @@ class Scheduler:
             self.graph.object_lost(oid)
         self.index.remove(worker_id)
         self._drains.pop(worker_id, None)
+        for aid in sorted(w.actors):         # graceful paths exit first;
+            info = self.actors.pop(aid, None)  # anything left is gone
+            if info is not None:
+                self._usage_add(info.tenant_id, info.resources, -1.0)
+                self.stats["actors_lost"] += 1
         del self.workers[worker_id]
 
     # -- graceful drain (DRAINING lifecycle state) ---------------------------
@@ -866,13 +963,15 @@ class Scheduler:
                 self._dispatch_moves(wid)
 
     def drain_complete(self, worker_id: str) -> bool:
-        """True once the worker has no running tasks and every planned
-        migration has landed (re-scans for results produced mid-drain)."""
+        """True once the worker has no running tasks, every hosted service
+        actor has exited (replica handoff before release), and every
+        planned migration has landed (re-scans for results produced
+        mid-drain)."""
         w = self.workers.get(worker_id)
         st = self._drains.get(worker_id)
         if w is None or st is None:
             return False
-        if w.running:
+        if w.running or w.actors:
             return False
         self._dispatch_moves(worker_id)      # pick up late-arriving objects
         return not st.pending
@@ -1325,6 +1424,11 @@ class Scheduler:
                 task.error = f"worker {worker_id} {reason}"
         self.index.remove(worker_id)
         self._drains.pop(worker_id, None)    # a dying drain is just a failure
+        for aid in sorted(w.actors):         # replicas died with the node:
+            info = self.actors.pop(aid, None)  # the router re-routes, the
+            if info is not None:               # SLO policy respawns
+                self._usage_add(info.tenant_id, info.resources, -1.0)
+                self.stats["actors_lost"] += 1
         del self.workers[worker_id]
         # the dead node may be the *destination* of other drains' in-flight
         # moves (the store already aborted the matching two-phase records):

@@ -235,6 +235,25 @@ class Capability:
         mac = sign(key, f"{tenant_id}:{object_id}:{right}".encode())
         return Capability(object_id, right, mac, tenant_id=tenant_id)
 
+    @staticmethod
+    def grant_actor(cluster_token: str, tenant_id: str,
+                    actor_id: str) -> "Capability":
+        """Actor-scoped grant for the serving plane: authorizes
+        `actor_call`/`actor_exit` against exactly one live replica actor.
+        The scope string ("actor:<id>") shares the object-capability MAC
+        scheme, so an actor grant can never be replayed as a blob `get`
+        (the right differs) or against another actor (the id is inside
+        the MAC), and tenant derivation applies unchanged: tenant A's
+        actor capability is useless against tenant B's replicas."""
+        return Capability.grant_for_tenant(cluster_token, tenant_id,
+                                           f"actor:{actor_id}", "call")
+
+    def verify_actor(self, cluster_token: str, actor_id: str,
+                     actor_tenant: str = DEFAULT_TENANT):
+        """Head-side check before routing a call or exit to a replica."""
+        self.verify(cluster_token, f"actor:{actor_id}", "call",
+                    object_tenant=actor_tenant)
+
     def check(self, token: str, object_id: str, right: str):
         """Legacy cluster-scope check (MAC under the cluster token)."""
         want = sign(token, f"{object_id}:{right}".encode())

@@ -74,6 +74,46 @@ def lognormal_provision_latency(median_s: float = 120.0, sigma: float = 1.0,
     return sample
 
 
+class SimReplicaHandle:
+    """A serving replica living on a simulated worker: the router's
+    engine duck-type over a local `StubEngine`, plus the placement
+    metadata the chaos tests assert on (hosting worker, weight version).
+    Decode latency falls out of the driver's tick cadence -- each
+    `run_serve` tick is one decode step per slot -- so queueing delay is
+    what moves the router's p99."""
+
+    def __init__(self, replica_id: str, worker_id: str, engine,
+                 weights_version: Optional[str] = None):
+        self.id = replica_id
+        self.worker_id = worker_id
+        self.engine = engine
+        self.weights_version = weights_version
+
+    @property
+    def free_slots(self) -> int:
+        return self.engine.free_slots
+
+    @property
+    def queue_len(self) -> int:
+        return self.engine.queue_len
+
+    @property
+    def outstanding_tokens(self) -> int:
+        return self.engine.outstanding_tokens
+
+    def add_request(self, req):
+        self.engine.add_request(req)
+
+    def tick(self) -> int:
+        return self.engine.tick()
+
+    def pop_completed(self):
+        return self.engine.pop_completed()
+
+    def run_until_drained(self, max_ticks: int = 10000):
+        return self.engine.run_until_drained(max_ticks=max_ticks)
+
+
 class SimCluster:
     """Discrete-event cluster. API mirrors SyndeoCluster where relevant."""
 
@@ -104,6 +144,7 @@ class SimCluster:
         self._next_worker = 0        # monotonic: retired ids never reused
         self._dead: set = set()
         self.autoscaler: Optional[Autoscaler] = None
+        self.replicas: Dict[str, "SimReplicaHandle"] = {}
         self.completed: List[Task] = []
         # heavy-tailed outer-RM provisioning latency (e.g. GCP TPU queued
         # resources): when set, each provisioned worker joins after its own
@@ -331,6 +372,155 @@ class SimCluster:
             if self.scheduler.begin_drain(worker_id, deadline_s):
                 poll()
         self._post(max(0.0, t - self.now), start)
+
+    # -- serving plane (long-running replica actors) -----------------------------
+
+    def add_replica(self, replica_id: str, batch_slots: int = 4,
+                    resources: Optional[Dict[str, float]] = None,
+                    weights=None, tenant_id: str = "default",
+                    placement_group: Optional[str] = None,
+                    bundle_index: Optional[int] = None
+                    ) -> Optional["SimReplicaHandle"]:
+        """Place a serving replica as a long-running actor: lifetime
+        resource hold via `place_actor`, then a nearest-fresh weight fetch
+        -- `choose_source` prefers worker peers holding a fresh copy over
+        the head, so scale-up weight distribution stays off the head link
+        (head_relayed_bytes unchanged). Returns None when nothing fits."""
+        from repro.serve.engine import StubEngine
+        wid = self.scheduler.place_actor(
+            replica_id, resources or {"cpu": 1.0}, tenant_id=tenant_id,
+            placement_group=placement_group, bundle_index=bundle_index)
+        if wid is None:
+            return None
+        version = None
+        if weights is not None:
+            if wid not in self.store.locations(weights):
+                src = self.store.choose_source(weights, wid)
+                self.store.fetch(wid, weights, src=src)
+            version = weights.id
+        handle = SimReplicaHandle(replica_id, wid, StubEngine(batch_slots),
+                                  weights_version=version)
+        self.replicas[replica_id] = handle
+        return handle
+
+    def remove_replica(self, replica_id: str) -> bool:
+        """Graceful replica exit: release the actor's lifetime resource
+        hold. The caller is responsible for draining the replica's
+        in-flight decodes first (`Router.retire_replica`)."""
+        self.replicas.pop(replica_id, None)
+        return self.scheduler.remove_actor(replica_id)
+
+    def handoff_replicas(self, worker_id: str, router, weights=None
+                         ) -> List[str]:
+        """Move every replica hosted on `worker_id` to survivors: each is
+        retired from the router (finishes its in-flight decodes -- no
+        request is dropped), its actor registration released, and a
+        successor placed elsewhere with a nearest-fresh weight fetch. Run
+        after `begin_drain` so successors cannot land back on the
+        draining host. Returns the successor replica ids."""
+        moved: List[str] = []
+        for rid in self.scheduler.actors_on(worker_id):
+            old = self.replicas.get(rid)
+            slots = old.engine.B if old is not None else 4
+            router.retire_replica(rid)
+            self.remove_replica(rid)
+            new_id = f"{rid}+"
+            nh = self.add_replica(new_id, batch_slots=slots, weights=weights)
+            if nh is not None:
+                router.add_replica(new_id, nh)
+                moved.append(new_id)
+        return moved
+
+    def preempt_worker_at(self, worker_id: str, t: float, notice_s: float,
+                          router=None, weights=None,
+                          poll_every: float = 0.05):
+        """Preemption notice at virtual time `t` (spot reclaim, queued
+        resource revocation): the node WILL be revoked `notice_s` later
+        regardless. Inside the notice window the drain plane does its
+        graceful work -- replicas hand off through the router, hot
+        objects migrate to survivors -- and a node that drains in time is
+        released cleanly (zero re-execution). Only a node still holding
+        work at the deadline is hard-killed through the failure path."""
+        def start():
+            if worker_id not in self.scheduler.workers:
+                return
+            self.scheduler.begin_drain(worker_id, notice_s)
+            if router is not None:
+                self.handoff_replicas(worker_id, router, weights=weights)
+
+            def poll():
+                if worker_id not in self.scheduler.workers:
+                    return
+                self.scheduler.check_drains(self.now)
+                if self.scheduler.drain_complete(worker_id) \
+                        and self.scheduler.finish_drain(worker_id):
+                    self.release_workers([worker_id])
+                    return
+                self._post(poll_every, poll)
+            poll()
+
+            def revoke():
+                if worker_id in self.scheduler.workers:
+                    self._dead.add(worker_id)
+                    self.scheduler.on_worker_failed(worker_id,
+                                                    reason="preempted")
+            self._post(notice_s, revoke)
+        self._post(max(0.0, t - self.now), start)
+
+    def run_serve(self, router, arrivals: List[Tuple[float, Any]],
+                  tick_every: float = 0.01, drain_s: float = 0.0,
+                  on_tick: Optional[Callable[[float], None]] = None,
+                  replica_autoscaler=None) -> List[Any]:
+        """Open-loop serving driver: submit each request at its virtual
+        arrival time, tick the router (one decode step per replica slot)
+        every `tick_every` virtual seconds, and run until everything
+        admitted has completed plus `drain_s` of idle tail. Requests the
+        router sheds are re-submitted on the next tick (closed retry
+        loop), so the returned list is every request, completed. Construct
+        the router with ``clock=lambda: sim.now`` so its p99 window
+        measures virtual time."""
+        completed: List[Any] = []
+        pending: List[Any] = []
+        submitted = [0]
+
+        def arrive(req):
+            submitted[0] += 1
+            if not router.submit(req):
+                pending.append(req)
+
+        for t, req in arrivals:
+            self._post(max(0.0, t - self.now), lambda r=req: arrive(r))
+        last_arrival = max((t for t, _ in arrivals), default=self.now)
+        done_since: List[Optional[float]] = [None]
+
+        def settled() -> bool:
+            return (self.now >= last_arrival
+                    and submitted[0] >= len(arrivals)
+                    and not pending and router.idle())
+
+        def monitor():
+            for req in pending[:]:
+                if router.submit(req):
+                    pending.remove(req)
+            completed.extend(router.tick())
+            if replica_autoscaler is not None:
+                replica_autoscaler.tick(self.now)
+            if self.autoscaler is not None:
+                self.autoscaler.tick(self.now)
+            if on_tick is not None:
+                on_tick(self.now)
+            if settled():
+                if done_since[0] is None:
+                    done_since[0] = self.now
+                if self.now - done_since[0] >= drain_s:
+                    return
+            else:
+                done_since[0] = None
+            self._post(tick_every, monitor)
+
+        self._post(tick_every, monitor)
+        self.run()
+        return completed
 
     # -- submission --------------------------------------------------------------------
 

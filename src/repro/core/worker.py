@@ -107,7 +107,42 @@ replay protection, head TCP port):
   stats        any -> head     -> scheduler stats + tenant shares
   metrics      adapter -> head -> autoscaling signals incl. per-tenant
                                syndeo_tenant_dominant_share and
-                               syndeo_tenant_quota_fraction
+                               syndeo_tenant_quota_fraction, plus the
+                               serving-plane gauges (syndeo_serve_requests,
+                               syndeo_serve_shed, syndeo_serve_p99_ms,
+                               syndeo_replica_count)
+
+Service-actor lifecycle (the serving plane): workers host long-running
+replica actors instead of one-shot functions. Lifecycle directives ride
+the poll reply's `actor_ops` list (head -> worker, exactly like
+`migrations`); worker-side acks and results ride the existing `batch`
+frame. Resources are held by the scheduler for the actor's lifetime;
+actor-hosting workers refuse the idle-exit `leave` handshake and a
+drain of their node completes only after every replica exits.
+
+  op           direction       request fields -> reply
+  -----------  --------------  -------------------------------------------
+  actor_create client -> head  factory, [actor, resources, tenant,
+                               placement_group, bundle_index, kwargs] --
+                               place a replica actor; the head queues an
+                               actor_create directive for the hosting
+                               worker's next poll
+                               -> actor, worker, cap (actor-scoped
+                               capability authorizing call/exit)
+  actor_call   client -> head  actor, cap, [payload, call] -- verified
+                               against the actor-scoped capability, then
+                               queued as an actor_call directive
+                               -> call (id to fetch the result with)
+  actor_result worker -> head  worker, actor, call, value|error -- a
+                               finished call, riding the batch frame
+               client -> head  call (no worker field) -- fetch one
+                               result -> done, value|error
+  actor_exit   client -> head  actor, cap -- graceful exit request,
+                               queued as a directive; the replica
+                               finishes in-flight work first
+               worker -> head  worker, actor -- exit ack (batch frame);
+                               only now does the scheduler release the
+                               actor's lifetime resource hold
 
 Blob-server wire format (worker data plane, one request per connection):
 every frame is an 8-byte big-endian length followed by the payload in
@@ -533,6 +568,15 @@ class HeadServer:
         # PREPAREd drain-move directives awaiting each source worker's
         # next poll ({ref, size, node, host, port, ticket} dicts)
         self._pending_migrations: Dict[str, List[Dict[str, Any]]] = {}
+        # serving plane: actor lifecycle directives awaiting each hosting
+        # worker's next poll, completed call results awaiting client
+        # pickup, actor ids already asked to exit (a draining host asks
+        # each replica exactly once), and router-fed serving gauges
+        # (requests / shed / p99_ms) surfaced by the `metrics` op
+        self._actor_outbox: Dict[str, List[Dict[str, Any]]] = {}
+        self._actor_results: Dict[str, Dict[str, Any]] = {}
+        self._actor_exits_asked: set = set()
+        self.serve_stats: Dict[str, float] = {}
         self.head_payload_bytes = 0
         # bounded seen-nonce set: a captured worker envelope cannot be
         # replayed inside the freshness window (it would need a fresh nonce,
@@ -773,6 +817,24 @@ class HeadServer:
             agg[k] = agg.get(k, 0) + int(v)
         return {"ok": True}
 
+    def _handle_actor_result(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Worker-side completion report for one actor call (pure dict
+        work: batch frames run it under the one cluster-lock pass)."""
+        self._actor_results[str(msg["call"])] = {
+            "actor": msg.get("actor"), "host": msg.get("worker"),
+            "value": msg.get("value"), "error": msg.get("error")}
+        return {"ok": True}
+
+    def _handle_actor_exited(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Worker-side exit ack: the replica finished its in-flight work
+        and unhosted -- only now does the scheduler release the actor's
+        lifetime resource hold (and a drain of the node can complete).
+        Caller holds the cluster lock (top level or batch frame)."""
+        aid = str(msg["actor"])
+        released = self.cluster.scheduler.remove_actor(aid)
+        self._actor_exits_asked.discard(aid)
+        return {"ok": True, "released": released}
+
     def dispatch(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         op = msg.get("op")
         c = self.cluster
@@ -831,10 +893,24 @@ class HeadServer:
                 with c._lock:
                     for mv in moves:
                         c.scheduler.note_move_dispatched(wid, mv["ref"])
+            # actor lifecycle directives ride the poll reply exactly like
+            # drain moves. A draining host asks each replica to exit
+            # (once): the drain completes only after every exit is acked,
+            # so scale-down never cuts off an in-flight decode.
+            with c._lock:
+                if draining:
+                    for aid in c.scheduler.actors_on(wid):
+                        if aid not in self._actor_exits_asked:
+                            self._actor_exits_asked.add(aid)
+                            self._actor_outbox.setdefault(wid, []).append(
+                                {"op": "actor_exit", "actor": aid})
+                acts = self._actor_outbox.pop(wid, [])
 
             def with_moves(reply: Dict[str, Any]) -> Dict[str, Any]:
                 if moves:
                     reply["migrations"] = moves
+                if acts:
+                    reply["actor_ops"] = acts
                 return reply
 
             box = self._outbox.get(wid, [])
@@ -930,7 +1006,9 @@ class HeadServer:
                 w = c.scheduler.workers.get(wid)
                 if w is None:
                     return {"ok": True, "exit": True}
-                if w.running:
+                if w.running or w.actors:
+                    # a live replica actor is never idle cover: the host
+                    # must not walk away between request bursts
                     return {"ok": True, "exit": False, "replicate": []}
                 at_risk = self._at_risk_objects(wid)
                 if at_risk and wid not in self._blob_eps:
@@ -962,6 +1040,87 @@ class HeadServer:
                     return {"ok": True, "exit": bool(ok), "replicate": []}
                 moves = self._replication_plan(wid, at_risk)
             return {"ok": True, "exit": False, "replicate": moves}
+        if op == "actor_create":
+            # place a long-running replica actor: the scheduler acquires
+            # its resources for the actor's LIFETIME (placement-group
+            # aware), and the hosting worker instantiates it from the
+            # actor_create directive riding its next poll reply
+            aid = str(msg.get("actor") or f"actor-{uuid.uuid4().hex[:6]}")
+            tenant = str(msg.get("tenant") or "default")
+            factory = str(msg["factory"])
+            with c._lock:
+                try:
+                    wid = c.scheduler.place_actor(
+                        aid, msg.get("resources") or {"cpu": 1.0}, tenant,
+                        msg.get("placement_group"), msg.get("bundle_index"))
+                except ValueError as e:
+                    return {"ok": False, "error": str(e)}
+                if wid is None:
+                    return {"ok": False,
+                            "error": f"no worker fits actor {aid!r}"}
+                self._actor_outbox.setdefault(wid, []).append(
+                    {"op": "actor_create", "actor": aid, "factory": factory,
+                     "kwargs": msg.get("kwargs") or {}, "tenant": tenant})
+            cap = Capability.grant_actor(c.token, tenant, aid)
+            return {"ok": True, "actor": aid, "worker": wid,
+                    "cap": {"object_id": cap.object_id, "right": cap.right,
+                            "mac": cap.mac, "tenant_id": cap.tenant_id}}
+        if op == "actor_call":
+            # route one request to a replica -- verified against the
+            # actor-scoped capability BEFORE anything is queued
+            aid = str(msg["actor"])
+            with c._lock:
+                info = c.scheduler.actors.get(aid)
+            if info is None:
+                return {"ok": False, "error": f"unknown actor {aid!r}"}
+            cd = msg.get("cap") or {}
+            cap = Capability(str(cd.get("object_id", "")),
+                             str(cd.get("right", "")),
+                             str(cd.get("mac", "")),
+                             str(cd.get("tenant_id", "default")))
+            try:
+                cap.verify_actor(c.token, aid, info.tenant_id)
+            except SecurityError as e:
+                return {"ok": False, "error": str(e)}
+            call_id = str(msg.get("call") or f"call-{uuid.uuid4().hex[:8]}")
+            with c._lock:
+                self._actor_outbox.setdefault(info.worker_id, []).append(
+                    {"op": "actor_call", "actor": aid, "call": call_id,
+                     "payload": msg.get("payload")})
+            return {"ok": True, "call": call_id, "worker": info.worker_id}
+        if op == "actor_result":
+            if msg.get("worker"):      # worker-side completion report
+                with c._lock:
+                    return self._handle_actor_result(msg)
+            res = self._actor_results.pop(str(msg["call"]), None)
+            if res is None:
+                return {"ok": True, "done": False}
+            return dict({"ok": True, "done": True}, **res)
+        if op == "actor_exit":
+            aid = str(msg["actor"])
+            if msg.get("worker"):      # worker-side exit ack
+                with c._lock:
+                    return self._handle_actor_exited(msg)
+            with c._lock:
+                info = c.scheduler.actors.get(aid)
+            if info is None:
+                return {"ok": True, "exited": True}
+            cd = msg.get("cap") or {}
+            cap = Capability(str(cd.get("object_id", "")),
+                             str(cd.get("right", "")),
+                             str(cd.get("mac", "")),
+                             str(cd.get("tenant_id", "default")))
+            try:
+                cap.verify_actor(c.token, aid, info.tenant_id)
+            except SecurityError as e:
+                return {"ok": False, "error": str(e)}
+            with c._lock:
+                if aid not in self._actor_exits_asked:
+                    self._actor_exits_asked.add(aid)
+                    self._actor_outbox.setdefault(info.worker_id,
+                                                  []).append(
+                        {"op": "actor_exit", "actor": aid})
+            return {"ok": True, "exited": False}
         if op == "ticket":
             # mid-fetch re-mint: a task with many fat deps can outlive the
             # tickets batched into its poll reply -- the worker asks for a
@@ -1135,6 +1294,13 @@ class HeadServer:
                             c.store.note_replica(str(sub["object"]),
                                                  str(sub["node"]))
                             replies[i] = {"ok": True}
+                        elif sop == "actor_result" and sub.get("worker"):
+                            # a replica's finished call (dict work only)
+                            replies[i] = self._handle_actor_result(sub)
+                        elif sop == "actor_exit" and sub.get("worker"):
+                            # a replica's exit ack: releases the actor's
+                            # lifetime resource hold under this same pass
+                            replies[i] = self._handle_actor_exited(sub)
                         elif sop == "batch":
                             replies[i] = {"ok": False,
                                           "error": "nested batch refused"}
@@ -1163,6 +1329,8 @@ class HeadServer:
                 by_tenant = c.scheduler.backlog_by_tenant()
                 shares = c.scheduler.tenant_shares()
                 wm = [dict(m) for m in self._worker_metrics.values()]
+                replica_count = len(c.scheduler.actors)
+                serve = dict(self.serve_stats)
             quota_tenants = set(shares) | c.store.quota_tenants()
             n = max(len(workers), 1)
             # drain-plane health counters (plain ints off the store's
@@ -1195,6 +1363,17 @@ class HeadServer:
             for k in ("delta_spill_bytes_saved", "promotions"):
                 drain_counters[f"syndeo_{k}"] = spill[k] + sum(
                     m.get(k, 0) for m in wm)
+            # serving-plane gauges: router-fed admission counters + tail
+            # latency (an attached Router publishes into serve_stats) and
+            # the live replica count off the scheduler's actor registry --
+            # the K8s custom-metrics adapter republishes these for
+            # SLO-driven replica HPAs
+            drain_counters["syndeo_serve_requests"] = int(
+                serve.get("requests", 0))
+            drain_counters["syndeo_serve_shed"] = int(serve.get("shed", 0))
+            drain_counters["syndeo_serve_p99_ms"] = float(
+                serve.get("p99_ms", 0.0))
+            drain_counters["syndeo_replica_count"] = replica_count
             return dict({"ok": True, "workers": len(workers),
                          "busy": busy, "backlog": backlog,
                          "syndeo_backlog_per_worker": backlog / n,
@@ -1270,7 +1449,9 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                max_idle_s: float = 30.0, data_plane: str = "p2p",
                blob_host: str = "127.0.0.1",
                capacity_bytes: int = 256 << 20,
-               spill_dir: Optional[str] = None):
+               spill_dir: Optional[str] = None,
+               actor_factories: Optional[Dict[str, Callable[..., Any]]]
+               = None):
     """Worker main loop. In the default p2p data plane the worker runs a
     blob server over its local NodeStore, pulls dependencies peer-to-peer
     with head-minted transfer tickets, and registers results by metadata
@@ -1281,7 +1462,15 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     task must not count toward idleness), and the worker refuses to exit
     -- even past `max_idle_s` -- until the head confirms no hot object's
     last copy lives here (`leave` handshake, replicating blobs to peers
-    first if needed)."""
+    first if needed). A worker hosting live service actors never starts
+    the leave handshake at all: a replica between request bursts is not
+    idle.
+
+    `actor_factories` names the service-actor types this worker can host
+    (factory name -> callable returning an object with
+    ``handle(payload) -> value`` and optionally ``drain()``). Lifecycle
+    directives arrive on the poll reply's `actor_ops` list; results and
+    exit acks ride the next poll's batch frame."""
     rdv = FileRendezvous(rendezvous_dir)
     ep = rdv.wait(cluster_id, timeout=60.0)
     token = ep.token
@@ -1586,6 +1775,61 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                         f"{type(e).__name__}: {e}"}, None))
             return
 
+    actors: Dict[str, Any] = {}    # hosted service actors (id -> instance)
+
+    def handle_actor_op(d: Dict[str, Any]):
+        """Execute one head-queued actor lifecycle directive. Every
+        outcome is acked through `pending_ops` (the next poll's batch
+        frame): a create that cannot be satisfied acks an immediate
+        exit so the head releases the lifetime resource hold instead of
+        leaking it against a phantom replica."""
+        aop = d.get("op")
+        aid = str(d.get("actor"))
+        if aop == "actor_create":
+            factory = (actor_factories or {}).get(str(d.get("factory")))
+            try:
+                if factory is None:
+                    raise KeyError(f"no actor factory {d.get('factory')!r}")
+                actors[aid] = factory(**(d.get("kwargs") or {}))
+            except Exception:  # noqa: BLE001 -- unknown factory / bad
+                # kwargs: unhost immediately, the head-side registration
+                # must not outlive the failed instantiation
+                pending_ops.append((
+                    {"op": "actor_exit", "worker": wid, "actor": aid},
+                    None))
+            return
+        if aop == "actor_call":
+            call_id = str(d.get("call"))
+            inst = actors.get(aid)
+            if inst is None:
+                pending_ops.append((
+                    {"op": "actor_result", "worker": wid, "actor": aid,
+                     "call": call_id,
+                     "error": f"actor {aid!r} is not hosted here"}, None))
+                return
+            try:
+                payload = (_dec(d["payload"])
+                           if d.get("payload") is not None else None)
+                value = inst.handle(payload)
+                pending_ops.append((
+                    {"op": "actor_result", "worker": wid, "actor": aid,
+                     "call": call_id, "value": _enc(value)}, None))
+            except Exception as e:  # noqa: BLE001 -- per-call verdict
+                pending_ops.append((
+                    {"op": "actor_result", "worker": wid, "actor": aid,
+                     "call": call_id,
+                     "error": f"{type(e).__name__}: {e}"}, None))
+            return
+        if aop == "actor_exit":
+            inst = actors.pop(aid, None)
+            if inst is not None and hasattr(inst, "drain"):
+                try:
+                    inst.drain()       # finish in-flight decodes first
+                except Exception:  # noqa: BLE001 -- exit anyway
+                    pass
+            pending_ops.append((
+                {"op": "actor_exit", "worker": wid, "actor": aid}, None))
+
     def safe_to_leave() -> bool:
         """Idle-exit handshake: replicate solely-held hot blobs to the
         head's push assignments until the head confirms the exit."""
@@ -1633,9 +1877,15 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
         poll_failures = 0
         while True:
             if time.monotonic() - idle_since >= max_idle_s:
-                if safe_to_leave():
+                if actors:
+                    # hosting a live replica: excluded from the idle-exit
+                    # clock entirely -- a request-burst gap longer than
+                    # max_idle_s must not trigger the leave handshake
+                    idle_since = time.monotonic()
+                elif safe_to_leave():
                     return
-                idle_since = time.monotonic()   # still needed: keep serving
+                else:
+                    idle_since = time.monotonic()  # still needed: serve on
             deltas: Dict[str, int] = {}
             if blob_srv is not None:
                 # spill-tier counters accrue on the node store, the rest
@@ -1691,6 +1941,8 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                 # blobs peer to peer before anything else -- the drain
                 # cannot finish until these land (or fail and re-plan)
                 run_migrations(got["migrations"])
+            for directive in got.get("actor_ops") or []:
+                handle_actor_op(directive)
             tid = got.get("task")
             if tid is None:
                 if got.get("draining"):

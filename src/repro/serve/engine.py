@@ -47,6 +47,7 @@ class ServeEngine:
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill_one = jax.jit(self._prefill_impl)
+        self._completed: List[Request] = []
         self.stats = {"ticks": 0, "prefills": 0, "decoded_tokens": 0,
                       "completed": 0}
 
@@ -57,6 +58,27 @@ class ServeEngine:
 
     def add_request(self, req: Request):
         self.queue.append(req)
+
+    @property
+    def free_slots(self) -> int:
+        """Decode slots with no active request (prefill capacity), net of
+        queued requests that will claim one at the next tick."""
+        empty = sum(1 for r in self.slot_req if r is None)
+        return max(0, empty - len(self.queue))
+
+    @property
+    def queue_len(self) -> int:
+        return len(self.queue)
+
+    @property
+    def outstanding_tokens(self) -> int:
+        """Tokens still owed to admitted requests -- the router's
+        least-outstanding-tokens tiebreak reads this, so it counts queued
+        requests (full budget) plus active slots (budget minus emitted)."""
+        owed = sum(r.max_new_tokens for r in self.queue)
+        owed += sum(r.max_new_tokens - len(r.output)
+                    for r in self.slot_req if r is not None)
+        return owed
 
     def _fill_free_slots(self):
         for slot in range(self.B):
@@ -106,14 +128,114 @@ class ServeEngine:
             if tok == req.eos_id or limit or int(self.positions[s]) >= self.max_len - 1:
                 req.done = True
                 self.slot_req[s] = None
+                self._completed.append(req)
                 self.stats["completed"] += 1
         self.tokens = jnp.asarray(next_tokens, jnp.int32)[:, None]
         return len(active)
 
+    def pop_completed(self) -> List[Request]:
+        """Requests finished since the last pop (the router's per-tick
+        harvest)."""
+        out, self._completed = self._completed, []
+        return out
+
     def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
-        out = []
         for _ in range(max_ticks):
             if not self.queue and all(r is None for r in self.slot_req):
                 break
             self.tick()
+        return self.pop_completed()
+
+
+class StubEngine:
+    """Model-free reference engine with ServeEngine's exact admission
+    semantics (B slots, queue, per-tick completion), for the router, the
+    sim cost model, and CI hosts without an accelerator.
+
+    Deterministic: a request's output is a pure function of its prompt
+    (`stub_output`), so a routed K-replica execution must be
+    token-identical to one local engine -- the completion-equivalence
+    property in tests/test_serve_plane.py. Each tick decodes one token
+    per active slot, mirroring the batched decode step."""
+
+    def __init__(self, batch_slots: int, max_len: int = 1 << 30):
+        self.B = batch_slots
+        self.max_len = max_len
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self._completed: List[Request] = []
+        self.stats = {"ticks": 0, "prefills": 0, "decoded_tokens": 0,
+                      "completed": 0}
+
+    @staticmethod
+    def stub_output(prompt: List[int], n: int) -> List[int]:
+        """The deterministic "model": token i is a rolling digest of the
+        prompt -- replica-independent, so routing never changes outputs."""
+        acc = 1469598103  # FNV-ish seed
+        for t in prompt:
+            acc = (acc * 16777619 + int(t)) & 0x7FFFFFFF
+        out = []
+        for _ in range(n):
+            acc = (acc * 16777619 + 13) & 0x7FFFFFFF
+            out.append(acc % 50_000)
         return out
+
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    @property
+    def free_slots(self) -> int:
+        empty = sum(1 for r in self.slot_req if r is None)
+        return max(0, empty - len(self.queue))
+
+    @property
+    def queue_len(self) -> int:
+        return len(self.queue)
+
+    @property
+    def outstanding_tokens(self) -> int:
+        owed = sum(r.max_new_tokens for r in self.queue)
+        owed += sum(r.max_new_tokens - len(r.output)
+                    for r in self.slot_req if r is not None)
+        return owed
+
+    def _fill_free_slots(self):
+        for slot in range(self.B):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            # prefill emits the first token, exactly like ServeEngine
+            req.output.append(
+                self.stub_output(req.prompt, len(req.output) + 1)[-1])
+            self.slot_req[slot] = req
+            self.stats["prefills"] += 1
+
+    def tick(self) -> int:
+        self._fill_free_slots()
+        active = [s for s in range(self.B) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        self.stats["ticks"] += 1
+        for s in active:
+            req = self.slot_req[s]
+            tok = self.stub_output(req.prompt, len(req.output) + 1)[-1]
+            req.output.append(tok)
+            self.stats["decoded_tokens"] += 1
+            if (tok == req.eos_id
+                    or len(req.output) >= req.max_new_tokens):
+                req.done = True
+                self.slot_req[s] = None
+                self._completed.append(req)
+                self.stats["completed"] += 1
+        return len(active)
+
+    def pop_completed(self) -> List[Request]:
+        out, self._completed = self._completed, []
+        return out
+
+    def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.tick()
+        return self.pop_completed()

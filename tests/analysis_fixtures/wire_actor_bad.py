@@ -1,0 +1,30 @@
+"""known-bad: actor-directive sub-ops drift from the handler set
+(SYN-W001 on a queued directive with no handler, SYN-W002 when the only
+actor_call send drops the payload its handler subscripts, SYN-W003 on an
+actor_create reply without ok/error)."""
+
+
+class Server:
+    def __init__(self):
+        self.actors = {}
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "actor_create":
+            self.actors[msg["actor"]] = msg["factory"]
+            return {"created": msg["actor"]}          # reply lacks ok/error
+        if op == "actor_call":
+            value = self.actors[msg["actor"]](msg["payload"])
+            return {"ok": True, "value": value}
+        if op == "actor_exit":
+            self.actors.pop(msg["actor"], None)
+            return {"ok": True}
+        return {"ok": False, "error": f"bad op {op}"}
+
+
+def head_poll_reply(outbox):
+    outbox.append({"op": "actor_create", "actor": "a", "factory": "F"})
+    outbox.append({"op": "actor_call", "actor": "a"})    # missing "payload"
+    outbox.append({"op": "actor_pause", "actor": "a"})   # typo: no handler
+    return {"ok": True,
+            "actor_ops": outbox + [{"op": "actor_exit", "actor": "a"}]}

@@ -1,0 +1,28 @@
+"""known-good: actor-directive sub-ops (queued AND inline under the poll
+reply's ``actor_ops`` key) line up with the handler set -- the repaired
+twin of wire_actor_bad.py."""
+
+
+class Server:
+    def __init__(self):
+        self.actors = {}
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "actor_create":
+            self.actors[msg["actor"]] = msg["factory"]
+            return {"ok": True, "actor": msg["actor"]}
+        if op == "actor_call":
+            value = self.actors[msg["actor"]](msg["payload"])
+            return {"ok": True, "value": value}
+        if op == "actor_exit":
+            self.actors.pop(msg["actor"], None)
+            return {"ok": True}
+        return {"ok": False, "error": f"bad op {op}"}
+
+
+def head_poll_reply(outbox):
+    outbox.append({"op": "actor_create", "actor": "a", "factory": "F"})
+    outbox.append({"op": "actor_call", "actor": "a", "payload": {}})
+    return {"ok": True,
+            "actor_ops": outbox + [{"op": "actor_exit", "actor": "a"}]}

@@ -33,11 +33,14 @@ KNOWN_BAD = {
                     ("SYN-W003", 13)],
     "wire_batch_bad.py": [("SYN-W001", 28), ("SYN-W002", 13)],
     "wire_blobs_bad.py": [("SYN-W001", 35), ("SYN-W002", 18)],
+    "wire_actor_bad.py": [("SYN-W001", 28), ("SYN-W002", 17),
+                          ("SYN-W003", 15)],
 }
 
 KNOWN_GOOD = ["lock_good.py", "lock_order_good.py", "taint_good.py",
               "verify_good.py", "nonce_good.py", "wire_good.py",
-              "wire_batch_good.py", "wire_blobs_good.py"]
+              "wire_batch_good.py", "wire_blobs_good.py",
+              "wire_actor_good.py"]
 
 
 @pytest.mark.parametrize("name,expected", sorted(KNOWN_BAD.items()))
