@@ -24,6 +24,15 @@ the branch calls (one level deep, the BlobServer delegation shape).
 A declared blob no handler loop ever reads is SYN-W001; a per-blob
 field the loop requires that no declaration carries is SYN-W002.
 
+Metric-delta frames (``DELTA_OPS``) go one level deeper: every payload
+field a client ships is cross-checked as pseudo-op ``"<op>#<field>"``
+against the envelope fields the op's handler actually reads --
+directly in the branch, or in a helper the branch passes the whole
+message to (one level deep, the ``_handle_metric_deltas`` delegation
+shape). A metric payload the workers export that the head never folds
+into its aggregates is SYN-W001 -- silently dropped telemetry fails
+CI, it does not page an operator with a frozen graph.
+
 SYN-W001  op sent by a client but matched by no handler branch.
 SYN-W002  field a handler requires that no client site for that op
           ever sends (ops never sent in the analyzed tree are skipped:
@@ -42,6 +51,11 @@ CLIENT_CALL_NAMES = {"_request", "_rpc"}
 
 #: list mutators that queue a sub-op for a later `batch` frame
 BATCH_QUEUE_METHODS = {"append", "extend"}
+
+#: data-plane delta ops whose payload fields are each cross-checked as
+#: pseudo-op ``"<op>#<field>"`` -- the exported-but-never-aggregated
+#: detector for telemetry riding the batch frame
+DELTA_OPS = {"metric_deltas"}
 
 
 @dataclass
@@ -75,14 +89,34 @@ def check_wire(model: CodeModel) -> List[Finding]:
         bf = _blob_entry_fields(fn.node.body)
         if bf is not None:
             blob_loop_fns[fn.qualname.split(".")[-1]] = (fn, bf)
+    # helpers a DELTA_OPS branch hands the whole message to, keyed by
+    # bare name: the branch adopts the helper's envelope-field reads
+    delta_helper_fns: Dict[str, Tuple[object, Tuple[Dict[str, int],
+                                                    Set[str], int]]] = {}
+    for fn in model.functions.values():
+        pf = _param_field_reads(fn)
+        if pf is not None:
+            delta_helper_fns[fn.qualname.split(".")[-1]] = (fn, pf)
     for fn in model.functions.values():
         for h in _extract_handlers(fn):
             handlers.setdefault(h.op, []).append(h)
         for h in _extract_blob_handlers(fn, blob_loop_fns):
             handlers.setdefault(h.op, []).append(h)
+        for h in _extract_delta_handlers(fn, delta_helper_fns):
+            handlers.setdefault(h.op, []).append(h)
         sends.extend(_extract_sends(fn))
         sends.extend(_extract_batch_subops(fn))
         sends.extend(_extract_blob_subops(fn))
+
+    # delta frames: every payload field a client ships becomes a
+    # pseudo-op send, so a metric field with no head-side fold is a
+    # missing-handler finding at the site that exports it
+    for s in list(sends):
+        if s.op in DELTA_OPS:
+            for fld in sorted(s.keys - {"op"}):
+                sends.append(SendSite(op=f"{s.op}#{fld}", file=s.file,
+                                      function=s.function, line=s.line,
+                                      keys=set(s.keys)))
 
     findings: List[Finding] = []
     for s in sends:
@@ -412,7 +446,129 @@ def _extract_blob_subops(fn) -> List[SendSite]:
     return out
 
 
+# -- metric-delta frame extraction ----------------------------------------
+
+
+def _param_field_reads(fn) -> Optional[Tuple[Dict[str, int],
+                                             Set[str], int]]:
+    """(required, optional, line) of envelope-field reads a function
+    performs on its FIRST non-self parameter; None when it has no such
+    parameter or never reads a field off it. This is how a dispatch
+    branch that hands the whole message to a helper
+    (``self._handle_metric_deltas(msg)``) adopts the helper's reads."""
+    names = [a.arg for a in fn.node.args.args if a.arg not in ("self",
+                                                               "cls")]
+    if not names:
+        return None
+    probe = HandlerInfo(op="", file=fn.file, function=fn.qualname,
+                        line=fn.node.lineno)
+    _collect_branch(probe, fn.node.body, names[0])
+    if not probe.required and not probe.optional:
+        return None
+    return dict(probe.required), set(probe.optional), fn.node.lineno
+
+
+def _extract_delta_handlers(fn, delta_helper_fns) -> List[HandlerInfo]:
+    """Pseudo-op ``"<op>#<field>"`` handlers for DELTA_OPS branches:
+    every envelope field the branch reads -- directly, or in a helper
+    it passes the whole message to (one level deep, the
+    ``_handle_metric_deltas`` delegation shape) -- counts as folded.
+    The helper's reads also back an extra base-op handler entry, so a
+    field the helper *requires* that no client ships stays SYN-W002
+    even through the delegation."""
+    node = fn.node
+    opvars: Dict[str, str] = {}
+    for st in ast.walk(node):
+        if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                and isinstance(st.targets[0], ast.Name)):
+            mv = _op_read_var(st.value)
+            if mv:
+                opvars[st.targets[0].id] = mv
+    out: List[HandlerInfo] = []
+    for st in ast.walk(node):
+        if not isinstance(st, ast.If):
+            continue
+        hit = _branch_ops(st.test, opvars)
+        if not hit:
+            continue
+        msgvar, ops = hit
+        ops = [op for op in ops if op in DELTA_OPS]
+        if not ops:
+            continue
+        probe = HandlerInfo(op="", file=fn.file, function=fn.qualname,
+                            line=st.lineno)
+        _collect_branch(probe, st.body, msgvar)
+        required, optional = dict(probe.required), set(probe.optional)
+        helper_hits: List[Tuple[object, Tuple[Dict[str, int],
+                                              Set[str], int]]] = []
+        seen: Set[int] = set()
+        for b in st.body:
+            for n in ast.walk(b):
+                if not isinstance(n, ast.Call):
+                    continue
+                if not any(isinstance(a, ast.Name) and a.id == msgvar
+                           for a in n.args):
+                    continue
+                cname = None
+                if isinstance(n.func, ast.Name):
+                    cname = n.func.id
+                elif isinstance(n.func, ast.Attribute):
+                    cname = n.func.attr
+                tgt = delta_helper_fns.get(cname)
+                if tgt is not None and id(tgt[0]) not in seen:
+                    seen.add(id(tgt[0]))
+                    helper_hits.append(tgt)
+        for _hfn, (hreq, hopt, _hline) in helper_hits:
+            for fld, line in hreq.items():
+                required.setdefault(fld, line)
+            optional |= hopt
+        for op in ops:
+            for fld, line in sorted(required.items()):
+                out.append(HandlerInfo(
+                    op=f"{op}#{fld}", file=fn.file, function=fn.qualname,
+                    line=line, required={fld: line}))
+            for fld in sorted(optional - set(required)):
+                out.append(HandlerInfo(
+                    op=f"{op}#{fld}", file=fn.file, function=fn.qualname,
+                    line=st.lineno, optional={fld}))
+            for hfn, (hreq, hopt, hline) in helper_hits:
+                out.append(HandlerInfo(
+                    op=op, file=hfn.file, function=hfn.qualname,
+                    line=hline, required=dict(hreq), optional=set(hopt)))
+    return out
+
+
 # -- client-site extraction ----------------------------------------------
+
+
+def _local_dict_payloads(node) -> Dict[str, Dict[str, Optional[str]]]:
+    """Local dict payloads assembled in `node`: var -> constant key map
+    (a dict-literal assignment -- plain or annotated -- plus later
+    ``var["k"] = ...`` updates, order-insensitive on purpose: a key set
+    on any path counts as carried)."""
+    local_dicts: Dict[str, Dict[str, Optional[str]]] = {}
+    for st in ast.walk(node):
+        if isinstance(st, ast.Assign) and len(st.targets) == 1:
+            tgt, value = st.targets[0], st.value
+        elif isinstance(st, ast.AnnAssign) and st.value is not None:
+            tgt, value = st.target, st.value
+        else:
+            continue
+        if isinstance(tgt, ast.Name) and isinstance(value, ast.Dict):
+            keys = _dict_keys(value)
+            if keys is None:
+                continue
+            kv: Dict[str, Optional[str]] = {k: None for k in keys}
+            for k, v in zip(value.keys, value.values):
+                kv[_const_str(k)] = _const_str(v)
+            local_dicts.setdefault(tgt.id, {}).update(kv)
+        elif (isinstance(tgt, ast.Subscript)
+              and isinstance(tgt.value, ast.Name)
+              and tgt.value.id in local_dicts):
+            fld = _const_str(tgt.slice)
+            if fld is not None:
+                local_dicts[tgt.value.id][fld] = _const_str(value)
+    return local_dicts
 
 
 def _extract_batch_subops(fn) -> List[SendSite]:
@@ -423,8 +579,11 @@ def _extract_batch_subops(fn) -> List[SendSite]:
     inline in the list under an ``"ops"`` or ``"actor_ops"`` key (the
     poll reply's piggybacked actor directives). Each becomes an ordinary
     SendSite so SYN-W001/W002 hold for sub-ops exactly as for top-level
-    frames."""
+    frames. A queued *variable* resolves through the local payload map
+    (the worker assembles its metric-delta sub-op field by field before
+    ``ops.append(sub)`` -- that is a send site too)."""
     out: List[SendSite] = []
+    local_dicts = _local_dict_payloads(fn.node)
 
     def emit(d: ast.Dict):
         keys = _dict_keys(d)
@@ -439,6 +598,14 @@ def _extract_batch_subops(fn) -> List[SendSite]:
         out.append(SendSite(op=op, file=fn.file, function=fn.qualname,
                             line=d.lineno, keys=keys))
 
+    def emit_name(name: str, line: int):
+        payload = local_dicts.get(name)
+        if payload is None or payload.get("op") is None:
+            return
+        out.append(SendSite(op=payload["op"], file=fn.file,
+                            function=fn.qualname, line=line,
+                            keys=set(payload)))
+
     for n in ast.walk(fn.node):
         if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
                 and n.func.attr in BATCH_QUEUE_METHODS):
@@ -446,6 +613,8 @@ def _extract_batch_subops(fn) -> List[SendSite]:
                 for d in ast.walk(a):
                     if isinstance(d, ast.Dict):
                         emit(d)
+                    elif isinstance(d, ast.Name):
+                        emit_name(d.id, n.lineno)
         elif isinstance(n, ast.Dict):
             for k, v in zip(n.keys, n.values):
                 if k is not None and _const_str(k) in ("ops", "actor_ops"):
@@ -457,28 +626,7 @@ def _extract_batch_subops(fn) -> List[SendSite]:
 
 def _extract_sends(fn) -> List[SendSite]:
     node = fn.node
-    # local dict payloads: var -> constant keys (dict literal + later
-    # ``var["k"] = ...`` updates, order-insensitive on purpose)
-    local_dicts: Dict[str, Dict[str, Optional[str]]] = {}
-    for st in ast.walk(node):
-        if not (isinstance(st, ast.Assign) and len(st.targets) == 1):
-            continue
-        tgt = st.targets[0]
-        if isinstance(tgt, ast.Name) and isinstance(st.value, ast.Dict):
-            keys = _dict_keys(st.value)
-            if keys is None:
-                continue
-            kv: Dict[str, Optional[str]] = {k: None for k in keys}
-            for k, v in zip(st.value.keys, st.value.values):
-                kv[_const_str(k)] = _const_str(v)
-            local_dicts.setdefault(tgt.id, {}).update(kv)
-        elif (isinstance(tgt, ast.Subscript)
-              and isinstance(tgt.value, ast.Name)
-              and tgt.value.id in local_dicts):
-            fld = _const_str(tgt.slice)
-            if fld is not None:
-                local_dicts[tgt.value.id][fld] = _const_str(st.value)
-
+    local_dicts = _local_dict_payloads(node)
     out: List[SendSite] = []
     for n in ast.walk(node):
         if not isinstance(n, ast.Call):

@@ -49,7 +49,18 @@ DEFAULT_METRICS = ("syndeo_backlog_per_worker", "syndeo_busy_fraction",
                    # SLO-driven replica HPA scales on (paper Sec. IV's
                    # K8s priority/elasticity story applied to serving)
                    "syndeo_serve_requests", "syndeo_serve_shed",
-                   "syndeo_serve_p99_ms", "syndeo_replica_count")
+                   "syndeo_serve_p99_ms", "syndeo_replica_count",
+                   # observability plane: per-tenant submit->result
+                   # sojourn percentiles (bucket-bounded histogram
+                   # quantiles), per-link byte flows, and worker poll
+                   # round-trip tails -- dashboards and latency-SLO HPAs
+                   # read these; the chaos conformance checker holds
+                   # them against scheduler/store ground truth
+                   "syndeo_tenant_sojourn_p50_s",
+                   "syndeo_tenant_sojourn_p99_s",
+                   "syndeo_tenant_sojourn_count",
+                   "syndeo_link_bytes", "syndeo_moves_committed",
+                   "syndeo_worker_poll_p99_s")
 
 
 class MetricsPoller:
@@ -79,6 +90,17 @@ class MetricsPoller:
         self.latest = _request(ep.host, ep.port, ep.token,
                                {"op": "metrics"}, nonce_cache=self._nonces)
         return self.latest
+
+    def poll_text(self) -> str:
+        """Fetch the head's Prometheus text exposition (`metrics_text`
+        op) -- served on demand at /metrics/prometheus, so a scrape
+        always sees a fresh snapshot."""
+        from repro.core.worker import _request
+        ep = FileRendezvous(self.rendezvous_dir).wait(self.cluster_id,
+                                                      timeout=30.0)
+        reply = _request(ep.host, ep.port, ep.token,
+                         {"op": "metrics_text"}, nonce_cache=self._nonces)
+        return str(reply.get("text", ""))
 
     def _loop(self):
         while not self._stop.is_set():
@@ -121,6 +143,19 @@ def make_server(poller: MetricsPoller, metrics: tuple, host: str = "127.0.0.1",
                 return
             if path == "/metrics":
                 self._json(200, {m: latest.get(m, 0.0) for m in metrics})
+                return
+            if path == "/metrics/prometheus":
+                try:
+                    blob = poller.poll_text().encode()
+                except Exception as e:  # noqa: BLE001 -- flaky head
+                    self._json(503, {"error": str(e)})
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4")
+                self.send_header("Content-Length", str(len(blob)))
+                self.end_headers()
+                self.wfile.write(blob)
                 return
             if path.startswith("/apis/custom.metrics.k8s.io/v1beta1"):
                 name = path.rstrip("/").rsplit("/", 1)[-1]

@@ -808,6 +808,13 @@ class GlobalObjectStore:
             key = (src, dst)
             self.bytes_by_link[key] = self.bytes_by_link.get(key, 0) + size
 
+    def link_snapshot(self) -> Dict[Tuple[str, str], int]:
+        """Copy of the per-(src, dst) byte flows -- the observability
+        plane's `syndeo_link_bytes` gauge family reads this, and the
+        conformance checker holds the exported gauges against it."""
+        with self._lock:
+            return dict(self.bytes_by_link)
+
     def rank_sources(self, ref: ObjectRef, dst: str) -> list:
         """All live serving peers for a fetch onto `dst`, best first:
         prefer worker peers over the head (keep the head's NIC out of the

@@ -29,6 +29,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.metrics import MetricsRegistry
 from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
                                      shard_key)
 from repro.core.security import SecurityError
@@ -381,8 +382,13 @@ class Scheduler:
                  launch_fn: Callable[[Task, str], None],
                  cancel_fn: Optional[Callable[[Task, str], None]] = None,
                  config: SchedulerConfig = SchedulerConfig(),
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 metrics: Optional[MetricsRegistry] = None):
         self.store = store
+        # observability plane: sojourn histograms (and, on the threaded
+        # head, worker-folded histograms via the shared MetricsHub) live
+        # here -- one registry per control plane
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.graph = TaskGraph()
         self.workers: Dict[str, WorkerInfo] = {}
         self.launch_fn = launch_fn
@@ -1010,6 +1016,7 @@ class Scheduler:
                 f"tenant {spec.tenant_id!r} over submit rate "
                 f"({bucket.rate_per_s:g}/s, burst {bucket.burst:g})")
         task = Task(spec=spec, deps=list(deps or []))
+        task.submitted_clock = self.clock()   # sojourn measured on OUR clock
         self._tenant_state(spec.tenant_id)   # auto-register at weight 1.0
         for d in task.deps:
             self.store.add_ref(d)
@@ -1345,6 +1352,15 @@ class Scheduler:
         self._release(task)
         self.stats["finished"] += 1
         self._tenant_state(task.spec.tenant_id).finished += 1
+        # submit -> result sojourn, one observation per finish: the
+        # conformance checker holds each tenant's histogram count
+        # against TenantState.finished, so a dropped observation (or a
+        # double-counted one) fails the chaos suite
+        if task.submitted_clock is not None:
+            self.metrics.histogram(
+                "syndeo_task_sojourn_seconds",
+                tenant=task.spec.tenant_id).observe(
+                    max(0.0, task.finished_at - task.submitted_clock))
         rt = task.runtime
         if rt is not None:
             self._group_runtimes.setdefault(task.spec.group, []).append(rt)

@@ -21,6 +21,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.metrics import (build_cluster_metrics, render_dashboards,
+                                render_prometheus)
 from repro.core.object_store import (GlobalObjectStore, NodeStore, ObjectRef,
                                      TenantQuota)
 from repro.core.scheduler import Scheduler, SchedulerConfig, WorkerInfo
@@ -521,6 +523,29 @@ class SimCluster:
         self._post(tick_every, monitor)
         self.run()
         return completed
+
+    # -- observability ----------------------------------------------------------------
+
+    def export_metrics(self, router=None) -> Dict[str, Any]:
+        """The head's `metrics`-op reply, sim-side: the SAME builder the
+        threaded HeadServer uses over this cluster's real store and
+        scheduler -- so every sim chaos scenario can end with the
+        metrics-vs-reality conformance check. An attached router
+        contributes the serving gauges exactly like stats_sink would."""
+        serve = router.snapshot() if router is not None else None
+        return build_cluster_metrics(self.store, self.scheduler,
+                                     serve_stats=serve,
+                                     replica_count=(len(self.replicas)
+                                                    or None))
+
+    def export_prometheus(self, router=None) -> str:
+        """Prometheus text exposition of `export_metrics` plus the
+        scheduler registry's histogram families."""
+        return render_prometheus(self.scheduler.metrics,
+                                 flat=self.export_metrics(router=router))
+
+    def export_dashboards(self) -> Dict[str, Any]:
+        return render_dashboards()
 
     # -- submission --------------------------------------------------------------------
 

@@ -51,6 +51,10 @@ class Task:
     worker: Optional[str] = None
     attempts: int = 0
     submitted_at: float = field(default_factory=time.monotonic)
+    # submission instant on the *scheduler's* clock (virtual time in the
+    # simulator): sojourn = finished_at - submitted_clock is coherent,
+    # while submitted_at (wall monotonic, used for FIFO ordering) is not
+    submitted_clock: Optional[float] = None
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
     error: Optional[str] = None

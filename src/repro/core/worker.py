@@ -172,6 +172,8 @@ import uuid
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import SyndeoCluster
+from repro.core.metrics import (Histogram, MetricsHub, build_cluster_metrics,
+                                render_dashboards, render_prometheus)
 from repro.core.object_store import (NodeStore, ObjectRef, RemoteNodeStore,
                                      TCPTransport, recv_frame, send_frame)
 from repro.core.rendezvous import Endpoint, FileRendezvous
@@ -577,6 +579,15 @@ class HeadServer:
         self._actor_results: Dict[str, Dict[str, Any]] = {}
         self._actor_exits_asked: set = set()
         self.serve_stats: Dict[str, float] = {}
+        # observability hub: shares the scheduler's registry (sojourn
+        # histograms land there) and folds worker-pushed histogram
+        # deltas into it; every `metrics` snapshot is recorded into the
+        # hub's ring-buffer time series for dashboard history
+        self.metrics_hub = MetricsHub(registry=cluster.scheduler.metrics)
+        # instrument cache for the delta fold: the registry lookup
+        # (lock + family/key build) costs ~2x the fold itself, and the
+        # hot path folds the same few histogram names every poll
+        self._hist_cache: Dict[str, Any] = {}
         self.head_payload_bytes = 0
         # bounded seen-nonce set: a captured worker envelope cannot be
         # replayed inside the freshness window (it would need a fresh nonce,
@@ -809,12 +820,30 @@ class HeadServer:
         return {"ok": True}
 
     def _handle_metric_deltas(self, msg: Dict[str, Any]) -> Dict[str, Any]:
-        """Fold a worker's data-plane counter deltas into the head's
-        per-worker aggregates (dict arithmetic only; the caller holds --
-        or this runs fine under -- the cluster lock)."""
-        agg = self._worker_metrics.setdefault(str(msg.get("worker", "")), {})
-        for k, v in (msg.get("deltas") or {}).items():
-            agg[k] = agg.get(k, 0) + int(v)
+        """Fold a worker's piggybacked metric deltas into the head's
+        aggregates (dict arithmetic only; the caller holds -- or this
+        runs fine under -- the cluster lock). `deltas` are counter
+        deltas folded into the per-worker aggregate dicts; `hists` are
+        sparse histogram bucket deltas folded into the hub registry's
+        cluster-wide histogram of the same name (bounds are fixed per
+        name, so the fold is a pure element-wise add)."""
+        deltas = msg.get("deltas")
+        if deltas:
+            agg = self._worker_metrics.setdefault(
+                str(msg.get("worker", "")), {})
+            get = agg.get
+            for k, v in deltas.items():
+                agg[k] = get(k, 0) + int(v)
+        hists = msg.get("hists")
+        if hists:
+            cache = self._hist_cache
+            for name, delta in hists.items():
+                if isinstance(delta, dict):
+                    h = cache.get(name)
+                    if h is None:
+                        h = self.metrics_hub.registry.histogram(str(name))
+                        cache[name] = h
+                    h.apply_delta(delta)
         return {"ok": True}
 
     def _handle_actor_result(self, msg: Dict[str, Any]) -> Dict[str, Any]:
@@ -1319,73 +1348,44 @@ class HeadServer:
             return {"ok": True, "replies": replies}
         if op == "metrics":
             # the scaling signals the K8s custom-metrics adapter republishes
-            # for the HorizontalPodAutoscaler (backends/kubernetes.py)
-            with c._lock:
-                workers = [w for w in c.scheduler.workers.values() if w.alive]
-                busy = sum(1 for w in workers if w.running)
-                backlog = sum(
-                    1 for t in c.scheduler.graph.tasks.values()
-                    if t.state in (TaskState.READY, TaskState.PENDING))
-                by_tenant = c.scheduler.backlog_by_tenant()
-                shares = c.scheduler.tenant_shares()
-                wm = [dict(m) for m in self._worker_metrics.values()]
-                replica_count = len(c.scheduler.actors)
-                serve = dict(self.serve_stats)
-            quota_tenants = set(shares) | c.store.quota_tenants()
-            n = max(len(workers), 1)
-            # drain-plane health counters (plain ints off the store's
-            # stats dict, no lock needed): aborted two-phase moves,
-            # direct-push downgrades to head relay, bytes the head's NIC
-            # actually served, and replicas swept after over-replication
-            store_stats = c.store.stats
-            drain_counters = {
-                f"syndeo_{k}": int(store_stats.get(k, 0))
-                for k in ("moves_aborted", "relay_fallbacks",
-                          "head_relayed_bytes", "replica_gc")}
-            # aggregate worker data-plane health (piggybacked deltas):
-            # bytes the worker NICs served that never touched the head
-            drain_counters["syndeo_worker_blob_serves"] = sum(
-                m.get("serves", 0) for m in wm)
-            drain_counters["syndeo_worker_blob_receives"] = sum(
-                m.get("receives", 0) for m in wm)
-            drain_counters["syndeo_worker_served_bytes"] = sum(
-                m.get("served_bytes", 0) for m in wm)
-            # data-plane throughput layer: broadcast-tree fan-out,
-            # multi-blob move frames, and spill-tier efficiency. The
-            # tree/batch counters accrue on the head's directory stats;
-            # the spill counters live on node stores (in-process ones
-            # summed here, worker-local ones via the piggybacked deltas)
-            spill = c.store.spill_tier_stats()
-            for k in ("broadcast_rounds", "tree_edges", "batched_moves"):
-                drain_counters[f"syndeo_{k}"] = int(store_stats.get(k, 0))
-            drain_counters["syndeo_batched_moves"] += sum(
-                m.get("batched_moves", 0) for m in wm)
-            for k in ("delta_spill_bytes_saved", "promotions"):
-                drain_counters[f"syndeo_{k}"] = spill[k] + sum(
-                    m.get(k, 0) for m in wm)
-            # serving-plane gauges: router-fed admission counters + tail
-            # latency (an attached Router publishes into serve_stats) and
-            # the live replica count off the scheduler's actor registry --
-            # the K8s custom-metrics adapter republishes these for
-            # SLO-driven replica HPAs
-            drain_counters["syndeo_serve_requests"] = int(
-                serve.get("requests", 0))
-            drain_counters["syndeo_serve_shed"] = int(serve.get("shed", 0))
-            drain_counters["syndeo_serve_p99_ms"] = float(
-                serve.get("p99_ms", 0.0))
-            drain_counters["syndeo_replica_count"] = replica_count
-            return dict({"ok": True, "workers": len(workers),
-                         "busy": busy, "backlog": backlog,
-                         "syndeo_backlog_per_worker": backlog / n,
-                         "syndeo_busy_fraction": busy / n,
-                         "backlog_by_tenant": by_tenant,
-                         # per-tenant fairness + quota-pressure signals
-                         "syndeo_tenant_dominant_share": shares,
-                         "syndeo_tenant_quota_fraction": {
-                             t: self.cluster.store.tenant_quota_fraction(t)
-                             for t in sorted(quota_tenants)}},
-                        **drain_counters)
+            # for the HorizontalPodAutoscaler (backends/kubernetes.py), plus
+            # the observability plane's counters/percentiles -- all built by
+            # the ONE builder the chaos conformance checker cross-examines
+            return self._build_metrics()
+        if op == "metrics_text":
+            # Prometheus text exposition: the same flat snapshot rendered
+            # with the hub registry's histogram families (_bucket layout)
+            flat = self._build_metrics()
+            return {"ok": True,
+                    "text": render_prometheus(self.metrics_hub.registry,
+                                              flat=flat)}
+        if op == "dashboards":
+            return {"ok": True, "dashboards": render_dashboards()}
         return {"ok": False, "error": f"unknown op {op!r}"}
+
+    def _build_metrics(self) -> Dict[str, Any]:
+        """Snapshot scheduler-derived values under the cluster lock,
+        then build the flat metrics reply outside it (store reads take
+        their own shard locks) and record it into the hub's ring-buffer
+        time series."""
+        c = self.cluster
+        with c._lock:
+            workers = [w for w in c.scheduler.workers.values() if w.alive]
+            busy = sum(1 for w in workers if w.running)
+            backlog = sum(
+                1 for t in c.scheduler.graph.tasks.values()
+                if t.state in (TaskState.READY, TaskState.PENDING))
+            by_tenant = c.scheduler.backlog_by_tenant()
+            shares = c.scheduler.tenant_shares()
+            wm = {k: dict(m) for k, m in self._worker_metrics.items()}
+            replica_count = len(c.scheduler.actors)
+            serve = dict(self.serve_stats)
+        out = build_cluster_metrics(
+            c.store, c.scheduler, worker_metrics=wm, serve_stats=serve,
+            replica_count=replica_count, workers=len(workers), busy=busy,
+            backlog=backlog, backlog_by_tenant=by_tenant, shares=shares)
+        self.metrics_hub.ingest(time.time(), out)
+        return out
 
     def _at_risk_objects(self, wid: str) -> List[ObjectRef]:
         """Hot objects whose only copy sits on `wid` (caller holds the
@@ -1451,7 +1451,10 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                capacity_bytes: int = 256 << 20,
                spill_dir: Optional[str] = None,
                actor_factories: Optional[Dict[str, Callable[..., Any]]]
-               = None):
+               = None,
+               flush_metrics_on_exit: bool = True,
+               metrics_every: int = 4,
+               metrics_truth: Optional[Dict[str, int]] = None):
     """Worker main loop. In the default p2p data plane the worker runs a
     blob server over its local NodeStore, pulls dependencies peer-to-peer
     with head-minted transfer tickets, and registers results by metadata
@@ -1470,7 +1473,21 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     (factory name -> callable returning an object with
     ``handle(payload) -> value`` and optionally ``drain()``). Lifecycle
     directives arrive on the poll reply's `actor_ops` list; results and
-    exit acks ride the next poll's batch frame."""
+    exit acks ride the next poll's batch frame.
+
+    Observability: counter deltas (blob-server stats, spill-tier stats,
+    drain-push counters) and histogram bucket deltas (poll round-trip
+    latency) piggyback on the poll batch frame -- zero extra wire frames
+    (the obs benchmark gates this). They accrue worker-side and ride
+    every `metrics_every`-th poll (the telemetry cadence: the head folds
+    1/k as often, bounding collection overhead on its hot path; nothing
+    is lost in between, the deltas just wait). Deltas accrued after the
+    last flush are sent in one final `metric_deltas` frame during the
+    drain / leave handshake; `flush_metrics_on_exit=False` disables that
+    flush (test hook -- the conformance checker must catch the loss).
+    `metrics_truth`, when given, is continuously updated with this
+    worker's live counter values: the ground truth the conformance
+    checker holds the head's aggregates against."""
     rdv = FileRendezvous(rendezvous_dir)
     ep = rdv.wait(cluster_id, timeout=60.0)
     token = ep.token
@@ -1489,7 +1506,18 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     metric_base: Dict[str, int] = {"serves": 0, "receives": 0,
                                    "served_bytes": 0, "batched_moves": 0,
                                    "delta_spill_bytes_saved": 0,
-                                   "promotions": 0}
+                                   "promotions": 0,
+                                   "drain_pushed_blobs": 0,
+                                   "drain_pushed_bytes": 0}
+    # worker-local counters with no store/blob-server home: drain-push
+    # work accrues here (between the poll that delivered the directives
+    # and exit -- exactly the window the exit flush exists for)
+    wstats: Dict[str, int] = {"drain_pushed_blobs": 0,
+                              "drain_pushed_bytes": 0}
+    # poll round-trip latency histogram: bucket deltas ride the same
+    # metric_deltas sub-op; base advances only after a confirmed send
+    poll_hist = Histogram()
+    poll_hist_base = Histogram()
     blob_srv: Optional[BlobServer] = None
     own_spill: Optional[str] = None
     join_msg: Dict[str, Any] = {"op": "join", "worker": worker_id,
@@ -1509,6 +1537,56 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     joined = _request(ep.host, ep.port, token, join_msg, nonce_cache=nonces)
     wid = joined["worker"]
     local.node_id = wid            # assigned id names the store (spill files)
+
+    def live_metric(k: str) -> int:
+        """Current ground-truth value of one piggybacked counter: spill
+        keys live on the node store, drain-push keys on wstats, the rest
+        on the blob server."""
+        if k in ("delta_spill_bytes_saved", "promotions"):
+            return int(local.stats.get(k, 0))
+        if k in wstats:
+            return wstats[k]
+        return (int(blob_srv.stats.get(k, 0))
+                if blob_srv is not None else 0)
+
+    def compute_deltas() -> Dict[str, int]:
+        if blob_srv is None:
+            return {}                # relay plane: no local data plane
+        return {k: live_metric(k) - metric_base[k]
+                for k in metric_base if live_metric(k) != metric_base[k]}
+
+    def update_truth():
+        if metrics_truth is None:
+            return
+        for k in metric_base:
+            metrics_truth[k] = live_metric(k)
+        metrics_truth["polls"] = poll_hist.count
+
+    def flush_metrics():
+        """Exit-path flush: deltas accrued since the last confirmed poll
+        (drain pushes, the final polls' latencies) would die with this
+        worker -- send them as ONE final metric_deltas frame during the
+        drain/leave handshake. Disabled (`flush_metrics_on_exit=False`)
+        only so tests can prove the conformance checker catches the
+        resulting head-vs-reality divergence."""
+        update_truth()
+        if not flush_metrics_on_exit:
+            return
+        deltas = compute_deltas()
+        hd = poll_hist.to_delta(poll_hist_base)
+        if not deltas and not hd["count"]:
+            return
+        msg: Dict[str, Any] = {"op": "metric_deltas", "worker": wid,
+                               "deltas": deltas}
+        if hd["count"]:
+            msg["hists"] = {"syndeo_worker_poll_seconds": hd}
+        try:
+            _request(ep.host, ep.port, token, msg, nonce_cache=nonces)
+        except Exception:  # noqa: BLE001 -- head gone: nothing left to
+            return         # reconcile against anyway
+        for k, v in deltas.items():
+            metric_base[k] += v
+        poll_hist_base.apply_delta(hd)
 
     def ack_migration(oid: str, tenant: str):
         """Destination-side metadata ack (the migrate protocol's
@@ -1617,6 +1695,9 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                 if err is not None:
                     failures.append((ref.id, retryable,
                                      f"{type(err).__name__}: {err}"))
+                else:
+                    wstats["drain_pushed_blobs"] += 1
+                    wstats["drain_pushed_bytes"] += len(blob)
                 continue
             verdicts, err, retryable = push_batch_with_retry(
                 transport, node, items)
@@ -1625,10 +1706,13 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                     (ref.id, retryable, f"{type(err).__name__}: {err}")
                     for ref, _blob, _t in items)
                 continue
-            for (ref, _blob, _t), v in zip(items, verdicts):
+            for (ref, blob, _t), v in zip(items, verdicts):
                 if not v.get("ok"):
                     failures.append(
                         (ref.id, False, str(v.get("error", "refused"))))
+                else:
+                    wstats["drain_pushed_blobs"] += 1
+                    wstats["drain_pushed_bytes"] += len(blob)
         report_move_failures(failures)
 
     def fetch_dep(meta: Dict[str, Any]) -> Tuple[bool, Any]:
@@ -1875,6 +1959,7 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
     try:
         idle_since = time.monotonic()
         poll_failures = 0
+        polls_since_metrics = 0
         while True:
             if time.monotonic() - idle_since >= max_idle_s:
                 if actors:
@@ -1883,37 +1968,45 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                     # max_idle_s must not trigger the leave handshake
                     idle_since = time.monotonic()
                 elif safe_to_leave():
+                    flush_metrics()
                     return
                 else:
                     idle_since = time.monotonic()  # still needed: serve on
-            deltas: Dict[str, int] = {}
-            if blob_srv is not None:
-                # spill-tier counters accrue on the node store, the rest
-                # on the blob server; both ride the same delta frame
-                def live(k: str, _bs=blob_srv) -> int:
-                    src = (local.stats
-                           if k in ("delta_spill_bytes_saved", "promotions")
-                           else _bs.stats)
-                    return int(src.get(k, 0))
-                deltas = {k: live(k) - metric_base[k]
-                          for k in metric_base
-                          if live(k) != metric_base[k]}
+            # spill-tier counters accrue on the node store, drain-push
+            # counters on wstats, the rest on the blob server; all ride
+            # the same delta frame, with the poll-latency histogram's
+            # sparse bucket deltas alongside
+            deltas = compute_deltas()
+            hist_delta = poll_hist.to_delta(poll_hist_base)
             sent = list(pending_ops)
-            if sent or deltas:
+            # telemetry cadence: deltas keep accruing worker-side and
+            # ride every `metrics_every`-th poll -- the frames in
+            # between stay exactly as small as an unmonitored worker's
+            flush_due = (polls_since_metrics + 1 >= max(metrics_every, 1)
+                         and bool(deltas or hist_delta["count"]))
+            if sent or flush_due:
                 # piggyback everything queued since the last poll on ONE
                 # batch frame, the poll itself riding last
                 ops = [o for o, _ in sent]
-                if deltas:
-                    ops.append({"op": "metric_deltas", "worker": wid,
-                                "deltas": deltas})
+                if flush_due:
+                    sub: Dict[str, Any] = {"op": "metric_deltas",
+                                           "worker": wid, "deltas": deltas}
+                    if hist_delta["count"]:
+                        sub["hists"] = {
+                            "syndeo_worker_poll_seconds": hist_delta}
+                    ops.append(sub)
                 ops.append({"op": "poll", "worker": wid})
                 req: Dict[str, Any] = {"op": "batch", "worker": wid,
                                        "ops": ops}
             else:
                 req = {"op": "poll", "worker": wid}
             try:
+                poll_t0 = time.monotonic()
                 got = _request(ep.host, ep.port, token, req,
                                nonce_cache=nonces)
+                # observed AFTER the frame was built: this round trip's
+                # latency rides the NEXT frame (or the exit flush)
+                poll_hist.observe(time.monotonic() - poll_t0)
             except OSError:
                 # same tolerance as the leave handshake: one refused
                 # connect (listen-backlog burst, transient timeout) must
@@ -1927,11 +2020,16 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                 time.sleep(0.2)
                 continue
             poll_failures = 0
-            if sent or deltas:
+            polls_since_metrics += 1
+            if sent or flush_due:
                 replies = got.get("replies") or []
                 del pending_ops[:len(sent)]
-                for k in metric_base:
-                    metric_base[k] += deltas.get(k, 0)
+                if flush_due:
+                    for k in metric_base:
+                        metric_base[k] += deltas.get(k, 0)
+                    poll_hist_base.apply_delta(hist_delta)
+                    polls_since_metrics = 0
+                update_truth()
                 for (_op, cb), reply in zip(sent, replies[:len(sent)]):
                     if cb is not None:
                         cb(reply)      # may queue follow-up error reports
@@ -1956,6 +2054,10 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
                     except OSError:
                         status = {}    # transient: re-ask on the next poll
                     if status.get("complete"):
+                        # the drain handshake's last act: deltas accrued
+                        # since the final poll (the drain pushes above,
+                        # the last polls' latencies) must not die with us
+                        flush_metrics()
                         return
                 time.sleep(0.05)
                 continue
@@ -1964,6 +2066,7 @@ def run_worker(rendezvous_dir: str, cluster_id: str, worker_id: str = "",
             # empty poll must not read as max_idle_s of idleness
             idle_since = time.monotonic()
     finally:
+        update_truth()         # post-mortem ground truth for the checker
         if blob_srv is not None:
             blob_srv.shutdown()
         if own_spill is not None:

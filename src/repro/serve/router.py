@@ -51,6 +51,7 @@ import collections
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core.metrics import MetricsRegistry
 from repro.serve.engine import Request, StubEngine
 
 
@@ -62,11 +63,16 @@ class Router:
                  p99_window: int = 512,
                  clock: Optional[Callable[[], float]] = None,
                  stats_sink: Optional[Callable[[Dict[str, float]],
-                                               Any]] = None):
+                                               Any]] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.max_queue = max(0, int(max_queue_per_replica))
         self.max_retry = max(0, int(max_retry_backlog))
         self.clock = clock or time.monotonic
         self.stats_sink = stats_sink
+        # observability: queue-depth histogram (one observation per
+        # tick) and shed-time depth histogram -- the conformance checker
+        # holds their counts against stats["ticks"] / stats["shed"]
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.replicas: Dict[str, Any] = {}
         self._draining: set = set()          # no new admissions
         self._inflight: Dict[str, Dict[int, Request]] = {}
@@ -75,7 +81,7 @@ class Router:
         self._latencies: "collections.deque[float]" = collections.deque(
             maxlen=max(1, int(p99_window)))
         self.stats = {"requests": 0, "shed": 0, "completed": 0,
-                      "rerouted": 0, "retried": 0}
+                      "rerouted": 0, "retried": 0, "ticks": 0}
 
     # -- membership -----------------------------------------------------------
 
@@ -169,6 +175,8 @@ class Router:
             return True
         self._submit_t.pop(req.id, None)
         self.stats["shed"] += 1
+        self.metrics.histogram("syndeo_router_shed_depth").observe(
+            self.queue_depth())
         return False
 
     def _reroute(self, reqs) -> None:
@@ -215,6 +223,9 @@ class Router:
             handle = self.replicas[rid]
             handle.tick()
             finished.extend(self._harvest(rid, handle.pop_completed()))
+        self.stats["ticks"] += 1
+        self.metrics.histogram("syndeo_router_queue_depth").observe(
+            self.queue_depth())
         if self.stats_sink is not None:
             self.stats_sink(self.snapshot())
         return finished

@@ -26,7 +26,10 @@ probes node stores outside them, so a racing mutation could
 false-positive). The invariants hold per object regardless of the
 store's shard count -- `directory_snapshot` collates all shards.
 """
+import math
+
 from repro.core import ObjectRef
+from repro.core.metrics import build_cluster_metrics, parse_prometheus
 
 
 def check_invariants(store, expect_fetchable=None, scheduler=None,
@@ -80,3 +83,167 @@ def check_invariants(store, expect_fetchable=None, scheduler=None,
             assert scheduler.stats["reconstructed"] == 0, \
                 "a hot producer was re-executed"
     return snapshot
+
+
+# -- metrics conformance: exported telemetry must equal ground truth -----------
+
+# store counters the exporter must pass through 1:1 (directory-side only)
+_STORE_COUNTERS = ("moves_started", "moves_committed", "moves_aborted",
+                   "relay_fallbacks", "head_relayed_bytes", "replica_gc",
+                   "broadcast_rounds", "tree_edges")
+# spill-tier counters the exporter sums (store tier + worker-local tiers)
+_SPILL_COUNTERS = ("delta_spill_bytes_saved", "promotions")
+
+
+def check_metrics_conformance(store, scheduler=None, export=None, prom=None,
+                              router=None, worker_truth=None):
+    """Cross-check every exported metric against the raw internal stats
+    it claims to summarize. A metric that drifts from reality is worse
+    than no metric (operators page on it, autoscalers scale on it), so
+    every chaos scenario ends here: after kills, partitions, drains and
+    restarts, telemetry must still be *true*.
+
+      * `export`: the flat `metrics`-op snapshot -- a dict, a callable
+        returning one (e.g. a live head's dispatch), or None to build
+        one directly from ground truth via `build_cluster_metrics`.
+      * `prom`: optional Prometheus text (or callable) -- parsed back
+        and held against the same snapshot, so the text exposition path
+        cannot silently diverge from the JSON path.
+      * `router`: optional serve-plane Router -- its queue-depth/shed
+        histograms must agree with its own tick/shed counters.
+      * `worker_truth`: optional {wid: counters} captured by
+        `run_worker(metrics_truth=...)` at worker exit -- each worker's
+        head-side delta aggregate must equal the counters the worker
+        actually accrued (the lost-flush regression check).
+
+    Returns the verified flat snapshot."""
+    if export is None:
+        assert scheduler is not None, \
+            "need a scheduler to build the default export"
+        export = build_cluster_metrics(
+            store, scheduler,
+            serve_stats=router.snapshot() if router is not None else None,
+            replica_count=len(router.replicas) if router is not None
+            else None)
+    elif callable(export):
+        export = export()
+    assert export.get("ok") is True, f"metrics export unhealthy: {export!r}"
+
+    # 1. drain/data-plane counters: straight from store.stats
+    for k in _STORE_COUNTERS:
+        got, want = export[f"syndeo_{k}"], int(store.stats.get(k, 0))
+        assert got == want, \
+            f"syndeo_{k}: exported {got} but store.stats says {want}"
+
+    # 2. summed counters: store share + per-worker delta aggregates.
+    #    The exported `per_worker` dict is the same aggregate the sums
+    #    were computed from, so this also catches a sum computed over a
+    #    different (stale) snapshot than the one exported.
+    wm = list(export.get("per_worker", {}).values())
+    want = int(store.stats.get("batched_moves", 0)) \
+        + sum(m.get("batched_moves", 0) for m in wm)
+    assert export["syndeo_batched_moves"] == want, \
+        f"syndeo_batched_moves: exported " \
+        f"{export['syndeo_batched_moves']} != truth {want}"
+    spill = store.spill_tier_stats()
+    for k in _SPILL_COUNTERS:
+        want = spill[k] + sum(m.get(k, 0) for m in wm)
+        assert export[f"syndeo_{k}"] == want, \
+            f"syndeo_{k}: exported {export[f'syndeo_{k}']} != truth {want}"
+    for wire_k, src_k in (("worker_blob_serves", "serves"),
+                          ("worker_blob_receives", "receives"),
+                          ("worker_served_bytes", "served_bytes"),
+                          ("worker_drain_pushed_blobs", "drain_pushed_blobs"),
+                          ("worker_drain_pushed_bytes",
+                           "drain_pushed_bytes")):
+        want = sum(m.get(src_k, 0) for m in wm)
+        assert export[f"syndeo_{wire_k}"] == want, \
+            f"syndeo_{wire_k}: exported {export[f'syndeo_{wire_k}']} " \
+            f"!= worker aggregate {want}"
+
+    # 3. per-link flow gauges == the store's live byte accounting
+    want_links = {f"{src}->{dst}": int(v)
+                  for (src, dst), v in store.link_snapshot().items()}
+    assert export["syndeo_link_bytes"] == want_links, \
+        f"syndeo_link_bytes diverges from store.bytes_by_link: " \
+        f"{export['syndeo_link_bytes']} != {want_links}"
+
+    # 4. sojourn histograms: per-tenant count == the tenant's finished
+    #    counter, total == scheduler.stats['finished'] (both sides only
+    #    move in on_task_finished, so any dropped/double observation
+    #    breaks this)
+    if scheduler is not None:
+        soj = export["syndeo_tenant_sojourn_count"]
+        for tenant, ts in scheduler.tenants.items():
+            got = soj.get(tenant, 0)
+            assert got == ts.finished, \
+                f"sojourn count for {tenant!r}: {got} != " \
+                f"finished counter {ts.finished}"
+        total = sum(soj.values())
+        assert total == scheduler.stats["finished"], \
+            f"total sojourn observations {total} != " \
+            f"finished tasks {scheduler.stats['finished']}"
+        p50 = export["syndeo_tenant_sojourn_p50_s"]
+        p99 = export["syndeo_tenant_sojourn_p99_s"]
+        for tenant, c in soj.items():
+            if c:
+                assert 0.0 < p50[tenant] <= p99[tenant], \
+                    f"sojourn quantiles inverted for {tenant!r}"
+
+    # 5. serve plane: the exported admission gauges equal the router's
+    #    own counters, and the router's depth/shed histograms move in
+    #    lockstep with them (one depth sample per tick, one shed-depth
+    #    sample per shed admission)
+    if router is not None:
+        assert export["syndeo_serve_requests"] == router.stats["requests"], \
+            f"syndeo_serve_requests {export['syndeo_serve_requests']} != " \
+            f"router requests {router.stats['requests']}"
+        assert export["syndeo_serve_shed"] == router.stats["shed"], \
+            f"syndeo_serve_shed {export['syndeo_serve_shed']} != " \
+            f"router shed {router.stats['shed']}"
+        fam = router.metrics.family("syndeo_router_queue_depth")
+        depth_count = sum(h.count for h in fam.values())
+        assert depth_count == router.stats["ticks"], \
+            f"router queue-depth observations {depth_count} != " \
+            f"ticks {router.stats['ticks']}"
+        fam = router.metrics.family("syndeo_router_shed_depth")
+        shed_count = sum(h.count for h in fam.values())
+        assert shed_count == router.stats["shed"], \
+            f"router shed-depth observations {shed_count} != " \
+            f"shed counter {router.stats['shed']}"
+
+    # 6. worker-exit truth: the head's per-worker delta aggregates must
+    #    equal the counters each worker actually accrued -- a delta
+    #    queued but never flushed (the pre-fix drain bug) fails here
+    if worker_truth:
+        agg = export.get("per_worker", {})
+        for wid, truth in worker_truth.items():
+            head_side = agg.get(wid, {})
+            for k, v in truth.items():
+                if k == "polls":
+                    continue
+                got = head_side.get(k, 0)
+                assert got == v, \
+                    f"worker {wid!r} metric {k!r}: head aggregated " \
+                    f"{got} but the worker accrued {v} (lost delta?)"
+        want_polls = sum(t.get("polls", 0) for t in worker_truth.values())
+        got_polls = export.get("syndeo_worker_poll_count", 0)
+        assert got_polls == want_polls, \
+            f"poll histogram count {got_polls} != " \
+            f"polls the workers made {want_polls} (lost histogram delta?)"
+
+    # 7. exposition read-back: the Prometheus text path must agree with
+    #    the flat snapshot sample-for-sample
+    if prom is not None:
+        text = prom() if callable(prom) else prom
+        parsed = parse_prometheus(text)
+        scalars = {(name, ""): float(v) for name, v in export.items()
+                   if name.startswith("syndeo_")
+                   and isinstance(v, (int, float))
+                   and not isinstance(v, bool)}
+        for key, want in scalars.items():
+            got = parsed.get(key)
+            assert got is not None, f"{key[0]} missing from exposition"
+            assert math.isclose(got, want, rel_tol=1e-9, abs_tol=1e-9), \
+                f"{key[0]}: exposition says {got}, snapshot says {want}"
+    return export

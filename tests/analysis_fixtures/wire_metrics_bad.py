@@ -1,0 +1,52 @@
+"""Fixture: metric-delta frames drifting from the head's aggregation.
+
+Two observability-plane bugs the delta-field pass must catch:
+* both client sites ship a ``hists`` payload the handler never folds
+  -- an exported-but-never-aggregated metric (SYN-W001 on the
+  pseudo-op ``metric_deltas#hists``, once per send site: the exit
+  flush AND the queued batch sub-op),
+* the handler requires a ``node`` envelope field no client site ever
+  sends (SYN-W002).
+"""
+
+
+class Head:
+    def __init__(self):
+        self.agg = {}
+        self.shard = None
+
+    def _fold(self, msg):
+        agg = self.agg.setdefault(msg.get("worker", ""), {})
+        for k, v in (msg.get("deltas") or {}).items():
+            agg[k] = agg.get(k, 0) + int(v)
+        return {"ok": True}
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "metric_deltas":
+            self.shard = msg["node"]
+            return self._fold(msg)
+        if op == "batch":
+            return {"ok": True,
+                    "replies": [self.dispatch(s)
+                                for s in msg.get("ops") or []]}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+def _request(host, port, token, msg):
+    raise NotImplementedError
+
+
+def flush(host, port, token, wid, deltas, hist):
+    msg = {"op": "metric_deltas", "worker": wid, "deltas": deltas}
+    if hist:
+        msg["hists"] = {"poll_seconds": hist}
+    return _request(host, port, token, msg)
+
+
+def poll(host, port, token, wid, deltas, hist, ops):
+    sub = {"op": "metric_deltas", "worker": wid, "deltas": deltas,
+           "hists": {"poll_seconds": hist}}
+    ops.append(sub)
+    return _request(host, port, token,
+                    {"op": "batch", "worker": wid, "ops": ops})

@@ -1,0 +1,48 @@
+"""known-good: every metric-delta payload field the workers export has
+a head-side fold, and the handler's envelope needs are all shipped --
+the repaired twin of wire_metrics_bad.py."""
+
+
+class Head:
+    def __init__(self):
+        self.agg = {}
+        self.hists = {}
+
+    def _fold(self, msg):
+        agg = self.agg.setdefault(msg.get("worker", ""), {})
+        for k, v in (msg.get("deltas") or {}).items():
+            agg[k] = agg.get(k, 0) + int(v)
+        for name, delta in (msg.get("hists") or {}).items():
+            cur = self.hists.setdefault(name, {})
+            for b, c in delta.items():
+                cur[b] = cur.get(b, 0) + c
+        return {"ok": True}
+
+    def dispatch(self, msg):
+        op = msg.get("op")
+        if op == "metric_deltas":
+            return self._fold(msg)
+        if op == "batch":
+            return {"ok": True,
+                    "replies": [self.dispatch(s)
+                                for s in msg.get("ops") or []]}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+def _request(host, port, token, msg):
+    raise NotImplementedError
+
+
+def flush(host, port, token, wid, deltas, hist):
+    msg = {"op": "metric_deltas", "worker": wid, "deltas": deltas}
+    if hist:
+        msg["hists"] = {"poll_seconds": hist}
+    return _request(host, port, token, msg)
+
+
+def poll(host, port, token, wid, deltas, hist, ops):
+    sub = {"op": "metric_deltas", "worker": wid, "deltas": deltas,
+           "hists": {"poll_seconds": hist}}
+    ops.append(sub)
+    return _request(host, port, token,
+                    {"op": "batch", "worker": wid, "ops": ops})

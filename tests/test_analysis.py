@@ -35,12 +35,16 @@ KNOWN_BAD = {
     "wire_blobs_bad.py": [("SYN-W001", 35), ("SYN-W002", 18)],
     "wire_actor_bad.py": [("SYN-W001", 28), ("SYN-W002", 17),
                           ("SYN-W003", 15)],
+    # metric-delta pass: W001 fires once per send site of the unfolded
+    # "hists" payload (exit flush AND queued batch sub-op)
+    "wire_metrics_bad.py": [("SYN-W001", 44), ("SYN-W001", 50),
+                            ("SYN-W002", 27)],
 }
 
 KNOWN_GOOD = ["lock_good.py", "lock_order_good.py", "taint_good.py",
               "verify_good.py", "nonce_good.py", "wire_good.py",
               "wire_batch_good.py", "wire_blobs_good.py",
-              "wire_actor_good.py"]
+              "wire_actor_good.py", "wire_metrics_good.py"]
 
 
 @pytest.mark.parametrize("name,expected", sorted(KNOWN_BAD.items()))

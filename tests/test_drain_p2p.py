@@ -17,7 +17,7 @@ import time
 
 import pytest
 
-from _invariants import check_invariants
+from _invariants import check_invariants, check_metrics_conformance
 from repro.core import (GlobalObjectStore, NodeStore, ObjectRef, Scheduler,
                         SchedulerConfig, SecurityError, SimCluster,
                         SimCostModel, SyndeoCluster, TCPTransport,
@@ -167,6 +167,7 @@ def test_coheld_object_under_two_drains_moves_once():
     check_invariants(sim.store, expect_fetchable={ref.id},
                      scheduler=sim.scheduler,
                      expect_zero_reconstructions=True)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 def test_complete_move_is_begin_plus_commit():
@@ -387,6 +388,7 @@ def test_sim_p2p_drain_moves_zero_head_bytes():
     check_invariants(sim.store, expect_fetchable={r.id for r in refs},
                      scheduler=sim.scheduler,
                      expect_zero_reconstructions=True)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 def test_sim_dropped_commit_recovered_by_probe():
@@ -421,6 +423,7 @@ def test_sim_dropped_commit_recovered_by_probe():
     check_invariants(sim.store, expect_fetchable={ref.id},
                      scheduler=sim.scheduler,
                      expect_zero_reconstructions=True)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 def test_sim_destination_death_mid_move_replans():
@@ -444,6 +447,7 @@ def test_sim_destination_death_mid_move_replans():
     check_invariants(sim.store, expect_fetchable={ref.id},
                      scheduler=sim.scheduler,
                      expect_zero_reconstructions=True)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 # ----------------------------------- TCP protocol conformance (real sockets)
@@ -548,6 +552,12 @@ def _assert_clean(cluster, server, ref, expect_on=None):
                      scheduler=cluster.scheduler,
                      expect_zero_reconstructions=True)
     assert server.head_payload_bytes == 0
+    # metrics truthfulness survives the same chaos: the head's exported
+    # snapshot AND its Prometheus exposition must match ground truth
+    check_metrics_conformance(
+        cluster.store, cluster.scheduler,
+        export=lambda: server.dispatch({"op": "metrics"}),
+        prom=lambda: server.dispatch({"op": "metrics_text"})["text"])
     if expect_on is not None:
         locs = cluster.store.locations(ref)
         assert locs and locs <= expect_on, locs
@@ -590,6 +600,10 @@ def test_proto_source_killed_before_push_loses_gracefully(proto):
     assert cluster.store.locations(ref) == set()
     check_invariants(cluster.store)
     assert server.head_payload_bytes == 0
+    check_metrics_conformance(
+        cluster.store, cluster.scheduler,
+        export=lambda: server.dispatch({"op": "metrics"}),
+        prom=lambda: server.dispatch({"op": "metrics_text"})["text"])
 
 
 def test_proto_source_killed_after_push_recovers_copy(proto):
@@ -773,6 +787,10 @@ def test_three_worker_p2p_drain_zero_head_bytes(tmp_path):
         check_invariants(cluster.store, expect_fetchable=pre_fetchable,
                          scheduler=cluster.scheduler,
                          expect_zero_reconstructions=True)
+        check_metrics_conformance(
+            cluster.store, cluster.scheduler,
+            export=lambda: server.dispatch({"op": "metrics"}),
+            prom=lambda: server.dispatch({"op": "metrics_text"})["text"])
         for r in refs:
             locs = cluster.store.locations(r)
             assert locs and victim not in locs

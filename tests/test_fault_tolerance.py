@@ -24,7 +24,7 @@ try:
 except ImportError:  # pragma: no cover -- bare container without dev deps
     from _hypothesis_fallback import given, settings, strategies as st
 
-from _invariants import check_invariants
+from _invariants import check_invariants, check_metrics_conformance
 from repro.core import (SchedulerConfig, SimCluster, SimCostModel, TaskSpec,
                         TaskState)
 
@@ -125,6 +125,8 @@ def test_chaos_kill_and_drain_mid_wave(seed):
         if sim.store.locations(r):
             sim.store.get("head", r)
     check_invariants(sim.store)
+    # exported telemetry still equals ground truth after the chaos
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 @pytest.mark.parametrize("seed", range(10))
@@ -160,6 +162,7 @@ def test_chaos_drain_only_never_loses_objects(seed):
     assert sim.scheduler.stats["reconstructed"] == reconstructed_before
     assert sim.store.stats["reconstructions"] == 0
     check_invariants(sim.store, expect_fetchable=pre)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 # ------------------------------------------------- drain-preservation property
@@ -200,6 +203,7 @@ def test_drain_preserves_fetchable_set(seed, n_workers, n_drain):
     check_invariants(sim.store, expect_fetchable=pre,
                      scheduler=sim.scheduler,
                      expect_zero_reconstructions=True)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 # ------------------------------------- p2p migration-path chaos (two-phase)
@@ -242,6 +246,7 @@ def test_chaos_p2p_migration_faults_keep_invariants(seed, n_workers,
             sim.drain_worker_at(wid, at)
     sim.run()
     check_invariants(sim.store)
+    check_metrics_conformance(sim.store, sim.scheduler)
     # drained-only workers are gone; killed ones too
     for wid in victims:
         assert wid not in sim.scheduler.workers

@@ -1,0 +1,406 @@
+"""Observability plane: instruments, exposition, and chaos-verified
+truthfulness.
+
+Four layers under test:
+
+  1. Instrument algebra (property-tested): histogram merge is
+     associative and commutative, wire deltas round-trip exactly, and
+     quantile estimates are bucket-bounded -- never below the exact
+     order statistic and at most one bucket above it. These properties
+     are what make worker-side collection safe: deltas can arrive in
+     any order and fold into any intermediate aggregate.
+  2. Exposition (golden-tested): the Prometheus text renderer's label
+     escaping and `_bucket`/`_sum`/`_count` layout, plus the Grafana
+     dashboard JSON whose panel exprs must reference exported names.
+  3. Pipeline truthfulness: sim-driven waves produce sojourn histograms
+     whose counts equal the scheduler's own finished counters, checked
+     by the same `check_metrics_conformance` every chaos scenario ends
+     with (tests/README.md, "Metrics conformance").
+  4. The exit flush (regression): a worker's deltas accrued between its
+     last poll and its death -- drain pushes, final poll latencies --
+     are flushed during the drain handshake. With the flush disabled
+     the conformance checker MUST catch the head-vs-reality divergence,
+     proving the checker would have caught the original bug.
+"""
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover -- bare container without dev deps
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from _invariants import check_metrics_conformance
+from repro.core import (SchedulerConfig, SimCluster, SimCostModel,
+                        SyndeoCluster, TaskSpec, TaskState)
+from repro.core.metrics import (DEPTH_BUCKETS, Histogram, MetricsHub,
+                                MetricsRegistry, TimeSeries, log_buckets,
+                                parse_prometheus, render_dashboards,
+                                render_prometheus)
+from repro.core.rendezvous import FileRendezvous
+from repro.core.worker import HeadServer, run_worker
+
+# a deliberately coarse bound set keeps the property tests readable
+_BOUNDS = log_buckets(0.001, 16.0)
+
+
+def _hist(values, bounds=_BOUNDS) -> Histogram:
+    h = Histogram(bounds)
+    for v in values:
+        h.observe(v)
+    return h
+
+
+_vals = st.lists(st.floats(min_value=0.0, max_value=100.0),
+                 min_size=0, max_size=50)
+
+
+# ------------------------------------------------- instrument algebra
+
+
+@settings(max_examples=50, deadline=None)
+@given(_vals, _vals, _vals)
+def test_histogram_merge_associative_commutative(xs, ys, zs):
+    a, b, c = _hist(xs), _hist(ys), _hist(zs)
+    assert a.merge(b) == b.merge(a)
+    assert a.merge(b).merge(c) == a.merge(b.merge(c))
+    # merging is lossless aggregation: same state as observing everything
+    assert a.merge(b).merge(c) == _hist(list(xs) + list(ys) + list(zs))
+    # and pure: the operands were not mutated
+    assert a == _hist(xs) and b == _hist(ys)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_vals, _vals)
+def test_histogram_delta_roundtrip(xs, ys):
+    """The worker wire path: `to_delta` against the last confirmed base,
+    `apply_delta` folding it in head-side, must reconstruct the full
+    state exactly -- regardless of how observations split across polls."""
+    base = _hist(xs)
+    cur = _hist(xs)
+    for v in ys:
+        cur.observe(v)
+    delta = cur.to_delta(base)
+    assert delta["count"] == len(ys)
+    folded = _hist(xs)
+    folded.apply_delta(delta)
+    assert folded == cur
+    # sparse: only changed buckets ride the wire
+    assert all(int(v) != 0 for v in delta["counts"].values())
+
+
+@settings(max_examples=50, deadline=None)
+@given(_vals, st.integers(1, 99))
+def test_quantile_estimates_are_bucket_bounded(xs, pct):
+    """`quantile(q)` returns the upper bound of the bucket holding the
+    exact order statistic: never below it, at most one bucket above."""
+    h = _hist(xs)
+    q = pct / 100.0
+    est = h.quantile(q)
+    if not xs:
+        assert est == 0.0
+        return
+    import math
+    exact = sorted(xs)[max(1, math.ceil(q * len(xs))) - 1]
+    top = len(h.bounds) - 1
+    assert est == h.bounds[min(h.bucket_index(exact), top)]
+    # bucket-bounded from below (overflow clamps to the top bound)
+    assert est >= min(exact, h.bounds[top])
+
+
+def test_histogram_rejects_mismatched_bounds_and_bad_quantiles():
+    a = Histogram(log_buckets(0.001, 1.0))
+    b = Histogram(log_buckets(0.002, 1.0))
+    with pytest.raises(AssertionError):
+        a.merge(b)
+    with pytest.raises(AssertionError):
+        a.to_delta(b)
+    assert Histogram(_BOUNDS).quantile(0.99) == 0.0     # empty
+    h = _hist([0.5])
+    assert h.quantile(-1.0) == h.quantile(0.0) == h.quantile(2.0) \
+        == h.quantile(1.0)                              # q is clamped
+
+
+def test_registry_keys_by_labels_and_rejects_kind_clashes():
+    reg = MetricsRegistry()
+    reg.counter("c", tenant="a").inc(2)
+    reg.counter("c", tenant="b").inc(5)
+    assert reg.counter("c", tenant="a").value == 2
+    fam = reg.family("c")
+    assert {dict(k)["tenant"] for k in fam} == {"a", "b"}
+    with pytest.raises(AssertionError):
+        reg.gauge("c", tenant="a")      # a counter already owns this name
+    # histogram bounds resolve from the well-known-name table
+    depth = reg.histogram("syndeo_router_queue_depth")
+    assert depth.bounds == DEPTH_BUCKETS
+
+
+def test_timeseries_ring_buffer_wraps():
+    ts = TimeSeries(capacity=4)
+    for i in range(6):
+        ts.record(float(i), float(i * 10))
+    assert len(ts) == 4
+    assert ts.points() == [(2.0, 20.0), (3.0, 30.0), (4.0, 40.0),
+                           (5.0, 50.0)]
+    assert ts.latest == (5.0, 50.0)
+
+
+def test_hub_ingest_records_scalars_and_labelled_dicts():
+    hub = MetricsHub(capacity=8)
+    hub.ingest(1.0, {"ok": True, "backlog": 3,
+                     "syndeo_link_bytes": {"a->b": 100}})
+    hub.ingest(2.0, {"ok": True, "backlog": 5,
+                     "syndeo_link_bytes": {"a->b": 250}})
+    assert hub.history("backlog") == [(1.0, 3.0), (2.0, 5.0)]
+    assert hub.history("syndeo_link_bytes", "a->b") == [(1.0, 100.0),
+                                                        (2.0, 250.0)]
+    assert hub.history("ok") == []      # health flag is not a series
+
+
+# ------------------------------------------------- exposition (golden)
+
+
+def test_prometheus_exposition_golden():
+    """Byte-exact layout: TYPE lines, cumulative `_bucket{le=...}` with
+    the `+Inf` closer, `_sum`/`_count`, label escaping of backslash and
+    quote, dict-valued flat metrics under a `key` label."""
+    reg = MetricsRegistry()
+    reg.counter("acme_requests", path="a\\b", tenant='t"1"').inc(3)
+    reg.gauge("acme_depth").set(2.5)
+    h = reg.histogram("acme_lat", bounds=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    flat = {"ok": True, "workers": 2,
+            "syndeo_link_bytes": {"w0->w1": 1024}}
+    golden = (
+        '# TYPE acme_depth gauge\n'
+        'acme_depth 2.5\n'
+        '# TYPE acme_lat histogram\n'
+        'acme_lat_bucket{le="0.1"} 1\n'
+        'acme_lat_bucket{le="1"} 2\n'
+        'acme_lat_bucket{le="+Inf"} 3\n'
+        'acme_lat_sum 5.55\n'
+        'acme_lat_count 3\n'
+        '# TYPE acme_requests counter\n'
+        'acme_requests{path="a\\\\b",tenant="t\\"1\\""} 3\n'
+        '# TYPE syndeo_link_bytes gauge\n'
+        'syndeo_link_bytes{key="w0->w1"} 1024\n'
+        '# TYPE workers gauge\n'
+        'workers 2\n')
+    assert render_prometheus(reg, flat=flat) == golden
+    # the read-back parser agrees with what was rendered
+    parsed = parse_prometheus(golden)
+    assert parsed[("acme_lat_count", "")] == 3.0
+    assert parsed[("acme_lat_bucket", '{le="+Inf"}')] == 3.0
+    assert parsed[("syndeo_link_bytes", '{key="w0->w1"}')] == 1024.0
+    assert parsed[("workers", "")] == 2.0
+
+
+def test_prometheus_escapes_newlines_and_sanitizes_names():
+    reg = MetricsRegistry()
+    reg.gauge("weird metric!", who="a\nb").set(1)
+    text = render_prometheus(reg)
+    assert 'weird_metric_{who="a\\nb"} 1\n' in text
+    assert "\na\n" not in text          # the raw newline never leaks
+
+
+def test_dashboards_reference_exported_metric_names():
+    boards = render_dashboards()
+    assert set(boards) == {"serve", "drain", "dataplane", "tenancy"}
+    exported = {
+        "syndeo_serve_requests", "syndeo_serve_shed", "syndeo_serve_p99_ms",
+        "syndeo_replica_count", "syndeo_router_queue_depth_bucket",
+        "syndeo_moves_committed", "syndeo_moves_aborted",
+        "syndeo_relay_fallbacks", "syndeo_head_relayed_bytes",
+        "syndeo_worker_drain_pushed_bytes", "syndeo_link_bytes",
+        "syndeo_worker_blob_serves", "syndeo_worker_blob_receives",
+        "syndeo_broadcast_rounds", "syndeo_tree_edges",
+        "syndeo_batched_moves", "syndeo_delta_spill_bytes_saved",
+        "syndeo_promotions", "syndeo_tenant_dominant_share",
+        "syndeo_tenant_quota_fraction", "syndeo_tenant_sojourn_p99_s",
+        "backlog_by_tenant"}
+    for uid, board in boards.items():
+        assert board["uid"] == f"syndeo-{uid}"
+        assert board["schemaVersion"] == 39 and board["panels"]
+        for panel in board["panels"]:
+            assert panel["targets"], f"panel {panel['title']!r} is empty"
+            for target in panel["targets"]:
+                # every PromQL expr references at least one name the
+                # pipeline actually exports -- a renamed metric breaks
+                # this test, not the 2am page
+                assert any(name in target["expr"] for name in exported), \
+                    f"{uid}/{panel['title']}: {target['expr']!r} " \
+                    f"references nothing we export"
+
+
+# ------------------------------------------- pipeline truthfulness (sim)
+
+
+def _obs_sim():
+    cost = SimCostModel(task_time_s=lambda s: 0.05, jitter=0.0,
+                        result_bytes=lambda s: 4096.0,
+                        result_location="worker")
+    sim = SimCluster(cost, SchedulerConfig(enable_speculation=False,
+                                           heartbeat_timeout=1e9))
+    sim.add_workers(3)
+    return sim
+
+
+def test_sojourn_histograms_track_finished_counters_per_tenant():
+    sim = _obs_sim()
+    for tenant, n in (("alice", 7), ("bob", 3)):
+        sim.run_wave([TaskSpec(fn=None, tenant_id=tenant, max_retries=5)
+                      for _ in range(n)])
+    export = check_metrics_conformance(sim.store, sim.scheduler,
+                                       prom=sim.export_prometheus())
+    assert export["syndeo_tenant_sojourn_count"] == {"alice": 7, "bob": 3}
+    # 0.05s of service plus a little queueing behind 3 workers: the p99
+    # estimate must sit within a bucket or two of that, never at the
+    # micro- or kilo-second scales a wall-vs-virtual clock mixup yields
+    for tenant in ("alice", "bob"):
+        p99 = export["syndeo_tenant_sojourn_p99_s"][tenant]
+        assert 0.05 <= p99 <= 0.6, p99
+    # dict-valued exposition carries the per-tenant samples
+    parsed = parse_prometheus(sim.export_prometheus())
+    assert parsed[("syndeo_tenant_sojourn_count", '{key="alice"}')] == 7.0
+
+
+def test_sojourn_uses_virtual_clock_not_wall_clock():
+    """Regression guard: `Task.submitted_at` is wall-monotonic (FIFO
+    ordering) but sojourn must be measured on the scheduler's OWN clock
+    -- in the sim that is virtual time, so a wave of 0.05s tasks cannot
+    report micro- or mega-second sojourns."""
+    sim = _obs_sim()
+    sim.run_wave([TaskSpec(fn=None, max_retries=5) for _ in range(4)])
+    fam = sim.scheduler.metrics.family("syndeo_task_sojourn_seconds")
+    [(key, hist)] = list(fam.items())
+    assert dict(key) == {"tenant": "default"}
+    assert hist.count == 4
+    # mean virtual sojourn is a few times the 0.05s service time at most
+    assert 0.04 <= hist.sum / hist.count <= 2.0
+
+
+def test_export_metrics_after_chaos_stays_conformant():
+    sim = _obs_sim()
+    sim.run_wave([TaskSpec(fn=None, tenant_id="alice", max_retries=5)
+                  for _ in range(6)])
+    sim.fail_worker_at("w0", 0.0)
+    sim.drain_worker_at("w1", 0.0)
+    sim.run()
+    export = check_metrics_conformance(sim.store, sim.scheduler,
+                                       prom=sim.export_prometheus())
+    assert export["syndeo_moves_started"] >= 0
+    assert export["workers"] == 1
+    # dashboards render from the same process without touching state
+    assert set(sim.export_dashboards()) == {"serve", "drain", "dataplane",
+                                            "tenancy"}
+
+
+def test_conformance_checker_catches_a_cooked_export():
+    """The checker itself must not be a rubber stamp: hand it a snapshot
+    with one counter off by one and it must object."""
+    sim = _obs_sim()
+    sim.run_wave([TaskSpec(fn=None, max_retries=5) for _ in range(3)])
+    export = sim.export_metrics()
+    export["syndeo_moves_committed"] += 1
+    with pytest.raises(AssertionError, match="moves_committed"):
+        check_metrics_conformance(sim.store, sim.scheduler, export=export)
+    cooked = dict(sim.export_metrics())
+    cooked["syndeo_tenant_sojourn_count"] = {"default": 99}
+    with pytest.raises(AssertionError, match="sojourn"):
+        check_metrics_conformance(sim.store, sim.scheduler, export=cooked)
+
+
+# --------------------------------- the exit flush (sockets, regression)
+
+
+def _blob():
+    return bytes(200_000)
+
+
+def _await(cond, timeout=20.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return True
+        time.sleep(0.05)
+    return False
+
+
+@pytest.mark.parametrize("flush", [True, False])
+def test_drain_flush_keeps_head_aggregates_truthful(tmp_path, flush):
+    """Satellite regression: deltas accrued between a worker's last poll
+    and its exit (drain pushes, final poll latencies) are flushed in one
+    `metric_deltas` frame during the drain handshake. With the flush
+    disabled, the head's aggregates diverge from what the worker really
+    did -- and the conformance checker MUST catch exactly that."""
+    cluster = SyndeoCluster(rendezvous=FileRendezvous(str(tmp_path)))
+    server = HeadServer(cluster)
+    server.attach()
+    truth = {}
+    worker = threading.Thread(
+        target=run_worker, args=(str(tmp_path), cluster.cluster_id,
+                                 "obs-w0"),
+        kwargs={"max_idle_s": 60.0, "flush_metrics_on_exit": flush,
+                "metrics_truth": truth},
+        daemon=True)
+    worker.start()
+    try:
+        assert _await(lambda: any(w.alive for w in
+                                  cluster.scheduler.workers.values()))
+        t = cluster.submit(_blob)
+        assert _await(lambda: cluster.scheduler.graph.tasks[t.id].state
+                      == TaskState.FINISHED, timeout=30.0)
+        # drain the lone worker: its result blob is pushed to the head's
+        # blob server AFTER the final poll delivered the directives --
+        # exactly the window only the exit flush can report
+        assert server.dispatch({"op": "drain", "worker": "obs-w0"})["ok"]
+
+        def drained():
+            cluster.health_check()
+            with cluster._lock:
+                return "obs-w0" not in cluster.scheduler.workers
+        assert _await(drained, timeout=30.0), "drain stuck"
+        worker.join(timeout=20.0)
+        assert not worker.is_alive()
+        assert truth.get("drain_pushed_blobs", 0) >= 1     # scenario armed
+        assert truth.get("polls", 0) >= 1
+
+        def conform():
+            return check_metrics_conformance(
+                cluster.store, cluster.scheduler,
+                export=lambda: server.dispatch({"op": "metrics"}),
+                prom=lambda: server.dispatch({"op": "metrics_text"}
+                                             )["text"],
+                worker_truth={"obs-w0": truth})
+        if flush:
+            export = conform()
+            assert export["syndeo_worker_drain_pushed_blobs"] >= 1
+        else:
+            with pytest.raises(AssertionError, match="lost"):
+                conform()
+    finally:
+        server.shutdown()
+        cluster.shutdown()
+
+
+def test_head_serves_prometheus_and_dashboards_ops(tmp_path):
+    cluster = SyndeoCluster(rendezvous=FileRendezvous(str(tmp_path)))
+    server = HeadServer(cluster)
+    server.attach()
+    try:
+        reply = server.dispatch({"op": "metrics_text"})
+        assert reply["ok"]
+        parsed = parse_prometheus(reply["text"])
+        assert ("workers", "") in parsed
+        boards = server.dispatch({"op": "dashboards"})
+        assert boards["ok"] and set(boards["dashboards"]) == {
+            "serve", "drain", "dataplane", "tenancy"}
+        # the hub recorded the snapshot into its ring-buffer series
+        server.dispatch({"op": "metrics"})
+        assert len(server.metrics_hub.history("workers")) >= 1
+    finally:
+        server.shutdown()
+        cluster.shutdown()

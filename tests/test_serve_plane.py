@@ -32,7 +32,7 @@ try:
 except ImportError:  # pragma: no cover -- bare container
     from _hypothesis_fallback import given, settings, strategies as st
 
-from _invariants import check_invariants
+from _invariants import check_invariants, check_metrics_conformance
 from repro.core import SimCluster, SimCostModel, SyndeoCluster
 from repro.core.autoscaler import (AutoscalerConfig, ReplicaAutoscaler,
                                    ReplicaScalingConfig)
@@ -153,6 +153,7 @@ def test_replica_death_mid_decode_rerouted_not_lost():
         assert q.output == _expect(q)
     assert "r0" not in sim.scheduler.actors
     check_invariants(sim.store)
+    check_metrics_conformance(sim.store, sim.scheduler, router=router)
 
 
 def test_router_death_replicas_quiesce_and_reregister():
@@ -185,6 +186,7 @@ def test_router_death_replicas_quiesce_and_reregister():
     for q in second:
         assert q.output == _expect(q)
     check_invariants(sim.store)
+    check_metrics_conformance(sim.store, sim.scheduler, router=router2)
 
 
 def test_weight_broadcast_during_scale_up_zero_head_bytes():
@@ -208,6 +210,7 @@ def test_weight_broadcast_during_scale_up_zero_head_bytes():
     assert joined[0].weights_version == weights.id
     # replica coherence across every landed copy + directory sanity
     check_invariants(sim.store, expect_fetchable=[weights.id])
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 def test_drain_with_inflight_requests_completes_them():
@@ -232,6 +235,7 @@ def test_drain_with_inflight_requests_completes_them():
     for q in reqs:
         assert q.output == _expect(q)
     check_invariants(sim.store)
+    check_metrics_conformance(sim.store, sim.scheduler, router=router)
 
 
 # ----------------------------------------------- SLO-driven autoscaling
@@ -308,6 +312,8 @@ def test_slo_autoscaler_grows_under_ramp_and_drains_when_quiet():
     assert any(e.action == "scale_down" for e in ras.events)
     assert sim.store.stats["head_relayed_bytes"] == 0   # weights were p2p
     check_invariants(sim.store, expect_fetchable=[weights.id])
+    check_metrics_conformance(sim.store, sim.scheduler, router=router,
+                              prom=sim.export_prometheus(router))
 
 
 def test_replica_autoscaler_reacts_to_p99():
@@ -367,6 +373,7 @@ def test_preempt_worker_drains_and_hands_off_before_deadline():
     check_invariants(sim.store, expect_fetchable=[r.id for r in hot],
                      scheduler=sim.scheduler,
                      expect_zero_reconstructions=True)
+    check_metrics_conformance(sim.store, sim.scheduler, router=router)
 
 
 def test_preempt_past_deadline_falls_back_to_failure_path():
@@ -379,6 +386,7 @@ def test_preempt_past_deadline_falls_back_to_failure_path():
     assert h.worker_id not in sim.scheduler.workers
     assert sim.scheduler.stats["actors_lost"] == 1
     check_invariants(sim.store)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 # ------------------- satellite: actor hosts are excluded from idle paths
@@ -400,6 +408,7 @@ def test_idle_scale_down_skips_actor_hosts():
     others = [w for w in sim.scheduler.workers if w != host]
     assert not others, f"idle workers survived: {others}"
     check_invariants(sim.store)
+    check_metrics_conformance(sim.store, sim.scheduler)
 
 
 # ----------------------- real sockets: actor lifecycle + idle-exit guard
